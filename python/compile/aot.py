@@ -1,0 +1,101 @@
+# AOT lowering: trace each model variant once, dump HLO TEXT + initial
+# params + manifest under artifacts/.
+#
+# HLO *text* (NOT lowered.compile()/.serialize()) is the interchange format:
+# jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+# crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+# parser on the Rust side reassigns ids, so text round-trips cleanly. See
+# /opt/xla-example/README.md.
+#
+# Usage:  python -m compile.aot --out-dir ../artifacts [--variants a,b,...]
+#
+# Python runs ONLY here (and in pytest); the Rust binary is self-contained
+# once artifacts/ exists.
+
+import argparse
+import os
+from typing import List
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(
+        shape, {"f32": np.float32, "i32": np.int32}[dtype]
+    )
+
+
+def lower_variant(cfg: M.ShapeConfig, out_dir: str) -> dict:
+    params = M.init_params(cfg)
+    param_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+    train_step, _ = M.make_train_step(cfg)
+    train_specs = param_specs + [
+        _spec(s, d) for (_, s, d) in cfg.input_specs(train=True)
+    ]
+    train_hlo = to_hlo_text(jax.jit(train_step).lower(*train_specs))
+
+    eval_step, _ = M.make_eval_step(cfg)
+    eval_specs = param_specs + [
+        _spec(s, d) for (_, s, d) in cfg.input_specs(train=False)
+    ]
+    eval_hlo = to_hlo_text(jax.jit(eval_step).lower(*eval_specs))
+
+    entry = M.manifest_entry(cfg)
+    with open(os.path.join(out_dir, entry["train_hlo"]), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, entry["eval_hlo"]), "w") as f:
+        f.write(eval_hlo)
+    # params.bin: flat little-endian f32 concatenation in manifest order
+    with open(os.path.join(out_dir, entry["params_bin"]), "wb") as f:
+        for p in params:
+            f.write(np.ascontiguousarray(p, dtype=np.float32).tobytes())
+    return entry
+
+
+def main(argv: List[str] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(M.DEFAULT_VARIANTS),
+                    help="comma-separated variant names, or 'all'")
+    args = ap.parse_args(argv)
+
+    names = (list(M.VARIANTS) if args.variants == "all"
+             else [v for v in args.variants.split(",") if v])
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in names:
+        cfg = M.VARIANTS[name]
+        entry = lower_variant(cfg, args.out_dir)
+        print(f"lowered {name}: layer_nodes={entry['layer_nodes']} "
+              f"params={len(entry['param_shapes'])}")
+    # manifest covers every variant lowered into this directory so far
+    existing = set(names)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        import json
+        with open(manifest_path) as f:
+            old = json.load(f).get("variants", {})
+        for k in old:
+            if k in M.VARIANTS and os.path.exists(
+                os.path.join(args.out_dir, f"{k}.train.hlo.txt")
+            ):
+                existing.add(k)
+    M.write_manifest(manifest_path, sorted(existing))
+    print(f"manifest: {manifest_path} ({len(existing)} variants)")
+
+
+if __name__ == "__main__":
+    main()

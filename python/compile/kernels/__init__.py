@@ -1,0 +1,10 @@
+# L1: Pallas kernels for the paper's compute hot-spots (neighbor
+# aggregation variants + fused SAGE linear). Each has a pure-jnp oracle in
+# ref.py; pytest asserts allclose across shape sweeps.
+
+from .gat_attn import gat_attn
+from .rgcn_agg import rgcn_agg
+from .sage_matmul import sage_matmul
+from .seg_mean import seg_mean
+
+__all__ = ["seg_mean", "sage_matmul", "gat_attn", "rgcn_agg"]

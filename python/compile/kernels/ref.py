@@ -1,0 +1,71 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# Every kernel in this package has a reference implementation here written
+# with plain jax.numpy ops only. pytest (python/tests/) asserts
+# allclose(kernel, ref) across shape/dtype/mask sweeps — this is the CORE
+# correctness signal for Layer 1.
+
+import jax.numpy as jnp
+
+
+def seg_mean_ref(feats, idx, mask):
+    """Masked mean-aggregation of gathered neighbor features.
+
+    feats: [N_src, F] float
+    idx:   [N_dst, K] int32, positions into feats (padding rows may point
+           anywhere valid; they are zeroed by mask)
+    mask:  [N_dst, K] float, 1.0 for real neighbors, 0.0 for padding
+    returns [N_dst, F]: sum_k mask * feats[idx] / max(1, sum_k mask)
+    """
+    gathered = jnp.take(feats, idx, axis=0)          # [N_dst, K, F]
+    s = jnp.sum(gathered * mask[..., None], axis=1)  # [N_dst, F]
+    cnt = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    return s / cnt
+
+
+def sage_matmul_ref(h_self, h_agg, w_self, w_neigh, b):
+    """Fused GraphSAGE linear: h_self @ w_self + h_agg @ w_neigh + b.
+
+    h_self, h_agg: [N, F_in]; w_self, w_neigh: [F_in, F_out]; b: [F_out]
+    """
+    return h_self @ w_self + h_agg @ w_neigh + b
+
+
+def gat_attn_ref(feats, scores_src, scores_dst, idx, mask, neg_slope=0.2):
+    """GAT edge-softmax + weighted neighbor aggregation (per head).
+
+    feats:      [N_src, H, D]  projected source features
+    scores_src: [N_src, H]     a_src . feats  (precomputed in L2)
+    scores_dst: [N_dst, H]     a_dst . h_dst
+    idx:        [N_dst, K] int32
+    mask:       [N_dst, K] float
+    returns [N_dst, H, D]: softmax_k(leaky_relu(s_src[idx]+s_dst)) weighted sum
+    """
+    g_feats = jnp.take(feats, idx, axis=0)        # [N_dst, K, H, D]
+    g_sc = jnp.take(scores_src, idx, axis=0)      # [N_dst, K, H]
+    logits = g_sc + scores_dst[:, None, :]        # [N_dst, K, H]
+    logits = jnp.where(logits >= 0, logits, neg_slope * logits)
+    neg_inf = jnp.asarray(-1e30, logits.dtype)
+    logits = jnp.where(mask[..., None] > 0, logits, neg_inf)
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    ex = jnp.exp(logits) * mask[..., None]
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-20)
+    alpha = ex / denom                            # [N_dst, K, H]
+    return jnp.sum(alpha[..., None] * g_feats, axis=1)
+
+
+def rgcn_agg_ref(feats, idx, mask, rel, num_rels):
+    """Per-relation masked mean aggregation (RGCN).
+
+    feats: [N_src, F]; idx: [N_dst, K] int32; mask: [N_dst, K] float;
+    rel:   [N_dst, K] int32 relation id of each edge
+    returns [N_dst, R, F]: for each relation r, mean of neighbors via r-edges
+    """
+    gathered = jnp.take(feats, idx, axis=0)                   # [N_dst, K, F]
+    # sel[n, k, r] = mask * 1[rel == r]
+    sel = (rel[..., None] == jnp.arange(num_rels)[None, None, :]).astype(
+        feats.dtype
+    ) * mask[..., None]
+    s = jnp.einsum("nkf,nkr->nrf", gathered, sel)
+    cnt = jnp.maximum(jnp.sum(sel, axis=1), 1.0)              # [N_dst, R]
+    return s / cnt[..., None]

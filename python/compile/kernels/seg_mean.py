@@ -1,0 +1,115 @@
+# L1 Pallas kernel: gather + masked segment-mean neighbor aggregation.
+#
+# This is the GraphSAGE/ RGCN hot-spot (the paper's "feature copy +
+# aggregation dominates" path). TPU mapping (see DESIGN.md §3): instead of a
+# CUDA warp-per-destination gather we tile the padded neighbor-index matrix
+# [N_dst, K] along the destination axis with BlockSpec; each grid step pulls
+# a (BLK_DST, K) index tile + (BLK_DST, K) mask tile into VMEM, gathers from
+# the source-feature window and reduces to a (BLK_DST, F) output tile.
+#
+# interpret=True is mandatory on this image: real TPU lowering emits a
+# Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_DST = 512
+
+
+def _pick_block(n: int, blk: int) -> int:
+    """Largest block <= blk that divides n (try multiples of 128 first).
+
+    Perf note (§Perf pass): bigger blocks mean fewer grid steps, and in
+    interpret lowering every grid step re-materializes the resident input
+    blocks — at dev shapes this halved the per-call step count.
+    """
+    b = min(blk, n)
+    while b > 1 and n % b:
+        b -= 128 if b > 128 else 1
+    return max(b, 1)
+
+
+def _seg_mean_kernel(feats_ref, idx_ref, mask_ref, out_ref):
+    """One grid step: aggregate a BLK_DST tile of destinations."""
+    idx = idx_ref[...]                          # [BLK, K] i32
+    mask = mask_ref[...]                        # [BLK, K] f32
+    feats = feats_ref[...]                      # [N_src, F]
+    n_src = feats.shape[0]
+    # Clamp indices defensively: padding rows must never read OOB even if the
+    # caller left garbage behind mask==0.
+    idx = jnp.clip(idx, 0, n_src - 1)
+    gathered = jnp.take(feats, idx, axis=0)     # [BLK, K, F]
+    s = jnp.sum(gathered * mask[..., None], axis=1)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    out_ref[...] = s / cnt
+
+
+@functools.partial(jax.jit, static_argnames=("blk_dst",))
+def seg_mean_pallas(feats, idx, mask, *, blk_dst: int = DEFAULT_BLK_DST):
+    """Raw Pallas forward (not differentiable). See `seg_mean` below.
+
+    feats: [N_src, F] float32
+    idx:   [N_dst, K] int32 (N_dst must be a multiple of blk_dst or smaller)
+    mask:  [N_dst, K] float32
+    returns [N_dst, F] float32
+    """
+    n_dst, k = idx.shape
+    n_src, f = feats.shape
+    blk = _pick_block(n_dst, blk_dst)
+    if n_dst % blk != 0:
+        raise ValueError(f"N_dst={n_dst} not a multiple of block {blk}")
+    grid = (n_dst // blk,)
+    return pl.pallas_call(
+        _seg_mean_kernel,
+        grid=grid,
+        in_specs=[
+            # Source features stay resident across grid steps (gather targets
+            # are arbitrary): index_map pins the same full block.
+            pl.BlockSpec((n_src, f), lambda i: (0, 0)),
+            pl.BlockSpec((blk, k), lambda i: (i, 0)),
+            pl.BlockSpec((blk, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_dst, f), feats.dtype),
+        interpret=True,
+    )(feats, idx, mask)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper. pallas_call (interpret) has no transpose rule, so
+# we attach a custom VJP: forward runs the Pallas kernel; backward
+# rematerializes through the pure-jnp oracle (a scatter-add — cheap relative
+# to the gather-heavy forward, and XLA fuses it).
+# ---------------------------------------------------------------------------
+
+import numpy as _np  # noqa: E402
+
+from . import ref as _ref  # noqa: E402
+
+
+@functools.lru_cache(maxsize=None)
+def _make_seg_mean(blk_dst: int):
+    @jax.custom_vjp
+    def f(feats, idx, mask):
+        return seg_mean_pallas(feats, idx, mask, blk_dst=blk_dst)
+
+    def fwd(feats, idx, mask):
+        return f(feats, idx, mask), (feats, idx, mask)
+
+    def bwd(res, g):
+        feats, idx, mask = res
+        _, vjp = jax.vjp(lambda fe: _ref.seg_mean_ref(fe, idx, mask), feats)
+        (df,) = vjp(g)
+        return (df, _np.zeros(idx.shape, dtype=jax.dtypes.float0),
+                jnp.zeros_like(mask))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def seg_mean(feats, idx, mask, *, blk_dst: int = DEFAULT_BLK_DST):
+    """Differentiable masked mean aggregation (Pallas fwd, jnp-VJP bwd)."""
+    return _make_seg_mean(blk_dst)(feats, idx, mask)

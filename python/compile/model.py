@@ -1,0 +1,353 @@
+# L2: JAX compute graphs for the paper's GNN workloads.
+#
+# GraphSAGE / GAT / RGCN forward + backward + fused SGD update, expressed
+# over the padded mini-batch block contract shared with the Rust coordinator
+# (DESIGN.md §5). All neighbor aggregation goes through the L1 Pallas
+# kernels. These functions are traced once by aot.py and lowered to HLO
+# text; Python never runs at training time.
+#
+# Block contract (one mini-batch, L layers):
+#   feats          f32[n0, F]      input features for layer-0 nodes
+#   per layer l=1..L:
+#     self_idx_l   i32[n_l]        position of each dst node in layer-(l-1)
+#     nbr_idx_l    i32[n_l, K_l]   neighbor positions into layer-(l-1)
+#     nbr_mask_l   f32[n_l, K_l]   1.0 = real neighbor, 0.0 = padding
+#     rel_l        i32[n_l, K_l]   (RGCN only) relation id per edge
+#   node classification: labels i32[nL], label_mask f32[nL]
+#   link prediction: nL = 3*B rows laid out [heads | tails | negatives],
+#                    pair_mask f32[B]
+#   lr             f32[]           SGD learning rate
+#
+# train_step returns (*updated_params, loss); eval returns (logits,) or
+# (embeddings,).
+
+import dataclasses
+import json
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gat_attn, rgcn_agg, sage_matmul, seg_mean
+
+BLOCK = 128  # padding quantum: every node-array length is a multiple of this
+
+
+def ceil_block(n: int) -> int:
+    return ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """Static shape schedule of one model variant (one HLO artifact pair)."""
+
+    name: str
+    model: str                 # "sage" | "gat" | "rgcn"
+    task: str                  # "nc" (node classification) | "lp" (link pred)
+    batch: int                 # target nodes (nc) or edges (lp) per step
+    fanouts: List[int]         # K_l, layer 1 (input-side) .. layer L
+    feat_dim: int
+    hidden: int
+    num_classes: int
+    num_heads: int = 2         # GAT
+    num_rels: int = 3          # RGCN
+    dedup: float = 0.6         # expected unique-node shrink factor per hop
+                               # (intra-batch locality, paper §5.2)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.fanouts)
+
+    @property
+    def layer_nodes(self) -> List[int]:
+        """[n0, n1, ..., nL] — padded node-array length per layer."""
+        l = self.num_layers
+        n = [0] * (l + 1)
+        base = self.batch if self.task == "nc" else 3 * self.batch
+        n[l] = ceil_block(base)
+        for i in range(l, 0, -1):
+            fan = self.fanouts[i - 1]
+            n[i - 1] = ceil_block(int(n[i] * (1 + fan) * self.dedup))
+        return n
+
+    def input_specs(self, train: bool):
+        """Ordered (name, shape, dtype) for the non-param inputs.
+
+        Eval (train=False) carries only feats + layer arrays: labels/masks
+        are unused by the forward pass, and jax.jit prunes unused
+        parameters from the lowered HLO — the manifest must match the
+        compiled signature exactly.
+        """
+        n = self.layer_nodes
+        specs = [("feats", (n[0], self.feat_dim), "f32")]
+        for l in range(1, self.num_layers + 1):
+            k = self.fanouts[l - 1]
+            specs.append((f"self_idx_{l}", (n[l],), "i32"))
+            specs.append((f"nbr_idx_{l}", (n[l], k), "i32"))
+            specs.append((f"nbr_mask_{l}", (n[l], k), "f32"))
+            if self.model == "rgcn":
+                specs.append((f"rel_{l}", (n[l], k), "i32"))
+        if train:
+            if self.task == "nc":
+                specs.append(("labels", (n[-1],), "i32"))
+                specs.append(("label_mask", (n[-1],), "f32"))
+            else:
+                specs.append(("pair_mask", (self.batch,), "f32"))
+            specs.append(("lr", (), "f32"))
+        return specs
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = np.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-scale, scale, size=shape).astype(np.float32)
+
+
+def init_params(cfg: ShapeConfig, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic parameter init; order must match _forward consumption."""
+    rng = np.random.default_rng(seed)
+    dims = [cfg.feat_dim] + [cfg.hidden] * (cfg.num_layers - 1)
+    out_dims = [cfg.hidden] * (cfg.num_layers - 1) + [
+        cfg.num_classes if cfg.task == "nc" else cfg.hidden
+    ]
+    params: List[np.ndarray] = []
+    for f_in, f_out in zip(dims, out_dims):
+        if cfg.model == "sage":
+            params += [
+                _glorot(rng, (f_in, f_out)),            # W_self
+                _glorot(rng, (f_in, f_out)),            # W_neigh
+                np.zeros((f_out,), np.float32),          # b
+            ]
+        elif cfg.model == "gat":
+            h, d = cfg.num_heads, max(f_out // cfg.num_heads, 1)
+            params += [
+                _glorot(rng, (f_in, h * d)),             # W proj
+                _glorot(rng, (h, d)),                    # a_src
+                _glorot(rng, (h, d)),                    # a_dst
+                np.zeros((h * d,), np.float32),          # b
+                _glorot(rng, (h * d, f_out)),            # W out (head merge)
+            ]
+        elif cfg.model == "rgcn":
+            params += [
+                _glorot(rng, (cfg.num_rels, f_in, f_out)),  # W_rel
+                _glorot(rng, (f_in, f_out)),                # W_self
+                np.zeros((f_out,), np.float32),              # b
+            ]
+        else:
+            raise ValueError(cfg.model)
+    return params
+
+
+def params_per_layer(model: str) -> int:
+    return {"sage": 3, "gat": 5, "rgcn": 3}[model]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _layer_inputs(cfg: ShapeConfig, blocks: List, l: int):
+    """Pull (self_idx, nbr_idx, nbr_mask[, rel]) of layer l from flat list."""
+    per = 4 if cfg.model == "rgcn" else 3
+    base = (l - 1) * per
+    return blocks[base:base + per]
+
+
+def _forward(cfg: ShapeConfig, params: List, feats, blocks: List):
+    """Shared multi-layer forward; returns final node array [nL, out_dim]."""
+    per = params_per_layer(cfg.model)
+    h = feats
+    for l in range(1, cfg.num_layers + 1):
+        layer_p = params[(l - 1) * per:l * per]
+        last = l == cfg.num_layers
+        if cfg.model == "sage":
+            self_idx, nbr_idx, nbr_mask = _layer_inputs(cfg, blocks, l)
+            w_s, w_n, b = layer_p
+            h_self = jnp.take(h, self_idx, axis=0)
+            h_agg = seg_mean(h, nbr_idx, nbr_mask)
+            h = sage_matmul(h_self, h_agg, w_s, w_n, b)
+        elif cfg.model == "gat":
+            self_idx, nbr_idx, nbr_mask = _layer_inputs(cfg, blocks, l)
+            w, a_src, a_dst, b, w_out = layer_p
+            hd = a_src.shape[0] * a_src.shape[1]
+            proj = (h @ w).reshape(h.shape[0], a_src.shape[0], a_src.shape[1])
+            s_src = jnp.einsum("nhd,hd->nh", proj, a_src)
+            proj_dst = jnp.take(proj, self_idx, axis=0)
+            s_dst = jnp.einsum("nhd,hd->nh", proj_dst, a_dst)
+            att = gat_attn(proj, s_src, s_dst, nbr_idx, nbr_mask,
+                           num_heads=cfg.num_heads)
+            merged = jax.nn.elu(att.reshape(att.shape[0], hd) + b)
+            h = merged @ w_out
+        else:  # rgcn
+            self_idx, nbr_idx, nbr_mask, rel = _layer_inputs(cfg, blocks, l)
+            w_rel, w_self, b = layer_p
+            h_self = jnp.take(h, self_idx, axis=0)
+            agg = rgcn_agg(h, nbr_idx, nbr_mask, rel, num_rels=cfg.num_rels)
+            h = jnp.einsum("nrf,rfo->no", agg, w_rel) + h_self @ w_self + b
+        if not last:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def _nc_loss(logits, labels, label_mask):
+    """Masked softmax cross-entropy, mean over real rows."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(label_mask), 1.0)
+    return -jnp.sum(ll * label_mask) / denom
+
+
+def _lp_loss(emb, pair_mask, batch):
+    """Dot-product BCE over rows laid out [heads | tails | negatives]."""
+    heads = emb[:batch]
+    tails = emb[batch:2 * batch]
+    negs = emb[2 * batch:3 * batch]
+    pos = jnp.sum(heads * tails, axis=-1)
+    neg = jnp.sum(heads * negs, axis=-1)
+    loss = jax.nn.softplus(-pos) + jax.nn.softplus(neg)
+    denom = jnp.maximum(jnp.sum(pair_mask), 1.0)
+    return jnp.sum(loss * pair_mask) / denom
+
+
+# ---------------------------------------------------------------------------
+# Steps (the functions that get lowered to HLO)
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ShapeConfig):
+    n_params = params_per_layer(cfg.model) * cfg.num_layers
+
+    def loss_fn(params, feats, blocks, task_args):
+        out = _forward(cfg, params, feats, blocks)
+        if cfg.task == "nc":
+            labels, label_mask = task_args
+            return _nc_loss(out, labels, label_mask)
+        (pair_mask,) = task_args
+        return _lp_loss(out, pair_mask, cfg.batch)
+
+    return loss_fn, n_params
+
+
+def make_train_step(cfg: ShapeConfig):
+    """flat-args train step: (*params, *inputs, lr) -> (*params', loss)."""
+    loss_fn, n_params = make_loss_fn(cfg)
+    n_task = 2 if cfg.task == "nc" else 1
+
+    def step(*args):
+        params = list(args[:n_params])
+        rest = args[n_params:]
+        feats = rest[0]
+        blocks = list(rest[1:len(rest) - n_task - 1])
+        task_args = rest[len(rest) - n_task - 1:len(rest) - 1]
+        lr = rest[-1]
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, feats, blocks, task_args
+        )
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss,)
+
+    return step, n_params
+
+
+def make_eval_step(cfg: ShapeConfig):
+    """flat-args eval: (*params, feats, *blocks) -> (out,)."""
+    _, n_params = make_loss_fn(cfg)
+
+    def step(*args):
+        params = list(args[:n_params])
+        rest = args[n_params:]
+        feats = rest[0]
+        blocks = list(rest[1:])
+        return (_forward(cfg, params, feats, blocks),)
+
+    return step, n_params
+
+
+# ---------------------------------------------------------------------------
+# Variant registry — the artifact set Rust knows about (artifacts/manifest.json)
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    # dev profile: fast to lower + execute; used by unit/integration tests
+    "sage_nc_dev": ShapeConfig("sage_nc_dev", "sage", "nc", batch=128,
+                               fanouts=[5, 5], feat_dim=32, hidden=64,
+                               num_classes=16),
+    "sage_lp_dev": ShapeConfig("sage_lp_dev", "sage", "lp", batch=64,
+                               fanouts=[5, 5], feat_dim=32, hidden=64,
+                               num_classes=0),
+    "gat_nc_dev": ShapeConfig("gat_nc_dev", "gat", "nc", batch=128,
+                              fanouts=[5, 5], feat_dim=32, hidden=64,
+                              num_classes=16, num_heads=2),
+    "rgcn_nc_dev": ShapeConfig("rgcn_nc_dev", "rgcn", "nc", batch=128,
+                               fanouts=[5, 5], feat_dim=32, hidden=64,
+                               num_classes=16, num_rels=3),
+    # paper-shaped profile (§6): 3 layers, fanout 15/10/5 — batch scaled so
+    # CPU-interpret execution stays tractable on this testbed
+    "sage_nc_paper": ShapeConfig("sage_nc_paper", "sage", "nc", batch=128,
+                                 fanouts=[15, 10, 5], feat_dim=100,
+                                 hidden=256, num_classes=47, dedup=0.25),
+    # Fig 2 full-graph baseline: large batch + wide fanout caps so every
+    # neighbor fits (the generator takes full neighborhoods, no sampling)
+    "sage_nc_full": ShapeConfig("sage_nc_full", "sage", "nc", batch=256,
+                                fanouts=[12, 12], feat_dim=32, hidden=64,
+                                num_classes=16),
+    # Fig 1 hidden-size sweep
+    "sage_nc_h16": ShapeConfig("sage_nc_h16", "sage", "nc", batch=128,
+                               fanouts=[5, 5], feat_dim=32, hidden=16,
+                               num_classes=16),
+    "sage_nc_h32": ShapeConfig("sage_nc_h32", "sage", "nc", batch=128,
+                               fanouts=[5, 5], feat_dim=32, hidden=32,
+                               num_classes=16),
+    "sage_nc_h128": ShapeConfig("sage_nc_h128", "sage", "nc", batch=128,
+                                fanouts=[5, 5], feat_dim=32, hidden=128,
+                                num_classes=16),
+    "sage_nc_h256": ShapeConfig("sage_nc_h256", "sage", "nc", batch=128,
+                                fanouts=[5, 5], feat_dim=32, hidden=256,
+                                num_classes=16),
+}
+
+# Artifacts lowered by default (`make artifacts`); benches may request more.
+DEFAULT_VARIANTS = ["sage_nc_dev", "sage_lp_dev", "gat_nc_dev", "rgcn_nc_dev"]
+
+
+def manifest_entry(cfg: ShapeConfig) -> dict:
+    params = init_params(cfg)
+    return {
+        "name": cfg.name,
+        "model": cfg.model,
+        "task": cfg.task,
+        "batch": cfg.batch,
+        "fanouts": cfg.fanouts,
+        "feat_dim": cfg.feat_dim,
+        "hidden": cfg.hidden,
+        "num_classes": cfg.num_classes,
+        "num_heads": cfg.num_heads,
+        "num_rels": cfg.num_rels,
+        "layer_nodes": cfg.layer_nodes,
+        "param_shapes": [list(p.shape) for p in params],
+        "train_inputs": [
+            {"name": n, "shape": list(s), "dtype": d}
+            for (n, s, d) in cfg.input_specs(train=True)
+        ],
+        "eval_inputs": [
+            {"name": n, "shape": list(s), "dtype": d}
+            for (n, s, d) in cfg.input_specs(train=False)
+        ],
+        "train_hlo": f"{cfg.name}.train.hlo.txt",
+        "eval_hlo": f"{cfg.name}.eval.hlo.txt",
+        "params_bin": f"{cfg.name}.params.bin",
+    }
+
+
+def write_manifest(path: str, names: List[str]) -> None:
+    entries = {n: manifest_entry(VARIANTS[n]) for n in names}
+    with open(path, "w") as f:
+        json.dump({"block": BLOCK, "variants": entries}, f, indent=1)

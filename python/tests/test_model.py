@@ -1,0 +1,177 @@
+# pytest: L2 model-level checks — shapes, gradient flow, loss decrease on a
+# learnable toy problem, and manifest/spec consistency for every variant.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _rand_inputs(cfg: M.ShapeConfig, train: bool, seed=0):
+    """Random but *valid* block inputs for a variant."""
+    rng = np.random.default_rng(seed)
+    n = cfg.layer_nodes
+    out = []
+    for (name, shape, dtype) in cfg.input_specs(train):
+        if name == "feats":
+            a = rng.normal(size=shape).astype(np.float32)
+        elif name.startswith("self_idx_"):
+            l = int(name.split("_")[-1])
+            a = rng.integers(0, n[l - 1], size=shape).astype(np.int32)
+        elif name.startswith("nbr_idx_"):
+            l = int(name.split("_")[-1])
+            a = rng.integers(0, n[l - 1], size=shape).astype(np.int32)
+        elif name.startswith("nbr_mask_"):
+            a = (rng.random(shape) < 0.8).astype(np.float32)
+        elif name.startswith("rel_"):
+            a = rng.integers(0, cfg.num_rels, size=shape).astype(np.int32)
+        elif name == "labels":
+            a = rng.integers(0, max(cfg.num_classes, 1), size=shape).astype(np.int32)
+        elif name == "label_mask":
+            a = np.ones(shape, np.float32)
+        elif name == "pair_mask":
+            a = np.ones(shape, np.float32)
+        elif name == "lr":
+            a = np.float32(0.1)
+        else:
+            raise AssertionError(name)
+        out.append(jnp.asarray(a))
+    return out
+
+
+DEV = ["sage_nc_dev", "sage_lp_dev", "gat_nc_dev", "rgcn_nc_dev"]
+
+
+@pytest.mark.parametrize("name", DEV)
+def test_train_step_shapes(name):
+    cfg = M.VARIANTS[name]
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    step, n_params = M.make_train_step(cfg)
+    ins = _rand_inputs(cfg, train=True)
+    outs = step(*params, *ins)
+    assert len(outs) == n_params + 1
+    for p, o in zip(params, outs[:-1]):
+        assert p.shape == o.shape and p.dtype == o.dtype
+    loss = outs[-1]
+    assert loss.shape == () and np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("name", DEV)
+def test_eval_step_shapes(name):
+    cfg = M.VARIANTS[name]
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    step, _ = M.make_eval_step(cfg)
+    ins = _rand_inputs(cfg, train=False)
+    (out,) = step(*params, *ins)
+    n_l = cfg.layer_nodes[-1]
+    exp_dim = cfg.num_classes if cfg.task == "nc" else cfg.hidden
+    assert out.shape == (n_l, exp_dim)
+
+
+@pytest.mark.parametrize(
+    "name,lr",
+    [("sage_nc_dev", 0.3), ("gat_nc_dev", 1.0), ("rgcn_nc_dev", 0.3)],
+)
+def test_loss_decreases_under_sgd(name, lr):
+    """Repeated train_step on one fixed batch must fit it."""
+    cfg = M.VARIANTS[name]
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    step, n_params = M.make_train_step(cfg)
+    jstep = jax.jit(step)
+    ins = _rand_inputs(cfg, train=True, seed=1)
+    ins[-1] = jnp.asarray(np.float32(lr))
+    first = None
+    for _ in range(20):
+        outs = jstep(*params, *ins)
+        params = list(outs[:-1])
+        loss = float(outs[-1])
+        if first is None:
+            first = loss
+    assert loss < 0.85 * first, f"{name}: {first} -> {loss}"
+
+
+def test_lp_loss_decreases():
+    cfg = M.VARIANTS["sage_lp_dev"]
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    step, _ = M.make_train_step(cfg)
+    jstep = jax.jit(step)
+    ins = _rand_inputs(cfg, train=True, seed=2)
+    losses = []
+    for _ in range(8):
+        outs = jstep(*params, *ins)
+        params = list(outs[:-1])
+        losses.append(float(outs[-1]))
+    assert losses[-1] < losses[0]
+
+
+def test_grad_matches_finite_difference():
+    """Spot-check one weight entry of sage_nc_dev against finite differences."""
+    cfg = M.VARIANTS["sage_nc_dev"]
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    loss_fn, n_params = M.make_loss_fn(cfg)
+    ins = _rand_inputs(cfg, train=True, seed=3)
+    feats, blocks, task = ins[0], ins[1:-3], ins[-3:-1]
+
+    def f(w0):
+        ps = [w0] + params[1:]
+        return loss_fn(ps, feats, list(blocks), tuple(task))
+
+    g = jax.grad(f)(params[0])
+    eps = 1e-3
+    e = np.zeros(params[0].shape, np.float32); e[0, 0] = eps
+    fd = (float(f(params[0] + e)) - float(f(params[0] - e))) / (2 * eps)
+    assert abs(float(g[0, 0]) - fd) < 5e-2 * max(1.0, abs(fd))
+
+
+def test_label_mask_zeroes_padding_contribution():
+    """Padded rows (label_mask 0) must not change loss or grads."""
+    cfg = M.VARIANTS["sage_nc_dev"]
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    loss_fn, _ = M.make_loss_fn(cfg)
+    ins = _rand_inputs(cfg, train=True, seed=4)
+    feats, blocks, (labels, lmask) = ins[0], ins[1:-3], ins[-3:-1]
+    lmask_half = np.asarray(lmask).copy()
+    lmask_half[64:] = 0.0
+    labels_garbage = np.asarray(labels).copy()
+    base = float(loss_fn(params, feats, list(blocks),
+                         (labels, jnp.asarray(lmask_half))))
+    labels_garbage[64:] = (labels_garbage[64:] + 7) % cfg.num_classes
+    pert = float(loss_fn(params, feats, list(blocks),
+                         (jnp.asarray(labels_garbage), jnp.asarray(lmask_half))))
+    assert abs(base - pert) < 1e-6
+
+
+def test_layer_nodes_monotone_and_padded():
+    for cfg in M.VARIANTS.values():
+        n = cfg.layer_nodes
+        assert all(v % M.BLOCK == 0 for v in n)
+        assert all(a >= b for a, b in zip(n, n[1:]))
+        base = cfg.batch if cfg.task == "nc" else 3 * cfg.batch
+        assert n[-1] >= base
+
+
+def test_manifest_entry_consistent():
+    for name in DEV:
+        cfg = M.VARIANTS[name]
+        e = M.manifest_entry(cfg)
+        assert e["layer_nodes"] == cfg.layer_nodes
+        assert len(e["param_shapes"]) == \
+            M.params_per_layer(cfg.model) * cfg.num_layers
+        # eval inputs are the structural prefix of train inputs (train
+        # additionally carries task args + lr, which eval's pruned HLO
+        # does not accept)
+        tr, ev = e["train_inputs"], e["eval_inputs"]
+        assert tr[-1]["name"] == "lr"
+        assert [i["name"] for i in tr[: len(ev)]] == [i["name"] for i in ev]
+        extra = {i["name"] for i in tr[len(ev):]}
+        assert extra <= {"labels", "label_mask", "pair_mask", "lr"}
+
+
+def test_init_params_deterministic():
+    cfg = M.VARIANTS["sage_nc_dev"]
+    a = M.init_params(cfg, seed=0)
+    b = M.init_params(cfg, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

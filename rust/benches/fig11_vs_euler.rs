@@ -1,0 +1,101 @@
+//! Figure 11: DistDGLv2 vs Euler (CPU and GPU) training GraphSAGE on the
+//! products-shaped workload.
+//!
+//! Euler (per §6.1): random partitioning, multiprocessing-only parallelism
+//! — one trainer process per GPU with *no* sampling thread, so sampling
+//! serializes with compute (sync pipeline, sampling-CPU scale 1) and the
+//! random partitioning inflates cross-machine feature traffic.
+//!
+//! Expected shape (paper): Euler-GPU ≈ Euler-CPU (GPU can't help when
+//! sampling + data movement dominate); DistDGLv2 ≈ 18x over both.
+
+use distdglv2::benchsuite::{
+    measured_epoch_secs, paper_epoch_secs, paper_spec, FigTable,
+    PaperWorkload, SAMPLING_CPU_SCALE,
+};
+use distdglv2::sampler::compact::ModelKind;
+use distdglv2::cluster::{Cluster, ClusterSpec, Partitioner};
+use distdglv2::graph::DatasetSpec;
+use distdglv2::pipeline::{PipelineConfig, PipelineMode};
+use distdglv2::runtime::manifest::{artifacts_dir, Manifest};
+use distdglv2::runtime::DeviceCostModel;
+use distdglv2::trainer::{self, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let spec = manifest.variant("sage_nc_dev")?.clone();
+
+    let mut dspec = DatasetSpec::new("products-s", 24_000, 160_000);
+    dspec.feat_dim = 32;
+    dspec.num_classes = 16;
+    dspec.train_frac = 0.082;
+    let dataset = dspec.generate();
+
+    let steps = 6;
+    let mut table =
+        FigTable::new("Fig 11 — GraphSAGE on products: vs Euler");
+
+    // (label, partitioner, pipeline mode, device, sampling scale)
+    let cells: [(&str, Partitioner, PipelineMode, DeviceCostModel, f64); 3] = [
+        (
+            "Euler-CPU",
+            Partitioner::Random,
+            PipelineMode::Sync,
+            DeviceCostModel::xeon(),
+            1.0,
+        ),
+        (
+            "Euler-GPU",
+            Partitioner::Random,
+            PipelineMode::Sync,
+            DeviceCostModel::t4(),
+            1.0,
+        ),
+        (
+            "DistDGLv2",
+            Partitioner::Metis,
+            PipelineMode::AsyncNonstop,
+            DeviceCostModel::t4(),
+            SAMPLING_CPU_SCALE,
+        ),
+    ];
+
+    for (label, part, mode, device, scale) in cells {
+        let mut cspec = ClusterSpec::new(4, 2);
+        cspec.partitioner = part;
+        cspec.multi_constraint = part == Partitioner::Metis;
+        cspec.two_level = part == Partitioner::Metis;
+        let cluster = Cluster::deploy(&dataset, cspec, artifacts_dir())?;
+        let tcfg = TrainConfig {
+            variant: "sage_nc_dev".into(),
+            lr: 0.3,
+            epochs: 1,
+            max_steps: steps,
+            pipeline: PipelineConfig { mode, ..Default::default() },
+            ..Default::default()
+        };
+        let report = trainer::train(&cluster, &tcfg)?;
+        let workload = PaperWorkload {
+            spec: paper_spec(ModelKind::Sage, 100),
+            train_items: 197_000,
+        };
+        table.row(
+            label,
+            measured_epoch_secs(&report, &cluster, &spec),
+            paper_epoch_secs(
+                &report, &cluster, &spec, &workload, &device, mode, scale,
+                32,
+            ),
+        );
+    }
+    table.speedups("Euler-CPU");
+    let gpu = table.modeled_of("Euler-GPU").unwrap();
+    let cpu = table.modeled_of("Euler-CPU").unwrap();
+    println!(
+        "\nEuler-GPU / Euler-CPU modeled ratio = {:.2} (paper: ≈1, GPU \
+         gives Euler no speedup); paper reference: DistDGLv2 ≈ 18x over \
+         both.",
+        cpu / gpu
+    );
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Hot-path microbenchmarks for the §Perf optimization pass: each stage of
+//! the mini-batch path in isolation (sampling, compaction, KVStore pull,
+//! ring all-reduce, PJRT train step), plus the composed BatchGen. Run
+//! before/after every optimization; EXPERIMENTS.md §Perf records the log.
+
+use std::sync::Arc;
+
+use distdglv2::cluster::{Cluster, ClusterSpec};
+use distdglv2::graph::DatasetSpec;
+use distdglv2::net::CostModel;
+use distdglv2::runtime::manifest::{artifacts_dir, Manifest};
+use distdglv2::sampler::compact::to_block;
+use distdglv2::trainer::{AllReduceGroup, DeviceExecutor};
+use distdglv2::util::bench::BenchRunner;
+use distdglv2::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let vspec = manifest.variant("sage_nc_dev")?.clone();
+    let shape = vspec.shape_spec();
+
+    let mut dspec = DatasetSpec::new("hot", 50_000, 300_000);
+    dspec.feat_dim = 32;
+    dspec.num_classes = 16;
+    dspec.train_frac = 0.2;
+    let dataset = dspec.generate();
+    let cluster =
+        Cluster::deploy(&dataset, ClusterSpec::new(2, 2), artifacts_dir())?;
+
+    let mut r = BenchRunner::new(2, 10);
+    let mut rng = Rng::new(17);
+
+    // --- stage 2: distributed neighbor sampling -------------------------
+    let mut gen = cluster.batch_gen(0, &vspec, "sage_nc_dev", 3);
+    let targets: Vec<u32> = cluster.train_sets[0]
+        [..shape.batch.min(cluster.train_sets[0].len())]
+        .to_vec();
+    let sampler = gen.sampler.clone();
+    r.bench("sample_blocks (2 layers, fanout 5)", || {
+        let s = sampler.sample_blocks(
+            &targets,
+            &shape.fanouts,
+            &shape.layer_nodes,
+            &mut rng,
+        );
+        std::hint::black_box(s.len());
+    });
+
+    // --- stage 4: compaction --------------------------------------------
+    let samples =
+        sampler.sample_blocks(&targets, &shape.fanouts, &shape.layer_nodes, &mut rng);
+    r.bench("to_block (compaction)", || {
+        let b = to_block(&shape, &samples);
+        std::hint::black_box(b.input_nodes.len());
+    });
+
+    // --- stage 3: KVStore pull -------------------------------------------
+    let block = to_block(&shape, &samples);
+    let mut feats = vec![0f32; shape.layer_nodes[0] * shape.feat_dim];
+    r.bench(
+        &format!("kv pull ({} feature rows)", block.input_nodes.len()),
+        || {
+            let n = gen.kv.pull(
+                "feat",
+                &block.input_nodes,
+                &mut feats[..block.input_nodes.len() * shape.feat_dim],
+            );
+            std::hint::black_box(n);
+        },
+    );
+
+    // --- composed BatchGen (stages 1-4) -----------------------------------
+    r.bench("BatchGen::next (stages 1-4 composed)", || {
+        let b = gen.next();
+        std::hint::black_box(b.targets.len());
+    });
+
+    // --- all-reduce --------------------------------------------------------
+    let param_elems: usize = vspec.param_elements();
+    r.bench(
+        &format!("ring all-reduce x4 trainers ({param_elems} f32)"),
+        || {
+            let group = AllReduceGroup::new(
+                vec![0, 0, 1, 1],
+                Arc::new(CostModel::default()),
+            );
+            let hs: Vec<_> = (0..4)
+                .map(|t| {
+                    let p = group.endpoint(t);
+                    std::thread::spawn(move || {
+                        let mut d = vec![t as f32; 14000];
+                        p.allreduce_mean(&mut d);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+        },
+    );
+
+    // --- PJRT train step ----------------------------------------------------
+    let device =
+        DeviceExecutor::spawn(artifacts_dir(), "sage_nc_dev".into(), None)?;
+    let mut params = device.initial_params()?;
+    let handle = device.handle();
+    let batch = gen.next();
+    r.bench("PJRT train_step (sage_nc_dev)", || {
+        let loss = handle.train(&mut params, batch.clone(), 0.1).unwrap();
+        std::hint::black_box(loss);
+    });
+    let batch_eval = gen.materialize_nodes(
+        &cluster.val_nodes[..shape.batch.min(cluster.val_nodes.len())],
+    );
+    r.bench("PJRT eval_step (sage_nc_dev)", || {
+        let l = handle.eval(&params, batch_eval.clone()).unwrap();
+        std::hint::black_box(l.len());
+    });
+
+    println!("\n(record medians in EXPERIMENTS.md §Perf)");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Table 2: time breakdown of the training pipeline on the
+//! papers100M-shaped workload — partition (our ParMETIS role), load/save,
+//! data loading for training, and training to convergence, for both tasks
+//! (node classification with its small labeled set vs link prediction
+//! with edge-scale training data).
+
+use std::time::Instant;
+
+use distdglv2::cluster::{Cluster, ClusterSpec};
+use distdglv2::graph::DatasetSpec;
+use distdglv2::graph::io::{load_graph, save_graph};
+use distdglv2::runtime::manifest::artifacts_dir;
+use distdglv2::trainer::{self, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut dspec = DatasetSpec::new("papers-s", 55_000, 320_000);
+    dspec.feat_dim = 32;
+    dspec.num_classes = 16;
+    dspec.train_frac = 0.011; // papers100M: ~1% labeled
+    let dataset = dspec.generate();
+
+    // load/save: the partition-bundle IO the paper attributes 23 min to
+    let dir = std::env::temp_dir().join("ddgl_tab02");
+    std::fs::create_dir_all(&dir)?;
+    let t = Instant::now();
+    save_graph(&dataset.graph, &dir.join("g.bin"))?;
+    let _g = load_graph(&dir.join("g.bin"))?;
+    let io_secs = t.elapsed().as_secs_f64();
+    std::fs::remove_file(dir.join("g.bin")).ok();
+
+    // partition + deploy (partition/build/load timings collected inside)
+    let cluster = Cluster::deploy(
+        &dataset,
+        ClusterSpec::new(4, 2),
+        artifacts_dir(),
+    )?;
+    let s = cluster.stats.clone();
+
+    // node classification training (small labeled set)
+    let t = Instant::now();
+    let nc = trainer::train(
+        &cluster,
+        &TrainConfig {
+            variant: "sage_nc_dev".into(),
+            lr: 0.3,
+            epochs: 2,
+            ..Default::default()
+        },
+    )?;
+    let nc_secs = t.elapsed().as_secs_f64();
+
+    // link prediction training (edge-scale training set → much longer)
+    let cluster_lp = Cluster::deploy(
+        &dataset,
+        ClusterSpec::new(4, 2),
+        artifacts_dir(),
+    )?;
+    let t = Instant::now();
+    let lp = trainer::train(
+        &cluster_lp,
+        &TrainConfig {
+            variant: "sage_lp_dev".into(),
+            lr: 0.1,
+            epochs: 1,
+            max_steps: nc.steps * 4, // edge-scale set: bounded sample here
+            ..Default::default()
+        },
+    )?;
+    let lp_secs_sampled = t.elapsed().as_secs_f64();
+    // extrapolate to the full edge set (the paper trains on ALL edges)
+    let edges_total = dataset.graph.n_edges() / 2;
+    let lp_steps_full = edges_total
+        .div_ceil(64 * cluster_lp.n_trainers()); // lp batch=64 pairs
+    let lp_secs_full =
+        lp_secs_sampled / lp.steps.max(1) as f64 * lp_steps_full as f64;
+
+    println!("=== Table 2 — time breakdown (papers100M-shaped, 4 machines) ===\n");
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>16}",
+        "task", "partition", "load/save", "load(train)", "train"
+    );
+    println!(
+        "{:<22} {:>11.2}s {:>11.2}s {:>11.2}s {:>15.2}s",
+        "node classification",
+        s.partition_secs + s.build_secs,
+        io_secs,
+        s.load_secs,
+        nc_secs
+    );
+    println!(
+        "{:<22} {:>11.2}s {:>11.2}s {:>11.2}s {:>15.2}s (extrapolated)",
+        "link prediction",
+        s.partition_secs + s.build_secs,
+        io_secs,
+        s.load_secs,
+        lp_secs_full
+    );
+    println!(
+        "\nshape checks (paper Table 2): partition is NOT the dominant \
+         cost; nc training is short (tiny labeled set: {} nodes); lp \
+         training dominates everything (edge-scale training set: {} \
+         positive edges -> {} steps).",
+        cluster.train_sets.iter().map(|s| s.len()).sum::<usize>(),
+        edges_total,
+        lp_steps_full,
+    );
+    println!(
+        "paper: 12min partition / 23min load-save / 8min load / 4min nc \
+         train vs 305min lp train."
+    );
+    Ok(())
+}

@@ -1,0 +1,243 @@
+//! ClusterGCN baseline (Chiang et al., KDD'19) for the Fig 13 convergence
+//! comparison.
+//!
+//! ClusterGCN partitions the graph into many small clusters (paper: 16,384
+//! partitions of ogbn-papers100M) and trains on the *induced subgraph* of
+//! a few randomly-chosen clusters per step: edges leaving the chosen
+//! clusters are **dropped**, so neighbor aggregation is biased by the
+//! partitioning — exactly the property DistDGLv2 avoids by always sampling
+//! neighbors from the full graph (§6.3). We reuse the same padded block
+//! layout so both trainers run the identical HLO.
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashSet;
+
+use crate::graph::{Dataset, NodeId, SplitTag};
+use crate::partition::{
+    metis_partition, PartitionConfig, VertexWeights,
+};
+use crate::runtime::executable::HostBatch;
+use crate::sampler::compact::{to_block, ShapeSpec};
+use crate::sampler::service::SampledNbrs;
+use crate::util::Rng;
+
+pub struct ClusterGcnGen {
+    dataset: Arc<Dataset>,
+    spec: ShapeSpec,
+    /// cluster id per node.
+    cluster_of: Vec<u32>,
+    /// train nodes per cluster.
+    cluster_train: Vec<Vec<NodeId>>,
+    /// clusters drawn per mini-batch.
+    clusters_per_batch: usize,
+    rng: Rng,
+}
+
+impl ClusterGcnGen {
+    pub fn new(
+        dataset: Arc<Dataset>,
+        spec: ShapeSpec,
+        n_clusters: usize,
+        clusters_per_batch: usize,
+        seed: u64,
+    ) -> Self {
+        let vw = VertexWeights::uniform(dataset.n_nodes());
+        let mut cfg = PartitionConfig::new(n_clusters);
+        cfg.seed = seed;
+        cfg.coarsen_to = (n_clusters * 8).max(256);
+        let p = metis_partition(&dataset.graph, &vw, &cfg);
+        let mut cluster_train: Vec<Vec<NodeId>> =
+            vec![Vec::new(); n_clusters];
+        for v in 0..dataset.n_nodes() {
+            if dataset.split[v] == SplitTag::Train {
+                cluster_train[p.assign[v] as usize].push(v as NodeId);
+            }
+        }
+        Self {
+            dataset,
+            spec,
+            cluster_of: p.assign,
+            cluster_train,
+            clusters_per_batch,
+            rng: Rng::new(seed ^ 0xC6C),
+        }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.cluster_train.len() / self.clusters_per_batch).max(1)
+    }
+
+    /// One ClusterGCN step: union of q random clusters, in-cluster
+    /// neighbors only.
+    pub fn next(&mut self) -> HostBatch {
+        let q = self.clusters_per_batch;
+        let n_clusters = self.cluster_train.len();
+        let mut chosen = FxHashSet::default();
+        while chosen.len() < q.min(n_clusters) {
+            chosen.insert(self.rng.below(n_clusters as u64) as u32);
+        }
+        // targets: train nodes of the chosen clusters, capped at batch
+        let mut targets: Vec<NodeId> = Vec::new();
+        for &c in &chosen {
+            targets.extend(&self.cluster_train[c as usize]);
+        }
+        self.rng.shuffle(&mut targets);
+        targets.truncate(self.spec.batch);
+        if targets.is_empty() {
+            // degenerate draw: fall back to any train node
+            targets.push(
+                self.cluster_train
+                    .iter()
+                    .flatten()
+                    .next()
+                    .copied()
+                    .unwrap_or(0),
+            );
+        }
+
+        // layer expansion with DROPPED cross-cluster edges
+        let g = &self.dataset.graph;
+        let l_total = self.spec.num_layers();
+        let mut samples: Vec<(Vec<NodeId>, Vec<SampledNbrs>)> =
+            Vec::with_capacity(l_total);
+        let mut seeds = targets.clone();
+        for l in (1..=l_total).rev() {
+            let k = self.spec.fanouts[l - 1];
+            let cap = self.spec.layer_nodes[l - 1];
+            let mut layer: Vec<SampledNbrs> =
+                Vec::with_capacity(seeds.len());
+            let mut next: Vec<NodeId> = seeds.clone();
+            let mut seen: FxHashSet<NodeId> =
+                seeds.iter().copied().collect();
+            for &s in &seeds {
+                let nbrs: Vec<NodeId> = g
+                    .neighbors(s)
+                    .iter()
+                    .copied()
+                    .filter(|&v| {
+                        chosen.contains(&self.cluster_of[v as usize])
+                    })
+                    .take(k)
+                    .collect();
+                // (no sampling beyond the in-cluster truncation); frontier
+                // growth capped in to_block's drop order
+                for &v in &nbrs {
+                    if !seen.contains(&v) && next.len() < cap {
+                        seen.insert(v);
+                        next.push(v);
+                    }
+                }
+                layer.push(SampledNbrs { nbrs, rels: Vec::new() });
+            }
+            samples.push((seeds, layer));
+            seeds = next;
+        }
+        let block = to_block(&self.spec, &samples);
+
+        // features + labels straight from the dataset (single machine)
+        let n0 = self.spec.layer_nodes[0];
+        let f = self.spec.feat_dim;
+        let mut feats = vec![0f32; n0 * f];
+        for (i, &v) in block.input_nodes.iter().enumerate().take(n0) {
+            feats[i * f..(i + 1) * f]
+                .copy_from_slice(self.dataset.feature(v));
+        }
+        let n_l = *self.spec.layer_nodes.last().unwrap();
+        let mut labels = vec![0i32; n_l];
+        let mut mask = vec![0f32; n_l];
+        for (i, &v) in block.targets.iter().enumerate() {
+            labels[i] = self.dataset.labels[v as usize] as i32;
+            mask[i] = 1.0;
+        }
+        HostBatch {
+            feats,
+            layers: block.layers,
+            labels,
+            label_mask: mask,
+            pair_mask: Vec::new(),
+            targets: block.targets,
+            remote_rows: 0,
+            dropped_neighbors: block.dropped_neighbors,
+        }
+    }
+
+    /// How many of a node set's graph edges survive the cluster restriction
+    /// (observability: ClusterGCN's dropped-edge fraction).
+    pub fn edge_retention(&self) -> f64 {
+        let g = &self.dataset.graph;
+        let mut kept = 0usize;
+        let mut total = 0usize;
+        for u in 0..g.n_nodes() as NodeId {
+            for &v in g.neighbors(u) {
+                total += 1;
+                if self.cluster_of[u as usize]
+                    == self.cluster_of[v as usize]
+                {
+                    kept += 1;
+                }
+            }
+        }
+        kept as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::sampler::compact::{ModelKind, TaskKind};
+
+    fn gen() -> ClusterGcnGen {
+        let d = Arc::new(DatasetSpec::new("cg", 1500, 6000).generate());
+        let spec = ShapeSpec {
+            name: "cg".into(),
+            model: ModelKind::Sage,
+            task: TaskKind::NodeClassification,
+            batch: 64,
+            fanouts: vec![4, 4],
+            layer_nodes: vec![1024, 256, 64],
+            feat_dim: d.feat_dim,
+            num_classes: d.num_classes,
+            num_rels: 1,
+        };
+        ClusterGcnGen::new(d, spec, 24, 2, 3)
+    }
+
+    #[test]
+    fn batches_only_contain_in_cluster_edges() {
+        let mut g = gen();
+        let b = g.next();
+        // every masked neighbor maps to a node in the chosen clusters —
+        // verified indirectly: all referenced input nodes' clusters form a
+        // set of at most clusters_per_batch ids (targets' clusters)
+        let mut clusters: FxHashSet<u32> = FxHashSet::default();
+        // reconstruct input node list is embedded in feats only; check via
+        // dropped edges metric instead:
+        assert!(b.targets.len() <= 64);
+        for &t in &b.targets {
+            clusters.insert(g.cluster_of[t as usize]);
+        }
+        assert!(clusters.len() <= 2);
+    }
+
+    #[test]
+    fn clustergcn_drops_edges() {
+        let g = gen();
+        let retention = g.edge_retention();
+        assert!(
+            retention < 0.95,
+            "clustering kept {retention} of edges — nothing dropped?"
+        );
+        assert!(retention > 0.2, "degenerate clustering: {retention}");
+    }
+
+    #[test]
+    fn shapes_match_spec() {
+        let mut g = gen();
+        let b = g.next();
+        assert_eq!(b.feats.len(), 1024 * g.spec.feat_dim);
+        assert_eq!(b.labels.len(), 64);
+        assert_eq!(b.layers.len(), 2);
+    }
+}

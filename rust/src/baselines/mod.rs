@@ -1,0 +1,17 @@
+//! Comparator systems from the paper's evaluation (§6):
+//!
+//! - **DistDGL (v1)** and **Euler** are *configurations* of this codebase
+//!   (the paper's own framing: same training algorithm, different
+//!   partitioning/parallelization/pipelining) — see
+//!   `config::RunConfig::preset_distdgl_v1` / `preset_euler`.
+//! - **ClusterGCN** ([`clustergcn`]) is a genuinely different training
+//!   *algorithm* (partition-as-minibatch, cross-partition edges dropped)
+//!   and is implemented here for the Fig 13 convergence comparison.
+//! - **Full-graph training** ([`fullgraph`]) for the Fig 2 motivation
+//!   experiment.
+
+pub mod clustergcn;
+pub mod fullgraph;
+
+pub use clustergcn::ClusterGcnGen;
+pub use fullgraph::FullGraphGen;

@@ -1,0 +1,377 @@
+//! Bench-harness support: shared workload builders and the hybrid
+//! measurement model used by every `rust/benches/*` binary.
+//!
+//! Methodology (DESIGN.md §2): this testbed is one CPU core, the paper's
+//! is 8×(96 vCPU + 8×T4) with 100 Gbps. Every bench therefore reports two
+//! series:
+//!
+//! 1. **measured** — real wall-clock of the full system at reduced scale
+//!    (all protocol work, sampling, compaction, PJRT execution is real);
+//! 2. **modeled** — the paper-testbed epoch time from the classic pipeline
+//!    bound: per-stage times (sampling CPU, network, PCIe, device) are
+//!    derived from the *measured byte counts and stage timings* of (1),
+//!    then combined as `sum(stages)` for a synchronous pipeline or
+//!    `max(stages)` for the asynchronous one.
+//!
+//! Speedup *shapes* (who wins, by what factor, where crossovers fall) are
+//! the reproduction target, not absolute numbers.
+
+use crate::cluster::Cluster;
+use crate::net::CostModel;
+use crate::pipeline::PipelineMode;
+use crate::runtime::manifest::VariantSpec;
+use crate::runtime::DeviceCostModel;
+use crate::trainer::TrainReport;
+
+/// Paper-testbed link parameters.
+pub const NET_BYTES_PER_SEC: f64 = 11e9; // 100 Gbps effective
+pub const NET_LATENCY_S: f64 = 20e-6;
+pub const PCIE_BYTES_PER_SEC: f64 = 12e9;
+
+/// How much faster the paper's 96-vCPU machines run the (multithreaded)
+/// sampling stages than this testbed's single core. The paper runs
+/// several sampler threads per trainer; 8 is a deliberately conservative
+/// sustained factor.
+pub const SAMPLING_CPU_SCALE: f64 = 8.0;
+
+/// Per-step stage times (seconds) for the pipeline bound.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    pub sample: f64,
+    pub net: f64,
+    pub pcie: f64,
+    pub device: f64,
+    pub allreduce: f64,
+}
+
+impl StageTimes {
+    /// Synchronous pipeline: stages serialize.
+    pub fn sync_step(&self) -> f64 {
+        self.sample + self.net + self.pcie + self.device + self.allreduce
+    }
+
+    /// Asynchronous pipeline: sampling/transfer overlap device compute;
+    /// the all-reduce barrier stays on the critical path.
+    pub fn async_step(&self) -> f64 {
+        self.sample.max(self.net).max(self.pcie).max(self.device)
+            + self.allreduce
+    }
+
+    pub fn step(&self, mode: PipelineMode) -> f64 {
+        match mode {
+            PipelineMode::Sync => self.sync_step(),
+            PipelineMode::Async | PipelineMode::AsyncNonstop => {
+                self.async_step()
+            }
+        }
+    }
+}
+
+/// Derive paper-testbed stage times from a measured run.
+///
+/// `device` selects the mini-batch compute device (T4 vs Xeon — the
+/// paper's GPU/CPU comparison axis); network/PCIe come from measured byte
+/// counts; sampling comes from measured CPU time scaled by
+/// [`SAMPLING_CPU_SCALE`].
+pub fn stage_times(
+    report: &TrainReport,
+    cluster: &Cluster,
+    spec: &VariantSpec,
+    device: &DeviceCostModel,
+) -> StageTimes {
+    stage_times_scaled(report, cluster, spec, device, SAMPLING_CPU_SCALE)
+}
+
+/// Like [`stage_times`] with an explicit sampling-CPU scale: systems that
+/// cannot multithread sampling within a trainer (Euler, §6.1) get 1.0.
+pub fn stage_times_scaled(
+    report: &TrainReport,
+    cluster: &Cluster,
+    spec: &VariantSpec,
+    device: &DeviceCostModel,
+    sampling_scale: f64,
+) -> StageTimes {
+    let n_trainers = cluster.n_trainers();
+    let steps_total = (report.steps * n_trainers).max(1) as f64;
+    // per-trainer-step averages
+    let net_bytes = report.net_bytes as f64 / steps_total;
+    let net_msgs =
+        cluster.cost.network_msgs() as f64 / steps_total; // approx
+    let pcie_bytes = report.pcie_bytes as f64 / steps_total;
+    let produced = (report.batches_produced as f64).max(steps_total);
+    let sample = report.sample_secs / produced / sampling_scale;
+    // ring all-reduce: 2(N-1)/N * params across the slowest (network) links
+    let param_bytes: f64 = spec.param_elements() as f64 * 4.0;
+    let n = n_trainers as f64;
+    let ar_bytes = 2.0 * (n - 1.0) / n * param_bytes;
+    let allreduce = ar_bytes / NET_BYTES_PER_SEC
+        + 2.0 * (n - 1.0) * NET_LATENCY_S;
+    StageTimes {
+        sample,
+        net: net_bytes / NET_BYTES_PER_SEC + net_msgs * NET_LATENCY_S,
+        pcie: pcie_bytes / PCIE_BYTES_PER_SEC,
+        device: device.step_secs(spec, true),
+        allreduce,
+    }
+}
+
+/// Modeled epoch seconds on the paper testbed for a measured run.
+pub fn modeled_epoch_secs(
+    report: &TrainReport,
+    cluster: &Cluster,
+    spec: &VariantSpec,
+    device: &DeviceCostModel,
+    mode: PipelineMode,
+) -> f64 {
+    modeled_epoch_secs_scaled(
+        report, cluster, spec, device, mode, SAMPLING_CPU_SCALE,
+    )
+}
+
+/// [`modeled_epoch_secs`] with an explicit sampling-CPU scale.
+pub fn modeled_epoch_secs_scaled(
+    report: &TrainReport,
+    cluster: &Cluster,
+    spec: &VariantSpec,
+    device: &DeviceCostModel,
+    mode: PipelineMode,
+    sampling_scale: f64,
+) -> f64 {
+    let st = stage_times_scaled(report, cluster, spec, device, sampling_scale);
+    let steps_per_epoch = cluster.batches_per_epoch(spec.batch, 0);
+    let mut t = st.step(mode) * steps_per_epoch as f64;
+    if mode == PipelineMode::Async {
+        // per-epoch pipeline refill: one full sequential batch latency
+        t += st.sync_step();
+    }
+    t
+}
+
+/// Wall-clock seconds per epoch from a measured run.
+pub fn measured_epoch_secs(report: &TrainReport, cluster: &Cluster, spec: &VariantSpec) -> f64 {
+    let steps_per_epoch = cluster.batches_per_epoch(spec.batch, 0) as f64;
+    report.total_secs / report.steps.max(1) as f64 * steps_per_epoch
+}
+
+/// Pretty-print one figure row: `label  measured  modeled  speedup-vs-base`.
+pub struct FigTable {
+    pub title: String,
+    rows: Vec<(String, f64, f64)>,
+}
+
+impl FigTable {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        println!(
+            "{:<44} {:>12} {:>14}",
+            "configuration", "measured", "modeled(paper)"
+        );
+        Self { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, label: &str, measured: f64, modeled: f64) {
+        println!(
+            "{:<44} {:>11.3}s {:>13.4}s",
+            label, measured, modeled
+        );
+        self.rows.push((label.to_string(), measured, modeled));
+    }
+
+    /// Print speedups of every row relative to `base_label`.
+    pub fn speedups(&self, base_label: &str) {
+        let Some(base) = self.rows.iter().find(|r| r.0 == base_label)
+        else {
+            return;
+        };
+        println!("-- speedup over {base_label} --");
+        for (label, m, md) in &self.rows {
+            println!(
+                "{:<44} {:>10.2}x (measured) {:>10.2}x (modeled)",
+                label,
+                base.1 / m,
+                base.2 / md
+            );
+        }
+    }
+
+    pub fn modeled_of(&self, label: &str) -> Option<f64> {
+        self.rows.iter().find(|r| r.0 == label).map(|r| r.2)
+    }
+
+    pub fn measured_of(&self, label: &str) -> Option<f64> {
+        self.rows.iter().find(|r| r.0 == label).map(|r| r.1)
+    }
+}
+
+/// Fresh cost model with paper link parameters (per-bench isolation).
+pub fn paper_cost_model() -> CostModel {
+    CostModel::new(NET_BYTES_PER_SEC, NET_LATENCY_S, PCIE_BYTES_PER_SEC)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_step_dominates_async_step() {
+        let st = StageTimes {
+            sample: 2e-3,
+            net: 1e-3,
+            pcie: 0.5e-3,
+            device: 1.5e-3,
+            allreduce: 0.2e-3,
+        };
+        assert!(st.sync_step() > st.async_step());
+        // async bound = slowest stage + barrier
+        assert!((st.async_step() - (2e-3 + 0.2e-3)).abs() < 1e-9);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paper-workload projection: calibrate unit costs from a measured run, then
+// re-scale to the paper's workload shapes (batch 1000, fanout 15/10/5,
+// feat 100-756). This is what gives the modeled series real stage contrast:
+// at dev shapes the device dominates everything; at paper shapes sampling
+// and feature movement matter, which is exactly the regime the paper's
+// figures live in.
+// ---------------------------------------------------------------------------
+
+use crate::sampler::compact::{ModelKind, TaskKind};
+
+/// A paper-scale workload description for one figure row.
+#[derive(Clone, Debug)]
+pub struct PaperWorkload {
+    pub spec: VariantSpec,
+    /// Global training items (nodes or edges) — sets steps per epoch.
+    pub train_items: usize,
+}
+
+/// Representative paper-shape specs (§6 hyper-parameters).
+pub fn paper_spec(model: ModelKind, feat_dim: usize) -> VariantSpec {
+    let (fanouts, layer_nodes, hidden): (Vec<usize>, Vec<usize>, usize) =
+        match model {
+            ModelKind::Rgcn => {
+                // 2 layers, fanout 15/25, hidden 1024
+                (vec![15, 25], vec![50_000, 10_400, 1_000], 1024)
+            }
+            _ => {
+                // 3 layers, fanout 15/10/5, hidden 256
+                (vec![15, 10, 5], vec![64_000, 13_000, 3_000, 1_000], 256)
+            }
+        };
+    let n_layers = fanouts.len();
+    let mut param_shapes = Vec::new();
+    for l in 0..n_layers {
+        let f_in = if l == 0 { feat_dim } else { hidden };
+        let f_out = if l + 1 == n_layers { 172 } else { hidden };
+        param_shapes.push(vec![f_in, f_out]);
+        param_shapes.push(vec![f_in, f_out]);
+        param_shapes.push(vec![f_out]);
+    }
+    VariantSpec {
+        name: format!("paper-{model:?}"),
+        model,
+        task: TaskKind::NodeClassification,
+        batch: 1000,
+        fanouts,
+        layer_nodes,
+        feat_dim,
+        num_classes: 172,
+        num_heads: 2,
+        num_rels: 4,
+        param_shapes,
+        train_inputs: Vec::new(),
+        eval_inputs: Vec::new(),
+        train_hlo: String::new(),
+        eval_hlo: String::new(),
+        params_bin: String::new(),
+    }
+}
+
+fn sampled_edges(spec: &VariantSpec) -> f64 {
+    (1..=spec.fanouts.len())
+        .map(|l| (spec.layer_nodes[l] * spec.fanouts[l - 1]) as f64)
+        .sum()
+}
+
+/// Project a measured run onto a paper workload: per-step stage times.
+///
+/// Calibration: sampling cost per sampled edge and the remote-row fraction
+/// come from the measured run (they encode partition locality + pipeline
+/// behaviour); transfer times are bytes/bandwidth at paper shapes; device
+/// time is the roofline at paper shapes.
+pub fn paper_stage_times(
+    report: &TrainReport,
+    cluster: &Cluster,
+    our_spec: &VariantSpec,
+    paper: &VariantSpec,
+    device: &DeviceCostModel,
+    sampling_scale: f64,
+) -> StageTimes {
+    let n_trainers = cluster.n_trainers().max(1);
+    let steps_total = (report.steps * n_trainers).max(1) as f64;
+
+    // measured unit costs (normalize by batches actually produced — the
+    // non-stop pipeline overproduces a few batches at teardown)
+    let produced = (report.batches_produced as f64).max(steps_total);
+    let sample_per_edge = report.sample_secs
+        / produced
+        / sampled_edges(our_spec).max(1.0)
+        / sampling_scale;
+    let our_rows = our_spec.layer_nodes[0] as f64;
+    let remote_frac = (report.remote_feature_rows as f64 / steps_total
+        / our_rows)
+        .min(1.0);
+
+    // paper-shape per-step quantities
+    let p_edges = sampled_edges(paper);
+    let p_rows = paper.layer_nodes[0] as f64;
+    let feat_bytes = p_rows * paper.feat_dim as f64 * 4.0;
+    let idx_bytes: f64 = (1..=paper.fanouts.len())
+        .map(|l| {
+            (paper.layer_nodes[l] * (1 + 2 * paper.fanouts[l - 1])) as f64
+                * 4.0
+        })
+        .sum();
+    let net_bytes = remote_frac * feat_bytes;
+    // one batched request per remote machine per layer+feature pull
+    let msgs = (cluster.spec.n_machines.saturating_sub(1)
+        * (paper.fanouts.len() + 1)) as f64;
+
+    let n = n_trainers as f64;
+    let param_bytes: f64 = paper.param_elements() as f64 * 4.0;
+    StageTimes {
+        sample: sample_per_edge * p_edges,
+        net: net_bytes / NET_BYTES_PER_SEC + msgs * NET_LATENCY_S,
+        pcie: (feat_bytes + idx_bytes) / PCIE_BYTES_PER_SEC,
+        device: device.step_secs(paper, true),
+        allreduce: 2.0 * (n - 1.0) / n * param_bytes / NET_BYTES_PER_SEC
+            + 2.0 * (n - 1.0) * NET_LATENCY_S,
+    }
+}
+
+/// Paper-testbed epoch seconds for a figure row.
+#[allow(clippy::too_many_arguments)]
+pub fn paper_epoch_secs(
+    report: &TrainReport,
+    cluster: &Cluster,
+    our_spec: &VariantSpec,
+    workload: &PaperWorkload,
+    device: &DeviceCostModel,
+    mode: PipelineMode,
+    sampling_scale: f64,
+    n_gpus: usize,
+) -> f64 {
+    let st = paper_stage_times(
+        report, cluster, our_spec, &workload.spec, device, sampling_scale,
+    );
+    let steps = workload
+        .train_items
+        .div_ceil(workload.spec.batch * n_gpus.max(1))
+        .max(1);
+    let mut t = st.step(mode) * steps as f64;
+    if mode == PipelineMode::Async {
+        t += st.sync_step(); // per-epoch refill
+    }
+    t
+}

@@ -1,0 +1,471 @@
+//! Cluster deployment (§5.1, Figure 5): partition the input graph, build
+//! per-machine physical partitions, register features/labels in the
+//! distributed KVStore, launch sampler servers, and split the training
+//! set across trainers — everything `trainer::train` needs to run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::graph::{Dataset, NodeId, SplitTag};
+use crate::kvstore::{KvCluster, RangePolicy};
+use crate::net::CostModel;
+use crate::partition::{
+    build_partitions, hierarchical, metis_partition, random, relabel,
+    NodeMap, PartitionConfig, Partitioning, PhysPartition, VertexWeights,
+};
+use crate::pipeline::BatchGen;
+use crate::runtime::manifest::VariantSpec;
+use crate::sampler::compact::TaskKind;
+use crate::sampler::{BatchScheduler, DistNeighborSampler, SamplerServer};
+use crate::trainer::{split_training_set, DeviceHandle};
+use crate::util::Rng;
+
+/// Which first-level partitioner to deploy with (Fig 14 ablation knobs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// Multilevel min-cut with multi-constraint balancing (the paper).
+    Metis,
+    /// Euler-style random placement.
+    Random,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub n_machines: usize,
+    pub trainers_per_machine: usize,
+    pub partitioner: Partitioner,
+    /// Balance train/val/test counts during partitioning (§5.3.2).
+    pub multi_constraint: bool,
+    /// Second-level (per-GPU) partitioning for the training-set split.
+    pub two_level: bool,
+    /// Sleep for modeled link time on remote pulls (wall-clock fidelity).
+    pub emulate_network_time: bool,
+    pub seed: u64,
+}
+
+impl ClusterSpec {
+    pub fn new(n_machines: usize, trainers_per_machine: usize) -> Self {
+        Self {
+            n_machines,
+            trainers_per_machine,
+            partitioner: Partitioner::Metis,
+            multi_constraint: true,
+            two_level: true,
+            emulate_network_time: false,
+            seed: 13,
+        }
+    }
+}
+
+/// Preprocessing timings + partition quality (Table 2 / Fig 14 inputs).
+#[derive(Clone, Debug, Default)]
+pub struct DeployStats {
+    pub partition_secs: f64,
+    pub build_secs: f64,
+    pub load_secs: f64,
+    pub edge_cut: usize,
+    pub imbalance: f32,
+}
+
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    pub artifacts: PathBuf,
+    pub cost: Arc<CostModel>,
+    pub node_map: Arc<NodeMap>,
+    pub kv: Arc<KvCluster>,
+    pub policy: Arc<RangePolicy>,
+    pub sampler_servers: Vec<Arc<SamplerServer>>,
+    pub partitions: Vec<Arc<PhysPartition>>,
+    /// Per-trainer training items (node ids; lp derives edges from these).
+    pub train_sets: Vec<Vec<NodeId>>,
+    pub val_nodes: Vec<NodeId>,
+    pub test_nodes: Vec<NodeId>,
+    /// Labels in new-ID order (host copy for accuracy computation).
+    pub labels: Arc<Vec<u16>>,
+    pub num_classes: usize,
+    pub n_nodes: usize,
+    pub n_edges: usize,
+    pub stats: DeployStats,
+}
+
+impl Cluster {
+    /// Partition + deploy a dataset. `artifacts` points at the AOT output
+    /// directory (HLO + manifest).
+    pub fn deploy(
+        dataset: &Dataset,
+        spec: ClusterSpec,
+        artifacts: PathBuf,
+    ) -> Result<Cluster> {
+        let n = dataset.n_nodes();
+        let t_part = Instant::now();
+        let partitioning: Partitioning = match spec.partitioner {
+            Partitioner::Metis => {
+                let vw = if spec.multi_constraint {
+                    VertexWeights::for_training(
+                        n,
+                        &dataset.split,
+                        &dataset.graph.node_type,
+                        1,
+                    )
+                } else {
+                    VertexWeights::uniform(n)
+                };
+                let mut cfg = PartitionConfig::new(spec.n_machines);
+                cfg.seed = spec.seed;
+                metis_partition(&dataset.graph, &vw, &cfg)
+            }
+            Partitioner::Random => {
+                random::random_partition(n, spec.n_machines, spec.seed)
+            }
+        };
+        let edge_cut = partitioning.edge_cut(&dataset.graph);
+        let imbalance =
+            partitioning.imbalance(&VertexWeights::uniform(n));
+        let partition_secs = t_part.elapsed().as_secs_f64();
+
+        // relabel + physical partitions
+        let t_build = Instant::now();
+        let r = relabel::relabel(&partitioning);
+        let d2 = relabel::relabel_dataset(dataset, &r);
+        let node_map = Arc::new(r.node_map);
+        let partitions: Vec<Arc<PhysPartition>> =
+            build_partitions(&d2.graph, &node_map)
+                .into_iter()
+                .map(Arc::new)
+                .collect();
+        let sampler_servers: Vec<Arc<SamplerServer>> = partitions
+            .iter()
+            .enumerate()
+            .map(|(m, p)| Arc::new(SamplerServer::new(m as u32, p.clone())))
+            .collect();
+        let build_secs = t_build.elapsed().as_secs_f64();
+
+        // KVStore: features + labels partitioned by the range policy
+        let t_load = Instant::now();
+        let cost = Arc::new(CostModel::default());
+        let kv = if spec.emulate_network_time {
+            KvCluster::with_emulated_network(spec.n_machines, cost.clone())
+        } else {
+            KvCluster::new(spec.n_machines, cost.clone())
+        };
+        let policy = Arc::new(RangePolicy::new(NodeMap {
+            part_starts: node_map.part_starts.clone(),
+        }));
+        kv.register_partitioned(
+            "feat",
+            &d2.feats,
+            d2.feat_dim,
+            policy.as_ref(),
+        );
+        let labels_f32: Vec<f32> =
+            d2.labels.iter().map(|&l| l as f32).collect();
+        kv.register_partitioned("label", &labels_f32, 1, policy.as_ref());
+        let load_secs = t_load.elapsed().as_secs_f64();
+
+        // training-set split (§5.6.1)
+        let train: Vec<NodeId> = d2.nodes_with(SplitTag::Train);
+        let machine_sets = split_training_set(
+            train,
+            &node_map,
+            spec.n_machines,
+            1,
+        );
+        let mut train_sets: Vec<Vec<NodeId>> = Vec::new();
+        for (m, set) in machine_sets.into_iter().enumerate() {
+            train_sets.extend(split_within_machine(
+                set,
+                &partitions[m],
+                spec.trainers_per_machine,
+                spec.two_level,
+                spec.seed ^ m as u64,
+            ));
+        }
+        // synchronous SGD: equalize counts exactly (trim to min)
+        let min_len =
+            train_sets.iter().map(|s| s.len()).min().unwrap_or(0);
+        for s in train_sets.iter_mut() {
+            s.truncate(min_len);
+        }
+
+        Ok(Cluster {
+            spec,
+            artifacts,
+            cost,
+            node_map,
+            kv,
+            policy,
+            sampler_servers,
+            partitions,
+            train_sets,
+            val_nodes: d2.nodes_with(SplitTag::Val),
+            test_nodes: d2.nodes_with(SplitTag::Test),
+            labels: Arc::new(d2.labels.clone()),
+            num_classes: d2.num_classes,
+            n_nodes: n,
+            n_edges: d2.graph.n_edges(),
+            stats: DeployStats {
+                partition_secs,
+                build_secs,
+                load_secs,
+                edge_cut,
+                imbalance,
+            },
+        })
+    }
+
+    pub fn n_trainers(&self) -> usize {
+        self.spec.n_machines * self.spec.trainers_per_machine
+    }
+
+    pub fn machine_of_trainer(&self, t: usize) -> u32 {
+        (t / self.spec.trainers_per_machine) as u32
+    }
+
+    pub fn batches_per_epoch(&self, batch: usize, _seed: u64) -> usize {
+        self.train_sets
+            .first()
+            .map(|s| s.len().div_ceil(batch).max(1))
+            .unwrap_or(1)
+    }
+
+    /// Build the mini-batch generator for one trainer.
+    pub fn batch_gen(
+        &self,
+        trainer: usize,
+        vspec: &VariantSpec,
+        _variant: &str,
+        seed: u64,
+    ) -> BatchGen {
+        let machine = self.machine_of_trainer(trainer);
+        let shape = vspec.shape_spec();
+        let mut sampler = DistNeighborSampler::new(
+            machine,
+            self.sampler_servers.clone(),
+            self.node_map.clone(),
+            self.cost.clone(),
+        );
+        sampler.emulate_network_time = self.spec.emulate_network_time;
+        let items = self.train_sets[trainer].clone();
+        let scheduler = match shape.task {
+            TaskKind::NodeClassification => BatchScheduler::for_nodes(
+                items,
+                shape.batch,
+                seed,
+            ),
+            TaskKind::LinkPrediction => {
+                // lp training items: one positive edge per assigned node
+                // (its first sampled neighbor), negatives drawn uniformly
+                let mut rng = Rng::new(seed ^ 0xE18E5);
+                let part =
+                    &self.partitions[machine as usize];
+                let mut edges = Vec::with_capacity(items.len());
+                for &v in &items {
+                    if let Some(local) = part.local_of(v) {
+                        if part.is_core_local(local) {
+                            let nbrs = part.graph.neighbors(local);
+                            if !nbrs.is_empty() {
+                                let pick =
+                                    nbrs[rng.usize_below(nbrs.len())];
+                                edges.push((
+                                    v,
+                                    part.global_of(pick),
+                                ));
+                                continue;
+                            }
+                        }
+                    }
+                    // remote or isolated item: self-pair (masked later)
+                    edges.push((v, v));
+                }
+                BatchScheduler::for_edges(
+                    edges,
+                    shape.batch,
+                    self.n_nodes as u64,
+                    seed,
+                )
+            }
+        };
+        BatchGen {
+            spec: shape,
+            scheduler,
+            sampler: Arc::new(sampler),
+            kv: self.kv.client(machine, self.policy.clone()),
+            rng: Rng::new(seed ^ 0xBA7C4),
+            feat_name: "feat".into(),
+            label_name: "label".into(),
+        }
+    }
+
+    /// Validation accuracy of `params` over (a sample of) the val set.
+    pub fn evaluate(
+        &self,
+        device: &DeviceHandle,
+        vspec: &VariantSpec,
+        params: &[Vec<f32>],
+        seed: u64,
+    ) -> Result<f64> {
+        if vspec.task != TaskKind::NodeClassification
+            || self.val_nodes.is_empty()
+            || params.is_empty()
+        {
+            return Ok(f64::NAN);
+        }
+        let mut gen = self.batch_gen(0, vspec, &vspec.name, seed);
+        let batch_size = vspec.batch;
+        let max_nodes = self.val_nodes.len().min(8 * batch_size);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let c = vspec.num_classes;
+        for chunk in self.val_nodes[..max_nodes].chunks(batch_size) {
+            let hb = gen.materialize_nodes(chunk);
+            let logits = device.eval(params, hb.clone())?;
+            for (i, &gid) in hb.targets.iter().enumerate() {
+                let row = &logits[i * c..(i + 1) * c];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as u16)
+                    .unwrap();
+                if argmax == self.labels[gid as usize] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+/// Split one machine's training items across its trainers: 2-level uses
+/// the hierarchical partitioner for intra-batch locality; 1-level takes
+/// contiguous chunks.
+fn split_within_machine(
+    set: Vec<NodeId>,
+    part: &Arc<PhysPartition>,
+    per_machine: usize,
+    two_level: bool,
+    seed: u64,
+) -> Vec<Vec<NodeId>> {
+    if per_machine <= 1 {
+        return vec![set];
+    }
+    if !two_level {
+        // contiguous equal chunks
+        let n = set.len();
+        let base = n / per_machine;
+        let rem = n % per_machine;
+        let mut out = Vec::with_capacity(per_machine);
+        let mut off = 0;
+        for t in 0..per_machine {
+            let len = base + usize::from(t < rem);
+            out.push(set[off..off + len].to_vec());
+            off += len;
+        }
+        return out;
+    }
+    // 2-level: locality-aware buckets over the core subgraph
+    let mut mask = vec![false; part.n_core];
+    let mut remote: Vec<NodeId> = Vec::new();
+    for &v in &set {
+        match part.local_of(v) {
+            Some(l) if part.is_core_local(l) => mask[l as usize] = true,
+            _ => remote.push(v),
+        }
+    }
+    let buckets = hierarchical::split_cores(part, &mask, per_machine, seed);
+    let mut out: Vec<Vec<NodeId>> = vec![Vec::new(); per_machine];
+    for (local, &b) in buckets.iter().enumerate() {
+        if mask[local] {
+            out[b as usize].push(part.global_of(local as u32));
+        }
+    }
+    // spill remote items round-robin (balanced, per §5.6.1)
+    for (i, v) in remote.into_iter().enumerate() {
+        out[i % per_machine].push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::runtime::manifest::artifacts_dir;
+
+    fn small_cluster(machines: usize, trainers: usize) -> Cluster {
+        let d = DatasetSpec::new("cl", 1500, 6000).generate();
+        Cluster::deploy(
+            &d,
+            ClusterSpec::new(machines, trainers),
+            artifacts_dir(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn deploy_builds_consistent_components() {
+        let c = small_cluster(2, 2);
+        assert_eq!(c.sampler_servers.len(), 2);
+        assert_eq!(c.train_sets.len(), 4);
+        let lens: Vec<usize> =
+            c.train_sets.iter().map(|s| s.len()).collect();
+        assert!(lens.iter().all(|&l| l == lens[0]), "{lens:?}");
+        assert!(lens[0] > 0);
+        assert!(c.stats.edge_cut > 0);
+    }
+
+    #[test]
+    fn training_items_are_mostly_local() {
+        let c = small_cluster(2, 2);
+        let mut local = 0usize;
+        let mut total = 0usize;
+        for (t, set) in c.train_sets.iter().enumerate() {
+            let m = c.machine_of_trainer(t);
+            for &v in set {
+                total += 1;
+                if c.node_map.owner(v) == m {
+                    local += 1;
+                }
+            }
+        }
+        let frac = local as f64 / total as f64;
+        assert!(frac > 0.6, "locality {frac}");
+    }
+
+    #[test]
+    fn batch_gen_produces_valid_batches() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = small_cluster(2, 1);
+        let m = crate::runtime::Manifest::load(&artifacts_dir()).unwrap();
+        let v = m.variant("sage_nc_dev").unwrap();
+        let mut gen = c.batch_gen(0, v, "sage_nc_dev", 5);
+        let b = gen.next();
+        assert_eq!(b.feats.len(), v.layer_nodes[0] * v.feat_dim);
+        assert_eq!(b.layers.len(), 2);
+        assert!(!b.targets.is_empty());
+    }
+
+    #[test]
+    fn random_partitioner_has_worse_cut() {
+        let d = DatasetSpec::new("rc", 2000, 8000).generate();
+        let mut s1 = ClusterSpec::new(4, 1);
+        s1.partitioner = Partitioner::Metis;
+        let mut s2 = ClusterSpec::new(4, 1);
+        s2.partitioner = Partitioner::Random;
+        let c1 = Cluster::deploy(&d, s1, artifacts_dir()).unwrap();
+        let c2 = Cluster::deploy(&d, s2, artifacts_dir()).unwrap();
+        assert!(
+            (c1.stats.edge_cut as f64) < 0.8 * c2.stats.edge_cut as f64,
+            "metis {} vs random {}",
+            c1.stats.edge_cut,
+            c2.stats.edge_cut
+        );
+    }
+}

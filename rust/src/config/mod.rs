@@ -1,0 +1,203 @@
+//! Run configuration: dataset/cluster/training knobs with `key=value` CLI
+//! parsing (offline environment: no clap; the grammar is deliberately
+//! simple and fully covered by tests).
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{ClusterSpec, Partitioner};
+use crate::graph::DatasetSpec;
+use crate::pipeline::PipelineMode;
+use crate::trainer::TrainConfig;
+
+/// Everything one `distdglv2 train` invocation needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetSpec,
+    pub cluster: ClusterSpec,
+    pub train: TrainConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetSpec::new("rmat-small", 20_000, 120_000),
+            cluster: ClusterSpec::new(2, 2),
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply one `key=value` override. Unknown keys error with the list of
+    /// valid keys.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let parse_usize = || -> Result<usize> {
+            value.parse().with_context(|| format!("{key}={value}"))
+        };
+        match key {
+            "dataset" => {
+                // named paper dataset at scale, or rmat:<nodes>:<edges>
+                if let Some(rest) = value.strip_prefix("rmat:") {
+                    let (n, e) = rest
+                        .split_once(':')
+                        .context("rmat:<nodes>:<edges>")?;
+                    self.dataset = DatasetSpec::new(
+                        &format!("rmat-{n}-{e}"),
+                        n.parse()?,
+                        e.parse()?,
+                    );
+                } else {
+                    let (name, scale) =
+                        value.split_once('@').unwrap_or((value, "1000"));
+                    self.dataset = DatasetSpec::paper_table1(
+                        name,
+                        scale.parse()?,
+                    );
+                }
+            }
+            "feat_dim" => self.dataset.feat_dim = parse_usize()?,
+            "classes" => self.dataset.num_classes = parse_usize()?,
+            "dataset_seed" => self.dataset.seed = value.parse()?,
+            "machines" => self.cluster.n_machines = parse_usize()?,
+            "trainers" => self.cluster.trainers_per_machine = parse_usize()?,
+            "partitioner" => {
+                self.cluster.partitioner = match value {
+                    "metis" => Partitioner::Metis,
+                    "random" => Partitioner::Random,
+                    _ => bail!("partitioner must be metis|random"),
+                }
+            }
+            "multi_constraint" => {
+                self.cluster.multi_constraint = parse_bool(value)?
+            }
+            "two_level" => self.cluster.two_level = parse_bool(value)?,
+            "emulate_network" => {
+                self.cluster.emulate_network_time = parse_bool(value)?
+            }
+            "variant" => self.train.variant = value.to_string(),
+            "lr" => self.train.lr = value.parse()?,
+            "epochs" => self.train.epochs = parse_usize()?,
+            "max_steps" => self.train.max_steps = parse_usize()?,
+            "eval" => self.train.eval_each_epoch = parse_bool(value)?,
+            "seed" => {
+                self.train.seed = value.parse()?;
+                self.cluster.seed = value.parse()?;
+            }
+            "pipeline" => {
+                self.train.pipeline.mode = match value {
+                    "sync" => PipelineMode::Sync,
+                    "async" => PipelineMode::Async,
+                    "nonstop" => PipelineMode::AsyncNonstop,
+                    _ => bail!("pipeline must be sync|async|nonstop"),
+                }
+            }
+            "cpu_prefetch" => {
+                self.train.pipeline.cpu_prefetch_depth = parse_usize()?
+            }
+            "gpu_prefetch" => {
+                self.train.pipeline.gpu_prefetch_depth = parse_usize()?
+            }
+            _ => bail!(
+                "unknown key {key:?}; valid: dataset feat_dim classes \
+                 dataset_seed machines trainers partitioner \
+                 multi_constraint two_level emulate_network variant lr \
+                 epochs max_steps eval seed pipeline cpu_prefetch \
+                 gpu_prefetch"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Parse a sequence of `key=value` arguments over the defaults.
+    pub fn from_args<I: IntoIterator<Item = String>>(
+        args: I,
+    ) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        for a in args {
+            let (k, v) = a
+                .split_once('=')
+                .with_context(|| format!("expected key=value, got {a:?}"))?;
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// DistDGL-v1 baseline preset: synchronous pipeline, 1-level split.
+    pub fn preset_distdgl_v1(mut self) -> Self {
+        self.train.pipeline.mode = PipelineMode::Sync;
+        self.cluster.two_level = false;
+        self
+    }
+
+    /// Euler baseline preset: random partitioning, process-only
+    /// parallelism (no sampling thread ⇒ sync pipeline), 1-level split.
+    pub fn preset_euler(mut self) -> Self {
+        self.cluster.partitioner = Partitioner::Random;
+        self.cluster.multi_constraint = false;
+        self.cluster.two_level = false;
+        self.train.pipeline.mode = PipelineMode::Sync;
+        self
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => bail!("expected bool, got {v:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_overrides() {
+        let cfg = RunConfig::from_args(
+            [
+                "machines=4",
+                "trainers=2",
+                "dataset=rmat:5000:20000",
+                "pipeline=sync",
+                "lr=0.05",
+                "two_level=false",
+            ]
+            .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.n_machines, 4);
+        assert_eq!(cfg.dataset.n_nodes, 5000);
+        assert_eq!(cfg.train.pipeline.mode, PipelineMode::Sync);
+        assert_eq!(cfg.train.lr, 0.05);
+        assert!(!cfg.cluster.two_level);
+    }
+
+    #[test]
+    fn paper_dataset_with_scale() {
+        let cfg = RunConfig::from_args(
+            ["dataset=ogbn-products@2000".to_string()],
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset.n_nodes, 1200);
+        assert_eq!(cfg.dataset.feat_dim, 100);
+    }
+
+    #[test]
+    fn unknown_key_lists_valid_ones() {
+        let err = RunConfig::from_args(["bogus=1".to_string()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("valid:"));
+    }
+
+    #[test]
+    fn presets_flip_the_right_knobs() {
+        let v1 = RunConfig::default().preset_distdgl_v1();
+        assert_eq!(v1.train.pipeline.mode, PipelineMode::Sync);
+        assert!(!v1.cluster.two_level);
+        assert_eq!(v1.cluster.partitioner, Partitioner::Metis);
+        let euler = RunConfig::default().preset_euler();
+        assert_eq!(euler.cluster.partitioner, Partitioner::Random);
+    }
+}

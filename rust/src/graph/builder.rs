@@ -1,0 +1,144 @@
+//! Edge-list → CSR construction with sorting and optional dedup.
+
+use super::{Graph, NodeId};
+
+/// Accumulates (src, dst, rel) triples and builds an immutable CSR
+/// [`Graph`]. Building is O(E log E) (sort by src, then dst).
+pub struct GraphBuilder {
+    n_nodes: usize,
+    edges: Vec<(NodeId, NodeId, u8)>,
+    node_type: Vec<u8>,
+    has_rel: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(n_nodes: usize) -> Self {
+        Self {
+            n_nodes,
+            edges: Vec::new(),
+            node_type: Vec::new(),
+            has_rel: false,
+        }
+    }
+
+    pub fn with_capacity(n_nodes: usize, n_edges: usize) -> Self {
+        let mut b = Self::new(n_nodes);
+        b.edges.reserve(n_edges);
+        b
+    }
+
+    /// Add a directed edge dst-aggregates-from-src: stored under `dst`'s
+    /// adjacency (incoming message edge).
+    pub fn add_edge(&mut self, dst: NodeId, src: NodeId, rel: u8) {
+        debug_assert!((dst as usize) < self.n_nodes);
+        debug_assert!((src as usize) < self.n_nodes);
+        if rel != 0 {
+            self.has_rel = true;
+        }
+        self.edges.push((dst, src, rel));
+    }
+
+    /// Add both directions (symmetrization for natural graphs).
+    pub fn add_undirected(&mut self, a: NodeId, b: NodeId, rel: u8) {
+        self.add_edge(a, b, rel);
+        self.add_edge(b, a, rel);
+    }
+
+    pub fn set_node_types(&mut self, types: Vec<u8>) {
+        assert_eq!(types.len(), self.n_nodes);
+        self.node_type = types;
+    }
+
+    pub fn n_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build, removing duplicate (dst, src, rel) triples and self-loops.
+    pub fn build_dedup(mut self) -> Graph {
+        self.edges.retain(|&(d, s, _)| d != s);
+        self.edges.sort_unstable();
+        self.edges.dedup();
+        self.finish()
+    }
+
+    /// Build keeping parallel edges (sorted for locality).
+    pub fn build(mut self) -> Graph {
+        self.edges.sort_unstable();
+        self.finish()
+    }
+
+    fn finish(self) -> Graph {
+        let mut offsets = vec![0u64; self.n_nodes + 1];
+        for &(d, _, _) in &self.edges {
+            offsets[d as usize + 1] += 1;
+        }
+        for i in 0..self.n_nodes {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut targets = Vec::with_capacity(self.edges.len());
+        let mut rel = if self.has_rel {
+            Vec::with_capacity(self.edges.len())
+        } else {
+            Vec::new()
+        };
+        for &(_, s, r) in &self.edges {
+            targets.push(s);
+            if self.has_rel {
+                rel.push(r);
+            }
+        }
+        Graph { offsets, targets, rel, node_type: self.node_type }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_sorts_and_counts() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(2, 1, 0);
+        b.add_edge(0, 3, 0);
+        b.add_edge(2, 0, 0);
+        let g = b.build();
+        assert_eq!(g.neighbors(0), &[3]);
+        assert_eq!(g.neighbors(2), &[0, 1]);
+        assert_eq!(g.degree(1), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dedup_removes_dupes_and_selfloops() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 0);
+        b.add_edge(0, 1, 0);
+        b.add_edge(1, 1, 0); // self loop
+        b.add_edge(2, 0, 0);
+        let g = b.build_dedup();
+        assert_eq!(g.n_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.degree(1), 0);
+    }
+
+    #[test]
+    fn rel_preserved_and_aligned() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 2);
+        b.add_edge(0, 2, 1);
+        b.add_edge(1, 0, 0);
+        let g = b.build();
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.rel_of(0), &[2, 1]);
+        assert_eq!(g.rel_of(1), &[0]);
+    }
+
+    #[test]
+    fn undirected_adds_both() {
+        let mut b = GraphBuilder::new(2);
+        b.add_undirected(0, 1, 0);
+        let g = b.build();
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Dataset bundle IO: persist a generated (or relabeled) dataset —
+//! graph + features + labels + split — so partitioning/preprocessing is
+//! paid once and reused across training runs (the paper's Table 2
+//! workflow: ParMETIS output is saved and loaded by every job).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::generate::{Dataset, SplitTag};
+use super::io::{read_f32_vec, write_f32_slice};
+use super::Graph;
+
+const MAGIC: u32 = 0xD157_B01D;
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn save_dataset(d: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    w.write_all(&MAGIC.to_le_bytes())?;
+    // name
+    let name = d.name.as_bytes();
+    write_u64(&mut w, name.len() as u64)?;
+    w.write_all(name)?;
+    // graph (reuse the graph format inline)
+    let tmp = path.with_extension("graph.tmp");
+    super::io::save_graph(&d.graph, &tmp)?;
+    let graph_bytes = std::fs::read(&tmp)?;
+    std::fs::remove_file(&tmp).ok();
+    write_u64(&mut w, graph_bytes.len() as u64)?;
+    w.write_all(&graph_bytes)?;
+    // features
+    write_u64(&mut w, d.feat_dim as u64)?;
+    write_f32_slice(&mut w, &d.feats)?;
+    // labels + classes
+    write_u64(&mut w, d.num_classes as u64)?;
+    write_u64(&mut w, d.labels.len() as u64)?;
+    for &l in &d.labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    // split tags
+    write_u64(&mut w, d.split.len() as u64)?;
+    for &s in &d.split {
+        w.write_all(&[match s {
+            SplitTag::Train => 1u8,
+            SplitTag::Val => 2,
+            SplitTag::Test => 3,
+            SplitTag::None => 0,
+        }])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut m = [0u8; 4];
+    r.read_exact(&mut m)?;
+    if u32::from_le_bytes(m) != MAGIC {
+        bail!("bad magic in {path:?}");
+    }
+    let name_len = read_u64(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let graph_len = read_u64(&mut r)? as usize;
+    let mut graph_bytes = vec![0u8; graph_len];
+    r.read_exact(&mut graph_bytes)?;
+    let tmp = path.with_extension("graph.tmp");
+    std::fs::write(&tmp, &graph_bytes)?;
+    let graph: Graph = super::io::load_graph(&tmp)?;
+    std::fs::remove_file(&tmp).ok();
+    let feat_dim = read_u64(&mut r)? as usize;
+    let feats = read_f32_vec(&mut r)?;
+    let num_classes = read_u64(&mut r)? as usize;
+    let n_labels = read_u64(&mut r)? as usize;
+    let mut labels = vec![0u16; n_labels];
+    let mut b2 = [0u8; 2];
+    for l in labels.iter_mut() {
+        r.read_exact(&mut b2)?;
+        *l = u16::from_le_bytes(b2);
+    }
+    let n_split = read_u64(&mut r)? as usize;
+    let mut split = Vec::with_capacity(n_split);
+    let mut b1 = [0u8; 1];
+    for _ in 0..n_split {
+        r.read_exact(&mut b1)?;
+        split.push(match b1[0] {
+            1 => SplitTag::Train,
+            2 => SplitTag::Val,
+            3 => SplitTag::Test,
+            0 => SplitTag::None,
+            x => bail!("bad split tag {x}"),
+        });
+    }
+    Ok(Dataset {
+        name: String::from_utf8(name)?,
+        graph,
+        feats,
+        feat_dim,
+        labels,
+        num_classes,
+        split,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+
+    #[test]
+    fn dataset_roundtrip() {
+        let d = DatasetSpec::new("rt", 800, 3200).generate();
+        let dir = std::env::temp_dir().join("ddgl_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.bundle");
+        save_dataset(&d, &p).unwrap();
+        let d2 = load_dataset(&p).unwrap();
+        assert_eq!(d.name, d2.name);
+        assert_eq!(d.graph.targets, d2.graph.targets);
+        assert_eq!(d.feats, d2.feats);
+        assert_eq!(d.labels, d2.labels);
+        assert_eq!(d.split, d2.split);
+        assert_eq!(d.num_classes, d2.num_classes);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("ddgl_bundle_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.bundle");
+        std::fs::write(&p, b"garbage").unwrap();
+        assert!(load_dataset(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

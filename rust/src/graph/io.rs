@@ -1,0 +1,175 @@
+//! Binary IO for graphs and partition bundles.
+//!
+//! Format (little-endian, versioned magic): used by `distdglv2 partition`
+//! to persist partitions once and reuse them across training runs — the
+//! paper's "partition once, train many times" workflow (§5.3, Table 2).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Graph;
+
+const MAGIC: u32 = 0xD157_D617; // "DistDGl2"
+const VERSION: u32 = 1;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_u64_slice(w: &mut impl Write, xs: &[u64]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_u32_slice(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_u8_slice(w: &mut impl Write, xs: &[u8]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    w.write_all(xs)?;
+    Ok(())
+}
+
+pub fn write_f32_slice(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u64_vec(r: &mut impl Read) -> Result<Vec<u64>> {
+    let n = read_u64(r)? as usize;
+    let mut out = vec![0u64; n];
+    let mut b = [0u8; 8];
+    for x in out.iter_mut() {
+        r.read_exact(&mut b)?;
+        *x = u64::from_le_bytes(b);
+    }
+    Ok(out)
+}
+
+fn read_u32_vec(r: &mut impl Read) -> Result<Vec<u32>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u8_vec(r: &mut impl Read) -> Result<Vec<u8>> {
+    let n = read_u64(r)? as usize;
+    let mut out = vec![0u8; n];
+    r.read_exact(&mut out)?;
+    Ok(out)
+}
+
+pub fn read_f32_vec(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn save_graph(g: &Graph, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    write_u32(&mut w, MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u64_slice(&mut w, &g.offsets)?;
+    write_u32_slice(&mut w, &g.targets)?;
+    write_u8_slice(&mut w, &g.rel)?;
+    write_u8_slice(&mut w, &g.node_type)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_graph(path: &Path) -> Result<Graph> {
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    if read_u32(&mut r)? != MAGIC {
+        bail!("bad magic in {path:?}");
+    }
+    let v = read_u32(&mut r)?;
+    if v != VERSION {
+        bail!("unsupported version {v}");
+    }
+    let g = Graph {
+        offsets: read_u64_vec(&mut r)?,
+        targets: read_u32_vec(&mut r)?,
+        rel: read_u8_vec(&mut r)?,
+        node_type: read_u8_vec(&mut r)?,
+    };
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn graph_roundtrip() {
+        let mut b = GraphBuilder::new(10);
+        for i in 0..9u32 {
+            b.add_undirected(i, i + 1, (i % 3) as u8);
+        }
+        let g = b.build();
+        let dir = std::env::temp_dir().join("ddgl_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        save_graph(&g, &p).unwrap();
+        let g2 = load_graph(&p).unwrap();
+        assert_eq!(g.offsets, g2.offsets);
+        assert_eq!(g.targets, g2.targets);
+        assert_eq!(g.rel, g2.rel);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("ddgl_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.bin");
+        std::fs::write(&p, b"not a graph").unwrap();
+        assert!(load_graph(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

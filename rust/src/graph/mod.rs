@@ -1,0 +1,146 @@
+//! Graph storage: immutable CSR structure, builders, synthetic dataset
+//! generators (the paper's OGB/Amazon workloads are reproduced as scaled
+//! RMAT graphs — see DESIGN.md §2), and binary partition IO.
+
+pub mod builder;
+pub mod bundle;
+pub mod generate;
+pub mod io;
+
+pub use builder::GraphBuilder;
+pub use generate::{Dataset, DatasetSpec, SplitTag};
+
+/// Global node identifier (graphs up to 4B nodes).
+pub type NodeId = u32;
+/// Global edge identifier.
+pub type EdgeId = u64;
+
+/// Immutable CSR adjacency. Neighbors of `u` are
+/// `targets[offsets[u]..offsets[u+1]]`. For GNN aggregation the stored
+/// direction is *incoming* message edges (we symmetrize natural graphs at
+/// build time, matching DGL's default for GraphSAGE).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub offsets: Vec<u64>,
+    pub targets: Vec<NodeId>,
+    /// Per-edge relation type (RGCN / heterogeneous graphs); empty = single
+    /// relation.
+    pub rel: Vec<u8>,
+    /// Per-node type (heterogeneous graphs); empty = single node type.
+    pub node_type: Vec<u8>,
+}
+
+impl Graph {
+    pub fn n_nodes(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, u: NodeId) -> usize {
+        (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: NodeId) -> &[NodeId] {
+        &self.targets[self.offsets[u as usize] as usize
+            ..self.offsets[u as usize + 1] as usize]
+    }
+
+    /// Relation types aligned with [`Self::neighbors`]; empty slice when the
+    /// graph is homogeneous.
+    #[inline]
+    pub fn rel_of(&self, u: NodeId) -> &[u8] {
+        if self.rel.is_empty() {
+            &[]
+        } else {
+            &self.rel[self.offsets[u as usize] as usize
+                ..self.offsets[u as usize + 1] as usize]
+        }
+    }
+
+    /// Edge ids (positions in `targets`) of `u`'s adjacency.
+    #[inline]
+    pub fn edge_range(&self, u: NodeId) -> std::ops::Range<usize> {
+        self.offsets[u as usize] as usize..self.offsets[u as usize + 1] as usize
+    }
+
+    pub fn node_type_of(&self, u: NodeId) -> u8 {
+        if self.node_type.is_empty() {
+            0
+        } else {
+            self.node_type[u as usize]
+        }
+    }
+
+    /// Structural validation used by tests and after IO round-trips.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        ensure!(!self.offsets.is_empty(), "offsets empty");
+        ensure!(self.offsets[0] == 0, "offsets must start at 0");
+        ensure!(
+            *self.offsets.last().unwrap() as usize == self.targets.len(),
+            "offsets/targets mismatch"
+        );
+        for w in self.offsets.windows(2) {
+            ensure!(w[0] <= w[1], "offsets not monotone");
+        }
+        let n = self.n_nodes() as NodeId;
+        for &t in &self.targets {
+            ensure!(t < n, "target {t} out of range {n}");
+        }
+        if !self.rel.is_empty() {
+            ensure!(self.rel.len() == self.targets.len(), "rel len mismatch");
+        }
+        if !self.node_type.is_empty() {
+            ensure!(
+                self.node_type.len() == self.n_nodes(),
+                "node_type len mismatch"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_graph(n: usize) -> Graph {
+        // 0 - 1 - 2 - ... - (n-1), symmetric
+        let mut b = GraphBuilder::new(n);
+        for i in 0..n - 1 {
+            b.add_edge(i as NodeId, (i + 1) as NodeId, 0);
+            b.add_edge((i + 1) as NodeId, i as NodeId, 0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn csr_accessors() {
+        let g = line_graph(5);
+        assert_eq!(g.n_nodes(), 5);
+        assert_eq!(g.n_edges(), 8);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.neighbors(2), &[1, 3]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_rel_is_homogeneous() {
+        let g = line_graph(3);
+        assert!(g.rel_of(1).is_empty());
+        assert_eq!(g.node_type_of(1), 0);
+    }
+
+    #[test]
+    fn validate_catches_bad_target() {
+        let mut g = line_graph(3);
+        g.targets[0] = 99;
+        assert!(g.validate().is_err());
+    }
+}

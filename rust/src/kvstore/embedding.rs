@@ -1,0 +1,118 @@
+//! Learnable sparse vertex embeddings (§3.1 "sparse parameters").
+//!
+//! Some GNN models learn an embedding per vertex; only the rows touched by
+//! a mini-batch are updated. [`EmbeddingTable`] wraps a KVStore tensor with
+//! deterministic initialization and the trainer-facing gather/update API.
+//! Updates go through `KvClient::push_grad`, i.e. they are routed to the
+//! owning machine and applied there (never broadcast — the KVStore *is*
+//! the optimizer state for sparse params).
+
+use std::sync::Arc;
+
+use crate::graph::NodeId;
+use crate::util::Rng;
+
+use super::policy::PartitionPolicy;
+use super::store::{KvClient, KvCluster};
+
+pub struct EmbeddingTable {
+    pub name: String,
+    pub dim: usize,
+    pub n_rows: usize,
+}
+
+impl EmbeddingTable {
+    /// Create + register on the cluster with N(0, scale) init.
+    pub fn create(
+        cluster: &Arc<KvCluster>,
+        policy: &dyn PartitionPolicy,
+        name: &str,
+        n_rows: usize,
+        dim: usize,
+        scale: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n_rows * dim)
+            .map(|_| rng.normal() as f32 * scale)
+            .collect();
+        cluster.register_partitioned(name, &data, dim, policy);
+        Self { name: name.to_string(), dim, n_rows }
+    }
+
+    /// Gather rows for a mini-batch.
+    pub fn gather(
+        &self,
+        client: &KvClient,
+        ids: &[NodeId],
+        out: &mut [f32],
+    ) -> usize {
+        client.pull(&self.name, ids, out)
+    }
+
+    /// Apply row-sparse SGD for the touched rows.
+    pub fn update(
+        &self,
+        client: &KvClient,
+        ids: &[NodeId],
+        grads: &[f32],
+        lr: f32,
+    ) {
+        client.push_grad(&self.name, ids, grads, lr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::policy::RangePolicy;
+    use crate::net::CostModel;
+    use crate::partition::NodeMap;
+
+    #[test]
+    fn embedding_update_roundtrip() {
+        let nm = NodeMap { part_starts: vec![0, 8, 16] };
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(RangePolicy::new(nm));
+        let cluster = KvCluster::new(2, Arc::new(CostModel::default()));
+        let emb = EmbeddingTable::create(
+            &cluster,
+            policy.as_ref(),
+            "emb",
+            16,
+            4,
+            0.1,
+            7,
+        );
+        let client = cluster.client(0, policy);
+        let ids = vec![2 as NodeId, 12];
+        let mut before = vec![0f32; 2 * 4];
+        emb.gather(&client, &ids, &mut before);
+        let grads = vec![1.0f32; 2 * 4];
+        emb.update(&client, &ids, &grads, 0.25);
+        let mut after = vec![0f32; 2 * 4];
+        emb.gather(&client, &ids, &mut after);
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - 0.25 - a).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let nm = NodeMap { part_starts: vec![0, 16] };
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(RangePolicy::new(nm));
+        let c1 = KvCluster::new(1, Arc::new(CostModel::default()));
+        let c2 = KvCluster::new(1, Arc::new(CostModel::default()));
+        let e1 =
+            EmbeddingTable::create(&c1, policy.as_ref(), "e", 16, 3, 0.1, 9);
+        let e2 =
+            EmbeddingTable::create(&c2, policy.as_ref(), "e", 16, 3, 0.1, 9);
+        let ids: Vec<NodeId> = (0..16).collect();
+        let mut a = vec![0f32; 16 * 3];
+        let mut b = vec![0f32; 16 * 3];
+        e1.gather(&c1.client(0, policy.clone()), &ids, &mut a);
+        e2.gather(&c2.client(0, policy.clone()), &ids, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,24 @@
+//! Distributed in-memory key-value store for vertex/edge data (§5.4).
+//!
+//! Features and learnable sparse embeddings are partitioned row-wise
+//! across machines following the graph partitioning ([`RangePolicy`] over
+//! the relabeled contiguous core ranges). Each machine hosts a
+//! [`KvServer`]; trainers access it through a [`KvClient`] that
+//!
+//! - serves **local** rows through shared memory (a direct slice copy —
+//!   the paper's "shared memory to minimize data copy" path), and
+//! - groups **remote** rows per owner, fetching them in one batched
+//!   request per machine while metering every byte on the cluster
+//!   [`CostModel`](crate::net::CostModel) (and optionally emulating link
+//!   time for wall-clock fidelity).
+//!
+//! `push_grad` implements the sparse-embedding update path: gradient rows
+//! are routed to owners and applied as row-sparse SGD on the server.
+
+pub mod embedding;
+pub mod policy;
+pub mod store;
+
+pub use embedding::EmbeddingTable;
+pub use policy::{HashPolicy, PartitionPolicy, RangePolicy};
+pub use store::{KvClient, KvCluster, KvServer};

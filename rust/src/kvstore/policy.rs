@@ -1,0 +1,109 @@
+//! Partition policies: map a global row id to its owning machine (§5.4
+//! "flexible partition policies"). Vertex data of different types may use
+//! different policies; the KVStore stores one policy per tensor name.
+
+use crate::graph::NodeId;
+use crate::partition::NodeMap;
+
+pub trait PartitionPolicy: Send + Sync {
+    fn owner(&self, key: NodeId) -> u32;
+    /// Local row index on the owning machine.
+    fn local_of(&self, key: NodeId) -> u32;
+    fn n_parts(&self) -> usize;
+    /// Number of rows owned by `part`.
+    fn n_local(&self, part: u32) -> usize;
+}
+
+/// Contiguous-range ownership (the relabeled METIS partitions, §5.3).
+pub struct RangePolicy {
+    pub node_map: NodeMap,
+}
+
+impl RangePolicy {
+    pub fn new(node_map: NodeMap) -> Self {
+        Self { node_map }
+    }
+}
+
+impl PartitionPolicy for RangePolicy {
+    #[inline]
+    fn owner(&self, key: NodeId) -> u32 {
+        self.node_map.owner(key)
+    }
+
+    #[inline]
+    fn local_of(&self, key: NodeId) -> u32 {
+        self.node_map.local_of(key)
+    }
+
+    fn n_parts(&self) -> usize {
+        self.node_map.nparts()
+    }
+
+    fn n_local(&self, part: u32) -> usize {
+        self.node_map.n_core(part)
+    }
+}
+
+/// Modulo-hash ownership (Euler-style random placement baseline).
+pub struct HashPolicy {
+    pub nparts: usize,
+    pub n_rows: usize,
+}
+
+impl PartitionPolicy for HashPolicy {
+    #[inline]
+    fn owner(&self, key: NodeId) -> u32 {
+        (key as usize % self.nparts) as u32
+    }
+
+    #[inline]
+    fn local_of(&self, key: NodeId) -> u32 {
+        (key as usize / self.nparts) as u32
+    }
+
+    fn n_parts(&self) -> usize {
+        self.nparts
+    }
+
+    fn n_local(&self, part: u32) -> usize {
+        let n = self.n_rows;
+        let p = part as usize;
+        n / self.nparts + usize::from(p < n % self.nparts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_policy_from_node_map() {
+        let nm = NodeMap { part_starts: vec![0, 10, 25, 30] };
+        let p = RangePolicy::new(nm);
+        assert_eq!(p.n_parts(), 3);
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(9), 0);
+        assert_eq!(p.owner(10), 1);
+        assert_eq!(p.owner(29), 2);
+        assert_eq!(p.local_of(12), 2);
+        assert_eq!(p.n_local(1), 15);
+    }
+
+    #[test]
+    fn hash_policy_covers_all_rows() {
+        let p = HashPolicy { nparts: 3, n_rows: 10 };
+        let mut per_part = vec![0usize; 3];
+        for k in 0..10u32 {
+            let o = p.owner(k) as usize;
+            let l = p.local_of(k) as usize;
+            assert!(l < p.n_local(o as u32), "k={k}");
+            per_part[o] += 1;
+        }
+        assert_eq!(per_part, vec![4, 3, 3]);
+        assert_eq!(
+            per_part.iter().sum::<usize>(),
+            (0..3).map(|i| p.n_local(i)).sum::<usize>()
+        );
+    }
+}

@@ -1,0 +1,436 @@
+//! KvServer / KvClient: batched pull & sparse push with locality-aware
+//! routing and full byte accounting.
+
+use std::sync::{Arc, RwLock};
+
+use rustc_hash::FxHashMap;
+
+use crate::graph::NodeId;
+use crate::net::CostModel;
+
+use super::policy::PartitionPolicy;
+
+/// One named tensor shard on a server: `n_local x dim`, row-major.
+struct Shard {
+    data: RwLock<Vec<f32>>,
+    dim: usize,
+}
+
+/// Per-machine KV server: holds the local shard of every registered tensor.
+pub struct KvServer {
+    pub machine: u32,
+    shards: RwLock<FxHashMap<String, Arc<Shard>>>,
+}
+
+impl KvServer {
+    pub fn new(machine: u32) -> Self {
+        Self { machine, shards: RwLock::new(FxHashMap::default()) }
+    }
+
+    /// Register a tensor shard with initial data (`n_local * dim`).
+    pub fn register(&self, name: &str, data: Vec<f32>, dim: usize) {
+        assert_eq!(data.len() % dim.max(1), 0);
+        self.shards.write().unwrap().insert(
+            name.to_string(),
+            Arc::new(Shard { data: RwLock::new(data), dim }),
+        );
+    }
+
+    fn shard(&self, name: &str) -> Arc<Shard> {
+        self.shards
+            .read()
+            .unwrap()
+            .get(name)
+            .unwrap_or_else(|| panic!("tensor {name:?} not registered"))
+            .clone()
+    }
+
+    /// Copy rows `locals` into `out` (len = locals.len() * dim).
+    pub fn read_rows(&self, name: &str, locals: &[u32], out: &mut [f32]) {
+        let shard = self.shard(name);
+        let dim = shard.dim;
+        let data = shard.data.read().unwrap();
+        for (i, &l) in locals.iter().enumerate() {
+            let src = &data[l as usize * dim..(l as usize + 1) * dim];
+            out[i * dim..(i + 1) * dim].copy_from_slice(src);
+        }
+    }
+
+    /// Row-sparse SGD update: `row[l] -= lr * grad[i]` for each local row.
+    pub fn apply_grads(
+        &self,
+        name: &str,
+        locals: &[u32],
+        grads: &[f32],
+        lr: f32,
+    ) {
+        let shard = self.shard(name);
+        let dim = shard.dim;
+        assert_eq!(grads.len(), locals.len() * dim);
+        let mut data = shard.data.write().unwrap();
+        for (i, &l) in locals.iter().enumerate() {
+            let dst = &mut data[l as usize * dim..(l as usize + 1) * dim];
+            for (d, g) in dst.iter_mut().zip(&grads[i * dim..(i + 1) * dim]) {
+                *d -= lr * g;
+            }
+        }
+    }
+
+    pub fn dim_of(&self, name: &str) -> usize {
+        self.shard(name).dim
+    }
+}
+
+/// The whole distributed store: one server per machine + shared policy and
+/// cost model. Clone-able handle ([`KvClient`]) per trainer.
+pub struct KvCluster {
+    pub servers: Vec<Arc<KvServer>>,
+    pub cost: Arc<CostModel>,
+    /// Emulate modeled link time with sleeps (wall-clock fidelity knob).
+    pub emulate_network_time: bool,
+}
+
+impl KvCluster {
+    pub fn new(n_machines: usize, cost: Arc<CostModel>) -> Arc<Self> {
+        Arc::new(Self {
+            servers: (0..n_machines as u32)
+                .map(|m| Arc::new(KvServer::new(m)))
+                .collect(),
+            cost,
+            emulate_network_time: false,
+        })
+    }
+
+    pub fn with_emulated_network(
+        n_machines: usize,
+        cost: Arc<CostModel>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            servers: (0..n_machines as u32)
+                .map(|m| Arc::new(KvServer::new(m)))
+                .collect(),
+            cost,
+            emulate_network_time: true,
+        })
+    }
+
+    /// Register a globally partitioned tensor: `rows[gid]` goes to
+    /// `policy.owner(gid)`. `rows` is the full `n x dim` array.
+    pub fn register_partitioned(
+        &self,
+        name: &str,
+        rows: &[f32],
+        dim: usize,
+        policy: &dyn PartitionPolicy,
+    ) {
+        let n = rows.len() / dim.max(1);
+        let mut per: Vec<Vec<f32>> = (0..policy.n_parts())
+            .map(|p| Vec::with_capacity(policy.n_local(p as u32) * dim))
+            .collect();
+        // RangePolicy rows arrive in local order because ids are contiguous
+        // per part; HashPolicy interleaves — local_of defines the layout.
+        let mut locals: Vec<Vec<(u32, usize)>> =
+            vec![Vec::new(); policy.n_parts()];
+        for gid in 0..n as NodeId {
+            locals[policy.owner(gid) as usize]
+                .push((policy.local_of(gid), gid as usize));
+        }
+        for (p, l) in locals.iter_mut().enumerate() {
+            l.sort_unstable_by_key(|e| e.0);
+            for &(_, gid) in l.iter() {
+                per[p].extend_from_slice(&rows[gid * dim..(gid + 1) * dim]);
+            }
+        }
+        for (p, data) in per.into_iter().enumerate() {
+            self.servers[p].register(name, data, dim);
+        }
+    }
+
+    pub fn client(
+        self: &Arc<Self>,
+        machine: u32,
+        policy: Arc<dyn PartitionPolicy>,
+    ) -> KvClient {
+        KvClient { cluster: Arc::clone(self), machine, policy }
+    }
+}
+
+/// Trainer-side handle: pulls/pushes with owner routing.
+pub struct KvClient {
+    cluster: Arc<KvCluster>,
+    pub machine: u32,
+    policy: Arc<dyn PartitionPolicy>,
+}
+
+impl KvClient {
+    /// Pull rows for `ids` into `out` (len = ids.len() * dim). Local rows
+    /// are a direct shared-memory copy; remote rows are grouped per owner
+    /// into one batched request each, with request+response bytes metered.
+    /// Returns the number of *remote* rows (locality observability).
+    pub fn pull(&self, name: &str, ids: &[NodeId], out: &mut [f32]) -> usize {
+        let dim = self.cluster.servers[self.machine as usize]
+            .dim_of_or(name)
+            .unwrap_or_else(|| self.remote_dim(name));
+        assert!(out.len() >= ids.len() * dim);
+        // group by owner, remembering destination slots
+        let nparts = self.policy.n_parts();
+        let mut groups: Vec<(Vec<u32>, Vec<usize>)> =
+            vec![(Vec::new(), Vec::new()); nparts];
+        for (slot, &gid) in ids.iter().enumerate() {
+            let owner = self.policy.owner(gid) as usize;
+            groups[owner].0.push(self.policy.local_of(gid));
+            groups[owner].1.push(slot);
+        }
+        let mut remote_rows = 0usize;
+        let mut scratch: Vec<f32> = Vec::new();
+        for (owner, (locals, slots)) in groups.iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let server = &self.cluster.servers[owner];
+            if owner as u32 == self.machine {
+                // shared-memory path: copy straight into the output slots
+                scratch.resize(locals.len() * dim, 0.0);
+                server.read_rows(name, locals, &mut scratch);
+                for (i, &slot) in slots.iter().enumerate() {
+                    out[slot * dim..(slot + 1) * dim]
+                        .copy_from_slice(&scratch[i * dim..(i + 1) * dim]);
+                }
+            } else {
+                remote_rows += locals.len();
+                let req_bytes = 16 + locals.len() as u64 * 4;
+                let resp_bytes = 16 + (locals.len() * dim) as u64 * 4;
+                self.cluster.cost.on_network(
+                    self.machine,
+                    owner as u32,
+                    req_bytes,
+                );
+                self.cluster.cost.on_network(
+                    owner as u32,
+                    self.machine,
+                    resp_bytes,
+                );
+                if self.cluster.emulate_network_time {
+                    let secs = (req_bytes + resp_bytes) as f64
+                        / self.cluster.cost.net_bytes_per_sec
+                        + 2.0 * self.cluster.cost.net_latency_s;
+                    spin_sleep(secs);
+                }
+                scratch.resize(locals.len() * dim, 0.0);
+                server.read_rows(name, locals, &mut scratch);
+                for (i, &slot) in slots.iter().enumerate() {
+                    out[slot * dim..(slot + 1) * dim]
+                        .copy_from_slice(&scratch[i * dim..(i + 1) * dim]);
+                }
+            }
+        }
+        remote_rows
+    }
+
+    /// Push row gradients (sparse embedding update, §3.1 "sparse
+    /// parameters"): routed to owners, applied as SGD on the server.
+    pub fn push_grad(
+        &self,
+        name: &str,
+        ids: &[NodeId],
+        grads: &[f32],
+        lr: f32,
+    ) {
+        let dim = grads.len() / ids.len().max(1);
+        let nparts = self.policy.n_parts();
+        let mut groups: Vec<(Vec<u32>, Vec<f32>)> =
+            vec![(Vec::new(), Vec::new()); nparts];
+        for (i, &gid) in ids.iter().enumerate() {
+            let owner = self.policy.owner(gid) as usize;
+            groups[owner].0.push(self.policy.local_of(gid));
+            groups[owner]
+                .1
+                .extend_from_slice(&grads[i * dim..(i + 1) * dim]);
+        }
+        for (owner, (locals, g)) in groups.iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            if owner as u32 != self.machine {
+                let bytes = 16 + (locals.len() * (1 + dim)) as u64 * 4;
+                self.cluster.cost.on_network(
+                    self.machine,
+                    owner as u32,
+                    bytes,
+                );
+            }
+            self.cluster.servers[owner].apply_grads(name, locals, g, lr);
+        }
+    }
+
+    fn remote_dim(&self, name: &str) -> usize {
+        for s in &self.cluster.servers {
+            if let Some(d) = s.dim_of_or(name) {
+                return d;
+            }
+        }
+        panic!("tensor {name:?} not registered anywhere");
+    }
+}
+
+impl KvServer {
+    fn dim_of_or(&self, name: &str) -> Option<usize> {
+        self.shards.read().unwrap().get(name).map(|s| s.dim)
+    }
+}
+
+/// Sleep `secs` with reasonable sub-millisecond accuracy.
+fn spin_sleep(secs: f64) {
+    if secs <= 0.0 {
+        return;
+    }
+    let dur = std::time::Duration::from_secs_f64(secs);
+    if dur > std::time::Duration::from_micros(200) {
+        std::thread::sleep(dur);
+    } else {
+        let t = std::time::Instant::now();
+        while t.elapsed() < dur {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::policy::{HashPolicy, RangePolicy};
+    use crate::partition::NodeMap;
+
+    fn rows(n: usize, dim: usize) -> Vec<f32> {
+        (0..n * dim).map(|i| i as f32).collect()
+    }
+
+    fn range_cluster(
+        dim: usize,
+    ) -> (Arc<KvCluster>, Arc<dyn PartitionPolicy>, Vec<f32>) {
+        // 3 machines owning [0,10), [10,25), [25,30)
+        let nm = NodeMap { part_starts: vec![0, 10, 25, 30] };
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(RangePolicy::new(nm));
+        let cost = Arc::new(CostModel::default());
+        let cluster = KvCluster::new(3, cost);
+        let data = rows(30, dim);
+        cluster.register_partitioned("feat", &data, dim, policy.as_ref());
+        (cluster, policy, data)
+    }
+
+    #[test]
+    fn pull_returns_correct_rows_local_and_remote() {
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        let client = cluster.client(1, policy);
+        let ids: Vec<NodeId> = vec![12, 0, 29, 14]; // local, remote, remote, local
+        let mut out = vec![0f32; ids.len() * dim];
+        let remote = client.pull("feat", &ids, &mut out);
+        assert_eq!(remote, 2);
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &out[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim],
+                "row {gid}"
+            );
+        }
+    }
+
+    #[test]
+    fn local_pull_is_free_remote_metered() {
+        let dim = 8;
+        let (cluster, policy, _) = range_cluster(dim);
+        let client = cluster.client(0, policy);
+        let mut out = vec![0f32; dim];
+        client.pull("feat", &[3], &mut out);
+        assert_eq!(cluster.cost.network_bytes(), 0);
+        client.pull("feat", &[27], &mut out);
+        assert!(cluster.cost.network_bytes() > 0);
+    }
+
+    #[test]
+    fn push_grad_applies_sgd_on_owner() {
+        let dim = 2;
+        let (cluster, policy, data) = range_cluster(dim);
+        let client = cluster.client(0, policy);
+        let ids = vec![5 as NodeId, 20];
+        let grads = vec![1.0f32, 1.0, 2.0, 2.0];
+        client.push_grad("feat", &ids, &grads, 0.5);
+        let mut out = vec![0f32; 2 * dim];
+        client.pull("feat", &ids, &mut out);
+        assert_eq!(out[0], data[10] - 0.5);
+        assert_eq!(out[2], data[40] - 1.0);
+    }
+
+    #[test]
+    fn hash_policy_roundtrip() {
+        let dim = 3;
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(HashPolicy { nparts: 2, n_rows: 11 });
+        let cost = Arc::new(CostModel::default());
+        let cluster = KvCluster::new(2, cost);
+        let data = rows(11, dim);
+        cluster.register_partitioned("x", &data, dim, policy.as_ref());
+        let client = cluster.client(0, policy);
+        let ids: Vec<NodeId> = (0..11).collect();
+        let mut out = vec![0f32; 11 * dim];
+        client.pull("x", &ids, &mut out);
+        assert_eq!(out, data);
+    }
+
+    /// Property: pull over random id multisets always equals the source.
+    #[test]
+    fn prop_pull_matches_source() {
+        crate::util::proptest::forall(
+            31,
+            20,
+            |r| {
+                let k = 1 + r.usize_below(50);
+                let ids: Vec<NodeId> =
+                    (0..k).map(|_| r.below(30) as NodeId).collect();
+                ids
+            },
+            |ids| {
+                let dim = 4;
+                let (cluster, policy, data) = range_cluster(dim);
+                let client = cluster.client(2, policy);
+                let mut out = vec![0f32; ids.len() * dim];
+                client.pull("feat", ids, &mut out);
+                for (i, &gid) in ids.iter().enumerate() {
+                    let expect =
+                        &data[gid as usize * dim..(gid as usize + 1) * dim];
+                    if &out[i * dim..(i + 1) * dim] != expect {
+                        return Err(format!("row {gid} mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_pulls_are_safe() {
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        let hs: Vec<_> = (0..3u32)
+            .map(|m| {
+                let c = cluster.client(m, policy.clone());
+                let data = data.clone();
+                std::thread::spawn(move || {
+                    let mut out = vec![0f32; dim];
+                    for gid in 0..30u32 {
+                        c.pull("feat", &[gid], &mut out);
+                        assert_eq!(
+                            &out[..],
+                            &data[gid as usize * dim..(gid as usize + 1) * dim]
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+}

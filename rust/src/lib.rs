@@ -1,0 +1,37 @@
+//! # DistDGLv2 — distributed hybrid CPU/GPU GNN training
+//!
+//! A from-scratch reproduction of *"Distributed Hybrid CPU and GPU training
+//! for Graph Neural Networks on Billion-Scale Graphs"* (Zheng et al., 2021)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: graph storage, multilevel
+//!   multi-constraint partitioning, the distributed KV store, vertex-wise
+//!   distributed neighbor sampling, the 5-stage asynchronous mini-batch
+//!   generation pipeline, and synchronous data-parallel SGD across a
+//!   simulated multi-machine cluster.
+//! - **Layer 2 (python/compile/model.py)** — GraphSAGE / GAT / RGCN
+//!   forward+backward+SGD traced by JAX and AOT-lowered to HLO text.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   neighbor-aggregation hot-spots, verified against pure-jnp oracles.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! compute once; [`runtime`] loads the HLO via the PJRT C API and the rest
+//! of the system is pure Rust.
+//!
+//! Start with [`cluster::Cluster`] (deployment) and [`trainer::train`]
+//! (the synchronous-SGD driver), or see `examples/quickstart.rs`.
+
+pub mod baselines;
+pub mod benchsuite;
+pub mod cluster;
+pub mod config;
+pub mod graph;
+pub mod kvstore;
+pub mod metrics;
+pub mod net;
+pub mod partition;
+pub mod pipeline;
+pub mod runtime;
+pub mod sampler;
+pub mod trainer;
+pub mod util;

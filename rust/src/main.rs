@@ -1,0 +1,196 @@
+//! distdglv2 — CLI launcher for the DistDGLv2 reproduction.
+//!
+//! Subcommands:
+//!   partition  key=value...   partition a dataset and report quality
+//!   train      key=value...   deploy a simulated cluster and train
+//!   info                      list available AOT variants
+//!
+//! All keys are documented by `config::RunConfig::set` (any invalid key
+//! prints the full list).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use distdglv2::cluster::Cluster;
+use distdglv2::config::RunConfig;
+use distdglv2::runtime::manifest::{artifacts_dir, Manifest};
+use distdglv2::trainer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "partition" => cmd_partition(rest.to_vec()),
+        "train" => cmd_train(rest.to_vec()),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: distdglv2 <command> [key=value ...]\n\
+         commands:\n  \
+         partition   generate + partition a dataset, report edge cut,\n              \
+         balance and timing (Table 2 inputs)\n  \
+         train       deploy the simulated cluster and run synchronous\n              \
+         data-parallel training\n  \
+         info        list AOT model variants available in artifacts/\n\
+         examples:\n  \
+         distdglv2 train dataset=rmat:20000:120000 machines=2 trainers=2\n  \
+         distdglv2 train dataset=ogbn-products@1000 variant=sage_nc_dev\n  \
+         distdglv2 partition dataset=ogbn-papers100M@100000 machines=8"
+    );
+}
+
+fn artifacts() -> PathBuf {
+    artifacts_dir()
+}
+
+/// Remove and return `key=value` from the arg list, if present.
+fn take_kv(args: &mut Vec<String>, key: &str) -> Option<String> {
+    let prefix = format!("{key}=");
+    let pos = args.iter().position(|a| a.starts_with(&prefix))?;
+    Some(args.remove(pos)[prefix.len()..].to_string())
+}
+
+fn cmd_partition(mut args: Vec<String>) -> Result<()> {
+    // optional out=<path>: persist the generated dataset bundle for reuse
+    // ("partition once, train many runs", Table 2)
+    let out = take_kv(&mut args, "out");
+    let cfg = RunConfig::from_args(args)?;
+    println!(
+        "generating {} ({} nodes, {} edges target)...",
+        cfg.dataset.name, cfg.dataset.n_nodes, cfg.dataset.n_edges
+    );
+    let d = cfg.dataset.generate();
+    println!(
+        "generated: {} nodes, {} edges",
+        d.n_nodes(),
+        d.graph.n_edges()
+    );
+    if let Some(path) = out {
+        distdglv2::graph::bundle::save_dataset(
+            &d,
+            std::path::Path::new(&path),
+        )?;
+        println!("saved dataset bundle to {path}");
+    }
+    let cluster = Cluster::deploy(&d, cfg.cluster.clone(), artifacts())?;
+    let s = &cluster.stats;
+    println!("partitions           {}", cfg.cluster.n_machines);
+    println!("edge cut             {}", s.edge_cut);
+    println!(
+        "edge cut fraction    {:.4}",
+        s.edge_cut as f64 / d.graph.n_edges() as f64 * 2.0
+    );
+    println!("imbalance            {:.3}", s.imbalance);
+    println!("partition time       {:.3}s", s.partition_secs);
+    println!("build (halo/relabel) {:.3}s", s.build_secs);
+    println!("kvstore load         {:.3}s", s.load_secs);
+    for p in &cluster.partitions {
+        println!(
+            "  part {}: {} core, {} halo, {} edges",
+            p.part_id,
+            p.n_core,
+            p.n_halo(),
+            p.graph.n_edges()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(mut args: Vec<String>) -> Result<()> {
+    // optional from=<path>: load a saved dataset bundle instead of
+    // generating (skips the preprocessing cost on reruns)
+    let from = take_kv(&mut args, "from");
+    let cfg = RunConfig::from_args(args)?;
+    println!(
+        "dataset {} | {} machines x {} trainers | variant {} | pipeline {:?}",
+        cfg.dataset.name,
+        cfg.cluster.n_machines,
+        cfg.cluster.trainers_per_machine,
+        cfg.train.variant,
+        cfg.train.pipeline.mode,
+    );
+    let d = match &from {
+        Some(path) => {
+            let d = distdglv2::graph::bundle::load_dataset(
+                std::path::Path::new(path),
+            )?;
+            println!("loaded dataset bundle from {path}");
+            d
+        }
+        None => cfg.dataset.generate(),
+    };
+    let cluster = Cluster::deploy(&d, cfg.cluster.clone(), artifacts())?;
+    println!(
+        "deployed: edge_cut={} partition={:.2}s train_items/trainer={}",
+        cluster.stats.edge_cut,
+        cluster.stats.partition_secs,
+        cluster.train_sets[0].len()
+    );
+    let report = trainer::train(&cluster, &cfg.train)?;
+    for e in &report.epochs {
+        println!(
+            "epoch {:>3}  loss {:.4}  {:.2}s",
+            e.epoch, e.mean_loss, e.secs
+        );
+    }
+    println!(
+        "total {:.2}s | {} steps | {:.1} steps/s | net {} B | pcie {} B | \
+         remote rows {}",
+        report.total_secs,
+        report.steps,
+        report.steps as f64 / report.total_secs,
+        report.net_bytes,
+        report.pcie_bytes,
+        report.remote_feature_rows,
+    );
+    if let Some(acc) = report.final_val_acc {
+        println!("val accuracy {acc:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let m = Manifest::load(&artifacts())?;
+    println!("artifacts: {:?} (block {})", m.dir, m.block);
+    for (name, v) in &m.variants {
+        println!(
+            "  {name}: {:?} {:?} batch={} fanouts={:?} nodes={:?} \
+             feat={} classes={} params={}",
+            v.model,
+            v.task,
+            v.batch,
+            v.fanouts,
+            v.layer_nodes,
+            v.feat_dim,
+            v.num_classes,
+            v.n_params(),
+        );
+    }
+    Ok(())
+}

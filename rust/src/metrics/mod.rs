@@ -1,0 +1,128 @@
+//! Lightweight metrics: named counters + stage timers used by the trainer,
+//! pipeline, and benches to attribute time (Table 2 / §Perf breakdowns).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Thread-safe named counters + duration accumulators.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    timers: BTreeMap<String, (Duration, u64)>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn add_time(&self, name: &str, d: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m
+            .timers
+            .entry(name.to_string())
+            .or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Time a closure and attribute it to `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add_time(name, t.elapsed());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn total_time(&self, name: &str) -> Duration {
+        self.inner
+            .lock()
+            .unwrap()
+            .timers
+            .get(name)
+            .map(|e| e.0)
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Human-readable dump (sorted by name).
+    pub fn report(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut s = String::new();
+        for (k, v) in &m.counters {
+            s.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, (d, n)) in &m.timers {
+            s.push_str(&format!(
+                "{k:<40} {:?} total, {n} samples, {:?} avg\n",
+                d,
+                d.checked_div(*n as u32).unwrap_or(Duration::ZERO)
+            ));
+        }
+        s
+    }
+
+    pub fn reset(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.counters.clear();
+        m.timers.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let m = Metrics::new();
+        m.inc("batches", 3);
+        m.inc("batches", 2);
+        assert_eq!(m.counter("batches"), 5);
+        let out = m.time("work", || 42);
+        assert_eq!(out, 42);
+        assert!(m.total_time("work") > Duration::ZERO);
+        assert!(m.report().contains("batches"));
+        m.reset();
+        assert_eq!(m.counter("batches"), 0);
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc("x", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("x"), 4000);
+    }
+}

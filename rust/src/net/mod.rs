@@ -1,0 +1,14 @@
+//! Simulated cluster interconnect.
+//!
+//! All cross-machine traffic in the system flows through a [`Transport`]:
+//! ordered per-destination channels plus a [`CostModel`] that meters every
+//! byte. The protocol logic above (KVStore pulls, sampler RPCs, gradient
+//! all-reduce) is identical to a real deployment; only the wire is an
+//! in-process channel. Benches report both wall-clock and modeled network
+//! time (paper testbed: 100 Gbps + PCIe 3.0 — DESIGN.md §2).
+
+pub mod model;
+pub mod transport;
+
+pub use model::CostModel;
+pub use transport::{Endpoint, Message, Transport};

@@ -1,0 +1,149 @@
+//! Link cost model: every byte crossing a machine boundary (network) or
+//! the host↔device boundary (PCIe) is metered, and converted to *modeled
+//! time* under the paper testbed's link parameters (100 Gbps network,
+//! PCIe 3.0 x16 ≈ 12 GB/s effective). Benches report modeled time next to
+//! wall-clock so speedup *shapes* survive the hardware substitution
+//! (DESIGN.md §2).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe byte/time accounting for the whole cluster.
+#[derive(Debug)]
+pub struct CostModel {
+    /// Effective network bandwidth, bytes/sec.
+    pub net_bytes_per_sec: f64,
+    /// Per-message network latency, seconds.
+    pub net_latency_s: f64,
+    /// Effective PCIe bandwidth (host→device), bytes/sec.
+    pub pcie_bytes_per_sec: f64,
+
+    net_bytes: AtomicU64,
+    net_msgs: AtomicU64,
+    pcie_bytes: AtomicU64,
+    pcie_xfers: AtomicU64,
+}
+
+impl Default for CostModel {
+    /// Paper testbed: 100 Gbps network (≈11 GB/s effective), PCIe 3.0 x16.
+    fn default() -> Self {
+        Self::new(11e9, 20e-6, 12e9)
+    }
+}
+
+impl CostModel {
+    pub fn new(
+        net_bytes_per_sec: f64,
+        net_latency_s: f64,
+        pcie_bytes_per_sec: f64,
+    ) -> Self {
+        Self {
+            net_bytes_per_sec,
+            net_latency_s,
+            pcie_bytes_per_sec,
+            net_bytes: AtomicU64::new(0),
+            net_msgs: AtomicU64::new(0),
+            pcie_bytes: AtomicU64::new(0),
+            pcie_xfers: AtomicU64::new(0),
+        }
+    }
+
+    pub fn on_network(&self, _src: u32, _dst: u32, bytes: u64) {
+        self.net_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.net_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_pcie(&self, bytes: u64) {
+        self.pcie_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.pcie_xfers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn network_bytes(&self) -> u64 {
+        self.net_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn network_msgs(&self) -> u64 {
+        self.net_msgs.load(Ordering::Relaxed)
+    }
+
+    pub fn pcie_bytes_total(&self) -> u64 {
+        self.pcie_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Modeled network transfer time, assuming ideal pipelining across the
+    /// measured interval (serialization + per-message latency).
+    pub fn modeled_network_secs(&self) -> f64 {
+        self.network_bytes() as f64 / self.net_bytes_per_sec
+            + self.network_msgs() as f64 * self.net_latency_s
+    }
+
+    pub fn modeled_pcie_secs(&self) -> f64 {
+        self.pcie_bytes_total() as f64 / self.pcie_bytes_per_sec
+    }
+
+    pub fn reset(&self) {
+        self.net_bytes.store(0, Ordering::Relaxed);
+        self.net_msgs.store(0, Ordering::Relaxed);
+        self.pcie_bytes.store(0, Ordering::Relaxed);
+        self.pcie_xfers.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot for before/after deltas in benches.
+    pub fn snapshot(&self) -> CostSnapshot {
+        CostSnapshot {
+            net_bytes: self.network_bytes(),
+            net_msgs: self.network_msgs(),
+            pcie_bytes: self.pcie_bytes_total(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostSnapshot {
+    pub net_bytes: u64,
+    pub net_msgs: u64,
+    pub pcie_bytes: u64,
+}
+
+impl CostSnapshot {
+    pub fn delta(&self, later: &CostSnapshot) -> CostSnapshot {
+        CostSnapshot {
+            net_bytes: later.net_bytes - self.net_bytes,
+            net_msgs: later.net_msgs - self.net_msgs,
+            pcie_bytes: later.pcie_bytes - self.pcie_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_accumulates() {
+        let c = CostModel::default();
+        c.on_network(0, 1, 1000);
+        c.on_network(1, 0, 500);
+        c.on_pcie(2048);
+        assert_eq!(c.network_bytes(), 1500);
+        assert_eq!(c.network_msgs(), 2);
+        assert_eq!(c.pcie_bytes_total(), 2048);
+    }
+
+    #[test]
+    fn modeled_time_scales_with_bytes() {
+        let c = CostModel::new(1e9, 1e-5, 1e9);
+        c.on_network(0, 1, 1_000_000_000);
+        let t = c.modeled_network_secs();
+        assert!((t - (1.0 + 1e-5)).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let c = CostModel::default();
+        c.on_network(0, 1, 100);
+        let s1 = c.snapshot();
+        c.on_network(0, 1, 250);
+        let d = s1.delta(&c.snapshot());
+        assert_eq!(d.net_bytes, 250); // on_network takes raw wire bytes
+    }
+}

@@ -1,0 +1,196 @@
+//! In-process message transport between simulated machines.
+//!
+//! Each machine owns an [`Endpoint`]; `send(dst, msg)` enqueues into dst's
+//! mailbox (unbounded ordered channel per sender-receiver pair collapses to
+//! a single mpsc here) and meters bytes on the shared [`CostModel`].
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use super::model::CostModel;
+
+/// Machine-level service ports (which server on the machine gets the
+/// message).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Port {
+    KvStore,
+    Sampler,
+    Trainer(u32),
+    Control,
+}
+
+/// One framed message. `payload` is an opaque byte vector; `bytes()` is
+/// what the cost model charges (header + payload).
+#[derive(Debug)]
+pub struct Message {
+    pub from: u32,
+    pub port: Port,
+    pub tag: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Message {
+    pub fn wire_bytes(&self) -> u64 {
+        24 + self.payload.len() as u64
+    }
+}
+
+struct Mailbox {
+    tx: Sender<Message>,
+}
+
+/// The cluster fabric: create once, then `endpoint(m)` per participant.
+///
+/// Endpoints need not be machines: e.g. the trainer all-reduce ring has one
+/// endpoint per *trainer*, with `machine_of` mapping endpoints to machines
+/// so only genuinely cross-machine traffic is metered.
+pub struct Transport {
+    mailboxes: Vec<Mailbox>,
+    receivers: Mutex<Vec<Option<Receiver<Message>>>>,
+    machine_of: Vec<u32>,
+    pub cost: Arc<CostModel>,
+}
+
+impl Transport {
+    pub fn new(n_machines: usize, cost: CostModel) -> Arc<Self> {
+        Self::with_mapping(
+            (0..n_machines as u32).collect(),
+            Arc::new(cost),
+        )
+    }
+
+    /// `machine_of[e]` = machine hosting endpoint `e`.
+    pub fn with_mapping(
+        machine_of: Vec<u32>,
+        cost: Arc<CostModel>,
+    ) -> Arc<Self> {
+        let n = machine_of.len();
+        let mut mailboxes = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            mailboxes.push(Mailbox { tx });
+            receivers.push(Some(rx));
+        }
+        Arc::new(Self {
+            mailboxes,
+            receivers: Mutex::new(receivers),
+            machine_of,
+            cost,
+        })
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    /// Claim machine `m`'s endpoint (receiver side). Each machine claims
+    /// its endpoint exactly once, at deployment.
+    pub fn endpoint(self: &Arc<Self>, machine: u32) -> Endpoint {
+        let rx = self.receivers.lock().unwrap()[machine as usize]
+            .take()
+            .expect("endpoint already claimed");
+        Endpoint { machine, transport: Arc::clone(self), rx }
+    }
+
+    /// Send `msg` to `dst`'s mailbox, charging the cost model when the
+    /// message crosses a machine boundary.
+    pub fn send(&self, src: u32, dst: u32, msg: Message) {
+        let (sm, dm) =
+            (self.machine_of[src as usize], self.machine_of[dst as usize]);
+        if sm != dm {
+            self.cost.on_network(sm, dm, msg.wire_bytes());
+        }
+        // local sends are free (shared memory path, §5.4)
+        self.mailboxes[dst as usize]
+            .tx
+            .send(msg)
+            .expect("destination endpoint dropped");
+    }
+}
+
+/// Receiving side for one machine.
+pub struct Endpoint {
+    pub machine: u32,
+    pub transport: Arc<Transport>,
+    rx: Receiver<Message>,
+}
+
+impl Endpoint {
+    pub fn recv(&self) -> Option<Message> {
+        self.rx.recv().ok()
+    }
+
+    pub fn try_recv(&self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn send(&self, dst: u32, port: Port, tag: u64, payload: Vec<u8>) {
+        self.transport.send(
+            self.machine,
+            dst,
+            Message { from: self.machine, port, tag, payload },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_arrive_in_order() {
+        let t = Transport::new(2, CostModel::default());
+        let e0 = t.endpoint(0);
+        let e1 = t.endpoint(1);
+        for i in 0..10u64 {
+            e0.send(1, Port::KvStore, i, vec![i as u8]);
+        }
+        for i in 0..10u64 {
+            let m = e1.recv().unwrap();
+            assert_eq!(m.tag, i);
+            assert_eq!(m.from, 0);
+        }
+    }
+
+    #[test]
+    fn remote_bytes_are_metered_local_are_not() {
+        let t = Transport::new(2, CostModel::default());
+        let e0 = t.endpoint(0);
+        let _e1 = t.endpoint(1);
+        e0.send(0, Port::Sampler, 0, vec![0; 100]); // local
+        assert_eq!(t.cost.network_bytes(), 0);
+        e0.send(1, Port::Sampler, 0, vec![0; 100]); // remote
+        assert_eq!(t.cost.network_bytes(), 124);
+    }
+
+    #[test]
+    #[should_panic(expected = "endpoint already claimed")]
+    fn endpoint_claimed_once() {
+        let t = Transport::new(1, CostModel::default());
+        let _a = t.endpoint(0);
+        let _b = t.endpoint(0);
+    }
+
+    #[test]
+    fn cross_thread_send() {
+        let t = Transport::new(2, CostModel::default());
+        let e0 = t.endpoint(0);
+        let e1 = t.endpoint(1);
+        let t2 = Arc::clone(&t);
+        let h = std::thread::spawn(move || {
+            let m = e1.recv().unwrap();
+            assert_eq!(m.payload, vec![7]);
+            t2.send(1, 0, Message {
+                from: 1,
+                port: Port::Control,
+                tag: 99,
+                payload: vec![8],
+            });
+        });
+        e0.send(1, Port::Control, 1, vec![7]);
+        let back = e0.recv().unwrap();
+        assert_eq!(back.tag, 99);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,246 @@
+//! Physical partition construction (§5.3, Figure 6): every partition holds
+//! its core vertices plus *all* incident edges, duplicating the remote
+//! endpoints as HALO vertices. Samplers can then answer neighbor queries
+//! for any local core vertex without cross-machine traffic — the
+//! owner-compute rule's foundation.
+
+use rustc_hash::FxHashMap;
+
+use crate::graph::{Graph, NodeId};
+
+use super::relabel::NodeMap;
+
+/// One machine's physical partition, in *local* ID space:
+/// locals `0..n_core` are core vertices (global `global_base + local`),
+/// locals `n_core..` are halo duplicates (owned elsewhere).
+#[derive(Clone, Debug)]
+pub struct PhysPartition {
+    pub part_id: u32,
+    pub n_core: usize,
+    /// Local CSR: full adjacency for cores, empty adjacency for halos.
+    pub graph: Graph,
+    /// local → (new) global id, for all locals.
+    pub local_to_global: Vec<NodeId>,
+    /// global → local for halo vertices only (cores are a subtraction).
+    halo_index: FxHashMap<NodeId, u32>,
+    pub global_base: u64,
+}
+
+impl PhysPartition {
+    pub fn n_local(&self) -> usize {
+        self.local_to_global.len()
+    }
+
+    pub fn n_halo(&self) -> usize {
+        self.n_local() - self.n_core
+    }
+
+    #[inline]
+    pub fn is_core_local(&self, local: u32) -> bool {
+        (local as usize) < self.n_core
+    }
+
+    /// Map a (new) global id to a local id, if present in this partition.
+    #[inline]
+    pub fn local_of(&self, gid: NodeId) -> Option<u32> {
+        let g = gid as u64;
+        if g >= self.global_base && g < self.global_base + self.n_core as u64
+        {
+            Some((g - self.global_base) as u32)
+        } else {
+            self.halo_index.get(&gid).copied()
+        }
+    }
+
+    #[inline]
+    pub fn global_of(&self, local: u32) -> NodeId {
+        self.local_to_global[local as usize]
+    }
+
+    /// Neighbors (as *global* ids) of a core vertex given by global id.
+    pub fn neighbors_global<'a>(
+        &'a self,
+        gid: NodeId,
+    ) -> impl Iterator<Item = NodeId> + 'a {
+        let local = self
+            .local_of(gid)
+            .expect("neighbors_global: vertex not in partition");
+        assert!(self.is_core_local(local), "halo vertices have no adjacency");
+        self.graph
+            .neighbors(local)
+            .iter()
+            .map(move |&l| self.local_to_global[l as usize])
+    }
+}
+
+/// Build all physical partitions from the *relabeled* global graph.
+pub fn build_partitions(g: &Graph, nm: &NodeMap) -> Vec<PhysPartition> {
+    let nparts = nm.nparts();
+    let mut out = Vec::with_capacity(nparts);
+    for part in 0..nparts as u32 {
+        out.push(build_one(g, nm, part));
+    }
+    out
+}
+
+fn build_one(g: &Graph, nm: &NodeMap, part: u32) -> PhysPartition {
+    let range = nm.range(part);
+    let n_core = (range.end - range.start) as usize;
+    let base = range.start;
+
+    // discover halo vertices (sorted for deterministic local ids)
+    let mut halos: Vec<NodeId> = Vec::new();
+    {
+        let mut seen = FxHashMap::default();
+        for c in 0..n_core {
+            let gid = (base + c as u64) as NodeId;
+            for &v in g.neighbors(gid) {
+                let vg = v as u64;
+                if !(vg >= range.start && vg < range.end)
+                    && seen.insert(v, ()).is_none()
+                {
+                    halos.push(v);
+                }
+            }
+        }
+    }
+    halos.sort_unstable();
+    let mut halo_index = FxHashMap::default();
+    for (i, &h) in halos.iter().enumerate() {
+        halo_index.insert(h, (n_core + i) as u32);
+    }
+
+    let n_local = n_core + halos.len();
+    let mut local_to_global = Vec::with_capacity(n_local);
+    for c in 0..n_core {
+        local_to_global.push((base + c as u64) as NodeId);
+    }
+    local_to_global.extend_from_slice(&halos);
+
+    // local CSR: cores carry full adjacency, halos empty
+    let has_rel = !g.rel.is_empty();
+    let mut offsets = vec![0u64; n_local + 1];
+    for c in 0..n_core {
+        let gid = (base + c as u64) as NodeId;
+        offsets[c + 1] = offsets[c] + g.degree(gid) as u64;
+    }
+    for h in n_core..n_local {
+        offsets[h + 1] = offsets[h];
+    }
+    let n_local_edges = offsets[n_local] as usize;
+    let mut targets = Vec::with_capacity(n_local_edges);
+    let mut rel = if has_rel {
+        Vec::with_capacity(n_local_edges)
+    } else {
+        Vec::new()
+    };
+    for c in 0..n_core {
+        let gid = (base + c as u64) as NodeId;
+        let rels = g.rel_of(gid);
+        for (i, &v) in g.neighbors(gid).iter().enumerate() {
+            let vg = v as u64;
+            let local = if vg >= range.start && vg < range.end {
+                (vg - base) as u32
+            } else {
+                halo_index[&v]
+            };
+            targets.push(local);
+            if has_rel {
+                rel.push(rels[i]);
+            }
+        }
+    }
+
+    let node_type = if g.node_type.is_empty() {
+        Vec::new()
+    } else {
+        local_to_global
+            .iter()
+            .map(|&gid| g.node_type[gid as usize])
+            .collect()
+    };
+
+    PhysPartition {
+        part_id: part,
+        n_core,
+        graph: Graph { offsets, targets, rel, node_type },
+        local_to_global,
+        halo_index,
+        global_base: base,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::partition::{
+        metis_partition, relabel, PartitionConfig, VertexWeights,
+    };
+
+    fn setup(
+        n: usize,
+        e: usize,
+        k: usize,
+    ) -> (Graph, NodeMap, Vec<PhysPartition>) {
+        let spec = DatasetSpec::new("h", n, e);
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(k));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let parts = build_partitions(&g, &r.node_map);
+        (g, r.node_map, parts)
+    }
+
+    #[test]
+    fn every_core_in_exactly_one_partition() {
+        let (g, _, parts) = setup(900, 3600, 3);
+        let total: usize = parts.iter().map(|p| p.n_core).sum();
+        assert_eq!(total, g.n_nodes());
+    }
+
+    #[test]
+    fn halo_closure_preserves_core_adjacency() {
+        let (g, nm, parts) = setup(700, 2800, 4);
+        for part in &parts {
+            for c in 0..part.n_core as u32 {
+                let gid = part.global_of(c);
+                let mut expect: Vec<NodeId> = g.neighbors(gid).to_vec();
+                expect.sort_unstable();
+                let mut got: Vec<NodeId> =
+                    part.neighbors_global(gid).collect();
+                got.sort_unstable();
+                assert_eq!(got, expect, "adjacency differs at {gid}");
+            }
+            // every halo is genuinely remote
+            for h in part.n_core..part.n_local() {
+                let gid = part.local_to_global[h];
+                assert_ne!(nm.owner(gid), part.part_id);
+            }
+        }
+    }
+
+    #[test]
+    fn halos_have_no_adjacency() {
+        let (_, _, parts) = setup(500, 2000, 2);
+        for part in &parts {
+            for h in part.n_core..part.n_local() {
+                assert_eq!(part.graph.degree(h as u32), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn local_of_roundtrips() {
+        let (_, _, parts) = setup(600, 2400, 3);
+        for part in &parts {
+            for local in 0..part.n_local() as u32 {
+                let gid = part.global_of(local);
+                assert_eq!(part.local_of(gid), Some(local));
+            }
+            // a foreign non-halo id resolves to None
+            assert_eq!(part.local_of(u32::MAX - 1), None);
+        }
+    }
+}

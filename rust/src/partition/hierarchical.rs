@@ -1,0 +1,162 @@
+//! Second-level partitioning (§5.3): within each machine's partition, core
+//! vertices are further split across the machine's GPUs/trainers. Only the
+//! *training set assignment* uses this level (no feature duplication) — it
+//! improves intra-batch locality so mini-batches touch fewer distinct
+//! input vertices (Fig 14's "2-level partition" ablation bar).
+
+use crate::graph::{Graph, NodeId};
+use crate::util::Rng;
+
+use super::{
+    metis_partition, PartitionConfig, Partitioning, PhysPartition,
+    VertexWeights,
+};
+
+/// Split one machine partition's cores into `nsub` buckets, balancing the
+/// number of `train_mask`-set vertices per bucket while minimizing cut on
+/// the induced core subgraph.
+pub fn split_cores(
+    part: &PhysPartition,
+    train_mask: &[bool], // indexed by core-local id
+    nsub: usize,
+    seed: u64,
+) -> Vec<u32> {
+    assert_eq!(train_mask.len(), part.n_core);
+    if nsub <= 1 {
+        return vec![0; part.n_core];
+    }
+    // induced subgraph over cores (halo edges dropped)
+    let mut offsets = vec![0u64; part.n_core + 1];
+    let mut targets: Vec<NodeId> = Vec::new();
+    for c in 0..part.n_core as u32 {
+        for &t in part.graph.neighbors(c) {
+            if (t as usize) < part.n_core {
+                targets.push(t);
+            }
+        }
+        offsets[c as usize + 1] = targets.len() as u64;
+    }
+    let induced = Graph {
+        offsets,
+        targets,
+        rel: Vec::new(),
+        node_type: Vec::new(),
+    };
+
+    // constraints: vertex count + train membership
+    let mut w = vec![0.0f32; part.n_core * 2];
+    for c in 0..part.n_core {
+        w[c * 2] = 1.0;
+        if train_mask[c] {
+            w[c * 2 + 1] = 1.0;
+        }
+    }
+    let vw = VertexWeights { ncon: 2, w };
+    let mut cfg = PartitionConfig::new(nsub);
+    cfg.seed = seed;
+    cfg.coarsen_to = (nsub * 20).max(100);
+    let p = metis_partition(&induced, &vw, &cfg);
+    rebalance_train(p, train_mask, nsub, seed)
+}
+
+/// Post-pass: force train-vertex counts per bucket within ±1 of ideal by
+/// moving surplus train vertices to deficit buckets (synchronous SGD needs
+/// identical batch counts per trainer — §5.6.1).
+fn rebalance_train(
+    p: Partitioning,
+    train_mask: &[bool],
+    nsub: usize,
+    seed: u64,
+) -> Vec<u32> {
+    let mut assign = p.assign;
+    let train_ids: Vec<usize> = (0..assign.len())
+        .filter(|&v| train_mask[v])
+        .collect();
+    let total = train_ids.len();
+    let base = total / nsub;
+    let mut extra = total % nsub; // first `extra` buckets get base+1
+    let mut want: Vec<usize> = (0..nsub)
+        .map(|_| {
+            if extra > 0 {
+                extra -= 1;
+                base + 1
+            } else {
+                base
+            }
+        })
+        .collect();
+    let mut have = vec![0usize; nsub];
+    for &v in &train_ids {
+        have[assign[v] as usize] += 1;
+    }
+    // move from surplus to deficit (random order for fairness)
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let mut shuffled = train_ids;
+    rng.shuffle(&mut shuffled);
+    for &v in &shuffled {
+        let cur = assign[v] as usize;
+        if have[cur] > want[cur] {
+            if let Some(tgt) = (0..nsub).find(|&b| have[b] < want[b]) {
+                assign[v] = tgt as u32;
+                have[cur] -= 1;
+                have[tgt] += 1;
+            }
+        }
+    }
+    let _ = &mut want;
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::partition::{relabel, PartitionConfig};
+
+    fn one_partition() -> (PhysPartition, Vec<bool>) {
+        let spec = DatasetSpec::new("hier", 1000, 4000);
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(2));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let d2 = relabel::relabel_dataset(&d, &r);
+        let parts = super::super::halo::build_partitions(&g, &r.node_map);
+        let part = parts.into_iter().next().unwrap();
+        let mask: Vec<bool> = (0..part.n_core)
+            .map(|c| {
+                d2.split[part.global_of(c as u32) as usize]
+                    == crate::graph::SplitTag::Train
+            })
+            .collect();
+        (part, mask)
+    }
+
+    #[test]
+    fn buckets_cover_cores_and_balance_train() {
+        let (part, mask) = one_partition();
+        let nsub = 4;
+        let sub = split_cores(&part, &mask, nsub, 3);
+        assert_eq!(sub.len(), part.n_core);
+        assert!(sub.iter().all(|&s| (s as usize) < nsub));
+        let mut train_counts = vec![0usize; nsub];
+        for c in 0..part.n_core {
+            if mask[c] {
+                train_counts[sub[c] as usize] += 1;
+            }
+        }
+        let max = *train_counts.iter().max().unwrap();
+        let min = *train_counts.iter().min().unwrap();
+        assert!(
+            max - min <= 1,
+            "train counts not balanced: {train_counts:?}"
+        );
+    }
+
+    #[test]
+    fn single_bucket_is_all_zero() {
+        let (part, mask) = one_partition();
+        let sub = split_cores(&part, &mask, 1, 3);
+        assert!(sub.iter().all(|&s| s == 0));
+    }
+}

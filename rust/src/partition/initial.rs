@@ -1,0 +1,108 @@
+//! Initial partitioning of the coarsest graph: greedy graph growing under
+//! multi-constraint budgets (a BFS frontier absorbs vertices until the
+//! part's primary budget fills, preferring vertices with many edges into
+//! the growing region — the classic GGGP heuristic).
+
+use super::{coarsen::WGraph, PartitionConfig};
+use crate::util::Rng;
+
+/// Greedily grow `nparts` regions; any remainder lands in the lightest part.
+pub fn greedy_grow(wg: &WGraph, cfg: &PartitionConfig, rng: &mut Rng) -> Vec<u32> {
+    let n = wg.n();
+    let nparts = cfg.nparts;
+    let ncon = wg.ncon;
+    let mut totals = vec![0.0f32; ncon];
+    for v in 0..n {
+        for c in 0..ncon {
+            totals[c] += wg.vwgt[v * ncon + c];
+        }
+    }
+    let ideal: Vec<f32> =
+        totals.iter().map(|t| t / nparts as f32).collect();
+
+    let mut assign = vec![u32::MAX; n];
+    let mut part_w = vec![vec![0.0f32; ncon]; nparts];
+
+    for p in 0..nparts as u32 {
+        // budget met when the primary constraint (vertex count) reaches ideal
+        let mut frontier: Vec<u32> = Vec::new();
+        // seed: random unassigned vertex
+        let unassigned: Vec<u32> = (0..n as u32)
+            .filter(|&v| assign[v as usize] == u32::MAX)
+            .collect();
+        if unassigned.is_empty() {
+            break;
+        }
+        let seed = unassigned[rng.usize_below(unassigned.len())];
+        frontier.push(seed);
+        while part_w[p as usize][0] < ideal[0] {
+            // pick the frontier vertex with max connectivity into p
+            let v = match frontier.pop() {
+                Some(v) => v,
+                None => {
+                    // region is disconnected from remaining graph: jump
+                    match (0..n as u32)
+                        .find(|&v| assign[v as usize] == u32::MAX)
+                    {
+                        Some(v) => v,
+                        None => break,
+                    }
+                }
+            };
+            if assign[v as usize] != u32::MAX {
+                continue;
+            }
+            assign[v as usize] = p;
+            for c in 0..ncon {
+                part_w[p as usize][c] += wg.vwgt[v as usize * ncon + c];
+            }
+            let (ts, _) = wg.nbrs(v);
+            for &t in ts {
+                if assign[t as usize] == u32::MAX {
+                    frontier.push(t);
+                }
+            }
+        }
+    }
+
+    // Remainder: lightest part by primary constraint.
+    for v in 0..n {
+        if assign[v] == u32::MAX {
+            let p = (0..nparts)
+                .min_by(|&a, &b| {
+                    part_w[a][0].partial_cmp(&part_w[b][0]).unwrap()
+                })
+                .unwrap();
+            assign[v] = p as u32;
+            for c in 0..ncon {
+                part_w[p][c] += wg.vwgt[v * ncon + c];
+            }
+        }
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::partition::VertexWeights;
+
+    #[test]
+    fn covers_all_vertices_within_balance() {
+        let spec = DatasetSpec::new("i", 1000, 4000);
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let wg = WGraph::from_graph(&d.graph, &vw);
+        let cfg = PartitionConfig::new(4);
+        let assign = greedy_grow(&wg, &cfg, &mut Rng::new(4));
+        assert!(assign.iter().all(|&a| (a as usize) < 4));
+        let mut counts = [0usize; 4];
+        for &a in &assign {
+            counts[a as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 150, "unbalanced {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Random partitioning — the Euler baseline (§6.1: "Euler uses random
+//! partitioning"), also used to quantify the METIS benefit in the Fig 14
+//! ablation.
+
+use super::Partitioning;
+use crate::util::Rng;
+
+pub fn random_partition(n: usize, nparts: usize, seed: u64) -> Partitioning {
+    let mut rng = Rng::new(seed);
+    Partitioning {
+        nparts,
+        assign: (0..n).map(|_| rng.below(nparts as u64) as u32).collect(),
+    }
+}
+
+/// Round-robin striping (perfectly balanced, locality-free) — a second
+/// baseline matching hash-partitioned industrial systems.
+pub fn striped_partition(n: usize, nparts: usize) -> Partitioning {
+    Partitioning {
+        nparts,
+        assign: (0..n).map(|v| (v % nparts) as u32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_is_roughly_balanced() {
+        let p = random_partition(10_000, 4, 1);
+        let mut counts = [0usize; 4];
+        for &a in &p.assign {
+            counts[a as usize] += 1;
+        }
+        for c in counts {
+            assert!((2_200..2_800).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn striped_is_exactly_balanced() {
+        let p = striped_partition(1000, 8);
+        let mut counts = [0usize; 8];
+        for &a in &p.assign {
+            counts[a as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 125));
+    }
+}

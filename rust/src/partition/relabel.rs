@@ -1,0 +1,264 @@
+//! Global ID relabeling (§5.3): after partitioning, vertex IDs are permuted
+//! so every partition's core vertices occupy a contiguous range. Owner
+//! lookup then is a binary search in an `nparts+1` array and global→local
+//! conversion is a subtraction — the paper's trick for cheap ID mapping.
+
+use crate::graph::{Dataset, Graph, GraphBuilder, NodeId};
+
+use super::Partitioning;
+
+/// Partition ownership expressed as contiguous new-ID ranges.
+#[derive(Clone, Debug)]
+pub struct NodeMap {
+    pub part_starts: Vec<u64>, // len nparts+1
+}
+
+impl NodeMap {
+    pub fn nparts(&self) -> usize {
+        self.part_starts.len() - 1
+    }
+
+    /// Owning partition of a (new) global id — binary search (§5.3).
+    #[inline]
+    pub fn owner(&self, gid: NodeId) -> u32 {
+        let g = gid as u64;
+        // partition_point returns the first index with start > g
+        (self.part_starts.partition_point(|&s| s <= g) - 1) as u32
+    }
+
+    /// Core-local offset of a (new) global id within its partition.
+    #[inline]
+    pub fn local_of(&self, gid: NodeId) -> u32 {
+        let p = self.owner(gid);
+        (gid as u64 - self.part_starts[p as usize]) as u32
+    }
+
+    #[inline]
+    pub fn global_of(&self, part: u32, local: u32) -> NodeId {
+        (self.part_starts[part as usize] + local as u64) as NodeId
+    }
+
+    pub fn n_core(&self, part: u32) -> usize {
+        (self.part_starts[part as usize + 1]
+            - self.part_starts[part as usize]) as usize
+    }
+
+    pub fn range(&self, part: u32) -> std::ops::Range<u64> {
+        self.part_starts[part as usize]..self.part_starts[part as usize + 1]
+    }
+}
+
+/// The permutation produced by relabeling.
+#[derive(Clone, Debug)]
+pub struct Relabeling {
+    pub node_map: NodeMap,
+    pub old_to_new: Vec<NodeId>,
+    pub new_to_old: Vec<NodeId>,
+}
+
+/// Compute the relabeling: new ids ordered by (partition, old id).
+pub fn relabel(p: &Partitioning) -> Relabeling {
+    let n = p.assign.len();
+    let mut counts = vec![0u64; p.nparts + 1];
+    for &a in &p.assign {
+        counts[a as usize + 1] += 1;
+    }
+    for i in 0..p.nparts {
+        counts[i + 1] += counts[i];
+    }
+    let part_starts = counts.clone();
+    let mut cursor = counts;
+    let mut old_to_new = vec![0 as NodeId; n];
+    let mut new_to_old = vec![0 as NodeId; n];
+    for old in 0..n {
+        let part = p.assign[old] as usize;
+        let new = cursor[part];
+        cursor[part] += 1;
+        old_to_new[old] = new as NodeId;
+        new_to_old[new as usize] = old as NodeId;
+    }
+    Relabeling {
+        node_map: NodeMap { part_starts },
+        old_to_new,
+        new_to_old,
+    }
+}
+
+/// Rebuild a graph under the permutation (adjacency preserved).
+pub fn relabel_graph(g: &Graph, r: &Relabeling) -> Graph {
+    let n = g.n_nodes();
+    let mut b = GraphBuilder::with_capacity(n, g.n_edges());
+    for u in 0..n as NodeId {
+        let nu = r.old_to_new[u as usize];
+        let rels = g.rel_of(u);
+        for (i, &v) in g.neighbors(u).iter().enumerate() {
+            let rel = if rels.is_empty() { 0 } else { rels[i] };
+            b.add_edge(nu, r.old_to_new[v as usize], rel);
+        }
+    }
+    if !g.node_type.is_empty() {
+        let mut nt = vec![0u8; n];
+        for old in 0..n {
+            nt[r.old_to_new[old] as usize] = g.node_type[old];
+        }
+        b.set_node_types(nt);
+    }
+    b.build()
+}
+
+/// Permute a whole dataset (features, labels, split) to the new ID space.
+pub fn relabel_dataset(d: &Dataset, r: &Relabeling) -> Dataset {
+    let n = d.n_nodes();
+    let dim = d.feat_dim;
+    let mut feats = vec![0f32; d.feats.len()];
+    let mut labels = vec![0u16; n];
+    let mut split = vec![crate::graph::SplitTag::None; n];
+    for old in 0..n {
+        let new = r.old_to_new[old] as usize;
+        feats[new * dim..(new + 1) * dim]
+            .copy_from_slice(&d.feats[old * dim..(old + 1) * dim]);
+        labels[new] = d.labels[old];
+        split[new] = d.split[old];
+    }
+    Dataset {
+        name: d.name.clone(),
+        graph: relabel_graph(&d.graph, r),
+        feats,
+        feat_dim: dim,
+        labels,
+        num_classes: d.num_classes,
+        split,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::partition::{metis_partition, PartitionConfig, VertexWeights};
+
+    fn setup() -> (Dataset, Partitioning, Relabeling) {
+        let spec = DatasetSpec::new("rl", 1200, 4800);
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(4));
+        let r = relabel(&p);
+        (d, p, r)
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let (_, _, r) = setup();
+        let n = r.old_to_new.len();
+        for old in 0..n {
+            assert_eq!(r.new_to_old[r.old_to_new[old] as usize], old as NodeId);
+        }
+    }
+
+    #[test]
+    fn cores_are_contiguous_and_owner_matches() {
+        let (_, p, r) = setup();
+        for old in 0..p.assign.len() {
+            let new = r.old_to_new[old];
+            assert_eq!(
+                r.node_map.owner(new),
+                p.assign[old],
+                "owner mismatch for old={old}"
+            );
+        }
+        // ranges partition the id space exactly
+        assert_eq!(r.node_map.part_starts[0], 0);
+        assert_eq!(
+            *r.node_map.part_starts.last().unwrap() as usize,
+            p.assign.len()
+        );
+    }
+
+    #[test]
+    fn local_global_roundtrip() {
+        let (_, _, r) = setup();
+        let nm = &r.node_map;
+        for part in 0..nm.nparts() as u32 {
+            for local in 0..nm.n_core(part) as u32 {
+                let g = nm.global_of(part, local);
+                assert_eq!(nm.owner(g), part);
+                assert_eq!(nm.local_of(g), local);
+            }
+        }
+    }
+
+    #[test]
+    fn relabeled_graph_preserves_adjacency() {
+        let (d, _, r) = setup();
+        let g2 = relabel_graph(&d.graph, &r);
+        g2.validate().unwrap();
+        assert_eq!(g2.n_edges(), d.graph.n_edges());
+        for old_u in 0..d.n_nodes() as NodeId {
+            let new_u = r.old_to_new[old_u as usize];
+            let mut expect: Vec<NodeId> = d
+                .graph
+                .neighbors(old_u)
+                .iter()
+                .map(|&v| r.old_to_new[v as usize])
+                .collect();
+            expect.sort_unstable();
+            let mut got = g2.neighbors(new_u).to_vec();
+            got.sort_unstable();
+            assert_eq!(got, expect, "adjacency mismatch at old={old_u}");
+        }
+    }
+
+    #[test]
+    fn relabeled_dataset_moves_features_with_nodes() {
+        let (d, _, r) = setup();
+        let d2 = relabel_dataset(&d, &r);
+        for old in 0..d.n_nodes() {
+            let new = r.old_to_new[old] as usize;
+            assert_eq!(d.labels[old], d2.labels[new]);
+            assert_eq!(d.split[old], d2.split[new]);
+            assert_eq!(
+                d.feature(old as NodeId),
+                d2.feature(new as NodeId)
+            );
+        }
+    }
+
+    /// Property: owner() agrees with a linear scan for random maps.
+    #[test]
+    fn prop_owner_binary_search() {
+        crate::util::proptest::forall(
+            21,
+            30,
+            |rng| {
+                let nparts = 1 + rng.usize_below(9);
+                let mut starts = vec![0u64];
+                for _ in 0..nparts {
+                    let last = *starts.last().unwrap();
+                    starts.push(last + 1 + rng.below(50));
+                }
+                (starts, rng.next_u64())
+            },
+            |(starts, seed)| {
+                let nm = NodeMap { part_starts: starts.clone() };
+                let n = *starts.last().unwrap();
+                let mut rng = crate::util::Rng::new(*seed);
+                for _ in 0..50 {
+                    let g = rng.below(n) as NodeId;
+                    let expect = (0..nm.nparts())
+                        .find(|&p| {
+                            (g as u64) >= starts[p]
+                                && (g as u64) < starts[p + 1]
+                        })
+                        .unwrap() as u32;
+                    if nm.owner(g) != expect {
+                        return Err(format!(
+                            "owner({g}) = {} != {expect}",
+                            nm.owner(g)
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,230 @@
+//! BatchGen: stages 1–4 of the pipeline for one trainer — schedule
+//! targets, sample multi-hop neighbors through the distributed sampler,
+//! compact to the padded block layout, and pull features/labels from the
+//! KVStore into a ready-to-transfer [`HostBatch`].
+
+use std::sync::Arc;
+
+use crate::graph::NodeId;
+use crate::kvstore::KvClient;
+use crate::runtime::executable::HostBatch;
+use crate::sampler::compact::{to_block, ShapeSpec, TaskKind};
+use crate::sampler::{BatchScheduler, DistNeighborSampler, Target};
+use crate::util::Rng;
+
+pub struct BatchGen {
+    pub spec: ShapeSpec,
+    pub scheduler: BatchScheduler,
+    pub sampler: Arc<DistNeighborSampler>,
+    pub kv: KvClient,
+    pub rng: Rng,
+    /// Name of the feature tensor in the KVStore.
+    pub feat_name: String,
+    /// Name of the label tensor (dim-1 f32 rows); empty = no labels (lp).
+    pub label_name: String,
+}
+
+impl BatchGen {
+    pub fn batches_per_epoch(&self) -> usize {
+        self.scheduler.batches_per_epoch()
+    }
+
+    /// Produce one fully materialized mini-batch (stages 1–4).
+    pub fn next(&mut self) -> HostBatch {
+        // stage 1: schedule
+        let target = self.scheduler.next_batch();
+        self.materialize(&target)
+    }
+
+    /// Stages 2–4 for an explicit target set (shared by train/eval paths).
+    pub fn materialize(&mut self, target: &Target) -> HostBatch {
+        let spec = &self.spec;
+        let flat = target.flat_nodes();
+        // stage 2: distributed neighbor sampling
+        let samples = self.sampler.sample_blocks(
+            &flat,
+            &spec.fanouts,
+            &spec.layer_nodes,
+            &mut self.rng,
+        );
+        // stage 4 (compaction; paper runs this on GPU, order is the same)
+        let block = to_block(spec, &samples);
+
+        // stage 3: CPU prefetch — features for the deduped input frontier.
+        // §Perf: only the padding tail needs zeroing; the real rows are
+        // fully overwritten by the pull below.
+        let n0 = spec.layer_nodes[0];
+        let f = spec.feat_dim;
+        let real = block.input_nodes.len().min(n0);
+        let mut feats: Vec<f32> = Vec::with_capacity(n0 * f);
+        #[allow(clippy::uninit_vec)]
+        unsafe {
+            feats.set_len(n0 * f);
+        }
+        feats[real * f..].fill(0.0);
+        let remote_rows = self.kv.pull(
+            &self.feat_name,
+            &block.input_nodes[..real],
+            &mut feats[..real * f],
+        );
+
+        // labels / masks for the targets
+        let n_l = *spec.layer_nodes.last().unwrap();
+        let (labels, label_mask, pair_mask) = match spec.task {
+            TaskKind::NodeClassification => {
+                let mut lab_rows = vec![0f32; block.targets.len()];
+                self.kv.pull(
+                    &self.label_name,
+                    &block.targets,
+                    &mut lab_rows,
+                );
+                let mut labels = vec![0i32; n_l];
+                let mut mask = vec![0f32; n_l];
+                for (i, &l) in lab_rows.iter().enumerate() {
+                    labels[i] = l as i32;
+                    mask[i] = 1.0;
+                }
+                (labels, mask, Vec::new())
+            }
+            TaskKind::LinkPrediction => {
+                let n_pairs = target.n_items();
+                let mut pm = vec![0f32; spec.batch];
+                for m in pm.iter_mut().take(n_pairs) {
+                    *m = 1.0;
+                }
+                (Vec::new(), Vec::new(), pm)
+            }
+        };
+
+        HostBatch {
+            feats,
+            layers: block.layers,
+            labels,
+            label_mask,
+            pair_mask,
+            targets: block.targets,
+            remote_rows,
+            dropped_neighbors: block.dropped_neighbors,
+        }
+    }
+
+    /// Eval-batch generator over a fixed node list (validation/test).
+    pub fn materialize_nodes(&mut self, nodes: &[NodeId]) -> HostBatch {
+        self.materialize(&Target::Nodes(nodes.to_vec()))
+    }
+}
+
+/// Test-support constructors (single machine, tiny dataset).
+pub mod tests_support {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::kvstore::{KvCluster, RangePolicy};
+    use crate::net::CostModel;
+    use crate::partition::{build_partitions, NodeMap, Partitioning};
+    use crate::sampler::compact::ModelKind;
+    use crate::sampler::SamplerServer;
+
+    /// Single-machine BatchGen over a generated graph: `n_train` targets,
+    /// given batch size, 2 layers of fanout 3, small dims.
+    pub fn tiny_gen(n_train: usize, batch: usize) -> BatchGen {
+        let spec_d = DatasetSpec::new("tiny", 1000, 4000);
+        let d = spec_d.generate();
+        let n = d.n_nodes();
+        let p = Partitioning { nparts: 1, assign: vec![0; n] };
+        let r = crate::partition::relabel::relabel(&p);
+        let g = crate::partition::relabel::relabel_graph(&d.graph, &r);
+        let parts = build_partitions(&g, &r.node_map);
+        let servers: Vec<Arc<SamplerServer>> = parts
+            .into_iter()
+            .map(|pp| Arc::new(SamplerServer::new(0, Arc::new(pp))))
+            .collect();
+        let cost = Arc::new(CostModel::default());
+        let node_map = Arc::new(NodeMap {
+            part_starts: r.node_map.part_starts.clone(),
+        });
+        let sampler = Arc::new(DistNeighborSampler::new(
+            0,
+            servers,
+            node_map.clone(),
+            cost.clone(),
+        ));
+        let kv = KvCluster::new(1, cost);
+        let policy = Arc::new(RangePolicy::new(NodeMap {
+            part_starts: node_map.part_starts.clone(),
+        }));
+        kv.register_partitioned("feat", &d.feats, d.feat_dim, policy.as_ref());
+        let labels_f32: Vec<f32> =
+            d.labels.iter().map(|&l| l as f32).collect();
+        kv.register_partitioned("label", &labels_f32, 1, policy.as_ref());
+        let client = kv.client(0, policy);
+
+        let spec = ShapeSpec {
+            name: "tiny".into(),
+            model: ModelKind::Sage,
+            task: TaskKind::NodeClassification,
+            batch,
+            fanouts: vec![3, 3],
+            layer_nodes: vec![
+                (batch * 16).next_multiple_of(128),
+                (batch * 4).next_multiple_of(128),
+                batch.next_multiple_of(128),
+            ],
+            feat_dim: d.feat_dim,
+            num_classes: d.num_classes,
+            num_rels: 1,
+        };
+        let train: Vec<NodeId> = (0..n_train as NodeId).collect();
+        BatchGen {
+            spec,
+            scheduler: BatchScheduler::for_nodes(train, batch, 3),
+            sampler,
+            kv: client,
+            rng: Rng::new(11),
+            feat_name: "feat".into(),
+            label_name: "label".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::tiny_gen;
+
+    #[test]
+    fn batch_has_consistent_shapes() {
+        let mut gen = tiny_gen(64, 16);
+        let b = gen.next();
+        let spec = &gen.spec;
+        assert_eq!(b.feats.len(), spec.layer_nodes[0] * spec.feat_dim);
+        assert_eq!(b.layers.len(), 2);
+        assert_eq!(b.targets.len(), 16);
+        assert_eq!(b.labels.len(), *spec.layer_nodes.last().unwrap());
+        // label mask marks exactly the real targets
+        let real: f32 = b.label_mask.iter().sum();
+        assert_eq!(real as usize, 16);
+    }
+
+    #[test]
+    fn features_match_source_rows() {
+        let mut gen = tiny_gen(64, 16);
+        let b = gen.next();
+        // targets occupy the first slots of the final layer; their features
+        // flow from input_nodes — verify the first input row is non-zero
+        // (generated features are dense gaussians, all-zero would mean a
+        // broken pull)
+        let f = gen.spec.feat_dim;
+        let nz = b.feats[..f].iter().filter(|&&x| x != 0.0).count();
+        assert!(nz > f / 2);
+    }
+
+    #[test]
+    fn epoch_covers_all_train_nodes() {
+        let mut gen = tiny_gen(64, 16);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..gen.batches_per_epoch() {
+            let b = gen.next();
+            seen.extend(b.targets.iter().copied());
+        }
+        assert_eq!(seen.len(), 64);
+    }
+}

@@ -1,0 +1,203 @@
+//! Device cost model: estimate per-step FLOPs and memory traffic from a
+//! variant's static shapes, then model step time on the paper's devices
+//! (NVIDIA T4) and on a CPU socket. Benches use this to reproduce the
+//! paper's GPU-vs-CPU comparisons (Fig 10/11) from a CPU-only testbed:
+//! the *measured* CPU wall-clock anchors the pipeline, and the modeled
+//! device ratio scales mini-batch compute (DESIGN.md §2).
+
+use crate::sampler::compact::ModelKind;
+
+use super::manifest::VariantSpec;
+
+/// A compute device's roofline parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceCostModel {
+    pub name: &'static str,
+    /// Sustained f32 FLOP/s for dense ops.
+    pub flops: f64,
+    /// Sustained memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Fixed per-kernel-launch / per-step overhead, seconds.
+    pub step_overhead: f64,
+}
+
+impl DeviceCostModel {
+    /// NVIDIA T4 (paper's g4dn trainer GPU): 8.1 TFLOPs f32, 300 GB/s.
+    pub fn t4() -> Self {
+        Self {
+            name: "T4",
+            flops: 8.1e12 * 0.35, // sustained fraction for GNN workloads
+            mem_bw: 300e9 * 0.6,
+            step_overhead: 150e-6,
+        }
+    }
+
+    /// One socket of the paper's r5dn CPU nodes (≈24 cores Skylake).
+    pub fn xeon() -> Self {
+        Self {
+            name: "Xeon",
+            flops: 1.5e12 * 0.25,
+            mem_bw: 100e9 * 0.5,
+            step_overhead: 30e-6,
+        }
+    }
+
+    /// This testbed: a single CPU core driving XLA-CPU.
+    pub fn local_core() -> Self {
+        Self {
+            name: "local",
+            flops: 5e10,
+            mem_bw: 2e10,
+            step_overhead: 20e-6,
+        }
+    }
+
+    /// Roofline step time for a variant (train = fwd + bwd ≈ 3x fwd work).
+    pub fn step_secs(&self, spec: &VariantSpec, train: bool) -> f64 {
+        let (flops, bytes) = step_cost(spec);
+        let mult = if train { 3.0 } else { 1.0 };
+        let t = (flops * mult / self.flops).max(bytes * mult / self.mem_bw);
+        t + self.step_overhead
+    }
+}
+
+/// (FLOPs, bytes) of one forward pass at a variant's padded shapes.
+pub fn step_cost(spec: &VariantSpec) -> (f64, f64) {
+    let n = &spec.layer_nodes;
+    let mut flops = 0f64;
+    let mut bytes = 0f64;
+    let l_total = spec.fanouts.len();
+    for l in 1..=l_total {
+        let nl = n[l] as f64;
+        let k = spec.fanouts[l - 1] as f64;
+        let f_in = if l == 1 {
+            spec.feat_dim as f64
+        } else {
+            spec.hidden_dim() as f64
+        };
+        let f_out = if l == l_total {
+            spec.out_dim() as f64
+        } else {
+            spec.hidden_dim() as f64
+        };
+        // aggregation: gather + mean over K neighbors
+        let agg_flops = nl * k * f_in * 2.0;
+        let agg_bytes = nl * k * f_in * 4.0; // gathered rows (read)
+        match spec.model {
+            ModelKind::Sage => {
+                flops += agg_flops + 2.0 * nl * f_in * f_out * 2.0;
+                bytes += agg_bytes + 2.0 * f_in * f_out * 4.0 + nl * f_out * 4.0;
+            }
+            ModelKind::Gat => {
+                // per-head projection of every src node + edge-softmax
+                // (logits, max, exp, weighted sum per edge per head) +
+                // head-merge output projection
+                let h = spec.num_heads.max(1) as f64;
+                let n_src = n[l - 1] as f64;
+                flops += n_src * f_in * f_out * 2.0      // src projection
+                    + nl * k * f_out * 6.0 * h.sqrt()    // edge softmax ops
+                    + nl * f_out * f_out * 2.0           // head merge
+                    + agg_flops;
+                bytes += agg_bytes
+                    + n_src * f_out * 4.0
+                    + 2.0 * f_in * f_out * 4.0
+                    + nl * f_out * 4.0;
+            }
+            ModelKind::Rgcn => {
+                let r = spec.num_rels as f64;
+                flops += agg_flops * r.min(2.0)
+                    + nl * r * f_in * f_out * 2.0
+                    + nl * f_in * f_out * 2.0;
+                bytes += agg_bytes
+                    + r * f_in * f_out * 4.0
+                    + nl * f_out * 4.0;
+            }
+        }
+    }
+    // input feature read
+    bytes += (n[0] * spec.feat_dim) as f64 * 4.0;
+    (flops, bytes)
+}
+
+impl VariantSpec {
+    /// Hidden width used by interior layers.
+    pub fn hidden_dim(&self) -> usize {
+        // param_shapes[0] is [f_in, f_out(hidden)] for sage/gat/rgcn-self
+        self.param_shapes
+            .first()
+            .and_then(|s| s.last())
+            .copied()
+            .unwrap_or(self.feat_dim)
+    }
+
+    pub fn out_dim(&self) -> usize {
+        if self.num_classes > 0 {
+            self.num_classes
+        } else {
+            self.hidden_dim()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::compact::TaskKind;
+
+    /// Paper-scale shapes (batch 1000, fanout 15/10/5, hidden 256): at
+    /// this size compute dominates launch overhead, which is where the
+    /// paper's GPU-vs-CPU comparison happens.
+    fn spec(model: ModelKind) -> VariantSpec {
+        VariantSpec {
+            name: "x".into(),
+            model,
+            task: TaskKind::NodeClassification,
+            batch: 1000,
+            fanouts: vec![15, 10, 5],
+            layer_nodes: vec![1081344, 67584, 6144, 1024],
+            feat_dim: 100,
+            num_classes: 47,
+            num_heads: 2,
+            num_rels: 3,
+            param_shapes: vec![vec![100, 256], vec![100, 256], vec![256]],
+            train_inputs: vec![],
+            eval_inputs: vec![],
+            train_hlo: String::new(),
+            eval_hlo: String::new(),
+            params_bin: String::new(),
+        }
+    }
+
+    #[test]
+    fn gpu_is_faster_than_cpu_and_train_costs_more() {
+        let s = spec(ModelKind::Sage);
+        let t4 = DeviceCostModel::t4();
+        let cpu = DeviceCostModel::xeon();
+        assert!(t4.step_secs(&s, true) < cpu.step_secs(&s, true));
+        assert!(t4.step_secs(&s, true) > t4.step_secs(&s, false));
+    }
+
+    #[test]
+    fn complex_models_cost_more() {
+        let sage = spec(ModelKind::Sage);
+        let gat = spec(ModelKind::Gat);
+        let rgcn = spec(ModelKind::Rgcn);
+        let (fs, _) = step_cost(&sage);
+        let (fg, _) = step_cost(&gat);
+        let (fr, _) = step_cost(&rgcn);
+        assert!(fg > fs * 0.5, "gat {fg} vs sage {fs}");
+        assert!(fr > fs, "rgcn {fr} vs sage {fs}");
+    }
+
+    #[test]
+    fn gpu_speedup_grows_with_compute_density() {
+        // paper: "the more complex the model, the higher the GPU speedup"
+        let t4 = DeviceCostModel::t4();
+        let cpu = DeviceCostModel::xeon();
+        let sage = spec(ModelKind::Sage);
+        let rgcn = spec(ModelKind::Rgcn);
+        let sp_sage = cpu.step_secs(&sage, true) / t4.step_secs(&sage, true);
+        let sp_rgcn = cpu.step_secs(&rgcn, true) / t4.step_secs(&rgcn, true);
+        assert!(sp_rgcn >= sp_sage * 0.9, "{sp_sage} vs {sp_rgcn}");
+    }
+}

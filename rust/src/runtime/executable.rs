@@ -1,0 +1,437 @@
+//! Compiled model variants: HLO text → PJRT executable → typed step calls.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile`. One [`ModelExecutable`]
+//! holds the train/eval pair for a variant plus the (host-side) parameter
+//! state; `train_step` packs a [`HostBatch`] into literals following the
+//! manifest's input order, executes, and swaps in the updated parameters
+//! returned by the fused-SGD HLO.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::CostModel;
+use crate::sampler::compact::TaskKind;
+
+use super::manifest::{Manifest, VariantSpec};
+
+/// A fully materialized mini-batch on the host, ready for device transfer
+/// (the output of the pipeline's compact stage).
+#[derive(Clone, Debug, Default)]
+pub struct HostBatch {
+    /// Padded input features, `n0 * feat_dim`.
+    pub feats: Vec<f32>,
+    /// Per-layer index arrays (layer 1 first), from `compact::to_block`.
+    pub layers: Vec<crate::sampler::compact::LayerBlock>,
+    /// Node classification: labels + mask, length `nL`.
+    pub labels: Vec<i32>,
+    pub label_mask: Vec<f32>,
+    /// Link prediction: pair mask, length `batch`.
+    pub pair_mask: Vec<f32>,
+    /// Real target globals (for accuracy computation on eval).
+    pub targets: Vec<crate::graph::NodeId>,
+    /// Observability: remote feature rows + dropped neighbors.
+    pub remote_rows: usize,
+    pub dropped_neighbors: usize,
+}
+
+impl HostBatch {
+    /// Host→device payload size (what the GPU prefetcher moves, §5.5.2).
+    pub fn h2d_bytes(&self) -> u64 {
+        let mut b = self.feats.len() * 4
+            + self.labels.len() * 4
+            + self.label_mask.len() * 4
+            + self.pair_mask.len() * 4;
+        for l in &self.layers {
+            b += l.self_idx.len() * 4
+                + l.nbr_idx.len() * 4
+                + l.nbr_mask.len() * 4
+                + l.rel.len() * 4;
+        }
+        b as u64
+    }
+}
+
+/// Shared PJRT client + manifest.
+pub struct RuntimeEnv {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl RuntimeEnv {
+    pub fn new(artifacts: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest })
+    }
+
+    /// Compile a variant's train+eval executables and load initial params.
+    pub fn load(&self, variant: &str) -> Result<ModelExecutable> {
+        let spec = self.manifest.variant(variant)?.clone();
+        let train_exe = self.compile_hlo(&spec.train_hlo)?;
+        let eval_exe = self.compile_hlo(&spec.eval_hlo)?;
+        let params = self.manifest.load_params(&spec)?;
+        Ok(ModelExecutable {
+            spec,
+            train_exe,
+            eval_exe,
+            params,
+            pcie: None,
+            steps: 0,
+        })
+    }
+
+    fn compile_hlo(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.dir.join(file);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
+    }
+}
+
+pub struct ModelExecutable {
+    pub spec: VariantSpec,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    /// Host-side dense parameter state (flat f32 per tensor).
+    pub params: Vec<Vec<f32>>,
+    /// When set, h2d/d2h transfers are metered as PCIe traffic.
+    pub pcie: Option<Arc<CostModel>>,
+    pub steps: u64,
+}
+
+fn f32_literal(data: &[f32], shape: &[usize]) -> xla::Literal {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )
+    .expect("f32 literal")
+}
+
+fn i32_literal(data: &[i32], shape: &[usize]) -> xla::Literal {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )
+    .expect("i32 literal")
+}
+
+impl ModelExecutable {
+    /// Pack the non-param inputs in manifest order.
+    fn pack_inputs(
+        &self,
+        batch: &HostBatch,
+        lr: Option<f32>,
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = &self.spec;
+        let specs = if lr.is_some() {
+            &spec.train_inputs
+        } else {
+            &spec.eval_inputs
+        };
+        let mut out = Vec::with_capacity(specs.len());
+        for ts in specs {
+            let lit = match ts.name.as_str() {
+                "feats" => {
+                    if batch.feats.len() != ts.elements() {
+                        bail!(
+                            "feats len {} != expected {}",
+                            batch.feats.len(),
+                            ts.elements()
+                        );
+                    }
+                    f32_literal(&batch.feats, &ts.shape)
+                }
+                "labels" => i32_literal(&batch.labels, &ts.shape),
+                "label_mask" => f32_literal(&batch.label_mask, &ts.shape),
+                "pair_mask" => f32_literal(&batch.pair_mask, &ts.shape),
+                "lr" => {
+                    xla::Literal::scalar(lr.expect("lr for train input"))
+                }
+                name => {
+                    // per-layer arrays: {self_idx,nbr_idx,nbr_mask,rel}_<l>
+                    let (kind, l) = name
+                        .rsplit_once('_')
+                        .with_context(|| format!("bad input {name}"))?;
+                    let l: usize = l.parse()?;
+                    let lb = batch
+                        .layers
+                        .get(l - 1)
+                        .with_context(|| format!("missing layer {l}"))?;
+                    match kind {
+                        "self_idx" => i32_literal(&lb.self_idx, &ts.shape),
+                        "nbr_idx" => i32_literal(&lb.nbr_idx, &ts.shape),
+                        "nbr_mask" => f32_literal(&lb.nbr_mask, &ts.shape),
+                        "rel" => i32_literal(&lb.rel, &ts.shape),
+                        _ => bail!("unknown input tensor {name}"),
+                    }
+                }
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// One synchronous training step: returns the mini-batch loss. The
+    /// fused-SGD HLO returns updated params, which replace `self.params`.
+    pub fn train_step(&mut self, batch: &HostBatch, lr: f32) -> Result<f32> {
+        let mut params = std::mem::take(&mut self.params);
+        let r = self.train_step_with(&mut params, batch, lr);
+        self.params = params;
+        self.steps += 1;
+        r
+    }
+
+    /// Stateless variant: update caller-owned parameters (used by the
+    /// device executor to serve several trainer replicas with one
+    /// compiled executable).
+    pub fn train_step_with(
+        &self,
+        params: &mut [Vec<f32>],
+        batch: &HostBatch,
+        lr: f32,
+    ) -> Result<f32> {
+        if let Some(c) = &self.pcie {
+            c.on_pcie(batch.h2d_bytes());
+        }
+        let mut args: Vec<xla::Literal> = params
+            .iter()
+            .zip(&self.spec.param_shapes)
+            .map(|(p, s)| f32_literal(p, s))
+            .collect();
+        args.extend(self.pack_inputs(batch, Some(lr))?);
+        let result = self
+            .train_exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("train execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.spec.n_params() + 1 {
+            bail!(
+                "expected {} outputs, got {}",
+                self.spec.n_params() + 1,
+                parts.len()
+            );
+        }
+        let loss_lit = parts.pop().unwrap();
+        let loss = loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss read: {e:?}"))?;
+        for (slot, lit) in params.iter_mut().zip(parts) {
+            lit.copy_raw_to::<f32>(slot)
+                .map_err(|e| anyhow::anyhow!("param readback: {e:?}"))?;
+        }
+        Ok(loss)
+    }
+
+    /// Forward-only pass: returns logits (nc, `nL * classes`) or embeddings
+    /// (lp, `nL * hidden`).
+    pub fn eval_step(&self, batch: &HostBatch) -> Result<Vec<f32>> {
+        self.eval_step_with(&self.params, batch)
+    }
+
+    /// Stateless eval with caller-owned parameters.
+    pub fn eval_step_with(
+        &self,
+        params: &[Vec<f32>],
+        batch: &HostBatch,
+    ) -> Result<Vec<f32>> {
+        if let Some(c) = &self.pcie {
+            c.on_pcie(batch.h2d_bytes());
+        }
+        let mut args: Vec<xla::Literal> = params
+            .iter()
+            .zip(&self.spec.param_shapes)
+            .map(|(p, s)| f32_literal(p, s))
+            .collect();
+        args.extend(self.pack_inputs(batch, None)?);
+        let result = self
+            .eval_exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("eval execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("readback: {e:?}"))?;
+        if let Some(c) = &self.pcie {
+            c.on_pcie(v.len() as u64 * 4);
+        }
+        Ok(v)
+    }
+
+    /// Accuracy over the real target rows of an eval batch (nc task).
+    pub fn accuracy(
+        &self,
+        logits: &[f32],
+        labels: &[i32],
+        n_real: usize,
+    ) -> f64 {
+        assert_eq!(self.spec.task, TaskKind::NodeClassification);
+        let c = self.spec.num_classes;
+        let mut correct = 0usize;
+        for i in 0..n_real {
+            let row = &logits[i * c..(i + 1) * c];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as i32)
+                .unwrap_or(-1);
+            if argmax == labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / n_real.max(1) as f64
+    }
+
+    /// Replace parameter state (e.g. after all-reduce averaging).
+    pub fn set_params(&mut self, params: Vec<Vec<f32>>) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::artifacts_dir;
+    use crate::sampler::compact::LayerBlock;
+    use crate::util::Rng;
+
+    fn make_batch(spec: &VariantSpec, seed: u64) -> HostBatch {
+        let mut rng = Rng::new(seed);
+        let n = &spec.layer_nodes;
+        let mut layers = Vec::new();
+        for l in 1..=spec.fanouts.len() {
+            let k = spec.fanouts[l - 1];
+            let nl = n[l];
+            let nprev = n[l - 1];
+            layers.push(LayerBlock {
+                self_idx: (0..nl)
+                    .map(|_| rng.below(nprev as u64) as i32)
+                    .collect(),
+                nbr_idx: (0..nl * k)
+                    .map(|_| rng.below(nprev as u64) as i32)
+                    .collect(),
+                nbr_mask: (0..nl * k)
+                    .map(|_| if rng.f32() < 0.8 { 1.0 } else { 0.0 })
+                    .collect(),
+                rel: if spec.num_rels > 1 {
+                    (0..nl * k)
+                        .map(|_| rng.below(spec.num_rels as u64) as i32)
+                        .collect()
+                } else {
+                    Vec::new()
+                },
+            });
+        }
+        let nl = *n.last().unwrap();
+        HostBatch {
+            feats: (0..n[0] * spec.feat_dim)
+                .map(|_| rng.normal() as f32)
+                .collect(),
+            layers,
+            labels: (0..nl)
+                .map(|_| rng.below(spec.num_classes.max(1) as u64) as i32)
+                .collect(),
+            label_mask: vec![1.0; nl],
+            pair_mask: vec![1.0; spec.batch],
+            targets: Vec::new(),
+            remote_rows: 0,
+            dropped_neighbors: 0,
+        }
+    }
+
+    fn env() -> Option<RuntimeEnv> {
+        RuntimeEnv::new(&artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn sage_train_step_decreases_loss() {
+        let Some(env) = env() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut exe = env.load("sage_nc_dev").unwrap();
+        let batch = make_batch(&exe.spec, 1);
+        let mut losses = Vec::new();
+        for _ in 0..6 {
+            losses.push(exe.train_step(&batch, 0.5).unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < &losses[0],
+            "loss did not decrease: {losses:?}"
+        );
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn eval_returns_logit_matrix() {
+        let Some(env) = env() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let exe = env.load("sage_nc_dev").unwrap();
+        let batch = make_batch(&exe.spec, 2);
+        let logits = exe.eval_step(&batch).unwrap();
+        assert_eq!(
+            logits.len(),
+            exe.spec.layer_nodes.last().unwrap() * exe.spec.num_classes
+        );
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn train_step_is_deterministic() {
+        let Some(env) = env() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut a = env.load("sage_nc_dev").unwrap();
+        let mut b = env.load("sage_nc_dev").unwrap();
+        let batch = make_batch(&a.spec, 3);
+        let la = a.train_step(&batch, 0.1).unwrap();
+        let lb = b.train_step(&batch, 0.1).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(a.params, b.params);
+    }
+
+    #[test]
+    fn pcie_metering_counts_batch_bytes() {
+        let Some(env) = env() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut exe = env.load("sage_nc_dev").unwrap();
+        let cost = Arc::new(CostModel::default());
+        exe.pcie = Some(cost.clone());
+        let batch = make_batch(&exe.spec, 4);
+        exe.train_step(&batch, 0.1).unwrap();
+        assert_eq!(cost.pcie_bytes_total(), batch.h2d_bytes());
+    }
+}

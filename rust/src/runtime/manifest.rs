@@ -1,0 +1,243 @@
+//! artifacts/manifest.json — the L2↔L3 contract. Produced by
+//! `python/compile/aot.py`; describes every lowered variant: static shapes,
+//! flat input order, parameter layout, and artifact file names.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sampler::compact::{ModelKind, ShapeSpec, TaskKind};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    pub model: ModelKind,
+    pub task: TaskKind,
+    pub batch: usize,
+    pub fanouts: Vec<usize>,
+    pub layer_nodes: Vec<usize>,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub num_heads: usize,
+    pub num_rels: usize,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub train_inputs: Vec<TensorSpec>,
+    pub eval_inputs: Vec<TensorSpec>,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub params_bin: String,
+}
+
+impl VariantSpec {
+    pub fn shape_spec(&self) -> ShapeSpec {
+        ShapeSpec {
+            name: self.name.clone(),
+            model: self.model,
+            task: self.task,
+            batch: self.batch,
+            fanouts: self.fanouts.clone(),
+            layer_nodes: self.layer_nodes.clone(),
+            feat_dim: self.feat_dim,
+            num_classes: self.num_classes,
+            num_rels: self.num_rels,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_shapes.len()
+    }
+
+    pub fn param_elements(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>().max(1))
+            .sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block: usize,
+    pub variants: BTreeMap<String, VariantSpec>,
+}
+
+fn tensor_list(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t.get("shape")?.usize_arr()?,
+                dtype: t.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        let j = Json::parse(&text)?;
+        let block = j.get("block")?.as_usize()?;
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants")?.as_obj()? {
+            let model = match v.get("model")?.as_str()? {
+                "sage" => ModelKind::Sage,
+                "gat" => ModelKind::Gat,
+                "rgcn" => ModelKind::Rgcn,
+                m => bail!("unknown model kind {m:?}"),
+            };
+            let task = match v.get("task")?.as_str()? {
+                "nc" => TaskKind::NodeClassification,
+                "lp" => TaskKind::LinkPrediction,
+                t => bail!("unknown task {t:?}"),
+            };
+            let spec = VariantSpec {
+                name: name.clone(),
+                model,
+                task,
+                batch: v.get("batch")?.as_usize()?,
+                fanouts: v.get("fanouts")?.usize_arr()?,
+                layer_nodes: v.get("layer_nodes")?.usize_arr()?,
+                feat_dim: v.get("feat_dim")?.as_usize()?,
+                num_classes: v.get("num_classes")?.as_usize()?,
+                num_heads: v.get("num_heads")?.as_usize()?,
+                num_rels: v.get("num_rels")?.as_usize()?,
+                param_shapes: v
+                    .get("param_shapes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.usize_arr())
+                    .collect::<Result<_>>()?,
+                train_inputs: tensor_list(v.get("train_inputs")?)?,
+                eval_inputs: tensor_list(v.get("eval_inputs")?)?,
+                train_hlo: v.get("train_hlo")?.as_str()?.to_string(),
+                eval_hlo: v.get("eval_hlo")?.as_str()?.to_string(),
+                params_bin: v.get("params_bin")?.as_str()?.to_string(),
+            };
+            variants.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), block, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "variant {name:?} not in manifest (have: {:?}) — \
+                 run `make artifacts` / `make artifacts-extra`",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Load the initial parameters for a variant (flat little-endian f32).
+    pub fn load_params(&self, spec: &VariantSpec) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&spec.params_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let total: usize = spec
+            .param_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>().max(1))
+            .sum();
+        if floats.len() != total {
+            bail!(
+                "params.bin has {} floats, manifest expects {total}",
+                floats.len()
+            );
+        }
+        let mut out = Vec::with_capacity(spec.param_shapes.len());
+        let mut off = 0usize;
+        for s in &spec.param_shapes {
+            let n: usize = s.iter().product::<usize>().max(1);
+            out.push(floats[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifacts directory: `$DISTDGLV2_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DISTDGLV2_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Manifest> {
+        let dir = artifacts_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = artifacts() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        assert_eq!(m.block, 128);
+        let v = m.variant("sage_nc_dev").unwrap();
+        assert_eq!(v.model, ModelKind::Sage);
+        assert_eq!(v.fanouts, vec![5, 5]);
+        assert_eq!(v.layer_nodes.len(), 3);
+        // input order: feats, (self, nbr, mask) x layers, labels, mask, lr
+        assert_eq!(v.train_inputs[0].name, "feats");
+        assert_eq!(v.train_inputs.last().unwrap().name, "lr");
+        // eval = structural prefix (no labels/label_mask/lr)
+        assert_eq!(v.eval_inputs.len(), v.train_inputs.len() - 3);
+        for (e, t) in v.eval_inputs.iter().zip(&v.train_inputs) {
+            assert_eq!(e.name, t.name);
+        }
+    }
+
+    #[test]
+    fn params_roundtrip_shapes() {
+        let Some(m) = artifacts() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let v = m.variant("sage_nc_dev").unwrap();
+        let params = m.load_params(v).unwrap();
+        assert_eq!(params.len(), v.param_shapes.len());
+        for (p, s) in params.iter().zip(&v.param_shapes) {
+            assert_eq!(p.len(), s.iter().product::<usize>().max(1));
+        }
+    }
+
+    #[test]
+    fn missing_variant_is_helpful_error() {
+        let Some(m) = artifacts() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let err = m.variant("nonexistent").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

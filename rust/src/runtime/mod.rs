@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT'd HLO artifacts (`artifacts/*.hlo.txt`,
+//! lowered once by `python/compile/aot.py`) and execute them from the
+//! training hot path. Python never runs here.
+//!
+//! - [`manifest`] parses `artifacts/manifest.json` (shapes, input order,
+//!   param layout) — the contract between L2 and L3.
+//! - [`executable`] wraps a compiled train/eval pair with typed input
+//!   packing, on-host parameter state, and PCIe byte metering.
+//! - [`cost`] models device time (T4 GPU / Xeon CPU rooflines) so benches
+//!   can report the paper's GPU-vs-CPU comparisons from this CPU testbed.
+
+pub mod cost;
+pub mod executable;
+pub mod manifest;
+
+pub use cost::DeviceCostModel;
+pub use executable::{ModelExecutable, RuntimeEnv};
+pub use manifest::{Manifest, TensorSpec, VariantSpec};

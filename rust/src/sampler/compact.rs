@@ -1,0 +1,354 @@
+//! Subgraph compaction (`to_block`, §5.5.1): re-map a sampled multi-layer
+//! subgraph from global IDs to the dense, padded block layout the AOT'd
+//! HLO expects (DESIGN.md §5). The paper moves this step to the GPU in the
+//! training thread; here it runs in the pipeline's compact stage and is a
+//! profiled hot path (§Perf).
+
+use rustc_hash::FxHashMap;
+
+use crate::graph::NodeId;
+
+use super::service::SampledNbrs;
+
+/// Model family of a shape spec (mirrors python ShapeConfig).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Sage,
+    Gat,
+    Rgcn,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    NodeClassification,
+    LinkPrediction,
+}
+
+/// Static shapes of one AOT variant (parsed from artifacts/manifest.json).
+#[derive(Clone, Debug)]
+pub struct ShapeSpec {
+    pub name: String,
+    pub model: ModelKind,
+    pub task: TaskKind,
+    pub batch: usize,
+    /// K per layer, input side first (fanouts[l-1] = layer l's K).
+    pub fanouts: Vec<usize>,
+    /// Padded node-array length per layer, `[n0, ..., nL]`.
+    pub layer_nodes: Vec<usize>,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub num_rels: usize,
+}
+
+impl ShapeSpec {
+    pub fn num_layers(&self) -> usize {
+        self.fanouts.len()
+    }
+}
+
+/// One layer's padded index arrays (layer l: dst array length `n_l`).
+#[derive(Clone, Debug)]
+pub struct LayerBlock {
+    /// `i32[n_l]` — position of dst node i in the layer-(l-1) node array.
+    pub self_idx: Vec<i32>,
+    /// `i32[n_l * K]` — neighbor positions, row-major.
+    pub nbr_idx: Vec<i32>,
+    /// `f32[n_l * K]` — 1.0 real neighbor / 0.0 padding.
+    pub nbr_mask: Vec<f32>,
+    /// `i32[n_l * K]` — relation ids (RGCN only, else empty).
+    pub rel: Vec<i32>,
+}
+
+/// A compacted mini-batch structure: everything the HLO needs except the
+/// feature rows (filled by the prefetch stages) and labels.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Real (un-padded) input node globals, in layer-0 slot order.
+    pub input_nodes: Vec<NodeId>,
+    /// Real target node globals (layer-L slots `0..targets.len()`).
+    pub targets: Vec<NodeId>,
+    /// Per-layer index arrays, layer 1 (input side) first.
+    pub layers: Vec<LayerBlock>,
+    /// Neighbors that had to be dropped because a layer's node budget
+    /// (`layer_nodes[l]`) was exhausted — observability for cap tuning.
+    pub dropped_neighbors: usize,
+}
+
+/// Build the padded block from multi-layer samples.
+///
+/// `samples[j]` is (seeds, per-seed neighbors) for layer `L-j` (outermost
+/// first), exactly as produced by `DistNeighborSampler::sample_blocks`.
+pub fn to_block(
+    spec: &ShapeSpec,
+    samples: &[(Vec<NodeId>, Vec<SampledNbrs>)],
+) -> Block {
+    let l_total = spec.num_layers();
+    assert_eq!(samples.len(), l_total);
+    let targets = samples[0].0.clone();
+    assert!(
+        targets.len() <= spec.layer_nodes[l_total],
+        "targets {} exceed layer cap {}",
+        targets.len(),
+        spec.layer_nodes[l_total]
+    );
+
+    let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(l_total);
+    let mut dropped = 0usize;
+
+    // node array of the current dst layer (real entries only) + its index
+    let mut dst_nodes: Vec<NodeId> = targets.clone();
+    for (j, (seeds, nbrs)) in samples.iter().enumerate() {
+        let l = l_total - j; // layer number
+        let k = spec.fanouts[l - 1];
+        let n_l = spec.layer_nodes[l];
+        let n_prev_cap = spec.layer_nodes[l - 1];
+        assert_eq!(seeds, &dst_nodes, "layer {l} seed mismatch");
+
+        // build the src node array: dst nodes first (self slots), then new
+        // unique neighbors up to the cap
+        let mut src_nodes: Vec<NodeId> = dst_nodes.clone();
+        let mut index: FxHashMap<NodeId, i32> = FxHashMap::default();
+        index.reserve(src_nodes.len() * 2);
+        for (i, &n) in src_nodes.iter().enumerate() {
+            index.insert(n, i as i32);
+        }
+        let mut self_idx = vec![0i32; n_l];
+        let mut nbr_idx = vec![0i32; n_l * k];
+        let mut nbr_mask = vec![0f32; n_l * k];
+        let mut rel = if spec.model == ModelKind::Rgcn {
+            vec![0i32; n_l * k]
+        } else {
+            Vec::new()
+        };
+
+        for (i, s) in nbrs.iter().enumerate() {
+            self_idx[i] = index[&dst_nodes[i]];
+            for (kk, &n) in s.nbrs.iter().enumerate().take(k) {
+                let pos = match index.get(&n) {
+                    Some(&p) => p,
+                    Option::None => {
+                        if src_nodes.len() < n_prev_cap {
+                            let p = src_nodes.len() as i32;
+                            src_nodes.push(n);
+                            index.insert(n, p);
+                            p
+                        } else {
+                            dropped += 1;
+                            continue; // budget exhausted: drop neighbor
+                        }
+                    }
+                };
+                nbr_idx[i * k + kk] = pos;
+                nbr_mask[i * k + kk] = 1.0;
+                if !rel.is_empty() {
+                    rel[i * k + kk] =
+                        s.rels.get(kk).copied().unwrap_or(0) as i32;
+                }
+            }
+        }
+
+        layers_rev.push(LayerBlock { self_idx, nbr_idx, nbr_mask, rel });
+        dst_nodes = src_nodes;
+    }
+
+    layers_rev.reverse(); // layer 1 first
+    Block {
+        input_nodes: dst_nodes,
+        targets,
+        layers: layers_rev,
+        dropped_neighbors: dropped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(batch: usize, fanouts: Vec<usize>, caps: Vec<usize>) -> ShapeSpec {
+        ShapeSpec {
+            name: "t".into(),
+            model: ModelKind::Sage,
+            task: TaskKind::NodeClassification,
+            batch,
+            fanouts,
+            layer_nodes: caps,
+            feat_dim: 4,
+            num_classes: 3,
+            num_rels: 1,
+        }
+    }
+
+    /// Hand-built 2-layer sample: targets [10, 20]; layer-2 neighbors
+    /// 10→{20,30}, 20→{40}; layer-1 seeds then [10,20,30,40] with
+    /// neighbors 10→{30}, 20→{}, 30→{50}, 40→{10}.
+    fn hand_samples() -> Vec<(Vec<NodeId>, Vec<SampledNbrs>)> {
+        vec![
+            (
+                vec![10, 20],
+                vec![
+                    SampledNbrs { nbrs: vec![20, 30], rels: vec![] },
+                    SampledNbrs { nbrs: vec![40], rels: vec![] },
+                ],
+            ),
+            (
+                vec![10, 20, 30, 40],
+                vec![
+                    SampledNbrs { nbrs: vec![30], rels: vec![] },
+                    SampledNbrs { nbrs: vec![], rels: vec![] },
+                    SampledNbrs { nbrs: vec![50], rels: vec![] },
+                    SampledNbrs { nbrs: vec![10], rels: vec![] },
+                ],
+            ),
+        ]
+    }
+
+    #[test]
+    fn block_structure_matches_hand_computation() {
+        let sp = spec(2, vec![2, 2], vec![8, 8, 4]);
+        // samples outermost-first: layer 2 then layer 1
+        let b = to_block(&sp, &hand_samples());
+        assert_eq!(b.targets, vec![10, 20]);
+        // layer 2 (index 1): src array was [10,20] then +30, +40
+        let l2 = &b.layers[1];
+        assert_eq!(&l2.self_idx[..2], &[0, 1]);
+        assert_eq!(&l2.nbr_idx[..2], &[1, 2]); // 10 -> [20(1), 30(2)]
+        assert_eq!(&l2.nbr_mask[..2], &[1.0, 1.0]);
+        assert_eq!(l2.nbr_idx[2], 3); // 20 -> [40(3)]
+        assert_eq!(l2.nbr_mask[3], 0.0); // padding
+        // layer 1: seeds [10,20,30,40], new node 50 → input_nodes
+        assert_eq!(b.input_nodes, vec![10, 20, 30, 40, 50]);
+        let l1 = &b.layers[0];
+        assert_eq!(&l1.self_idx[..4], &[0, 1, 2, 3]);
+        assert_eq!(l1.nbr_idx[0], 2); // 10 -> 30
+        assert_eq!(l1.nbr_idx[2 * 2], 4); // 30 -> 50 (new slot 4)
+        assert_eq!(l1.nbr_idx[3 * 2], 0); // 40 -> 10 (slot 0)
+        assert_eq!(b.dropped_neighbors, 0);
+    }
+
+    #[test]
+    fn cap_exhaustion_drops_and_masks() {
+        let sp = spec(2, vec![2, 2], vec![4, 8, 4]); // n0 cap = 4 (tight)
+        let b = to_block(&sp, &hand_samples());
+        // layer-1 src array would need 5 nodes; node 50 must be dropped
+        assert_eq!(b.input_nodes.len(), 4);
+        assert_eq!(b.dropped_neighbors, 1);
+        let l1 = &b.layers[0];
+        assert_eq!(l1.nbr_mask[2 * 2], 0.0); // 30 -> 50 masked out
+    }
+
+    #[test]
+    fn padded_rows_have_zero_mask() {
+        let sp = spec(2, vec![2, 2], vec![16, 8, 4]);
+        let b = to_block(&sp, &hand_samples());
+        let l2 = &b.layers[1];
+        // rows 2..4 of layer 2 are padding
+        for i in 2..4 {
+            assert_eq!(l2.self_idx[i], 0);
+            for kk in 0..2 {
+                assert_eq!(l2.nbr_mask[i * 2 + kk], 0.0);
+            }
+        }
+    }
+
+    /// Property: every (i, k) with mask 1 maps through nbr_idx to exactly
+    /// the sampled neighbor, and self_idx maps to the node itself.
+    #[test]
+    fn prop_compaction_preserves_adjacency() {
+        use crate::graph::DatasetSpec;
+        use crate::partition::{
+            build_partitions, metis_partition, relabel, PartitionConfig,
+            VertexWeights,
+        };
+        use crate::sampler::{DistNeighborSampler, SamplerServer};
+        use std::sync::Arc;
+
+        let spec_d = DatasetSpec::new("cp", 600, 2400);
+        let d = spec_d.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(2));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let parts = build_partitions(&g, &r.node_map);
+        let servers: Vec<Arc<SamplerServer>> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(m, pp)| {
+                Arc::new(SamplerServer::new(m as u32, Arc::new(pp)))
+            })
+            .collect();
+        let cost = Arc::new(crate::net::CostModel::default());
+        let sampler = DistNeighborSampler::new(
+            0,
+            servers,
+            Arc::new(r.node_map),
+            cost,
+        );
+
+        crate::util::proptest::forall(
+            41,
+            10,
+            |rng| {
+                let t: Vec<NodeId> = (0..8)
+                    .map(|_| rng.below(600) as NodeId)
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .into_iter()
+                    .collect();
+                (t, rng.next_u64())
+            },
+            |(targets, seed)| {
+                let sp = ShapeSpec {
+                    name: "p".into(),
+                    model: ModelKind::Sage,
+                    task: TaskKind::NodeClassification,
+                    batch: targets.len(),
+                    fanouts: vec![3, 3],
+                    layer_nodes: vec![256, 64, 16],
+                    feat_dim: 4,
+                    num_classes: 2,
+                    num_rels: 1,
+                };
+                let mut rng = crate::util::Rng::new(*seed);
+                let samples = sampler.sample_blocks(
+                    targets,
+                    &sp.fanouts,
+                    &sp.layer_nodes,
+                    &mut rng,
+                );
+                let b = to_block(&sp, &samples);
+                // check layer L (last LayerBlock) against samples[0]
+                let l_total = sp.num_layers();
+                for (j, (seeds, nbrs)) in samples.iter().enumerate() {
+                    let l = l_total - j;
+                    let lb = &b.layers[l - 1];
+                    let k = sp.fanouts[l - 1];
+                    // node array of layer l-1:
+                    let prev: &[NodeId] = if l == 1 {
+                        &b.input_nodes
+                    } else {
+                        &samples[j + 1].0
+                    };
+                    for (i, s) in nbrs.iter().enumerate() {
+                        if prev[lb.self_idx[i] as usize] != seeds[i] {
+                            return Err(format!(
+                                "self_idx broken at layer {l} row {i}"
+                            ));
+                        }
+                        for kk in 0..k {
+                            if lb.nbr_mask[i * k + kk] > 0.0 {
+                                let mapped =
+                                    prev[lb.nbr_idx[i * k + kk] as usize];
+                                if !s.nbrs.contains(&mapped) {
+                                    return Err(format!(
+                                        "nbr_idx maps to non-sampled node \
+                                         at layer {l} row {i}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,238 @@
+//! Trainer-side distributed neighbor sampling: dispatch each layer's seed
+//! set to owning machines, stitch the per-seed results back in order
+//! (§5.5.1). Local seeds hit the local server through shared memory; remote
+//! requests are batched per machine and metered.
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
+
+use crate::graph::NodeId;
+use crate::net::CostModel;
+use crate::partition::NodeMap;
+use crate::util::Rng;
+
+use super::service::{SampledNbrs, SamplerServer};
+
+pub struct DistNeighborSampler {
+    pub machine: u32,
+    servers: Vec<Arc<SamplerServer>>,
+    node_map: Arc<NodeMap>,
+    cost: Arc<CostModel>,
+    pub emulate_network_time: bool,
+}
+
+impl DistNeighborSampler {
+    pub fn new(
+        machine: u32,
+        servers: Vec<Arc<SamplerServer>>,
+        node_map: Arc<NodeMap>,
+        cost: Arc<CostModel>,
+    ) -> Self {
+        Self {
+            machine,
+            servers,
+            node_map,
+            cost,
+            emulate_network_time: false,
+        }
+    }
+
+    /// Sample one layer for `seeds`; result[i] belongs to seeds[i].
+    pub fn sample_layer(
+        &self,
+        seeds: &[NodeId],
+        fanout: usize,
+        rng: &mut Rng,
+    ) -> Vec<SampledNbrs> {
+        let nparts = self.servers.len();
+        if nparts == 1 {
+            return self.servers[0].sample_neighbors(seeds, fanout, rng);
+        }
+        // §Perf fast path: locality-aware splits make all-local seed sets
+        // the common case — skip the grouping pass and its allocations.
+        // (RNG stream matches the general path's owner-split derivation.)
+        if seeds
+            .iter()
+            .all(|&s| self.node_map.owner(s) == self.machine)
+        {
+            let mut sub = rng.split(self.machine as u64);
+            return self.servers[self.machine as usize]
+                .sample_neighbors(seeds, fanout, &mut sub);
+        }
+        // group seeds by owner, remembering original slots
+        let mut groups: Vec<(Vec<NodeId>, Vec<usize>)> =
+            vec![(Vec::new(), Vec::new()); nparts];
+        for (slot, &s) in seeds.iter().enumerate() {
+            let owner = self.node_map.owner(s) as usize;
+            groups[owner].0.push(s);
+            groups[owner].1.push(slot);
+        }
+        let mut out: Vec<SampledNbrs> = vec![SampledNbrs::default(); seeds.len()];
+        for (owner, (group, slots)) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            // each owner machine uses an independent derived RNG stream so
+            // results don't depend on dispatch order
+            let mut sub = rng.split(owner as u64);
+            let res =
+                self.servers[owner].sample_neighbors(group, fanout, &mut sub);
+            if owner as u32 != self.machine {
+                let edges: usize = res.iter().map(|r| r.nbrs.len()).sum();
+                let (req, resp) = SamplerServer::wire_cost(group.len(), edges);
+                self.cost.on_network(self.machine, owner as u32, req);
+                self.cost.on_network(owner as u32, self.machine, resp);
+                if self.emulate_network_time {
+                    let secs = (req + resp) as f64
+                        / self.cost.net_bytes_per_sec
+                        + 2.0 * self.cost.net_latency_s;
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        secs,
+                    ));
+                }
+            }
+            for (r, &slot) in res.into_iter().zip(slots) {
+                out[slot] = r;
+            }
+        }
+        out
+    }
+
+    /// Multi-layer expansion: returns per-layer (seeds, per-seed samples),
+    /// outermost (targets, layer L) first. Each layer's frontier is the
+    /// seed set ∪ newly-sampled neighbors, deduped in seed-first order and
+    /// **capped** at `layer_caps[l-1]` (= the block's padded node budget)
+    /// using exactly the drop order `compact::to_block` applies, so the
+    /// two stay in lock-step when a budget fills up.
+    pub fn sample_blocks(
+        &self,
+        targets: &[NodeId],
+        fanouts: &[usize],    // fanouts[l-1] = K of layer l; iterate L..1
+        layer_caps: &[usize], // layer_nodes [n0, ..., nL]
+        rng: &mut Rng,
+    ) -> Vec<(Vec<NodeId>, Vec<SampledNbrs>)> {
+        let l_total = fanouts.len();
+        assert_eq!(layer_caps.len(), l_total + 1);
+        let mut layers = Vec::with_capacity(l_total);
+        let mut seeds: Vec<NodeId> = targets.to_vec();
+        for (j, &fanout) in fanouts.iter().rev().enumerate() {
+            let cap = layer_caps[l_total - 1 - j];
+            let samples = self.sample_layer(&seeds, fanout, rng);
+            let mut next = seeds.clone();
+            let mut seen: FxHashMap<NodeId, ()> =
+                seeds.iter().map(|&s| (s, ())).collect();
+            for s in &samples {
+                for &n in &s.nbrs {
+                    if seen.contains_key(&n) {
+                        continue;
+                    }
+                    if next.len() >= cap {
+                        continue; // budget exhausted: to_block masks it out
+                    }
+                    seen.insert(n, ());
+                    next.push(n);
+                }
+            }
+            layers.push((seeds, samples));
+            seeds = next;
+        }
+        layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::partition::{
+        build_partitions, metis_partition, relabel, PartitionConfig,
+        VertexWeights,
+    };
+
+    fn setup(
+        nparts: usize,
+    ) -> (crate::graph::Graph, Arc<NodeMap>, Vec<Arc<SamplerServer>>, Arc<CostModel>)
+    {
+        let spec = DatasetSpec::new("ds", 1000, 4000);
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p =
+            metis_partition(&d.graph, &vw, &PartitionConfig::new(nparts));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let parts = build_partitions(&g, &r.node_map);
+        let servers: Vec<Arc<SamplerServer>> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(m, p)| Arc::new(SamplerServer::new(m as u32, Arc::new(p))))
+            .collect();
+        let cost = Arc::new(CostModel::default());
+        (g, Arc::new(r.node_map), servers, cost)
+    }
+
+    #[test]
+    fn stitched_results_align_with_seeds() {
+        let (g, nm, servers, cost) = setup(3);
+        let s = DistNeighborSampler::new(0, servers, nm, cost);
+        let seeds: Vec<NodeId> = vec![5, 500, 900, 17, 333];
+        let res = s.sample_layer(&seeds, 4, &mut Rng::new(9));
+        assert_eq!(res.len(), seeds.len());
+        for (seed, r) in seeds.iter().zip(&res) {
+            for &n in &r.nbrs {
+                assert!(g.neighbors(*seed).contains(&n));
+            }
+        }
+    }
+
+    #[test]
+    fn remote_requests_metered_local_not() {
+        let (_, nm, servers, cost) = setup(2);
+        let s = DistNeighborSampler::new(0, servers, nm.clone(), cost.clone());
+        // all-local seeds
+        let local: Vec<NodeId> =
+            (0..10).map(|l| nm.global_of(0, l)).collect();
+        s.sample_layer(&local, 3, &mut Rng::new(1));
+        assert_eq!(cost.network_bytes(), 0);
+        // all-remote seeds
+        let remote: Vec<NodeId> =
+            (0..10).map(|l| nm.global_of(1, l)).collect();
+        s.sample_layer(&remote, 3, &mut Rng::new(1));
+        assert!(cost.network_bytes() > 0);
+    }
+
+    #[test]
+    fn multilayer_frontier_includes_seeds() {
+        let (_, nm, servers, cost) = setup(2);
+        let s = DistNeighborSampler::new(0, servers, nm, cost);
+        let targets: Vec<NodeId> = vec![1, 2, 3, 4];
+        let layers =
+            s.sample_blocks(&targets, &[5, 5], &[4096, 512, 64], &mut Rng::new(2));
+        assert_eq!(layers.len(), 2);
+        // layer 0 (outermost) seeds are the targets
+        assert_eq!(layers[0].0, targets);
+        // the next layer's seeds start with the previous seeds
+        assert_eq!(&layers[1].0[..targets.len()], &targets[..]);
+        // every sampled neighbor of layer 0 appears in layer 1's seeds
+        for s0 in &layers[0].1 {
+            for n in &s0.nbrs {
+                assert!(layers[1].0.contains(n));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let (_, nm, servers, cost) = setup(2);
+        let s = DistNeighborSampler::new(0, servers, nm, cost);
+        let targets: Vec<NodeId> = vec![10, 20, 30];
+        let a = s.sample_blocks(&targets, &[4, 4], &[1024, 128, 16], &mut Rng::new(7));
+        let b = s.sample_blocks(&targets, &[4, 4], &[1024, 128, 16], &mut Rng::new(7));
+        for (la, lb) in a.iter().zip(&b) {
+            assert_eq!(la.0, lb.0);
+            for (x, y) in la.1.iter().zip(&lb.1) {
+                assert_eq!(x.nbrs, y.nbrs);
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Distributed mini-batch sampling (§5.5.1).
+//!
+//! Vertex-wise neighbor sampling (the GraphSAGE algorithm the paper
+//! optimizes): each seed samples ≤ K neighbors independently, recursively
+//! per layer. The trainer-side [`DistNeighborSampler`] dispatches seed
+//! batches to owning machines ([`SamplerServer`]s answer from their
+//! physical partition via the halo closure — no server-to-server traffic),
+//! stitches frontiers, and [`compact`] re-maps the sampled subgraph into
+//! the dense padded block layout the AOT'd HLO expects (`to_block`).
+
+pub mod compact;
+pub mod distributed;
+pub mod neighbor;
+pub mod schedule;
+pub mod service;
+
+pub use compact::{Block, LayerBlock};
+pub use distributed::DistNeighborSampler;
+pub use schedule::{BatchScheduler, Target};
+pub use service::SamplerServer;

@@ -1,0 +1,197 @@
+//! Mini-batch scheduling (pipeline stage 1, §5.5): per-epoch shuffling of
+//! the trainer's assigned training items and target construction for both
+//! tasks — node classification (seed nodes) and link prediction (positive
+//! edges + uniform negative tails, rows laid out [heads | tails | negs]).
+
+use crate::graph::NodeId;
+use crate::util::Rng;
+
+/// Targets of one mini-batch, ready for multi-layer sampling.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// Node classification: seed vertices.
+    Nodes(Vec<NodeId>),
+    /// Link prediction: (heads, tails, negative tails), equal lengths.
+    Edges {
+        heads: Vec<NodeId>,
+        tails: Vec<NodeId>,
+        negs: Vec<NodeId>,
+    },
+}
+
+impl Target {
+    /// Flat node list in the layer-L slot order the block contract expects.
+    pub fn flat_nodes(&self) -> Vec<NodeId> {
+        match self {
+            Target::Nodes(v) => v.clone(),
+            Target::Edges { heads, tails, negs } => {
+                let mut v =
+                    Vec::with_capacity(heads.len() + tails.len() + negs.len());
+                v.extend_from_slice(heads);
+                v.extend_from_slice(tails);
+                v.extend_from_slice(negs);
+                v
+            }
+        }
+    }
+
+    pub fn n_items(&self) -> usize {
+        match self {
+            Target::Nodes(v) => v.len(),
+            Target::Edges { heads, .. } => heads.len(),
+        }
+    }
+}
+
+/// Per-trainer epoch scheduler over its assigned training items.
+pub struct BatchScheduler {
+    /// Node-classification: assigned train vertices. Link-prediction:
+    /// assigned (head, tail) edges.
+    items_nodes: Vec<NodeId>,
+    items_edges: Vec<(NodeId, NodeId)>,
+    pub batch_size: usize,
+    /// Negative-sampling id range (all graph vertices).
+    pub n_nodes_total: u64,
+    rng: Rng,
+    cursor: usize,
+    order: Vec<u32>,
+}
+
+impl BatchScheduler {
+    pub fn for_nodes(items: Vec<NodeId>, batch_size: usize, seed: u64) -> Self {
+        let n = items.len();
+        let mut s = Self {
+            items_nodes: items,
+            items_edges: Vec::new(),
+            batch_size,
+            n_nodes_total: 0,
+            rng: Rng::new(seed),
+            cursor: 0,
+            order: (0..n as u32).collect(),
+        };
+        s.reshuffle();
+        s
+    }
+
+    pub fn for_edges(
+        items: Vec<(NodeId, NodeId)>,
+        batch_size: usize,
+        n_nodes_total: u64,
+        seed: u64,
+    ) -> Self {
+        let n = items.len();
+        let mut s = Self {
+            items_nodes: Vec::new(),
+            items_edges: items,
+            batch_size,
+            n_nodes_total,
+            rng: Rng::new(seed),
+            cursor: 0,
+            order: (0..n as u32).collect(),
+        };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Batches per epoch (last short batch included).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n_items().div_ceil(self.batch_size)
+    }
+
+    /// Next mini-batch; wraps to a fresh shuffled epoch at the boundary.
+    /// Returns (epoch_position, Target).
+    pub fn next_batch(&mut self) -> Target {
+        if self.cursor >= self.order.len() {
+            self.reshuffle();
+        }
+        let end = (self.cursor + self.batch_size).min(self.order.len());
+        let idxs = &self.order[self.cursor..end];
+        self.cursor = end;
+        if !self.items_nodes.is_empty() {
+            Target::Nodes(
+                idxs.iter()
+                    .map(|&i| self.items_nodes[i as usize])
+                    .collect(),
+            )
+        } else {
+            let mut heads = Vec::with_capacity(idxs.len());
+            let mut tails = Vec::with_capacity(idxs.len());
+            let mut negs = Vec::with_capacity(idxs.len());
+            for &i in idxs {
+                let (h, t) = self.items_edges[i as usize];
+                heads.push(h);
+                tails.push(t);
+                negs.push(self.rng.below(self.n_nodes_total) as NodeId);
+            }
+            Target::Edges { heads, tails, negs }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_items_once_per_epoch() {
+        let items: Vec<NodeId> = (0..100).collect();
+        let mut s = BatchScheduler::for_nodes(items, 32, 1);
+        let mut seen = Vec::new();
+        for _ in 0..s.batches_per_epoch() {
+            if let Target::Nodes(v) = s.next_batch() {
+                seen.extend(v);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let items: Vec<NodeId> = (0..64).collect();
+        let mut s = BatchScheduler::for_nodes(items, 64, 2);
+        let Target::Nodes(a) = s.next_batch() else { panic!() };
+        let Target::Nodes(b) = s.next_batch() else { panic!() };
+        assert_ne!(a, b, "two epochs produced identical order");
+        let mut bs = b.clone();
+        bs.sort_unstable();
+        assert_eq!(bs, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn edge_batches_have_aligned_triples() {
+        let edges: Vec<(NodeId, NodeId)> =
+            (0..50).map(|i| (i, i + 100)).collect();
+        let mut s = BatchScheduler::for_edges(edges, 16, 1000, 3);
+        let Target::Edges { heads, tails, negs } = s.next_batch() else {
+            panic!()
+        };
+        assert_eq!(heads.len(), 16);
+        assert_eq!(tails.len(), 16);
+        assert_eq!(negs.len(), 16);
+        for (h, t) in heads.iter().zip(&tails) {
+            assert_eq!(*t, *h + 100);
+        }
+        assert!(negs.iter().all(|&n| (n as u64) < 1000));
+    }
+
+    #[test]
+    fn flat_nodes_layout_for_lp() {
+        let t = Target::Edges {
+            heads: vec![1, 2],
+            tails: vec![3, 4],
+            negs: vec![5, 6],
+        };
+        assert_eq!(t.flat_nodes(), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.n_items(), 2);
+    }
+}

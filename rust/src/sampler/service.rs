@@ -1,0 +1,152 @@
+//! Per-machine sampler server: answers "sample ≤K neighbors of these seed
+//! vertices" against the machine's physical partition. Thanks to the halo
+//! closure (§5.3, Figure 6) every core vertex's full adjacency is local,
+//! so servers never talk to each other — only trainers issue requests.
+
+use std::sync::Arc;
+
+use crate::graph::NodeId;
+use crate::partition::PhysPartition;
+use crate::util::Rng;
+
+use super::neighbor::sample_k;
+
+/// One sampled edge set for a seed: neighbor globals + relation types.
+#[derive(Clone, Debug, Default)]
+pub struct SampledNbrs {
+    pub nbrs: Vec<NodeId>,
+    pub rels: Vec<u8>,
+}
+
+pub struct SamplerServer {
+    pub machine: u32,
+    part: Arc<PhysPartition>,
+}
+
+impl SamplerServer {
+    pub fn new(machine: u32, part: Arc<PhysPartition>) -> Self {
+        Self { machine, part }
+    }
+
+    pub fn partition(&self) -> &Arc<PhysPartition> {
+        &self.part
+    }
+
+    /// Sample for a batch of seeds (all must be core vertices here).
+    /// Deterministic in `rng`.
+    pub fn sample_neighbors(
+        &self,
+        seeds: &[NodeId],
+        fanout: usize,
+        rng: &mut Rng,
+    ) -> Vec<SampledNbrs> {
+        let mut out = Vec::with_capacity(seeds.len());
+        let mut buf: Vec<NodeId> = Vec::with_capacity(fanout);
+        let mut pos: Vec<u32> = Vec::with_capacity(fanout);
+        let has_rel = !self.part.graph.rel.is_empty();
+        for &seed in seeds {
+            let local = self
+                .part
+                .local_of(seed)
+                .unwrap_or_else(|| panic!("seed {seed} not on machine {}", self.machine));
+            assert!(
+                self.part.is_core_local(local),
+                "seed {seed} is a halo vertex on machine {}",
+                self.machine
+            );
+            let nbrs_local = self.part.graph.neighbors(local);
+            sample_k(nbrs_local, fanout, rng, &mut buf, Some(&mut pos));
+            let nbrs: Vec<NodeId> = buf
+                .iter()
+                .map(|&l| self.part.global_of(l))
+                .collect();
+            let rels: Vec<u8> = if has_rel {
+                let all = self.part.graph.rel_of(local);
+                pos.iter().map(|&p| all[p as usize]).collect()
+            } else {
+                Vec::new()
+            };
+            out.push(SampledNbrs { nbrs, rels });
+        }
+        out
+    }
+
+    /// Estimated request/response wire size for cost metering.
+    pub fn wire_cost(seeds: usize, sampled_edges: usize) -> (u64, u64) {
+        let req = 16 + seeds as u64 * 4;
+        let resp = 16 + sampled_edges as u64 * 5; // 4B nbr + 1B rel
+        (req, resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::partition::{
+        build_partitions, metis_partition, relabel, PartitionConfig,
+        VertexWeights,
+    };
+
+    fn setup() -> (crate::graph::Graph, Vec<Arc<PhysPartition>>) {
+        let spec = DatasetSpec::new("ss", 800, 3200);
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(2));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let parts = build_partitions(&g, &r.node_map)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+        (g, parts)
+    }
+
+    #[test]
+    fn sampled_edges_exist_in_graph() {
+        let (g, parts) = setup();
+        let server = SamplerServer::new(0, parts[0].clone());
+        let seeds: Vec<NodeId> = (0..parts[0].n_core.min(50) as u32)
+            .map(|l| parts[0].global_of(l))
+            .collect();
+        let mut rng = Rng::new(5);
+        let res = server.sample_neighbors(&seeds, 5, &mut rng);
+        assert_eq!(res.len(), seeds.len());
+        for (seed, s) in seeds.iter().zip(&res) {
+            assert!(s.nbrs.len() <= 5);
+            for &n in &s.nbrs {
+                assert!(
+                    g.neighbors(*seed).contains(&n),
+                    "edge ({seed},{n}) not in graph"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_respected_and_degree_capped() {
+        let (g, parts) = setup();
+        let server = SamplerServer::new(0, parts[0].clone());
+        let mut rng = Rng::new(6);
+        for l in 0..parts[0].n_core.min(100) as u32 {
+            let gid = parts[0].global_of(l);
+            let res = server.sample_neighbors(&[gid], 3, &mut rng);
+            let deg = g.degree(gid);
+            assert_eq!(res[0].nbrs.len(), deg.min(3));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not on machine")]
+    fn foreign_seed_panics() {
+        let (_, parts) = setup();
+        let server = SamplerServer::new(0, parts[0].clone());
+        // a core of partition 1 that is not a halo of partition 0
+        let p1 = &parts[1];
+        let foreign = (0..p1.n_core as u32)
+            .map(|l| p1.global_of(l))
+            .find(|&g| parts[0].local_of(g).is_none())
+            .expect("some vertex of p1 not known to p0");
+        server.sample_neighbors(&[foreign], 3, &mut Rng::new(1));
+    }
+}

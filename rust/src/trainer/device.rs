@@ -1,0 +1,287 @@
+//! Device executor: owns the PJRT client + compiled executables for one
+//! machine's accelerator and serializes step requests from that machine's
+//! trainers.
+//!
+//! PJRT handles are not `Send`, so the executor thread constructs the
+//! `RuntimeEnv` itself and trainers talk to it through a channel. On this
+//! one-core testbed all device compute serializes anyway; per-GPU *scaling*
+//! is reported through the device cost model (DESIGN.md §2).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::net::CostModel;
+use crate::runtime::executable::HostBatch;
+use crate::runtime::manifest::VariantSpec;
+
+enum Req {
+    Train {
+        params: Vec<Vec<f32>>,
+        batch: Box<HostBatch>,
+        lr: f32,
+        reply: Sender<Result<(Vec<Vec<f32>>, f32)>>,
+    },
+    Eval {
+        params: Vec<Vec<f32>>,
+        batch: Box<HostBatch>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Spec {
+        reply: Sender<Result<VariantSpec>>,
+    },
+    InitialParams {
+        reply: Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Stop,
+}
+
+/// Owner handle (also usable as a request handle via [`Self::handle`]).
+pub struct DeviceExecutor {
+    tx: Sender<Req>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable request handle for trainer threads.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Sender<Req>,
+}
+
+impl DeviceExecutor {
+    /// Spawn the executor thread; compiles `variant` from `artifacts`.
+    pub fn spawn(
+        artifacts: PathBuf,
+        variant: String,
+        pcie: Option<Arc<CostModel>>,
+    ) -> Result<DeviceExecutor> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name(format!("device-{variant}"))
+            .spawn(move || run_executor(artifacts, variant, pcie, rx, ready_tx))
+            .expect("spawn device executor");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("device executor died during init"))??;
+        Ok(DeviceExecutor { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        DeviceHandle { tx: self.tx.clone() }
+    }
+
+    pub fn spec(&self) -> Result<VariantSpec> {
+        self.handle().spec()
+    }
+
+    pub fn initial_params(&self) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::InitialParams { reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+}
+
+impl Drop for DeviceExecutor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl DeviceHandle {
+    /// Execute one fused train+SGD step; `params` are updated in place.
+    pub fn train(
+        &self,
+        params: &mut Vec<Vec<f32>>,
+        batch: HostBatch,
+        lr: f32,
+    ) -> Result<f32> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Train {
+                params: std::mem::take(params),
+                batch: Box::new(batch),
+                lr,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        let (p, loss) = rx.recv().map_err(|_| anyhow!("executor gone"))??;
+        *params = p;
+        Ok(loss)
+    }
+
+    pub fn eval(
+        &self,
+        params: &[Vec<f32>],
+        batch: HostBatch,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Eval {
+                params: params.to_vec(),
+                batch: Box::new(batch),
+                reply,
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    pub fn spec(&self) -> Result<VariantSpec> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Spec { reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+}
+
+fn run_executor(
+    artifacts: PathBuf,
+    variant: String,
+    pcie: Option<Arc<CostModel>>,
+    rx: Receiver<Req>,
+    ready: Sender<Result<()>>,
+) {
+    // Share one PJRT client per process: creating many TfrtCpuClients is
+    // expensive and they fight over threads.
+    let env = match crate::runtime::RuntimeEnv::new(&artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let exe = match env.load(&variant) {
+        Ok(mut e) => {
+            e.pcie = pcie;
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Train { mut params, batch, lr, reply } => {
+                let r = exe
+                    .train_step_with(&mut params, &batch, lr)
+                    .map(|loss| (params, loss));
+                let _ = reply.send(r);
+            }
+            Req::Eval { params, batch, reply } => {
+                let _ = reply.send(exe.eval_step_with(&params, &batch));
+            }
+            Req::Spec { reply } => {
+                let _ = reply.send(Ok(exe.spec.clone()));
+            }
+            Req::InitialParams { reply } => {
+                let _ = reply.send(env.manifest.load_params(&exe.spec));
+            }
+            Req::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::artifacts_dir;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn executor_serves_multiple_threads() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let ex = DeviceExecutor::spawn(
+            artifacts_dir(),
+            "sage_nc_dev".into(),
+            None,
+        )
+        .unwrap();
+        let spec = ex.spec().unwrap();
+        let init = ex.initial_params().unwrap();
+        let mut handles = Vec::new();
+        for t in 0..3u64 {
+            let h = ex.handle();
+            let spec = spec.clone();
+            let mut params = init.clone();
+            handles.push(std::thread::spawn(move || {
+                let batch = crate::trainer::device::tests::rand_batch(
+                    &spec, t,
+                );
+                let mut last = f32::INFINITY;
+                for _ in 0..3 {
+                    last = h.train(&mut params, batch.clone(), 0.3).unwrap();
+                }
+                assert!(last.is_finite());
+                last
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    pub(crate) fn rand_batch(
+        spec: &VariantSpec,
+        seed: u64,
+    ) -> HostBatch {
+        use crate::sampler::compact::LayerBlock;
+        use crate::util::Rng;
+        let mut rng = Rng::new(seed);
+        let n = &spec.layer_nodes;
+        let mut layers = Vec::new();
+        for l in 1..=spec.fanouts.len() {
+            let k = spec.fanouts[l - 1];
+            let nl = n[l];
+            let nprev = n[l - 1];
+            layers.push(LayerBlock {
+                self_idx: (0..nl)
+                    .map(|_| rng.below(nprev as u64) as i32)
+                    .collect(),
+                nbr_idx: (0..nl * k)
+                    .map(|_| rng.below(nprev as u64) as i32)
+                    .collect(),
+                nbr_mask: (0..nl * k)
+                    .map(|_| if rng.f32() < 0.8 { 1.0 } else { 0.0 })
+                    .collect(),
+                rel: if spec.num_rels > 1 {
+                    (0..nl * k)
+                        .map(|_| rng.below(spec.num_rels as u64) as i32)
+                        .collect()
+                } else {
+                    Vec::new()
+                },
+            });
+        }
+        let nl = *n.last().unwrap();
+        HostBatch {
+            feats: (0..n[0] * spec.feat_dim)
+                .map(|_| rng.normal() as f32)
+                .collect(),
+            layers,
+            labels: (0..nl)
+                .map(|_| rng.below(spec.num_classes.max(1) as u64) as i32)
+                .collect(),
+            label_mask: vec![1.0; nl],
+            pair_mask: vec![1.0; spec.batch],
+            targets: Vec::new(),
+            remote_rows: 0,
+            dropped_neighbors: 0,
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Distributed synchronous-SGD training (§5.6).
+//!
+//! Data parallelism: every trainer holds a full dense-parameter replica,
+//! consumes mini-batches from its own pipeline, executes the fused-SGD
+//! HLO on the device executor, and synchronizes replicas with a ring
+//! all-reduce at every iteration boundary (the paper's PyTorch-DDP role).
+//! Sparse embedding gradients bypass the ring and go to the KVStore
+//! owners (§5.4).
+
+pub mod allreduce;
+pub mod device;
+pub mod split;
+
+pub use allreduce::AllReduceGroup;
+pub use device::{DeviceExecutor, DeviceHandle};
+pub use split::split_training_set;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::Cluster;
+use crate::metrics::Metrics;
+use crate::pipeline::{BatchGen, Pipeline, PipelineConfig};
+use crate::util::Rng;
+
+/// Training hyper-parameters for one run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub variant: String,
+    pub lr: f32,
+    pub epochs: usize,
+    /// Cap on total steps (0 = epochs * batches_per_epoch).
+    pub max_steps: usize,
+    pub pipeline: PipelineConfig,
+    pub seed: u64,
+    /// Evaluate on the validation set after each epoch.
+    pub eval_each_epoch: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            variant: "sage_nc_dev".into(),
+            lr: 0.3,
+            epochs: 2,
+            max_steps: 0,
+            pipeline: PipelineConfig::default(),
+            seed: 7,
+            eval_each_epoch: false,
+        }
+    }
+}
+
+/// Per-epoch record in the final report.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub secs: f64,
+    pub val_acc: Option<f64>,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub epochs: Vec<EpochStats>,
+    pub total_secs: f64,
+    pub steps: usize,
+    /// Loss per global step (mean across trainers).
+    pub loss_curve: Vec<f32>,
+    pub net_bytes: u64,
+    pub pcie_bytes: u64,
+    pub remote_feature_rows: u64,
+    pub final_val_acc: Option<f64>,
+    /// Aggregate stage times across all trainers (for the pipeline model
+    /// used by the benches — DESIGN.md §2).
+    pub sample_secs: f64,
+    /// Batches actually produced by the sampling threads (non-stop mode
+    /// overproduces; unit-cost calibration must divide by this).
+    pub batches_produced: u64,
+    pub device_secs: f64,
+    pub allreduce_secs: f64,
+    pub wait_secs: f64,
+    /// Final synchronized parameters.
+    pub final_params: Vec<Vec<f32>>,
+}
+
+impl TrainReport {
+    /// Per-(global)step mean of a stage time across trainers.
+    pub fn per_step(&self, total: f64, n_trainers: usize) -> f64 {
+        total / (self.steps.max(1) * n_trainers.max(1)) as f64
+    }
+}
+
+/// Run synchronous data-parallel training on a deployed cluster.
+///
+/// Spawns one trainer thread per (machine, trainer-slot); each consumes
+/// its own pipeline and participates in the ring all-reduce; a device
+/// executor per machine serializes device compute (this testbed has one
+/// physical core — device *scaling* is reported via the cost model).
+pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport> {
+    let n_trainers = cluster.n_trainers();
+    let metrics = Arc::new(Metrics::new());
+
+    // Device executors (one per machine), compile once.
+    let mut devices = Vec::with_capacity(cluster.spec.n_machines);
+    for _ in 0..cluster.spec.n_machines {
+        devices.push(DeviceExecutor::spawn(
+            cluster.artifacts.clone(),
+            cfg.variant.clone(),
+            Some(cluster.cost.clone()),
+        )?);
+    }
+    let init_params = devices[0].initial_params()?;
+    let spec = devices[0].spec()?;
+
+    // All-reduce plane: one endpoint per trainer.
+    let machine_of: Vec<u32> = (0..n_trainers)
+        .map(|t| (t / cluster.spec.trainers_per_machine) as u32)
+        .collect();
+    let ar = AllReduceGroup::new(machine_of.clone(), cluster.cost.clone());
+
+    let steps_per_epoch = cluster.batches_per_epoch(spec.batch, cfg.seed);
+    let total_steps = if cfg.max_steps > 0 {
+        cfg.max_steps
+    } else {
+        cfg.epochs * steps_per_epoch
+    };
+
+    let cost0 = cluster.cost.snapshot();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..n_trainers {
+        let machine = machine_of[t];
+        let gen: BatchGen = cluster.batch_gen(
+            t,
+            &spec,
+            &cfg.variant,
+            cfg.seed ^ (t as u64) << 17,
+        );
+        let mut pipeline =
+            Pipeline::start(gen, &cfg.pipeline, metrics.clone());
+        let device = devices[machine as usize].handle();
+        let ep = ar.endpoint(t);
+        let mut params = init_params.clone();
+        let lr = cfg.lr;
+        let metrics = metrics.clone();
+        handles.push(std::thread::spawn(
+            move || -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
+                let mut losses = Vec::with_capacity(total_steps);
+                for _step in 0..total_steps {
+                    let batch = metrics
+                        .time("trainer.wait_batch", || pipeline.next());
+                    metrics
+                        .inc("trainer.remote_rows", batch.remote_rows as u64);
+                    metrics.inc(
+                        "trainer.dropped_nbrs",
+                        batch.dropped_neighbors as u64,
+                    );
+                    let loss = metrics.time("trainer.device", || {
+                        device.train(&mut params, batch, lr)
+                    })?;
+                    losses.push(loss);
+                    // synchronous SGD barrier: average replicas
+                    metrics.time("trainer.allreduce", || {
+                        ep.allreduce_params(&mut params)
+                    });
+                }
+                Ok((losses, params))
+            },
+        ));
+    }
+
+    let mut curves: Vec<Vec<f32>> = Vec::new();
+    let mut final_params: Vec<Vec<f32>> = init_params.clone();
+    for h in handles {
+        let (losses, params) = h.join().expect("trainer thread panicked")?;
+        curves.push(losses);
+        final_params = params;
+    }
+    let total_secs = t0.elapsed().as_secs_f64();
+    let cost1 = cluster.cost.snapshot();
+    let delta = cost0.delta(&cost1);
+
+    // mean loss across trainers per step
+    let loss_curve: Vec<f32> = (0..total_steps)
+        .map(|s| {
+            curves.iter().map(|c| c[s]).sum::<f32>() / n_trainers as f32
+        })
+        .collect();
+
+    // epoch aggregation + optional eval
+    let mut epochs = Vec::new();
+    let mut final_val_acc = None;
+    for e in 0..cfg.epochs.max(1) {
+        let lo = e * steps_per_epoch;
+        let hi = ((e + 1) * steps_per_epoch).min(total_steps);
+        if lo >= hi {
+            break;
+        }
+        let mean_loss = loss_curve[lo..hi]
+            .iter()
+            .map(|&x| x as f64)
+            .sum::<f64>()
+            / (hi - lo) as f64;
+        epochs.push(EpochStats {
+            epoch: e,
+            mean_loss,
+            secs: total_secs * (hi - lo) as f64 / total_steps as f64,
+            val_acc: None,
+        });
+    }
+    if cfg.eval_each_epoch {
+        // validation accuracy with the synchronized final params (all
+        // replicas are identical after the last all-reduce)
+        final_val_acc = Some(cluster.evaluate(
+            &devices[0].handle(),
+            &spec,
+            &final_params,
+            cfg.seed,
+        )?);
+    }
+
+    let report = TrainReport {
+        epochs,
+        total_secs,
+        steps: total_steps,
+        loss_curve,
+        net_bytes: delta.net_bytes,
+        pcie_bytes: delta.pcie_bytes,
+        remote_feature_rows: metrics.counter("trainer.remote_rows"),
+        final_val_acc,
+        sample_secs: metrics.total_time("pipeline.sample").as_secs_f64(),
+        batches_produced: metrics.counter("pipeline.batches"),
+        device_secs: metrics.total_time("trainer.device").as_secs_f64(),
+        allreduce_secs: metrics
+            .total_time("trainer.allreduce")
+            .as_secs_f64(),
+        wait_secs: metrics.total_time("trainer.wait_batch").as_secs_f64(),
+        final_params,
+    };
+    Ok(report)
+}
+
+/// Deterministic mean of per-trainer RNG streams (used in tests).
+pub fn mix_seed(seed: u64, t: usize) -> u64 {
+    let mut r = Rng::new(seed);
+    r.split(t as u64).next_u64()
+}

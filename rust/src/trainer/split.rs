@@ -1,0 +1,209 @@
+//! Training-set split (§5.6.1): divide the training items across trainers
+//! so that (a) every trainer gets *exactly* the same number of items
+//! (synchronous SGD needs identical batch counts), (b) items stay
+//! co-located with their owning machine's graph partition wherever
+//! possible, and (c) the unavoidable remainder of remote items is spread
+//! evenly.
+//!
+//! Because relabeling (§5.3) makes each partition's IDs contiguous, the
+//! paper's "assign ID ranges to the machine with the largest overlap" is
+//! implemented directly: training IDs are sorted (= grouped by owner),
+//! cut into `n_trainers` equal ranges, and each range lands on the machine
+//! owning most of it.
+
+use crate::graph::NodeId;
+use crate::partition::NodeMap;
+
+/// Split `train_ids` (new global IDs) into `n_machines * per_machine`
+/// equal-size sets. Returns `sets[t]` for trainer `t` (machine-major
+/// order: trainer t lives on machine `t / per_machine`).
+pub fn split_training_set(
+    mut train_ids: Vec<NodeId>,
+    node_map: &NodeMap,
+    n_machines: usize,
+    per_machine: usize,
+) -> Vec<Vec<NodeId>> {
+    let n_trainers = n_machines * per_machine;
+    assert!(n_trainers > 0);
+    train_ids.sort_unstable(); // contiguous ranges ⇒ grouped by owner
+    let total = train_ids.len();
+    let base = total / n_trainers;
+    let rem = total % n_trainers;
+
+    // equal-size contiguous ranges (first `rem` get one extra)
+    let mut ranges: Vec<&[NodeId]> = Vec::with_capacity(n_trainers);
+    let mut off = 0usize;
+    for t in 0..n_trainers {
+        let len = base + usize::from(t < rem);
+        ranges.push(&train_ids[off..off + len]);
+        off += len;
+    }
+
+    // majority owner of each range
+    let majority = |ids: &[NodeId]| -> u32 {
+        if ids.is_empty() {
+            return 0;
+        }
+        let mut counts = vec![0usize; n_machines];
+        for &id in ids {
+            let o = node_map.owner(id) as usize;
+            counts[o.min(n_machines - 1)] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(m, _)| m as u32)
+            .unwrap()
+    };
+
+    // assign ranges to machines: prefer majority owner, but cap each
+    // machine at `per_machine` ranges so every trainer gets exactly one
+    let mut machine_load = vec![0usize; n_machines];
+    let mut assignment: Vec<Option<u32>> = vec![None; n_trainers];
+    // first pass: happy path
+    for (i, r) in ranges.iter().enumerate() {
+        let m = majority(r) as usize;
+        if machine_load[m] < per_machine {
+            machine_load[m] += 1;
+            assignment[i] = Some(m as u32);
+        }
+    }
+    // second pass: spill the rest to the least-loaded machines (these are
+    // the "remote training points", balanced evenly per the paper)
+    for slot in assignment.iter_mut() {
+        if slot.is_none() {
+            let m = (0..n_machines)
+                .min_by_key(|&m| machine_load[m])
+                .unwrap();
+            machine_load[m] += 1;
+            *slot = Some(m as u32);
+        }
+    }
+
+    // order sets machine-major so trainer t = machine t/per_machine
+    let mut out: Vec<Vec<NodeId>> = vec![Vec::new(); n_trainers];
+    let mut next_slot = vec![0usize; n_machines];
+    for (i, r) in ranges.iter().enumerate() {
+        let m = assignment[i].unwrap() as usize;
+        let t = m * per_machine + next_slot[m];
+        next_slot[m] += 1;
+        out[t] = r.to_vec();
+    }
+    out
+}
+
+/// Fraction of a trainer's items owned by its own machine (locality
+/// observability; the paper's design keeps this near 1.0).
+pub fn locality(
+    sets: &[Vec<NodeId>],
+    node_map: &NodeMap,
+    per_machine: usize,
+) -> f64 {
+    let mut local = 0usize;
+    let mut total = 0usize;
+    for (t, set) in sets.iter().enumerate() {
+        let m = (t / per_machine) as u32;
+        for &id in set {
+            total += 1;
+            if node_map.owner(id) == m {
+                local += 1;
+            }
+        }
+    }
+    local as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetSpec;
+    use crate::partition::{
+        metis_partition, relabel, PartitionConfig, VertexWeights,
+    };
+
+    fn setup(n_machines: usize) -> (Vec<NodeId>, NodeMap) {
+        let spec = DatasetSpec::new("sp", 2000, 8000);
+        let d = spec.generate();
+        let vw = VertexWeights::for_training(
+            d.n_nodes(),
+            &d.split,
+            &d.graph.node_type,
+            1,
+        );
+        let p = metis_partition(
+            &d.graph,
+            &vw,
+            &PartitionConfig::new(n_machines),
+        );
+        let r = relabel::relabel(&p);
+        let d2 = relabel::relabel_dataset(&d, &r);
+        let train: Vec<NodeId> = d2
+            .nodes_with(crate::graph::SplitTag::Train);
+        (train, r.node_map)
+    }
+
+    #[test]
+    fn counts_are_equal_and_cover_everything() {
+        let (train, nm) = setup(3);
+        let sets = split_training_set(train.clone(), &nm, 3, 2);
+        assert_eq!(sets.len(), 6);
+        let max = sets.iter().map(|s| s.len()).max().unwrap();
+        let min = sets.iter().map(|s| s.len()).min().unwrap();
+        assert!(max - min <= 1, "sizes {:?}", sets.iter().map(|s| s.len()).collect::<Vec<_>>());
+        let mut all: Vec<NodeId> =
+            sets.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let mut expect = train;
+        expect.sort_unstable();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn locality_is_high_with_metis_partitions() {
+        let (train, nm) = setup(4);
+        let sets = split_training_set(train, &nm, 4, 2);
+        let loc = locality(&sets, &nm, 2);
+        assert!(loc > 0.7, "locality {loc}");
+    }
+
+    #[test]
+    fn single_trainer_gets_everything() {
+        let (train, nm) = setup(1);
+        let sets = split_training_set(train.clone(), &nm, 1, 1);
+        assert_eq!(sets.len(), 1);
+        assert_eq!(sets[0].len(), train.len());
+    }
+
+    /// Property: any (machines, per_machine) split is total and balanced.
+    #[test]
+    fn prop_split_total_and_balanced() {
+        let (train, nm) = setup(4);
+        crate::util::proptest::forall(
+            51,
+            12,
+            |r| (1 + r.usize_below(4), 1 + r.usize_below(4)),
+            |&(m, per)| {
+                let m = m.min(nm.nparts());
+                let sets =
+                    split_training_set(train.clone(), &nm, m, per);
+                if sets.len() != m * per {
+                    return Err("wrong set count".into());
+                }
+                let total: usize = sets.iter().map(|s| s.len()).sum();
+                if total != train.len() {
+                    return Err(format!(
+                        "lost items: {total} != {}",
+                        train.len()
+                    ));
+                }
+                let max = sets.iter().map(|s| s.len()).max().unwrap();
+                let min = sets.iter().map(|s| s.len()).min().unwrap();
+                if max - min > 1 {
+                    return Err(format!("unbalanced: {min}..{max}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Bench binaries (`cargo bench`, harness = false) use [`BenchRunner`] to
+//! warm up, sample wall-clock times, and print a stable `name: median ±
+//! spread` line plus machine-readable rows the EXPERIMENTS.md tables are
+//! generated from.
+
+use std::time::{Duration, Instant};
+
+/// One measured series (e.g. "epoch time, 8 GPUs").
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<Sample>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self { warmup: 1, iters: 5, results: Vec::new() }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f` (called once per iteration); returns the median duration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Sample {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<Duration> = (0..self.iters.max(1))
+            .map(|_| {
+                let t = Instant::now();
+                f();
+                t.elapsed()
+            })
+            .collect();
+        times.sort();
+        let s = Sample {
+            name: name.to_string(),
+            median: times[times.len() / 2],
+            min: times[0],
+            max: times[times.len() - 1],
+            iters: self.iters,
+        };
+        println!(
+            "{:<48} {:>10.3?} (min {:.3?}, max {:.3?}, n={})",
+            s.name, s.median, s.min, s.max, s.iters
+        );
+        self.results.push(s.clone());
+        s
+    }
+
+    /// Record an externally measured value (e.g. modeled time).
+    pub fn record(&mut self, name: &str, d: Duration) -> Sample {
+        let s = Sample {
+            name: name.to_string(),
+            median: d,
+            min: d,
+            max: d,
+            iters: 1,
+        };
+        println!("{:<48} {:>10.3?} (recorded)", s.name, s.median);
+        self.results.push(s.clone());
+        s
+    }
+
+    /// Print a ratio table `rows[i] vs base` (the "speedup over X" the paper
+    /// reports in its figures).
+    pub fn speedup_table(&self, title: &str, base: &str) {
+        let base_s = match self.results.iter().find(|s| s.name == base) {
+            Some(s) => s.secs(),
+            None => return,
+        };
+        println!("\n== {title} (speedup over {base}) ==");
+        for s in &self.results {
+            println!("{:<48} {:>8.2}x", s.name, base_s / s.secs());
+        }
+    }
+}
+
+/// Format a `f64` seconds value the way the tables print it.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_sample() {
+        let mut r = BenchRunner::new(0, 3);
+        let s = r.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(r.results.len(), 1);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-5), "25.0us");
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities (offline environment: no rand/serde/
+//! criterion crates, so the pieces we need live here, tested).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,58 @@
+//! In-tree property-testing helper (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` against `cases` random
+//! inputs produced by `gen`; on failure it reports the failing case index +
+//! seed so the exact input can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `check` on `cases` generated inputs; panics with replay info on the
+/// first failure. `check` returns `Err(msg)` (or panics) to signal failure.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_on_true_property() {
+        forall(
+            1,
+            50,
+            |r| (r.below(100), r.below(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("addition not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_replay_info() {
+        forall(
+            2,
+            50,
+            |r| r.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("x={x} >= 5")) },
+        );
+    }
+}
