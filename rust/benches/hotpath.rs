@@ -57,17 +57,114 @@ fn main() -> anyhow::Result<()> {
     // --- stage 3: KVStore pull -------------------------------------------
     let block = to_block(&shape, &samples);
     let mut feats = vec![0f32; shape.layer_nodes[0] * shape.feat_dim];
-    r.bench(
-        &format!("kv pull ({} feature rows)", block.input_nodes.len()),
+    let n_rows = block.input_nodes.len();
+    let mut uncached = cluster.kv.client(0, cluster.policy.clone());
+    let cpu_uncached = r.bench(
+        &format!("kv pull (uncached, {n_rows} feature rows)"),
         || {
-            let n = gen.kv.pull(
+            let n = uncached.pull(
                 "feat",
                 &block.input_nodes,
-                &mut feats[..block.input_nodes.len() * shape.feat_dim],
+                &mut feats[..n_rows * shape.feat_dim],
             );
             std::hint::black_box(n);
         },
     );
+    let mut cached_cpu = cluster.kv.client(0, cluster.policy.clone());
+    cached_cpu.attach_cache(cluster.make_feature_cache().unwrap());
+    let cpu_cached = r.bench(
+        "kv pull (cached, warm, cpu-only)", // warmup iters fill the cache
+        || {
+            let n = cached_cpu.pull(
+                "feat",
+                &block.input_nodes,
+                &mut feats[..n_rows * shape.feat_dim],
+            );
+            std::hint::black_box(n);
+        },
+    );
+
+    // --- stage 3 under wall-clock network fidelity ------------------------
+    // Same pull with modeled link time emulated: this is the regime the
+    // cache targets — repeated remote rows stop paying the wire cost.
+    let mut em_spec = ClusterSpec::new(2, 2);
+    em_spec.emulate_network_time = true;
+    let cluster_em =
+        Cluster::deploy(&dataset, em_spec, artifacts_dir())?;
+    let gen_em = cluster_em.batch_gen(0, &vspec, "sage_nc_dev", 3);
+    let mut rng_em = Rng::new(17);
+    let samples_em = gen_em.sampler.sample_blocks(
+        &targets,
+        &shape.fanouts,
+        &shape.layer_nodes,
+        &mut rng_em,
+    );
+    let block_em = to_block(&shape, &samples_em);
+    let n_rows_em = block_em.input_nodes.len();
+    let mut un_em = cluster_em.kv.client(0, cluster_em.policy.clone());
+    let em_uncached = r.bench("kv pull (uncached)", || {
+        let n = un_em.pull(
+            "feat",
+            &block_em.input_nodes,
+            &mut feats[..n_rows_em * shape.feat_dim],
+        );
+        std::hint::black_box(n);
+    });
+    let mut ca_em = cluster_em.kv.client(0, cluster_em.policy.clone());
+    ca_em.attach_cache(cluster_em.make_feature_cache().unwrap());
+    let em_cached = r.bench("kv pull (cached, warm)", || {
+        let n = ca_em.pull(
+            "feat",
+            &block_em.input_nodes,
+            &mut feats[..n_rows_em * shape.feat_dim],
+        );
+        std::hint::black_box(n);
+    });
+    let cstats = ca_em.cache_stats().unwrap();
+    println!(
+        "cache: {} hits / {} misses ({:.1}% hit rate), {} B saved, \
+         {} evicted",
+        cstats.hit_rows,
+        cstats.miss_rows,
+        100.0 * cstats.hit_rate(),
+        cstats.remote_bytes_saved,
+        cstats.evicted_rows,
+    );
+    let em_speedup = em_uncached.secs() / em_cached.secs().max(1e-12);
+    let cpu_speedup = cpu_uncached.secs() / cpu_cached.secs().max(1e-12);
+    println!(
+        "warm cached pull speedup: {em_speedup:.2}x (network fidelity), \
+         {cpu_speedup:.2}x (cpu-only)"
+    );
+    std::fs::write(
+        "BENCH_cache.json",
+        format!(
+            "{{\n  \"bench\": \"hotpath.cache\",\n  \
+             \"rows\": {n_rows_em},\n  \
+             \"feat_dim\": {},\n  \
+             \"uncached_s\": {:.9},\n  \
+             \"cached_warm_s\": {:.9},\n  \
+             \"speedup\": {em_speedup:.3},\n  \
+             \"cpu_only\": {{\"uncached_s\": {:.9}, \
+             \"cached_warm_s\": {:.9}, \"speedup\": {cpu_speedup:.3}}},\n  \
+             \"hit_rows\": {},\n  \
+             \"miss_rows\": {},\n  \
+             \"hit_rate\": {:.4},\n  \
+             \"remote_bytes_saved\": {},\n  \
+             \"evicted_rows\": {}\n}}\n",
+            shape.feat_dim,
+            em_uncached.secs(),
+            em_cached.secs(),
+            cpu_uncached.secs(),
+            cpu_cached.secs(),
+            cstats.hit_rows,
+            cstats.miss_rows,
+            cstats.hit_rate(),
+            cstats.remote_bytes_saved,
+            cstats.evicted_rows,
+        ),
+    )?;
+    println!("wrote BENCH_cache.json");
 
     // --- composed BatchGen (stages 1-4) -----------------------------------
     r.bench("BatchGen::next (stages 1-4 composed)", || {

@@ -108,5 +108,13 @@ fn main() -> anyhow::Result<()> {
         "paper: 12min partition / 23min load-save / 8min load / 4min nc \
          train vs 305min lp train."
     );
+    println!(
+        "\nlocality (nc): {}",
+        distdglv2::benchsuite::locality_summary(&nc)
+    );
+    println!(
+        "locality (lp): {}",
+        distdglv2::benchsuite::locality_summary(&lp)
+    );
     Ok(())
 }

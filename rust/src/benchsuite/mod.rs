@@ -208,6 +208,33 @@ pub fn paper_cost_model() -> CostModel {
     CostModel::new(NET_BYTES_PER_SEC, NET_LATENCY_S, PCIE_BYTES_PER_SEC)
 }
 
+/// FeatureCache hit rate over a measured run's remote feature accesses
+/// (hits / (hits + misses)); 0 when the cache was disabled or never
+/// consulted.
+pub fn cache_hit_rate(report: &TrainReport) -> f64 {
+    let total = report.cache_hit_rows + report.cache_miss_rows;
+    if total == 0 {
+        0.0
+    } else {
+        report.cache_hit_rows as f64 / total as f64
+    }
+}
+
+/// One-line locality/cache summary for bench logs: makes partition
+/// quality, cache effectiveness, and layer-cap pressure visible next to
+/// every figure row instead of buried in per-batch fields.
+pub fn locality_summary(report: &TrainReport) -> String {
+    format!(
+        "remote rows fetched {} | cache hits {} ({:.1}% hit rate, \
+         {} B saved) | dropped neighbors {}",
+        report.remote_feature_rows,
+        report.cache_hit_rows,
+        100.0 * cache_hit_rate(report),
+        report.cache_remote_bytes_saved,
+        report.dropped_neighbors,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,13 +10,16 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::graph::{Dataset, NodeId, SplitTag};
-use crate::kvstore::{KvCluster, RangePolicy};
+use crate::kvstore::{
+    CacheAdmission, FeatureCache, KvCluster, RangePolicy,
+};
+use crate::metrics::Metrics;
 use crate::net::CostModel;
 use crate::partition::{
     build_partitions, hierarchical, metis_partition, random, relabel,
     NodeMap, PartitionConfig, Partitioning, PhysPartition, VertexWeights,
 };
-use crate::pipeline::BatchGen;
+use crate::pipeline::{BatchGen, BatchPool};
 use crate::runtime::manifest::VariantSpec;
 use crate::sampler::compact::TaskKind;
 use crate::sampler::{BatchScheduler, DistNeighborSampler, SamplerServer};
@@ -43,6 +46,11 @@ pub struct ClusterSpec {
     pub two_level: bool,
     /// Sleep for modeled link time on remote pulls (wall-clock fidelity).
     pub emulate_network_time: bool,
+    /// Per-trainer remote-feature cache budget (bytes); 0 disables the
+    /// [`FeatureCache`] entirely (see `docs/PERF.md`).
+    pub cache_budget_bytes: usize,
+    /// Which fetched remote rows the cache keeps.
+    pub cache_admission: CacheAdmission,
     pub seed: u64,
 }
 
@@ -55,6 +63,8 @@ impl ClusterSpec {
             multi_constraint: true,
             two_level: true,
             emulate_network_time: false,
+            cache_budget_bytes: 64 << 20,
+            cache_admission: CacheAdmission::All,
             seed: 13,
         }
     }
@@ -83,6 +93,9 @@ pub struct Cluster {
     pub train_sets: Vec<Vec<NodeId>>,
     pub val_nodes: Vec<NodeId>,
     pub test_nodes: Vec<NodeId>,
+    /// Per-node degree in new-ID order (drives degree-aware cache
+    /// admission).
+    pub degrees: Arc<Vec<u32>>,
     /// Labels in new-ID order (host copy for accuracy computation).
     pub labels: Arc<Vec<u16>>,
     pub num_classes: usize,
@@ -141,6 +154,15 @@ impl Cluster {
             .enumerate()
             .map(|(m, p)| Arc::new(SamplerServer::new(m as u32, p.clone())))
             .collect();
+        // degree table (new-ID space) for degree-aware cache admission:
+        // every core vertex has its full adjacency on its owner partition
+        let mut degrees = vec![0u32; n];
+        for p in &partitions {
+            for l in 0..p.n_core as u32 {
+                degrees[p.global_of(l) as usize] =
+                    p.graph.degree(l) as u32;
+            }
+        }
         let build_secs = t_build.elapsed().as_secs_f64();
 
         // KVStore: features + labels partitioned by the range policy
@@ -199,6 +221,7 @@ impl Cluster {
             policy,
             sampler_servers,
             partitions,
+            degrees: Arc::new(degrees),
             train_sets,
             val_nodes: d2.nodes_with(SplitTag::Val),
             test_nodes: d2.nodes_with(SplitTag::Test),
@@ -218,6 +241,29 @@ impl Cluster {
 
     pub fn n_trainers(&self) -> usize {
         self.spec.n_machines * self.spec.trainers_per_machine
+    }
+
+    /// Build one trainer's remote-feature cache per the spec knobs;
+    /// `None` when `cache_budget_bytes == 0`. The auto degree-admission
+    /// threshold resolves to the dataset mean degree.
+    pub fn make_feature_cache(&self) -> Option<FeatureCache> {
+        if self.spec.cache_budget_bytes == 0 {
+            return None;
+        }
+        let admission = match self.spec.cache_admission {
+            CacheAdmission::Degree(None) => {
+                let mean =
+                    (self.n_edges / self.n_nodes.max(1)).max(1) as u32;
+                CacheAdmission::Degree(Some(mean))
+            }
+            ref a => a.clone(),
+        };
+        Some(FeatureCache::new(
+            "feat",
+            self.spec.cache_budget_bytes,
+            admission,
+            Some(self.degrees.clone()),
+        ))
     }
 
     pub fn machine_of_trainer(&self, t: usize) -> u32 {
@@ -288,14 +334,21 @@ impl Cluster {
                 )
             }
         };
+        let mut kv = self.kv.client(machine, self.policy.clone());
+        if let Some(cache) = self.make_feature_cache() {
+            kv.attach_cache(cache);
+        }
         BatchGen {
             spec: shape,
             scheduler,
             sampler: Arc::new(sampler),
-            kv: self.kv.client(machine, self.policy.clone()),
+            kv,
             rng: Rng::new(seed ^ 0xBA7C4),
             feat_name: "feat".into(),
             label_name: "label".into(),
+            metrics: Arc::new(Metrics::new()),
+            pool: BatchPool::default(),
+            label_scratch: Vec::new(),
         }
     }
 
@@ -335,6 +388,7 @@ impl Cluster {
                 }
                 total += 1;
             }
+            gen.recycle(hb); // reuse the feature buffer next chunk
         }
         Ok(correct as f64 / total.max(1) as f64)
     }
@@ -450,6 +504,40 @@ mod tests {
         assert_eq!(b.feats.len(), v.layer_nodes[0] * v.feat_dim);
         assert_eq!(b.layers.len(), 2);
         assert!(!b.targets.is_empty());
+    }
+
+    #[test]
+    fn degree_table_covers_every_vertex() {
+        let c = small_cluster(2, 1);
+        assert_eq!(c.degrees.len(), c.n_nodes);
+        let total: u64 = c.degrees.iter().map(|&d| d as u64).sum();
+        assert_eq!(total as usize, c.n_edges, "degree sum != edge count");
+        // spot-check against the owning partition's adjacency
+        for p in &c.partitions {
+            for l in (0..p.n_core as u32).step_by(97) {
+                assert_eq!(
+                    c.degrees[p.global_of(l) as usize] as usize,
+                    p.graph.degree(l)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn feature_cache_factory_follows_spec() {
+        let mut spec = ClusterSpec::new(2, 1);
+        spec.cache_budget_bytes = 0;
+        let d = DatasetSpec::new("cc", 1500, 6000).generate();
+        let c = Cluster::deploy(&d, spec, artifacts_dir()).unwrap();
+        assert!(c.make_feature_cache().is_none());
+
+        let mut spec2 = ClusterSpec::new(2, 1);
+        spec2.cache_admission =
+            crate::kvstore::CacheAdmission::Degree(None);
+        let c2 = Cluster::deploy(&d, spec2, artifacts_dir()).unwrap();
+        let cache = c2.make_feature_cache().expect("default budget > 0");
+        assert!(cache.is_enabled());
+        assert_eq!(cache.tensor(), "feat");
     }
 
     #[test]

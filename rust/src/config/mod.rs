@@ -6,6 +6,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::{ClusterSpec, Partitioner};
 use crate::graph::DatasetSpec;
+use crate::kvstore::CacheAdmission;
 use crate::pipeline::PipelineMode;
 use crate::trainer::TrainConfig;
 
@@ -74,6 +75,13 @@ impl RunConfig {
             "emulate_network" => {
                 self.cluster.emulate_network_time = parse_bool(value)?
             }
+            "cache_budget_bytes" => {
+                self.cluster.cache_budget_bytes = parse_usize()?
+            }
+            "cache_admission" => {
+                self.cluster.cache_admission =
+                    CacheAdmission::parse(value)?
+            }
             "variant" => self.train.variant = value.to_string(),
             "lr" => self.train.lr = value.parse()?,
             "epochs" => self.train.epochs = parse_usize()?,
@@ -100,7 +108,8 @@ impl RunConfig {
             _ => bail!(
                 "unknown key {key:?}; valid: dataset feat_dim classes \
                  dataset_seed machines trainers partitioner \
-                 multi_constraint two_level emulate_network variant lr \
+                 multi_constraint two_level emulate_network \
+                 cache_budget_bytes cache_admission variant lr \
                  epochs max_steps eval seed pipeline cpu_prefetch \
                  gpu_prefetch"
             ),
@@ -181,6 +190,33 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.dataset.n_nodes, 1200);
         assert_eq!(cfg.dataset.feat_dim, 100);
+    }
+
+    #[test]
+    fn cache_knobs_parse() {
+        let cfg = RunConfig::from_args(
+            ["cache_budget_bytes=1048576", "cache_admission=degree:8"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.cache_budget_bytes, 1 << 20);
+        assert_eq!(
+            cfg.cluster.cache_admission,
+            CacheAdmission::Degree(Some(8))
+        );
+        let off = RunConfig::from_args(
+            ["cache_budget_bytes=0".to_string()],
+        )
+        .unwrap();
+        assert_eq!(off.cluster.cache_budget_bytes, 0);
+        assert!(RunConfig::from_args(
+            ["cache_admission=lru".to_string()]
+        )
+        .is_err());
+        // default: cache on, admit-all
+        let d = RunConfig::default();
+        assert!(d.cluster.cache_budget_bytes > 0);
+        assert_eq!(d.cluster.cache_admission, CacheAdmission::All);
     }
 
     #[test]

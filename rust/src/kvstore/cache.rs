@@ -1,0 +1,453 @@
+//! Trainer-side cache of **remote** feature rows (§Perf).
+//!
+//! DistDGL-style mini-batch training spends most of its network budget
+//! re-pulling the same boundary-vertex features epoch after epoch: the
+//! frontier of consecutive mini-batches overlaps heavily, and min-edge-cut
+//! partitioning concentrates the remote accesses on a small set of
+//! high-degree boundary vertices. [`FeatureCache`] keeps those rows in
+//! trainer memory so [`KvClient::pull`](super::KvClient::pull) serves them
+//! without touching the wire:
+//!
+//! - **Scope** — one cache per trainer per tensor (normally `"feat"`).
+//!   Local rows are never cached (shared memory is already free); only
+//!   rows whose owner is a different machine enter the cache.
+//! - **Admission** — [`CacheAdmission::All`] admits every fetched remote
+//!   row; [`CacheAdmission::Degree`] admits only vertices of degree ≥ a
+//!   threshold, prioritizing the high-degree boundary vertices that
+//!   dominate repeat traffic (MassiveGNN/DistGNN's observation).
+//! - **Eviction** — CLOCK (second-chance): a hit sets the slot's
+//!   reference bit; the rotating hand evicts the first unreferenced slot.
+//!   Row storage is a single flat `Vec<f32>` (slot `i` at `i*dim`), so a
+//!   full cache never reallocates.
+//! - **Budget** — a byte budget caps `capacity = budget / (row bytes +
+//!   bookkeeping)`. A budget of 0 disables the cache entirely (the pull
+//!   path degenerates to the uncached behavior, byte for byte).
+//! - **Coherence** — the cache is meant for immutable tensors (input
+//!   features). `KvClient::push_grad` on the cached tensor invalidates
+//!   the touched rows, so a pull after a sparse update through the *same*
+//!   client is never stale. Cross-client writes are not tracked.
+//!
+//! Correctness bar (tested): cached and uncached pulls return
+//! byte-identical rows, and all randomness is untouched — the cache never
+//! consumes RNG state.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use rustc_hash::FxHashMap;
+
+use crate::graph::NodeId;
+
+/// Which fetched remote rows are worth keeping.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CacheAdmission {
+    /// Admit every remote row.
+    All,
+    /// Admit rows with vertex degree ≥ the threshold. `None` = auto:
+    /// resolved to the dataset mean degree at deploy time
+    /// ([`Cluster::deploy`](crate::cluster::Cluster) wires the degree
+    /// table). Without a degree table the policy admits everything.
+    Degree(Option<u32>),
+}
+
+impl CacheAdmission {
+    /// Parse the `cache_admission` config value: `all`, `degree`, or
+    /// `degree:<min>`.
+    pub fn parse(v: &str) -> Result<Self> {
+        Ok(match v {
+            "all" => Self::All,
+            "degree" => Self::Degree(None),
+            _ => match v.strip_prefix("degree:") {
+                Some(min) => Self::Degree(Some(min.parse()?)),
+                None => {
+                    bail!("cache_admission must be all|degree|degree:<min>")
+                }
+            },
+        })
+    }
+}
+
+/// Monotonic counters; deltas feed `cache.*` [`Metrics`] counters.
+///
+/// [`Metrics`]: crate::metrics::Metrics
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Remote rows served from trainer memory.
+    pub hit_rows: u64,
+    /// Remote rows that had to be fetched over the network.
+    pub miss_rows: u64,
+    /// Rows displaced by the CLOCK hand.
+    pub evicted_rows: u64,
+    /// Fetched rows the admission policy declined to keep.
+    pub rejected_rows: u64,
+    /// Response payload bytes that never crossed the wire (`hit_rows *
+    /// dim * 4`).
+    pub remote_bytes_saved: u64,
+}
+
+impl CacheStats {
+    /// Hits / (hits + misses); 0 when the cache saw no remote rows.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hit_rows + self.miss_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.hit_rows as f64 / total as f64
+        }
+    }
+
+    fn minus(&self, o: &CacheStats) -> CacheStats {
+        CacheStats {
+            hit_rows: self.hit_rows - o.hit_rows,
+            miss_rows: self.miss_rows - o.miss_rows,
+            evicted_rows: self.evicted_rows - o.evicted_rows,
+            rejected_rows: self.rejected_rows - o.rejected_rows,
+            remote_bytes_saved: self.remote_bytes_saved
+                - o.remote_bytes_saved,
+        }
+    }
+}
+
+/// Per-slot bookkeeping bytes charged against the budget on top of the
+/// row payload (map entry + slot record, amortized).
+const ROW_OVERHEAD_BYTES: usize = 24;
+
+struct Slot {
+    gid: NodeId,
+    /// CLOCK reference bit: set on hit, cleared by a passing hand.
+    referenced: bool,
+}
+
+/// See the module docs. Single-threaded by design: each trainer's
+/// [`KvClient`](super::KvClient) owns its own cache, so no locking sits on
+/// the hit path.
+pub struct FeatureCache {
+    tensor: String,
+    budget_bytes: usize,
+    admission: CacheAdmission,
+    degrees: Option<Arc<Vec<u32>>>,
+    /// Row width; 0 until the first pull reveals the tensor dim.
+    dim: usize,
+    /// Max rows under the byte budget (0 until `dim` is known).
+    capacity: usize,
+    map: FxHashMap<NodeId, u32>,
+    slots: Vec<Slot>,
+    /// Flat row storage: slot `i` occupies `data[i*dim..(i+1)*dim]`.
+    data: Vec<f32>,
+    /// Slots released by [`Self::invalidate`], reused before eviction.
+    free: Vec<u32>,
+    hand: usize,
+    stats: CacheStats,
+    reported: CacheStats,
+}
+
+impl FeatureCache {
+    pub fn new(
+        tensor: &str,
+        budget_bytes: usize,
+        admission: CacheAdmission,
+        degrees: Option<Arc<Vec<u32>>>,
+    ) -> Self {
+        Self {
+            tensor: tensor.to_string(),
+            budget_bytes,
+            admission,
+            degrees,
+            dim: 0,
+            capacity: 0,
+            map: FxHashMap::default(),
+            slots: Vec::new(),
+            data: Vec::new(),
+            free: Vec::new(),
+            hand: 0,
+            stats: CacheStats::default(),
+            reported: CacheStats::default(),
+        }
+    }
+
+    /// Name of the cached tensor (only pulls of this tensor consult the
+    /// cache).
+    pub fn tensor(&self) -> &str {
+        &self.tensor
+    }
+
+    /// False iff the byte budget is 0 (fully disabled, zero overhead).
+    pub fn is_enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Rows currently resident.
+    pub fn rows(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Bytes charged against the budget (payload + bookkeeping).
+    pub fn used_bytes(&self) -> usize {
+        self.map.len() * (self.dim * 4 + ROW_OVERHEAD_BYTES)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Counters accumulated since the previous `take_delta` call (for
+    /// periodic publication into [`Metrics`](crate::metrics::Metrics)).
+    pub fn take_delta(&mut self) -> CacheStats {
+        let d = self.stats.minus(&self.reported);
+        self.reported = self.stats;
+        d
+    }
+
+    /// Fix the row width on first use and derive the row capacity from
+    /// the byte budget.
+    pub fn ensure_dim(&mut self, dim: usize) {
+        if self.dim == dim {
+            return;
+        }
+        assert!(
+            self.dim == 0 && self.map.is_empty(),
+            "FeatureCache for {:?} re-bound from dim {} to {}",
+            self.tensor,
+            self.dim,
+            dim
+        );
+        self.dim = dim;
+        self.capacity = self.budget_bytes / (dim * 4 + ROW_OVERHEAD_BYTES);
+    }
+
+    /// Copy the cached row for `gid` into `out` (len = dim) and mark it
+    /// recently used. Counts a hit or a miss.
+    pub fn lookup(&mut self, gid: NodeId, out: &mut [f32]) -> bool {
+        match self.map.get(&gid) {
+            Some(&s) => {
+                let d = self.dim;
+                let s = s as usize;
+                out[..d].copy_from_slice(&self.data[s * d..(s + 1) * d]);
+                self.slots[s].referenced = true;
+                self.stats.hit_rows += 1;
+                self.stats.remote_bytes_saved += (d * 4) as u64;
+                true
+            }
+            None => {
+                self.stats.miss_rows += 1;
+                false
+            }
+        }
+    }
+
+    /// Offer a freshly fetched remote row. Subject to admission; evicts
+    /// via CLOCK when the budget is exhausted.
+    pub fn insert(&mut self, gid: NodeId, row: &[f32]) {
+        if self.capacity == 0 || self.map.contains_key(&gid) {
+            return;
+        }
+        if !self.admit(gid) {
+            self.stats.rejected_rows += 1;
+            return;
+        }
+        let d = self.dim;
+        let slot = if let Some(s) = self.free.pop() {
+            s
+        } else if self.slots.len() < self.capacity {
+            self.slots.push(Slot { gid, referenced: false });
+            self.data.resize(self.slots.len() * d, 0.0);
+            (self.slots.len() - 1) as u32
+        } else {
+            self.evict()
+        };
+        let i = slot as usize;
+        self.slots[i] = Slot { gid, referenced: false };
+        self.data[i * d..(i + 1) * d].copy_from_slice(&row[..d]);
+        self.map.insert(gid, slot);
+    }
+
+    /// Drop rows (sparse-update coherence: stale copies must not survive
+    /// a `push_grad` on the cached tensor).
+    pub fn invalidate(&mut self, ids: &[NodeId]) {
+        for &gid in ids {
+            if let Some(s) = self.map.remove(&gid) {
+                self.slots[s as usize].referenced = false;
+                self.free.push(s);
+            }
+        }
+    }
+
+    fn admit(&self, gid: NodeId) -> bool {
+        match self.admission {
+            CacheAdmission::All => true,
+            CacheAdmission::Degree(min) => match &self.degrees {
+                Some(deg) => {
+                    deg.get(gid as usize).copied().unwrap_or(0)
+                        >= min.unwrap_or(0)
+                }
+                None => true,
+            },
+        }
+    }
+
+    /// CLOCK hand: clear reference bits until an unreferenced victim is
+    /// found. Only called with a full cache and an empty free list, so
+    /// every slot is live and the sweep terminates within two laps.
+    fn evict(&mut self) -> u32 {
+        loop {
+            let i = self.hand;
+            self.hand = (self.hand + 1) % self.slots.len();
+            let s = &mut self.slots[i];
+            if s.referenced {
+                s.referenced = false;
+            } else {
+                self.map.remove(&s.gid);
+                self.stats.evicted_rows += 1;
+                return i as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(gid: NodeId, dim: usize) -> Vec<f32> {
+        (0..dim).map(|d| (gid as usize * dim + d) as f32).collect()
+    }
+
+    fn cache_for_rows(n_rows: usize, dim: usize) -> FeatureCache {
+        let budget = n_rows * (dim * 4 + ROW_OVERHEAD_BYTES);
+        let mut c =
+            FeatureCache::new("feat", budget, CacheAdmission::All, None);
+        c.ensure_dim(dim);
+        c
+    }
+
+    #[test]
+    fn eviction_honors_byte_budget() {
+        let dim = 4;
+        let mut c = cache_for_rows(8, dim);
+        let budget = c.budget_bytes();
+        for gid in 0..100u32 {
+            c.insert(gid, &row(gid, dim));
+            assert!(c.used_bytes() <= budget, "over budget at gid {gid}");
+        }
+        assert_eq!(c.rows(), 8);
+        assert_eq!(c.stats().evicted_rows, 92);
+    }
+
+    #[test]
+    fn hits_return_inserted_bytes() {
+        let dim = 6;
+        let mut c = cache_for_rows(16, dim);
+        for gid in [3u32, 9, 11] {
+            c.insert(gid, &row(gid, dim));
+        }
+        let mut out = vec![0f32; dim];
+        for gid in [9u32, 3, 11] {
+            assert!(c.lookup(gid, &mut out));
+            assert_eq!(out, row(gid, dim), "row {gid}");
+        }
+        assert!(!c.lookup(999, &mut out));
+        let s = c.stats();
+        assert_eq!((s.hit_rows, s.miss_rows), (3, 1));
+        assert_eq!(s.remote_bytes_saved, 3 * dim as u64 * 4);
+    }
+
+    #[test]
+    fn clock_keeps_recently_referenced_rows() {
+        let dim = 2;
+        let mut c = cache_for_rows(2, dim);
+        c.insert(1, &row(1, dim));
+        c.insert(2, &row(2, dim));
+        let mut out = vec![0f32; dim];
+        assert!(c.lookup(1, &mut out)); // reference row 1
+        c.insert(3, &row(3, dim)); // must evict the unreferenced row 2
+        assert!(c.lookup(1, &mut out), "referenced row was evicted");
+        assert!(!c.lookup(2, &mut out), "unreferenced row survived");
+        assert!(c.lookup(3, &mut out));
+    }
+
+    #[test]
+    fn zero_budget_disables_everything() {
+        let mut c =
+            FeatureCache::new("feat", 0, CacheAdmission::All, None);
+        c.ensure_dim(4);
+        assert!(!c.is_enabled());
+        c.insert(1, &row(1, 4));
+        assert_eq!(c.rows(), 0);
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn degree_admission_filters_low_degree_rows() {
+        let dim = 2;
+        let degrees = Arc::new(vec![1u32, 10, 2, 50]);
+        let budget = 8 * (dim * 4 + ROW_OVERHEAD_BYTES);
+        let mut c = FeatureCache::new(
+            "feat",
+            budget,
+            CacheAdmission::Degree(Some(5)),
+            Some(degrees),
+        );
+        c.ensure_dim(dim);
+        for gid in 0..4u32 {
+            c.insert(gid, &row(gid, dim));
+        }
+        let mut out = vec![0f32; dim];
+        assert!(!c.lookup(0, &mut out)); // degree 1 < 5
+        assert!(c.lookup(1, &mut out)); // degree 10
+        assert!(!c.lookup(2, &mut out)); // degree 2
+        assert!(c.lookup(3, &mut out)); // degree 50
+        assert_eq!(c.stats().rejected_rows, 2);
+    }
+
+    #[test]
+    fn invalidate_releases_and_reuses_slots() {
+        let dim = 3;
+        let mut c = cache_for_rows(4, dim);
+        for gid in 0..4u32 {
+            c.insert(gid, &row(gid, dim));
+        }
+        c.invalidate(&[1, 2]);
+        assert_eq!(c.rows(), 2);
+        let mut out = vec![0f32; dim];
+        assert!(!c.lookup(1, &mut out));
+        // freed slots are reused without evicting live rows
+        c.insert(10, &row(10, dim));
+        c.insert(11, &row(11, dim));
+        assert_eq!(c.rows(), 4);
+        assert_eq!(c.stats().evicted_rows, 0);
+        assert!(c.lookup(0, &mut out) && c.lookup(3, &mut out));
+    }
+
+    #[test]
+    fn take_delta_reports_increments_once() {
+        let dim = 2;
+        let mut c = cache_for_rows(4, dim);
+        c.insert(1, &row(1, dim));
+        let mut out = vec![0f32; dim];
+        c.lookup(1, &mut out);
+        let d1 = c.take_delta();
+        assert_eq!(d1.hit_rows, 1);
+        let d2 = c.take_delta();
+        assert_eq!(d2, CacheStats::default());
+        c.lookup(1, &mut out);
+        assert_eq!(c.take_delta().hit_rows, 1);
+    }
+
+    #[test]
+    fn admission_config_parses() {
+        assert_eq!(CacheAdmission::parse("all").unwrap(), CacheAdmission::All);
+        assert_eq!(
+            CacheAdmission::parse("degree").unwrap(),
+            CacheAdmission::Degree(None)
+        );
+        assert_eq!(
+            CacheAdmission::parse("degree:12").unwrap(),
+            CacheAdmission::Degree(Some(12))
+        );
+        assert!(CacheAdmission::parse("lru").is_err());
+    }
+}

@@ -43,7 +43,7 @@ impl EmbeddingTable {
     /// Gather rows for a mini-batch.
     pub fn gather(
         &self,
-        client: &KvClient,
+        client: &mut KvClient,
         ids: &[NodeId],
         out: &mut [f32],
     ) -> usize {
@@ -53,7 +53,7 @@ impl EmbeddingTable {
     /// Apply row-sparse SGD for the touched rows.
     pub fn update(
         &self,
-        client: &KvClient,
+        client: &mut KvClient,
         ids: &[NodeId],
         grads: &[f32],
         lr: f32,
@@ -84,14 +84,14 @@ mod tests {
             0.1,
             7,
         );
-        let client = cluster.client(0, policy);
+        let mut client = cluster.client(0, policy);
         let ids = vec![2 as NodeId, 12];
         let mut before = vec![0f32; 2 * 4];
-        emb.gather(&client, &ids, &mut before);
+        emb.gather(&mut client, &ids, &mut before);
         let grads = vec![1.0f32; 2 * 4];
-        emb.update(&client, &ids, &grads, 0.25);
+        emb.update(&mut client, &ids, &grads, 0.25);
         let mut after = vec![0f32; 2 * 4];
-        emb.gather(&client, &ids, &mut after);
+        emb.gather(&mut client, &ids, &mut after);
         for (b, a) in before.iter().zip(&after) {
             assert!((b - 0.25 - a).abs() < 1e-6);
         }
@@ -111,8 +111,8 @@ mod tests {
         let ids: Vec<NodeId> = (0..16).collect();
         let mut a = vec![0f32; 16 * 3];
         let mut b = vec![0f32; 16 * 3];
-        e1.gather(&c1.client(0, policy.clone()), &ids, &mut a);
-        e2.gather(&c2.client(0, policy.clone()), &ids, &mut b);
+        e1.gather(&mut c1.client(0, policy.clone()), &ids, &mut a);
+        e2.gather(&mut c2.client(0, policy.clone()), &ids, &mut b);
         assert_eq!(a, b);
     }
 }

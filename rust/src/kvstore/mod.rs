@@ -14,11 +14,18 @@
 //!
 //! `push_grad` implements the sparse-embedding update path: gradient rows
 //! are routed to owners and applied as row-sparse SGD on the server.
+//!
+//! A trainer-side [`FeatureCache`] (see [`cache`]) sits in front of the
+//! remote pull path: repeated boundary-vertex rows are served from trainer
+//! memory with CLOCK eviction under a configurable byte budget, cutting
+//! the dominant network cost of mini-batch generation.
 
+pub mod cache;
 pub mod embedding;
 pub mod policy;
 pub mod store;
 
+pub use cache::{CacheAdmission, CacheStats, FeatureCache};
 pub use embedding::EmbeddingTable;
 pub use policy::{HashPolicy, PartitionPolicy, RangePolicy};
 pub use store::{KvClient, KvCluster, KvServer};

@@ -8,6 +8,7 @@ use rustc_hash::FxHashMap;
 use crate::graph::NodeId;
 use crate::net::CostModel;
 
+use super::cache::{CacheStats, FeatureCache};
 use super::policy::PartitionPolicy;
 
 /// One named tensor shard on a server: `n_local x dim`, row-major.
@@ -53,6 +54,25 @@ impl KvServer {
         for (i, &l) in locals.iter().enumerate() {
             let src = &data[l as usize * dim..(l as usize + 1) * dim];
             out[i * dim..(i + 1) * dim].copy_from_slice(src);
+        }
+    }
+
+    /// Copy row `locals[i]` straight into `out[slots[i]*dim..]` — the
+    /// scatter variant [`KvClient::pull`] uses to skip the intermediate
+    /// response buffer (§Perf: one copy per row instead of two).
+    pub fn read_rows_scattered(
+        &self,
+        name: &str,
+        locals: &[u32],
+        slots: &[usize],
+        out: &mut [f32],
+    ) {
+        let shard = self.shard(name);
+        let dim = shard.dim;
+        let data = shard.data.read().unwrap();
+        for (&l, &slot) in locals.iter().zip(slots) {
+            let src = &data[l as usize * dim..(l as usize + 1) * dim];
+            out[slot * dim..(slot + 1) * dim].copy_from_slice(src);
         }
     }
 
@@ -151,52 +171,108 @@ impl KvCluster {
         machine: u32,
         policy: Arc<dyn PartitionPolicy>,
     ) -> KvClient {
-        KvClient { cluster: Arc::clone(self), machine, policy }
+        KvClient {
+            cluster: Arc::clone(self),
+            machine,
+            policy,
+            cache: None,
+            pull_groups: Vec::new(),
+            push_groups: Vec::new(),
+        }
     }
 }
 
 /// Trainer-side handle: pulls/pushes with owner routing.
+///
+/// The per-owner grouping buffers are owned by the client and reused
+/// across calls (§Perf: the mini-batch hot path performs zero steady-state
+/// allocations here), which is why [`Self::pull`] and [`Self::push_grad`]
+/// take `&mut self`. An optional [`FeatureCache`] serves repeated remote
+/// rows from trainer memory.
 pub struct KvClient {
     cluster: Arc<KvCluster>,
     pub machine: u32,
     policy: Arc<dyn PartitionPolicy>,
+    cache: Option<FeatureCache>,
+    /// Reusable per-owner (locals, out-slots) grouping scratch for `pull`.
+    pull_groups: Vec<(Vec<u32>, Vec<usize>)>,
+    /// Reusable per-owner (locals, grads) grouping scratch for `push_grad`.
+    push_groups: Vec<(Vec<u32>, Vec<f32>)>,
 }
 
 impl KvClient {
+    /// Attach a remote-row cache. Pulls of `cache.tensor()` consult it;
+    /// all other tensors are unaffected.
+    pub fn attach_cache(&mut self, cache: FeatureCache) {
+        self.cache = Some(cache);
+    }
+
+    pub fn cache(&self) -> Option<&FeatureCache> {
+        self.cache.as_ref()
+    }
+
+    /// Cumulative cache counters, if a cache is attached.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Cache counters accumulated since the last call (for metrics
+    /// publication); `None` when no cache is attached.
+    pub fn take_cache_delta(&mut self) -> Option<CacheStats> {
+        self.cache.as_mut().map(|c| c.take_delta())
+    }
+
     /// Pull rows for `ids` into `out` (len = ids.len() * dim). Local rows
-    /// are a direct shared-memory copy; remote rows are grouped per owner
-    /// into one batched request each, with request+response bytes metered.
-    /// Returns the number of *remote* rows (locality observability).
-    pub fn pull(&self, name: &str, ids: &[NodeId], out: &mut [f32]) -> usize {
+    /// are a direct shared-memory copy; remote rows are served from the
+    /// [`FeatureCache`] when possible, otherwise grouped per owner into
+    /// one batched request each, with request+response bytes metered.
+    /// Returns the number of rows actually *fetched* from remote machines
+    /// (locality observability — cache hits do not count).
+    pub fn pull(
+        &mut self,
+        name: &str,
+        ids: &[NodeId],
+        out: &mut [f32],
+    ) -> usize {
         let dim = self.cluster.servers[self.machine as usize]
             .dim_of_or(name)
             .unwrap_or_else(|| self.remote_dim(name));
         assert!(out.len() >= ids.len() * dim);
-        // group by owner, remembering destination slots
+        // group by owner, remembering destination slots (reused scratch)
         let nparts = self.policy.n_parts();
-        let mut groups: Vec<(Vec<u32>, Vec<usize>)> =
-            vec![(Vec::new(), Vec::new()); nparts];
+        let mut groups = std::mem::take(&mut self.pull_groups);
+        if groups.len() != nparts {
+            groups.resize_with(nparts, Default::default);
+        }
+        for g in groups.iter_mut() {
+            g.0.clear();
+            g.1.clear();
+        }
+        let use_cache = self
+            .cache
+            .as_ref()
+            .is_some_and(|c| c.is_enabled() && c.tensor() == name);
+        if use_cache {
+            self.cache.as_mut().unwrap().ensure_dim(dim);
+        }
         for (slot, &gid) in ids.iter().enumerate() {
             let owner = self.policy.owner(gid) as usize;
+            if use_cache && owner as u32 != self.machine {
+                let c = self.cache.as_mut().unwrap();
+                if c.lookup(gid, &mut out[slot * dim..(slot + 1) * dim]) {
+                    continue;
+                }
+            }
             groups[owner].0.push(self.policy.local_of(gid));
             groups[owner].1.push(slot);
         }
         let mut remote_rows = 0usize;
-        let mut scratch: Vec<f32> = Vec::new();
         for (owner, (locals, slots)) in groups.iter().enumerate() {
             if locals.is_empty() {
                 continue;
             }
             let server = &self.cluster.servers[owner];
-            if owner as u32 == self.machine {
-                // shared-memory path: copy straight into the output slots
-                scratch.resize(locals.len() * dim, 0.0);
-                server.read_rows(name, locals, &mut scratch);
-                for (i, &slot) in slots.iter().enumerate() {
-                    out[slot * dim..(slot + 1) * dim]
-                        .copy_from_slice(&scratch[i * dim..(i + 1) * dim]);
-                }
-            } else {
+            if owner as u32 != self.machine {
                 remote_rows += locals.len();
                 let req_bytes = 16 + locals.len() as u64 * 4;
                 let resp_bytes = 16 + (locals.len() * dim) as u64 * 4;
@@ -216,30 +292,49 @@ impl KvClient {
                         + 2.0 * self.cluster.cost.net_latency_s;
                     spin_sleep(secs);
                 }
-                scratch.resize(locals.len() * dim, 0.0);
-                server.read_rows(name, locals, &mut scratch);
-                for (i, &slot) in slots.iter().enumerate() {
-                    out[slot * dim..(slot + 1) * dim]
-                        .copy_from_slice(&scratch[i * dim..(i + 1) * dim]);
+            }
+            // copy straight into the output slots (local and remote alike)
+            server.read_rows_scattered(name, locals, slots, out);
+            if use_cache && owner as u32 != self.machine {
+                let c = self.cache.as_mut().unwrap();
+                for &slot in slots.iter() {
+                    c.insert(
+                        ids[slot],
+                        &out[slot * dim..(slot + 1) * dim],
+                    );
                 }
             }
         }
+        self.pull_groups = groups;
         remote_rows
     }
 
     /// Push row gradients (sparse embedding update, §3.1 "sparse
     /// parameters"): routed to owners, applied as SGD on the server.
     pub fn push_grad(
-        &self,
+        &mut self,
         name: &str,
         ids: &[NodeId],
         grads: &[f32],
         lr: f32,
     ) {
+        // coherence: a sparse update through this client must not leave
+        // stale cached copies behind
+        if let Some(c) = self.cache.as_mut() {
+            if c.tensor() == name {
+                c.invalidate(ids);
+            }
+        }
         let dim = grads.len() / ids.len().max(1);
         let nparts = self.policy.n_parts();
-        let mut groups: Vec<(Vec<u32>, Vec<f32>)> =
-            vec![(Vec::new(), Vec::new()); nparts];
+        let mut groups = std::mem::take(&mut self.push_groups);
+        if groups.len() != nparts {
+            groups.resize_with(nparts, Default::default);
+        }
+        for g in groups.iter_mut() {
+            g.0.clear();
+            g.1.clear();
+        }
         for (i, &gid) in ids.iter().enumerate() {
             let owner = self.policy.owner(gid) as usize;
             groups[owner].0.push(self.policy.local_of(gid));
@@ -261,6 +356,7 @@ impl KvClient {
             }
             self.cluster.servers[owner].apply_grads(name, locals, g, lr);
         }
+        self.push_groups = groups;
     }
 
     fn remote_dim(&self, name: &str) -> usize {
@@ -323,7 +419,7 @@ mod tests {
     fn pull_returns_correct_rows_local_and_remote() {
         let dim = 4;
         let (cluster, policy, data) = range_cluster(dim);
-        let client = cluster.client(1, policy);
+        let mut client = cluster.client(1, policy);
         let ids: Vec<NodeId> = vec![12, 0, 29, 14]; // local, remote, remote, local
         let mut out = vec![0f32; ids.len() * dim];
         let remote = client.pull("feat", &ids, &mut out);
@@ -341,7 +437,7 @@ mod tests {
     fn local_pull_is_free_remote_metered() {
         let dim = 8;
         let (cluster, policy, _) = range_cluster(dim);
-        let client = cluster.client(0, policy);
+        let mut client = cluster.client(0, policy);
         let mut out = vec![0f32; dim];
         client.pull("feat", &[3], &mut out);
         assert_eq!(cluster.cost.network_bytes(), 0);
@@ -353,7 +449,7 @@ mod tests {
     fn push_grad_applies_sgd_on_owner() {
         let dim = 2;
         let (cluster, policy, data) = range_cluster(dim);
-        let client = cluster.client(0, policy);
+        let mut client = cluster.client(0, policy);
         let ids = vec![5 as NodeId, 20];
         let grads = vec![1.0f32, 1.0, 2.0, 2.0];
         client.push_grad("feat", &ids, &grads, 0.5);
@@ -372,7 +468,7 @@ mod tests {
         let cluster = KvCluster::new(2, cost);
         let data = rows(11, dim);
         cluster.register_partitioned("x", &data, dim, policy.as_ref());
-        let client = cluster.client(0, policy);
+        let mut client = cluster.client(0, policy);
         let ids: Vec<NodeId> = (0..11).collect();
         let mut out = vec![0f32; 11 * dim];
         client.pull("x", &ids, &mut out);
@@ -394,7 +490,7 @@ mod tests {
             |ids| {
                 let dim = 4;
                 let (cluster, policy, data) = range_cluster(dim);
-                let client = cluster.client(2, policy);
+                let mut client = cluster.client(2, policy);
                 let mut out = vec![0f32; ids.len() * dim];
                 client.pull("feat", ids, &mut out);
                 for (i, &gid) in ids.iter().enumerate() {
@@ -409,13 +505,107 @@ mod tests {
         );
     }
 
+    fn feat_cache(budget: usize) -> FeatureCache {
+        use crate::kvstore::cache::CacheAdmission;
+        FeatureCache::new("feat", budget, CacheAdmission::All, None)
+    }
+
+    #[test]
+    fn cached_pull_is_byte_identical_and_skips_the_wire() {
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut client = cluster.client(1, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        let ids: Vec<NodeId> = vec![12, 0, 29, 14, 0, 27];
+        let mut cold = vec![0f32; ids.len() * dim];
+        let fetched_cold = client.pull("feat", &ids, &mut cold);
+        let bytes_after_cold = cluster.cost.network_bytes();
+        assert!(fetched_cold > 0 && bytes_after_cold > 0);
+        // warm pull: every remote row is cached → no new network bytes,
+        // and the result matches the source byte for byte
+        let mut warm = vec![0f32; ids.len() * dim];
+        let fetched_warm = client.pull("feat", &ids, &mut warm);
+        assert_eq!(fetched_warm, 0);
+        assert_eq!(cluster.cost.network_bytes(), bytes_after_cold);
+        assert_eq!(cold, warm);
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &warm[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim],
+                "row {gid}"
+            );
+        }
+        let s = client.cache_stats().unwrap();
+        assert!(s.hit_rows > 0 && s.remote_bytes_saved > 0);
+        assert!(s.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn zero_budget_cache_degenerates_to_uncached() {
+        let dim = 4;
+        let (c1, policy, _) = range_cluster(dim);
+        let (c2, policy2, _) = range_cluster(dim);
+        let mut plain = c1.client(1, policy);
+        let mut zeroed = c2.client(1, policy2);
+        zeroed.attach_cache(feat_cache(0));
+        let ids: Vec<NodeId> = vec![0, 12, 29, 0, 5];
+        let mut a = vec![0f32; ids.len() * dim];
+        let mut b = vec![0f32; ids.len() * dim];
+        for _ in 0..2 {
+            let ra = plain.pull("feat", &ids, &mut a);
+            let rb = zeroed.pull("feat", &ids, &mut b);
+            assert_eq!(ra, rb);
+            assert_eq!(a, b);
+        }
+        assert_eq!(c1.cost.network_bytes(), c2.cost.network_bytes());
+        let s = zeroed.cache_stats().unwrap();
+        assert_eq!(s.hit_rows + s.miss_rows, 0);
+    }
+
+    #[test]
+    fn push_grad_invalidates_cached_rows() {
+        let dim = 2;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut client = cluster.client(0, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        let ids = vec![20 as NodeId]; // remote for machine 0
+        let mut out = vec![0f32; dim];
+        client.pull("feat", &ids, &mut out); // populate cache
+        let grads = vec![2.0f32, 2.0];
+        client.push_grad("feat", &ids, &grads, 0.5);
+        client.pull("feat", &ids, &mut out);
+        assert_eq!(out[0], data[40] - 1.0, "stale cached row served");
+    }
+
+    #[test]
+    fn repeated_pulls_reuse_scratch_capacity() {
+        // grouping scratch survives across calls: nothing observable
+        // changes, results stay correct over many mixed pulls
+        let dim = 3;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut client = cluster.client(2, policy);
+        let mut out = vec![0f32; 30 * dim];
+        for round in 0..5 {
+            let k = 5 + round * 5;
+            let ids: Vec<NodeId> =
+                (0..k).map(|i| ((i * 7 + round) % 30) as NodeId).collect();
+            client.pull("feat", &ids, &mut out[..k * dim]);
+            for (i, &gid) in ids.iter().enumerate() {
+                assert_eq!(
+                    &out[i * dim..(i + 1) * dim],
+                    &data[gid as usize * dim..(gid as usize + 1) * dim]
+                );
+            }
+        }
+    }
+
     #[test]
     fn concurrent_pulls_are_safe() {
         let dim = 4;
         let (cluster, policy, data) = range_cluster(dim);
         let hs: Vec<_> = (0..3u32)
             .map(|m| {
-                let c = cluster.client(m, policy.clone());
+                let mut c = cluster.client(m, policy.clone());
                 let data = data.clone();
                 std::thread::spawn(move || {
                     let mut out = vec![0f32; dim];

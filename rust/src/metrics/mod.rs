@@ -55,6 +55,22 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Snapshot every counter under a dotted prefix (e.g. `"cache."` →
+    /// the FeatureCache group), sorted by name.
+    pub fn counters_with_prefix(
+        &self,
+        prefix: &str,
+    ) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
+    }
+
     pub fn total_time(&self, name: &str) -> Duration {
         self.inner
             .lock()
@@ -105,6 +121,22 @@ mod tests {
         assert!(m.report().contains("batches"));
         m.reset();
         assert_eq!(m.counter("batches"), 0);
+    }
+
+    #[test]
+    fn prefix_snapshot_selects_group() {
+        let m = Metrics::new();
+        m.inc("cache.hit_rows", 7);
+        m.inc("cache.miss_rows", 3);
+        m.inc("kv.remote_rows", 11);
+        let cache = m.counters_with_prefix("cache.");
+        assert_eq!(
+            cache,
+            vec![
+                ("cache.hit_rows".to_string(), 7),
+                ("cache.miss_rows".to_string(), 3),
+            ]
+        );
     }
 
     #[test]

@@ -18,7 +18,7 @@
 
 pub mod gen;
 
-pub use gen::BatchGen;
+pub use gen::{BatchGen, BatchPool};
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -79,6 +79,8 @@ impl Pipeline {
         cfg: &PipelineConfig,
         metrics: Arc<Metrics>,
     ) -> Pipeline {
+        // per-batch locality/cache counters land in the shared instance
+        gen.metrics = metrics.clone();
         let epoch_len = gen.batches_per_epoch();
         match cfg.mode {
             PipelineMode::Sync => Pipeline {
@@ -242,6 +244,27 @@ mod tests {
             t.elapsed() < std::time::Duration::from_millis(50),
             "first batch was not prefetched"
         );
+    }
+
+    #[test]
+    fn pipeline_meters_locality_and_cache_counters() {
+        use crate::pipeline::gen::tests_support::tiny_gen_parts;
+        // 2 machines + a cache: the shared metrics must pick up the
+        // per-batch kv/cache counters from the sampling thread
+        let gen = tiny_gen_parts(64, 16, 2, 8 << 20);
+        let cfg = PipelineConfig {
+            mode: PipelineMode::Sync,
+            ..Default::default()
+        };
+        let metrics = Arc::new(Metrics::new());
+        let mut p = Pipeline::start(gen, &cfg, metrics.clone());
+        for _ in 0..2 * p.batches_per_epoch() {
+            let _ = p.next();
+        }
+        assert!(metrics.counter("kv.remote_rows") > 0);
+        assert!(metrics.counter("cache.hit_rows") > 0);
+        let _ = metrics.counter("sampler.dropped_neighbors"); // present
+        assert!(metrics.report().contains("cache.hit_rows"));
     }
 
     #[test]

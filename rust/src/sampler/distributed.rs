@@ -3,7 +3,7 @@
 //! (§5.5.1). Local seeds hit the local server through shared memory; remote
 //! requests are batched per machine and metered.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use rustc_hash::FxHashMap;
 
@@ -14,12 +14,25 @@ use crate::util::Rng;
 
 use super::service::{SampledNbrs, SamplerServer};
 
+/// Reusable per-call buffers (§Perf: the per-layer grouping pass used to
+/// allocate `nparts` vectors per call; now it reuses these across the
+/// whole run). Behind a mutex only to keep the sampler `Sync` — each
+/// trainer owns its own sampler, so the lock is uncontended.
+#[derive(Default)]
+struct SamplerScratch {
+    /// Per-owner (seeds, original slots) grouping for `sample_layer`.
+    groups: Vec<(Vec<NodeId>, Vec<usize>)>,
+    /// Frontier dedup set for `sample_blocks`.
+    seen: FxHashMap<NodeId, ()>,
+}
+
 pub struct DistNeighborSampler {
     pub machine: u32,
     servers: Vec<Arc<SamplerServer>>,
     node_map: Arc<NodeMap>,
     cost: Arc<CostModel>,
     pub emulate_network_time: bool,
+    scratch: Mutex<SamplerScratch>,
 }
 
 impl DistNeighborSampler {
@@ -35,6 +48,7 @@ impl DistNeighborSampler {
             node_map,
             cost,
             emulate_network_time: false,
+            scratch: Mutex::new(SamplerScratch::default()),
         }
     }
 
@@ -60,9 +74,18 @@ impl DistNeighborSampler {
             return self.servers[self.machine as usize]
                 .sample_neighbors(seeds, fanout, &mut sub);
         }
-        // group seeds by owner, remembering original slots
-        let mut groups: Vec<(Vec<NodeId>, Vec<usize>)> =
-            vec![(Vec::new(), Vec::new()); nparts];
+        // group seeds by owner, remembering original slots (reused
+        // scratch — the per-owner split and RNG stream derivation are
+        // unchanged, so sampled neighborhoods are bit-identical)
+        let mut scratch = self.scratch.lock().unwrap();
+        let groups = &mut scratch.groups;
+        if groups.len() != nparts {
+            groups.resize_with(nparts, Default::default);
+        }
+        for g in groups.iter_mut() {
+            g.0.clear();
+            g.1.clear();
+        }
         for (slot, &s) in seeds.iter().enumerate() {
             let owner = self.node_map.owner(s) as usize;
             groups[owner].0.push(s);
@@ -120,8 +143,11 @@ impl DistNeighborSampler {
             let cap = layer_caps[l_total - 1 - j];
             let samples = self.sample_layer(&seeds, fanout, rng);
             let mut next = seeds.clone();
-            let mut seen: FxHashMap<NodeId, ()> =
-                seeds.iter().map(|&s| (s, ())).collect();
+            // dedup set comes from scratch (cleared, capacity retained)
+            let mut scratch = self.scratch.lock().unwrap();
+            let seen = &mut scratch.seen;
+            seen.clear();
+            seen.extend(seeds.iter().map(|&s| (s, ())));
             for s in &samples {
                 for &n in &s.nbrs {
                     if seen.contains_key(&n) {
@@ -134,6 +160,7 @@ impl DistNeighborSampler {
                     next.push(n);
                 }
             }
+            drop(scratch);
             layers.push((seeds, samples));
             seeds = next;
         }

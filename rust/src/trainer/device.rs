@@ -22,7 +22,9 @@ enum Req {
         params: Vec<Vec<f32>>,
         batch: Box<HostBatch>,
         lr: f32,
-        reply: Sender<Result<(Vec<Vec<f32>>, f32)>>,
+        /// Replies with (updated params, loss, the spent batch back —
+        /// so the caller can recycle its buffers through a `BatchPool`).
+        reply: Sender<Result<(Vec<Vec<f32>>, f32, Box<HostBatch>)>>,
     },
     Eval {
         params: Vec<Vec<f32>>,
@@ -103,6 +105,19 @@ impl DeviceHandle {
         batch: HostBatch,
         lr: f32,
     ) -> Result<f32> {
+        self.train_reusing(params, batch, lr).map(|(loss, _)| loss)
+    }
+
+    /// Like [`Self::train`], but hands the spent batch back so its
+    /// buffers can be recycled (§Perf: feed it to
+    /// [`BatchPool::put`](crate::pipeline::BatchPool::put) and the
+    /// sampling thread reuses the `n0 × feat_dim` feature allocation).
+    pub fn train_reusing(
+        &self,
+        params: &mut Vec<Vec<f32>>,
+        batch: HostBatch,
+        lr: f32,
+    ) -> Result<(f32, HostBatch)> {
         let (reply, rx) = channel();
         self.tx
             .send(Req::Train {
@@ -112,9 +127,10 @@ impl DeviceHandle {
                 reply,
             })
             .map_err(|_| anyhow!("executor gone"))?;
-        let (p, loss) = rx.recv().map_err(|_| anyhow!("executor gone"))??;
+        let (p, loss, spent) =
+            rx.recv().map_err(|_| anyhow!("executor gone"))??;
         *params = p;
-        Ok(loss)
+        Ok((loss, *spent))
     }
 
     pub fn eval(
@@ -174,7 +190,7 @@ fn run_executor(
             Req::Train { mut params, batch, lr, reply } => {
                 let r = exe
                     .train_step_with(&mut params, &batch, lr)
-                    .map(|loss| (params, loss));
+                    .map(|loss| (params, loss, batch));
                 let _ = reply.send(r);
             }
             Req::Eval { params, batch, reply } => {

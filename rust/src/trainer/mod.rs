@@ -71,6 +71,17 @@ pub struct TrainReport {
     pub net_bytes: u64,
     pub pcie_bytes: u64,
     pub remote_feature_rows: u64,
+    /// FeatureCache counters aggregated across trainers (0 when the
+    /// cache is disabled). Metered at batch *production*: in the
+    /// non-stop pipeline they include the few prefetched batches the
+    /// teardown never trains on, so compare them with
+    /// `remote_feature_rows` (consumed-side) only qualitatively.
+    pub cache_hit_rows: u64,
+    pub cache_miss_rows: u64,
+    pub cache_remote_bytes_saved: u64,
+    /// Neighbors dropped by layer budget caps, across trainers
+    /// (consumed batches, same accounting as `remote_feature_rows`).
+    pub dropped_neighbors: u64,
     pub final_val_acc: Option<f64>,
     /// Aggregate stage times across all trainers (for the pipeline model
     /// used by the benches — DESIGN.md §2).
@@ -138,6 +149,9 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
             &cfg.variant,
             cfg.seed ^ (t as u64) << 17,
         );
+        // shared recycling pool: spent batches flow back from this
+        // trainer thread to the sampling thread's BatchGen (§Perf)
+        let pool = gen.pool.clone();
         let mut pipeline =
             Pipeline::start(gen, &cfg.pipeline, metrics.clone());
         let device = devices[machine as usize].handle();
@@ -157,9 +171,11 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
                         "trainer.dropped_nbrs",
                         batch.dropped_neighbors as u64,
                     );
-                    let loss = metrics.time("trainer.device", || {
-                        device.train(&mut params, batch, lr)
-                    })?;
+                    let (loss, spent) =
+                        metrics.time("trainer.device", || {
+                            device.train_reusing(&mut params, batch, lr)
+                        })?;
+                    pool.put(spent);
                     losses.push(loss);
                     // synchronous SGD barrier: average replicas
                     metrics.time("trainer.allreduce", || {
@@ -229,6 +245,11 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         net_bytes: delta.net_bytes,
         pcie_bytes: delta.pcie_bytes,
         remote_feature_rows: metrics.counter("trainer.remote_rows"),
+        cache_hit_rows: metrics.counter("cache.hit_rows"),
+        cache_miss_rows: metrics.counter("cache.miss_rows"),
+        cache_remote_bytes_saved: metrics
+            .counter("cache.remote_bytes_saved"),
+        dropped_neighbors: metrics.counter("trainer.dropped_nbrs"),
         final_val_acc,
         sample_secs: metrics.total_time("pipeline.sample").as_secs_f64(),
         batches_produced: metrics.counter("pipeline.batches"),
