@@ -289,6 +289,11 @@ VARIANTS = {
     "rgcn_nc_dev": ShapeConfig("rgcn_nc_dev", "rgcn", "nc", batch=128,
                                fanouts=[5, 5], feat_dim=32, hidden=64,
                                num_classes=16, num_rels=3),
+    # mag-lsc-shaped RGCN: 4 relations matching the typed mag-lsc
+    # generator (DatasetSpec::with_mag_types); the dev shape otherwise
+    "rgcn_nc_mag": ShapeConfig("rgcn_nc_mag", "rgcn", "nc", batch=128,
+                               fanouts=[5, 5], feat_dim=32, hidden=64,
+                               num_classes=16, num_rels=4),
     # paper-shaped profile (§6): 3 layers, fanout 15/10/5 — batch scaled so
     # CPU-interpret execution stays tractable on this testbed
     "sage_nc_paper": ShapeConfig("sage_nc_paper", "sage", "nc", batch=128,
@@ -315,7 +320,10 @@ VARIANTS = {
 }
 
 # Artifacts lowered by default (`make artifacts`); benches may request more.
-DEFAULT_VARIANTS = ["sage_nc_dev", "sage_lp_dev", "gat_nc_dev", "rgcn_nc_dev"]
+DEFAULT_VARIANTS = [
+    "sage_nc_dev", "sage_lp_dev", "gat_nc_dev", "rgcn_nc_dev",
+    "rgcn_nc_mag",
+]
 
 
 def manifest_entry(cfg: ShapeConfig) -> dict:

@@ -6,10 +6,11 @@
 use std::sync::Arc;
 
 use distdglv2::cluster::{Cluster, ClusterSpec};
-use distdglv2::graph::DatasetSpec;
+use distdglv2::graph::{DatasetSpec, FanoutPlan};
 use distdglv2::net::CostModel;
 use distdglv2::runtime::manifest::{artifacts_dir, Manifest};
-use distdglv2::sampler::compact::to_block;
+use distdglv2::sampler::compact::{to_block, ModelKind, ShapeSpec, TaskKind};
+use distdglv2::sampler::DistNeighborSampler;
 use distdglv2::trainer::{AllReduceGroup, DeviceExecutor};
 use distdglv2::util::bench::BenchRunner;
 use distdglv2::util::Rng;
@@ -18,6 +19,7 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(&artifacts_dir())?;
     let vspec = manifest.variant("sage_nc_dev")?.clone();
     let shape = vspec.shape_spec();
+    let plan = FanoutPlan::uniform(&shape.fanouts);
 
     let mut dspec = DatasetSpec::new("hot", 50_000, 300_000);
     dspec.feat_dim = 32;
@@ -39,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     r.bench("sample_blocks (2 layers, fanout 5)", || {
         let s = sampler.sample_blocks(
             &targets,
-            &shape.fanouts,
+            &plan,
             &shape.layer_nodes,
             &mut rng,
         );
@@ -48,7 +50,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- stage 4: compaction --------------------------------------------
     let samples =
-        sampler.sample_blocks(&targets, &shape.fanouts, &shape.layer_nodes, &mut rng);
+        sampler.sample_blocks(&targets, &plan, &shape.layer_nodes, &mut rng);
     r.bench("to_block (compaction)", || {
         let b = to_block(&shape, &samples);
         std::hint::black_box(b.input_nodes.len());
@@ -95,7 +97,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng_em = Rng::new(17);
     let samples_em = gen_em.sampler.sample_blocks(
         &targets,
-        &shape.fanouts,
+        &plan,
         &shape.layer_nodes,
         &mut rng_em,
     );
@@ -171,6 +173,106 @@ fn main() -> anyhow::Result<()> {
         let b = gen.next();
         std::hint::black_box(b.targets.len());
     });
+
+    // --- hetero stage: typed sampling + per-ntype pull ---------------------
+    // mag-lsc-shaped typed graph: 3 ntypes (per-ntype feature tables of
+    // independent dims), 4 etypes, per-etype fanout split of each layer's
+    // K. Needs no AOT artifacts (no device step).
+    let mut hspec =
+        DatasetSpec::new("hot-hetero", 20_000, 120_000).with_mag_types();
+    hspec.feat_dim = 32;
+    hspec.train_frac = 0.2;
+    let hdata = hspec.generate();
+    let hcluster =
+        Cluster::deploy(&hdata, ClusterSpec::new(2, 1), artifacts_dir())?;
+    let hshape = ShapeSpec {
+        name: "hetero-bench".into(),
+        model: ModelKind::Rgcn,
+        task: TaskKind::NodeClassification,
+        batch: 128,
+        fanouts: vec![5, 5],
+        layer_nodes: vec![3072, 768, 128],
+        feat_dim: hspec.feat_dim,
+        num_classes: hspec.num_classes,
+        num_rels: hspec.num_rels,
+    };
+    let hplan = hcluster.fanout_plan(&hshape.fanouts);
+    let hsampler = DistNeighborSampler::new(
+        0,
+        hcluster.sampler_servers.clone(),
+        hcluster.node_map.clone(),
+        hcluster.cost.clone(),
+    );
+    let htargets: Vec<u32> = hcluster.train_sets[0]
+        [..hshape.batch.min(hcluster.train_sets[0].len())]
+        .to_vec();
+    let mut hrng = Rng::new(23);
+    let h_sample = r.bench("hetero sample_blocks (per-etype fanouts)", || {
+        let s = hsampler.sample_blocks(
+            &htargets,
+            &hplan,
+            &hshape.layer_nodes,
+            &mut hrng,
+        );
+        std::hint::black_box(s.len());
+    });
+    let hsamples = hsampler.sample_blocks(
+        &htargets,
+        &hplan,
+        &hshape.layer_nodes,
+        &mut hrng,
+    );
+    let h_compact = r.bench("hetero to_block (rel-segmented)", || {
+        let b = to_block(&hshape, &hsamples);
+        std::hint::black_box(b.input_nodes.len());
+    });
+    let hblock = to_block(&hshape, &hsamples);
+    let h_rows = hblock.input_nodes.len();
+    // zero once: the pull overwrites every real row's typed prefix each
+    // iteration, and the homogeneous pull stages it is compared against
+    // do no in-closure zeroing either
+    let mut hfeats = vec![0f32; hshape.layer_nodes[0] * hshape.feat_dim];
+    let mut hkv = hcluster.kv.client(0, hcluster.policy.clone());
+    let h_pull = r.bench(
+        &format!("hetero typed kv pull ({h_rows} rows, 3 ntype tables)"),
+        || {
+            let n = hkv.pull_typed(
+                &hcluster.features,
+                &hblock.input_nodes,
+                &mut hfeats[..h_rows * hshape.feat_dim],
+                hshape.feat_dim,
+            );
+            std::hint::black_box(n);
+        },
+    );
+    let etype_json: Vec<String> = hblock
+        .etype_edges
+        .iter()
+        .map(|c| c.to_string())
+        .collect();
+    println!(
+        "hetero: sampled edges per etype {:?}",
+        hblock.etype_edges
+    );
+    std::fs::write(
+        "BENCH_hetero.json",
+        format!(
+            "{{\n  \"bench\": \"hotpath.hetero\",\n  \
+             \"ntypes\": 3,\n  \
+             \"etypes\": {},\n  \
+             \"rows\": {h_rows},\n  \
+             \"sample_s\": {:.9},\n  \
+             \"compact_s\": {:.9},\n  \
+             \"typed_pull_s\": {:.9},\n  \
+             \"etype_edges\": [{}]\n}}\n",
+            hshape.num_rels,
+            h_sample.secs(),
+            h_compact.secs(),
+            h_pull.secs(),
+            etype_json.join(", "),
+        ),
+    )?;
+    println!("wrote BENCH_hetero.json");
 
     // --- all-reduce --------------------------------------------------------
     let param_elems: usize = vspec.param_elements();

@@ -221,10 +221,11 @@ pub fn cache_hit_rate(report: &TrainReport) -> f64 {
 }
 
 /// One-line locality/cache summary for bench logs: makes partition
-/// quality, cache effectiveness, and layer-cap pressure visible next to
-/// every figure row instead of buried in per-batch fields.
+/// quality, cache effectiveness, layer-cap pressure, and (on typed runs)
+/// the per-etype sampled-edge mix visible next to every figure row
+/// instead of buried in per-batch fields.
 pub fn locality_summary(report: &TrainReport) -> String {
-    format!(
+    let mut s = format!(
         "remote rows fetched {} | cache hits {} ({:.1}% hit rate, \
          {} B saved) | dropped neighbors {}",
         report.remote_feature_rows,
@@ -232,7 +233,20 @@ pub fn locality_summary(report: &TrainReport) -> String {
         100.0 * cache_hit_rate(report),
         report.cache_remote_bytes_saved,
         report.dropped_neighbors,
-    )
+    );
+    if !report.etype_sampled_edges.is_empty() {
+        let counts: Vec<String> = report
+            .etype_sampled_edges
+            .iter()
+            .enumerate()
+            .map(|(r, c)| format!("r{r}:{c}"))
+            .collect();
+        s.push_str(&format!(
+            " | sampled edges/etype [{}]",
+            counts.join(" ")
+        ));
+    }
+    s
 }
 
 #[cfg(test)]

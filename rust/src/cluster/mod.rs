@@ -9,9 +9,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::graph::{Dataset, NodeId, SplitTag};
+use crate::graph::{Dataset, FanoutPlan, GraphSchema, NodeId, SplitTag};
 use crate::kvstore::{
-    CacheAdmission, FeatureCache, KvCluster, RangePolicy,
+    CacheAdmission, FeatureCache, KvCluster, RangePolicy, TypedFeatures,
 };
 use crate::metrics::Metrics;
 use crate::net::CostModel;
@@ -21,7 +21,7 @@ use crate::partition::{
 };
 use crate::pipeline::{BatchGen, BatchPool};
 use crate::runtime::manifest::VariantSpec;
-use crate::sampler::compact::TaskKind;
+use crate::sampler::compact::{ModelKind, TaskKind};
 use crate::sampler::{BatchScheduler, DistNeighborSampler, SamplerServer};
 use crate::trainer::{split_training_set, DeviceHandle};
 use crate::util::Rng;
@@ -51,6 +51,10 @@ pub struct ClusterSpec {
     pub cache_budget_bytes: usize,
     /// Which fetched remote rows the cache keeps.
     pub cache_admission: CacheAdmission,
+    /// Per-etype fanout weights overriding the schema's (each layer's K
+    /// is split proportionally; see [`FanoutPlan`]). Empty = use the
+    /// schema weights; must have one entry per etype otherwise.
+    pub etype_fanouts: Vec<usize>,
     pub seed: u64,
 }
 
@@ -65,6 +69,7 @@ impl ClusterSpec {
             emulate_network_time: false,
             cache_budget_bytes: 64 << 20,
             cache_admission: CacheAdmission::All,
+            etype_fanouts: Vec::new(),
             seed: 13,
         }
     }
@@ -83,6 +88,10 @@ pub struct DeployStats {
 pub struct Cluster {
     pub spec: ClusterSpec,
     pub artifacts: PathBuf,
+    /// The dataset's typed schema (trivial for homogeneous graphs).
+    pub schema: Arc<GraphSchema>,
+    /// Per-ntype feature-table view shared by every trainer's BatchGen.
+    pub features: TypedFeatures,
     pub cost: Arc<CostModel>,
     pub node_map: Arc<NodeMap>,
     pub kv: Arc<KvCluster>,
@@ -113,6 +122,22 @@ impl Cluster {
         artifacts: PathBuf,
     ) -> Result<Cluster> {
         let n = dataset.n_nodes();
+        let schema = Arc::new(dataset.schema.clone());
+        // the cluster boundary is where type arrays must conform to the
+        // schema — everything downstream indexes by rel/ntype unchecked
+        dataset.graph.validate_schema(&schema)?;
+        anyhow::ensure!(
+            spec.etype_fanouts.is_empty()
+                || spec.etype_fanouts.len() == schema.n_etypes(),
+            "etype_fanouts has {} entries, schema has {} etypes",
+            spec.etype_fanouts.len(),
+            schema.n_etypes()
+        );
+        anyhow::ensure!(
+            spec.etype_fanouts.is_empty()
+                || spec.etype_fanouts.iter().any(|&w| w > 0),
+            "etype_fanouts must have at least one nonzero weight"
+        );
         let t_part = Instant::now();
         let partitioning: Partitioning = match spec.partitioner {
             Partitioner::Metis => {
@@ -121,7 +146,7 @@ impl Cluster {
                         n,
                         &dataset.split,
                         &dataset.graph.node_type,
-                        1,
+                        schema.n_ntypes(),
                     )
                 } else {
                     VertexWeights::uniform(n)
@@ -176,12 +201,14 @@ impl Cluster {
         let policy = Arc::new(RangePolicy::new(NodeMap {
             part_starts: node_map.part_starts.clone(),
         }));
-        kv.register_partitioned(
+        // one feature table per ntype (the homogeneous case registers the
+        // single "feat" table, byte-identical to the untyped layout)
+        let features = TypedFeatures::from_schema(
             "feat",
-            &d2.feats,
-            d2.feat_dim,
-            policy.as_ref(),
+            &schema,
+            Arc::new(d2.graph.node_type.clone()),
         );
+        kv.register_typed(&features, &d2.feats, d2.feat_dim, policy.as_ref());
         let labels_f32: Vec<f32> =
             d2.labels.iter().map(|&l| l as f32).collect();
         kv.register_partitioned("label", &labels_f32, 1, policy.as_ref());
@@ -215,6 +242,8 @@ impl Cluster {
         Ok(Cluster {
             spec,
             artifacts,
+            schema,
+            features,
             cost,
             node_map,
             kv,
@@ -287,6 +316,20 @@ impl Cluster {
     ) -> BatchGen {
         let machine = self.machine_of_trainer(trainer);
         let shape = vspec.shape_spec();
+        // an RGCN variant compiled for fewer relations than the schema
+        // declares would silently zero the out-of-range relations'
+        // messages in the one-hot aggregation — refuse the mismatch at
+        // the same boundary that validates etype_fanouts
+        assert!(
+            shape.model != ModelKind::Rgcn
+                || shape.num_rels >= self.schema.n_etypes(),
+            "variant {:?} compiled for {} relations but the schema \
+             declares {} etypes — regenerate artifacts or align the \
+             dataset's num_rels",
+            shape.name,
+            shape.num_rels,
+            self.schema.n_etypes()
+        );
         let mut sampler = DistNeighborSampler::new(
             machine,
             self.sampler_servers.clone(),
@@ -338,17 +381,32 @@ impl Cluster {
         if let Some(cache) = self.make_feature_cache() {
             kv.attach_cache(cache);
         }
+        let plan = self.fanout_plan(&shape.fanouts);
+        let etype_keys =
+            crate::pipeline::gen::etype_metric_keys(self.schema.n_etypes());
         BatchGen {
             spec: shape,
             scheduler,
             sampler: Arc::new(sampler),
             kv,
             rng: Rng::new(seed ^ 0xBA7C4),
-            feat_name: "feat".into(),
+            plan,
+            features: self.features.clone(),
             label_name: "label".into(),
             metrics: Arc::new(Metrics::new()),
+            etype_keys,
             pool: BatchPool::default(),
             label_scratch: Vec::new(),
+        }
+    }
+
+    /// The per-layer per-etype fanout schedule: each layer's K split by
+    /// the `etype_fanouts` override, or the schema's weights.
+    pub fn fanout_plan(&self, fanouts: &[usize]) -> FanoutPlan {
+        if self.spec.etype_fanouts.is_empty() {
+            FanoutPlan::from_schema(&self.schema, fanouts)
+        } else {
+            FanoutPlan::from_weights(&self.spec.etype_fanouts, fanouts)
         }
     }
 
@@ -538,6 +596,49 @@ mod tests {
         let cache = c2.make_feature_cache().expect("default budget > 0");
         assert!(cache.is_enabled());
         assert_eq!(cache.tensor(), "feat");
+    }
+
+    #[test]
+    fn hetero_deploy_builds_typed_tables_and_plan() {
+        let mut dspec = DatasetSpec::paper_table1("mag-lsc", 100_000);
+        dspec.train_frac = 0.4; // enough labeled papers at this scale
+        let d = dspec.generate();
+        let c = Cluster::deploy(
+            &d,
+            ClusterSpec::new(2, 1),
+            artifacts_dir(),
+        )
+        .unwrap();
+        assert_eq!(c.schema.n_ntypes(), 3);
+        assert_eq!(c.features.names.len(), 3);
+        assert!(c.features.names[0].starts_with("feat."));
+        assert_eq!(c.features.dims[0], d.feat_dim);
+        assert!(c.features.dims[1] < d.feat_dim);
+        // per-etype split of a fanout-5 layer over 4 equal-weight etypes
+        let plan = c.fanout_plan(&[5, 5]);
+        assert_eq!(plan.layer(1).iter().sum::<usize>(), 5);
+        assert_eq!(plan.layer(1).len(), 4);
+        // all training items are papers (ntype 0)
+        for set in &c.train_sets {
+            for &v in set {
+                assert_eq!(
+                    c.features.ntype_of(v),
+                    0,
+                    "non-paper training item {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn etype_fanout_override_must_match_schema() {
+        let d = DatasetSpec::new("ov", 1500, 6000).generate();
+        let mut spec = ClusterSpec::new(2, 1);
+        spec.etype_fanouts = vec![2, 1]; // 2 entries, 1 etype
+        assert!(Cluster::deploy(&d, spec, artifacts_dir()).is_err());
+        let mut spec2 = ClusterSpec::new(2, 1);
+        spec2.etype_fanouts = vec![0]; // all-zero weights rejected
+        assert!(Cluster::deploy(&d, spec2, artifacts_dir()).is_err());
     }
 
     #[test]

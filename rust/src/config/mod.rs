@@ -58,6 +58,13 @@ impl RunConfig {
             }
             "feat_dim" => self.dataset.feat_dim = parse_usize()?,
             "classes" => self.dataset.num_classes = parse_usize()?,
+            // align the dataset's relation count with a compiled RGCN
+            // variant (e.g. `dataset=mag-lsc@1000 num_rels=3` to drive
+            // the 3-relation rgcn_nc_dev artifact). Keys apply in CLI
+            // order, so place it AFTER `dataset=` — the dataset arm
+            // rebuilds the whole spec and would clobber an earlier
+            // override.
+            "num_rels" => self.dataset.num_rels = parse_usize()?,
             "dataset_seed" => self.dataset.seed = value.parse()?,
             "machines" => self.cluster.n_machines = parse_usize()?,
             "trainers" => self.cluster.trainers_per_machine = parse_usize()?,
@@ -81,6 +88,18 @@ impl RunConfig {
             "cache_admission" => {
                 self.cluster.cache_admission =
                     CacheAdmission::parse(value)?
+            }
+            "etype_fanouts" => {
+                // per-etype fanout weights, e.g. "2,1,1,1"; each layer's
+                // K is split proportionally (schema weights when unset)
+                self.cluster.etype_fanouts = value
+                    .split(',')
+                    .map(|w| {
+                        w.trim()
+                            .parse::<usize>()
+                            .with_context(|| format!("{key}={value}"))
+                    })
+                    .collect::<Result<_>>()?;
             }
             "variant" => self.train.variant = value.to_string(),
             "lr" => self.train.lr = value.parse()?,
@@ -107,11 +126,11 @@ impl RunConfig {
             }
             _ => bail!(
                 "unknown key {key:?}; valid: dataset feat_dim classes \
-                 dataset_seed machines trainers partitioner \
+                 num_rels dataset_seed machines trainers partitioner \
                  multi_constraint two_level emulate_network \
-                 cache_budget_bytes cache_admission variant lr \
-                 epochs max_steps eval seed pipeline cpu_prefetch \
-                 gpu_prefetch"
+                 cache_budget_bytes cache_admission etype_fanouts \
+                 variant lr epochs max_steps eval seed pipeline \
+                 cpu_prefetch gpu_prefetch"
             ),
         }
         Ok(())
@@ -217,6 +236,31 @@ mod tests {
         let d = RunConfig::default();
         assert!(d.cluster.cache_budget_bytes > 0);
         assert_eq!(d.cluster.cache_admission, CacheAdmission::All);
+    }
+
+    #[test]
+    fn etype_fanouts_parse() {
+        let cfg = RunConfig::from_args(
+            ["dataset=mag-lsc@100000", "etype_fanouts=2,1,1,1"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.etype_fanouts, vec![2, 1, 1, 1]);
+        assert_eq!(cfg.dataset.num_rels, 4);
+        assert_eq!(cfg.dataset.schema().n_ntypes(), 3);
+        // num_rels aligns the dataset with a compiled variant
+        let aligned = RunConfig::from_args(
+            ["dataset=mag-lsc@100000", "num_rels=3"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(aligned.dataset.num_rels, 3);
+        assert_eq!(aligned.dataset.schema().n_etypes(), 3);
+        assert!(RunConfig::from_args(
+            ["etype_fanouts=2,x".to_string()]
+        )
+        .is_err());
+        // default: no override (schema weights apply)
+        assert!(RunConfig::default().cluster.etype_fanouts.is_empty());
     }
 
     #[test]

@@ -49,6 +49,12 @@ impl GraphBuilder {
         self.node_type = types;
     }
 
+    /// Force a `rel` array in the built graph even when every edge is
+    /// relation 0 (a multi-etype schema requires the array to exist).
+    pub fn mark_relational(&mut self) {
+        self.has_rel = true;
+    }
+
     pub fn n_pending_edges(&self) -> usize {
         self.edges.len()
     }

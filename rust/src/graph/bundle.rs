@@ -11,9 +11,27 @@ use anyhow::{bail, Context, Result};
 
 use super::generate::{Dataset, SplitTag};
 use super::io::{read_f32_vec, write_f32_slice};
+use super::schema::{EdgeTypeSpec, GraphSchema, NodeTypeSpec};
 use super::Graph;
 
 const MAGIC: u32 = 0xD157_B01D;
+/// Bundle format version, tagged so it can never collide with the
+/// name-length field that occupied this position in unversioned v1 files
+/// (names are short; this value is not a plausible length). v2 appended
+/// the [`GraphSchema`] section; v1 (pre-schema) files are rejected with a
+/// descriptive error.
+const VERSION: u32 = 0xDB00_0002;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
 
 fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -26,15 +44,60 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u64(r)? as usize;
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+fn write_schema(w: &mut impl Write, s: &GraphSchema) -> Result<()> {
+    write_u64(w, s.ntypes.len() as u64)?;
+    for t in &s.ntypes {
+        write_str(w, &t.name)?;
+        write_u64(w, t.feat_dim as u64)?;
+    }
+    write_u64(w, s.etypes.len() as u64)?;
+    for e in &s.etypes {
+        write_str(w, &e.name)?;
+        write_u64(w, e.fanout_weight as u64)?;
+    }
+    Ok(())
+}
+
+fn read_schema(r: &mut impl Read) -> Result<GraphSchema> {
+    let nn = read_u64(r)? as usize;
+    let mut ntypes = Vec::with_capacity(nn);
+    for _ in 0..nn {
+        let name = read_str(r)?;
+        let feat_dim = read_u64(r)? as usize;
+        ntypes.push(NodeTypeSpec { name, feat_dim });
+    }
+    let ne = read_u64(r)? as usize;
+    let mut etypes = Vec::with_capacity(ne);
+    for _ in 0..ne {
+        let name = read_str(r)?;
+        let fanout_weight = read_u64(r)? as usize;
+        etypes.push(EdgeTypeSpec { name, fanout_weight });
+    }
+    let s = GraphSchema { ntypes, etypes };
+    s.validate()?;
+    Ok(s)
+}
+
 pub fn save_dataset(d: &Dataset, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(
         File::create(path).with_context(|| format!("create {path:?}"))?,
     );
     w.write_all(&MAGIC.to_le_bytes())?;
-    // name
-    let name = d.name.as_bytes();
-    write_u64(&mut w, name.len() as u64)?;
-    w.write_all(name)?;
+    write_u32(&mut w, VERSION)?;
+    write_str(&mut w, &d.name)?;
     // graph (reuse the graph format inline)
     let tmp = path.with_extension("graph.tmp");
     super::io::save_graph(&d.graph, &tmp)?;
@@ -61,6 +124,8 @@ pub fn save_dataset(d: &Dataset, path: &Path) -> Result<()> {
             SplitTag::None => 0,
         }])?;
     }
+    // typed schema (trivial for homogeneous datasets)
+    write_schema(&mut w, &d.schema)?;
     w.flush()?;
     Ok(())
 }
@@ -74,9 +139,15 @@ pub fn load_dataset(path: &Path) -> Result<Dataset> {
     if u32::from_le_bytes(m) != MAGIC {
         bail!("bad magic in {path:?}");
     }
-    let name_len = read_u64(&mut r)? as usize;
-    let mut name = vec![0u8; name_len];
-    r.read_exact(&mut name)?;
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!(
+            "unsupported bundle version {version:#010x} in {path:?} \
+             ({VERSION:#010x} expected; pre-schema bundles must be \
+             regenerated)"
+        );
+    }
+    let name = read_str(&mut r)?;
     let graph_len = read_u64(&mut r)? as usize;
     let mut graph_bytes = vec![0u8; graph_len];
     r.read_exact(&mut graph_bytes)?;
@@ -107,9 +178,12 @@ pub fn load_dataset(path: &Path) -> Result<Dataset> {
             x => bail!("bad split tag {x}"),
         });
     }
+    let schema = read_schema(&mut r)?;
+    graph.validate_schema(&schema)?;
     Ok(Dataset {
-        name: String::from_utf8(name)?,
+        name,
         graph,
+        schema,
         feats,
         feat_dim,
         labels,
@@ -137,6 +211,21 @@ mod tests {
         assert_eq!(d.labels, d2.labels);
         assert_eq!(d.split, d2.split);
         assert_eq!(d.num_classes, d2.num_classes);
+        assert_eq!(d.schema, d2.schema);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn typed_dataset_roundtrips_schema_and_types() {
+        let d = DatasetSpec::paper_table1("mag-lsc", 100_000).generate();
+        let dir = std::env::temp_dir().join("ddgl_bundle_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("mag.bundle");
+        save_dataset(&d, &p).unwrap();
+        let d2 = load_dataset(&p).unwrap();
+        assert_eq!(d.schema, d2.schema);
+        assert_eq!(d.graph.rel, d2.graph.rel);
+        assert_eq!(d.graph.node_type, d2.graph.node_type);
         std::fs::remove_file(&p).ok();
     }
 

@@ -8,6 +8,7 @@
 //! evaluation exercises), plus label-correlated features so accuracy curves
 //! are meaningful. Scale factors are recorded with every result.
 
+use super::schema::{EdgeTypeSpec, GraphSchema, NodeTypeSpec};
 use super::{Graph, GraphBuilder, NodeId};
 use crate::util::Rng;
 
@@ -20,11 +21,17 @@ pub enum SplitTag {
     None,
 }
 
-/// A generated dataset: graph + features + labels + split.
+/// A generated dataset: graph + schema + features + labels + split.
 pub struct Dataset {
     pub name: String,
     pub graph: Graph,
-    /// Row-major `[n_nodes, feat_dim]`.
+    /// Node/edge type vocabulary; [`GraphSchema::homogeneous`] for plain
+    /// graphs. Every downstream consumer (partitioner, sampler, KVStore,
+    /// executable) keys off this.
+    pub schema: GraphSchema,
+    /// Row-major `[n_nodes, feat_dim]` (the generator's uniform source
+    /// width; per-ntype KVStore tables slice the first `feat_dim(t)`
+    /// columns of each row at registration).
     pub feats: Vec<f32>,
     pub feat_dim: usize,
     pub labels: Vec<u16>,
@@ -66,6 +73,15 @@ pub struct DatasetSpec {
     pub rmat: (f64, f64, f64),
     /// Number of edge relation types (RGCN); 1 = homogeneous.
     pub num_rels: usize,
+    /// Heterogeneous node types as `(name, fraction-of-nodes, feat-dim
+    /// divisor)`; empty = single node type. Types are assigned by
+    /// contiguous id ranges (RMAT communities are id-blocks, so ranges
+    /// stay type-coherent), and ntype `t`'s KVStore feature table is
+    /// `feat_dim / divisor` wide.
+    pub ntypes: Vec<(String, f64, usize)>,
+    /// Edge type names (used when `num_rels > 1`); missing names are
+    /// auto-generated as `rel<r>`.
+    pub etype_names: Vec<String>,
     pub seed: u64,
 }
 
@@ -82,8 +98,62 @@ impl DatasetSpec {
             test_frac: 0.02,
             rmat: (0.57, 0.19, 0.19),
             num_rels: 1,
+            ntypes: Vec::new(),
+            etype_names: Vec::new(),
             seed: 42,
         }
+    }
+
+    /// Apply the MAG-style typed mix: paper/author/institution node types
+    /// (fractions 0.50/0.42/0.08, feature-dim divisors 1/2/4) and 4
+    /// endpoint-derived relations. The single source of the mix — the
+    /// mag-lsc Table-1 arm and the hetero benches both use it, so they
+    /// always measure the same typed shape.
+    pub fn with_mag_types(mut self) -> Self {
+        self.num_rels = 4;
+        self.ntypes = vec![
+            ("paper".to_string(), 0.50, 1),
+            ("author".to_string(), 0.42, 2),
+            ("institution".to_string(), 0.08, 4),
+        ];
+        self.etype_names = vec![
+            "cites".to_string(),
+            "writes".to_string(),
+            "affiliated".to_string(),
+            "interacts".to_string(),
+        ];
+        self
+    }
+
+    /// The [`GraphSchema`] this spec generates (derived from the current
+    /// `feat_dim`/`num_rels`/`ntypes`, so overriding those fields after
+    /// construction keeps the schema consistent).
+    pub fn schema(&self) -> GraphSchema {
+        let ntypes = if self.ntypes.is_empty() {
+            vec![NodeTypeSpec {
+                name: "node".to_string(),
+                feat_dim: self.feat_dim,
+            }]
+        } else {
+            self.ntypes
+                .iter()
+                .map(|(name, _, div)| NodeTypeSpec {
+                    name: name.clone(),
+                    feat_dim: (self.feat_dim / (*div).max(1)).max(1),
+                })
+                .collect()
+        };
+        let etypes = (0..self.num_rels.max(1))
+            .map(|r| EdgeTypeSpec {
+                name: self
+                    .etype_names
+                    .get(r)
+                    .cloned()
+                    .unwrap_or_else(|| format!("rel{r}")),
+                fanout_weight: 1,
+            })
+            .collect();
+        GraphSchema { ntypes, etypes }
     }
 
     /// Paper Table 1 dataset shapes, divided by `scale` (structure-preserving
@@ -127,17 +197,22 @@ impl DatasetSpec {
                 d.train_frac = 0.011;
                 d
             }
-            // 240M nodes / 7B edges / 756 feats, heterogeneous (RGCN)
+            // 240M nodes / 7B edges / 756 feats, heterogeneous (RGCN):
+            // paper/author/institution node types in MAG's rough
+            // proportions; relations derive from endpoint types. Only
+            // papers carry labels and the train/val/test split, and only
+            // papers get full-width features (author/institution tables
+            // are narrower, like MAG's featureless entity types).
             "mag-lsc" => {
                 let mut d = Self::new(
                     "mag-lsc",
                     (240_000_000 / s).max(2000),
                     (7_000_000_000usize / s).max(16_000),
-                );
+                )
+                .with_mag_types();
                 d.feat_dim = 136; // scaled from 756 to keep KVStore in RAM
                 d.num_classes = 153;
                 d.train_frac = 0.005;
-                d.num_rels = 4;
                 d
             }
             _ => panic!("unknown paper dataset {dataset}"),
@@ -146,14 +221,30 @@ impl DatasetSpec {
 
     /// Generate the dataset (deterministic in `seed`).
     pub fn generate(&self) -> Dataset {
+        if !self.ntypes.is_empty() && self.num_rels > 1 {
+            // every declared etype must be reachable from some
+            // endpoint-type pair (the MAG 3x4 shape has its own map)
+            let t = self.ntypes.len();
+            debug_assert!(
+                self.num_rels <= t * (t + 1) / 2,
+                "{} etypes but only {} endpoint-type pairs — some \
+                 relations would never be generated",
+                self.num_rels,
+                t * (t + 1) / 2
+            );
+        }
         let mut rng = Rng::new(self.seed);
-        let graph = self.gen_rmat(&mut rng);
+        let node_type = self.gen_node_types();
+        let graph = self.gen_rmat(&node_type, &mut rng);
         let labels = self.gen_labels(&graph, &mut rng);
         let feats = self.gen_feats(&labels, &mut rng);
-        let split = self.gen_split(&mut rng);
+        let split = self.gen_split(&node_type, &mut rng);
+        let schema = self.schema();
+        debug_assert!(graph.validate_schema(&schema).is_ok());
         Dataset {
             name: self.name.clone(),
             graph,
+            schema,
             feats,
             feat_dim: self.feat_dim,
             labels,
@@ -162,15 +253,64 @@ impl DatasetSpec {
         }
     }
 
+    /// Node types by contiguous id ranges following the spec fractions
+    /// (empty for homogeneous specs). Ranges keep types community-aligned
+    /// because RMAT communities are id-blocks.
+    fn gen_node_types(&self) -> Vec<u8> {
+        if self.ntypes.is_empty() {
+            return Vec::new();
+        }
+        let total: f64 = self.ntypes.iter().map(|(_, f, _)| f).sum();
+        let total = if total > 0.0 { total } else { 1.0 };
+        let n = self.n_nodes;
+        let mut out = vec![(self.ntypes.len() - 1) as u8; n];
+        let mut start = 0usize;
+        for (t, (_, frac, _)) in self.ntypes.iter().enumerate() {
+            let len = ((frac / total) * n as f64).round() as usize;
+            let end = (start + len).min(n);
+            for v in out.iter_mut().take(end).skip(start) {
+                *v = t as u8;
+            }
+            start = end;
+        }
+        out
+    }
+
+    /// Relation of a typed edge: a deterministic map from the (unordered)
+    /// endpoint-type pair into `0..num_rels`. The MAG shape (3 ntypes,
+    /// 4 etypes) gets its semantic map — paper–paper "cites",
+    /// paper–author "writes", author–institution "affiliated", everything
+    /// else the "interacts" catch-all. Other shapes spread pairs across
+    /// all declared etypes by pair index, so no etype is unreachable
+    /// as long as the pair count covers `num_rels` (debug-asserted at
+    /// generation).
+    fn rel_of_types(a: u8, b: u8, num_rels: usize, n_ntypes: usize) -> u8 {
+        let nr = num_rels.max(1);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        if n_ntypes == 3 && nr == 4 {
+            return match (lo, hi) {
+                (0, 0) => 0,
+                (0, 1) => 1,
+                (1, 2) => 2,
+                _ => 3,
+            };
+        }
+        let pair = (hi as usize) * (hi as usize + 1) / 2 + lo as usize;
+        (pair % nr) as u8
+    }
+
     /// RMAT edge sampling: recursively descend a 2^k x 2^k adjacency matrix
     /// choosing quadrants with probabilities (a, b, c, d). Produces
     /// power-law degrees and hierarchical communities.
-    fn gen_rmat(&self, rng: &mut Rng) -> Graph {
+    fn gen_rmat(&self, node_type: &[u8], rng: &mut Rng) -> Graph {
         let levels = (self.n_nodes.max(2) as f64).log2().ceil() as u32;
         let side = 1usize << levels;
         let (a, b, c) = self.rmat;
         let mut builder =
             GraphBuilder::with_capacity(self.n_nodes, self.n_edges * 2);
+        if self.num_rels > 1 {
+            builder.mark_relational();
+        }
         let mut added = 0usize;
         while added < self.n_edges {
             let (mut x, mut y) = (0usize, 0usize);
@@ -192,13 +332,23 @@ impl DatasetSpec {
             if x >= self.n_nodes || y >= self.n_nodes || x == y {
                 continue;
             }
-            let rel = if self.num_rels > 1 {
+            let rel = if self.num_rels <= 1 {
+                0
+            } else if node_type.is_empty() {
                 rng.below(self.num_rels as u64) as u8
             } else {
-                0
+                Self::rel_of_types(
+                    node_type[x],
+                    node_type[y],
+                    self.num_rels,
+                    self.ntypes.len(),
+                )
             };
             builder.add_undirected(x as NodeId, y as NodeId, rel);
             added += 1;
+        }
+        if !node_type.is_empty() {
+            builder.set_node_types(node_type.to_vec());
         }
         builder.build_dedup()
     }
@@ -267,10 +417,17 @@ impl DatasetSpec {
         feats
     }
 
-    fn gen_split(&self, rng: &mut Rng) -> Vec<SplitTag> {
+    /// Train/val/test assignment. Heterogeneous graphs restrict the split
+    /// to ntype 0 (MAG: only papers are labeled); the RNG draw happens for
+    /// every node so the stream — and thus every homogeneous dataset —
+    /// is unchanged.
+    fn gen_split(&self, node_type: &[u8], rng: &mut Rng) -> Vec<SplitTag> {
         (0..self.n_nodes)
-            .map(|_| {
+            .map(|u| {
                 let p = rng.f64();
+                if !node_type.is_empty() && node_type[u] != 0 {
+                    return SplitTag::None;
+                }
                 if p < self.train_frac {
                     SplitTag::Train
                 } else if p < self.train_frac + self.val_frac {
@@ -372,5 +529,74 @@ mod tests {
         assert_eq!(d.graph.rel.len(), d.graph.n_edges());
         assert!(d.graph.rel.iter().any(|&r| r > 0));
         assert!(d.graph.rel.iter().all(|&r| r < 4));
+        d.graph.validate_schema(&d.schema).unwrap();
+    }
+
+    #[test]
+    fn homogeneous_dataset_gets_trivial_schema() {
+        let d = small();
+        assert!(d.schema.is_homogeneous());
+        assert_eq!(d.schema.max_feat_dim(), d.feat_dim);
+        assert!(d.graph.node_type.is_empty());
+        assert!(d.graph.rel.is_empty());
+    }
+
+    #[test]
+    fn mag_lsc_is_typed_end_to_end() {
+        let spec = DatasetSpec::paper_table1("mag-lsc", 100_000);
+        let d = spec.generate();
+        let s = &d.schema;
+        assert_eq!(s.n_ntypes(), 3);
+        assert_eq!(s.n_etypes(), 4);
+        assert_eq!(s.ntypes[0].name, "paper");
+        assert_eq!(s.ntypes[0].feat_dim, spec.feat_dim);
+        assert_eq!(s.ntypes[1].feat_dim, spec.feat_dim / 2);
+        assert_eq!(s.ntypes[2].feat_dim, spec.feat_dim / 4);
+        // typed arrays present, in range, schema-conforming
+        assert_eq!(d.graph.node_type.len(), d.n_nodes());
+        assert_eq!(d.graph.rel.len(), d.graph.n_edges());
+        d.graph.validate_schema(s).unwrap();
+        // all three node types and >= 2 relations actually occur
+        let tset: std::collections::BTreeSet<u8> =
+            d.graph.node_type.iter().copied().collect();
+        assert_eq!(tset.len(), 3);
+        let rset: std::collections::BTreeSet<u8> =
+            d.graph.rel.iter().copied().collect();
+        assert!(rset.len() >= 2, "{rset:?}");
+    }
+
+    #[test]
+    fn typed_relations_are_endpoint_type_deterministic() {
+        let spec = DatasetSpec::paper_table1("mag-lsc", 100_000);
+        let d = spec.generate();
+        let nt = &d.graph.node_type;
+        for u in 0..d.n_nodes() as NodeId {
+            let rels = d.graph.rel_of(u);
+            for (i, &v) in d.graph.neighbors(u).iter().enumerate() {
+                let expect = DatasetSpec::rel_of_types(
+                    nt[u as usize],
+                    nt[v as usize],
+                    spec.num_rels,
+                    spec.ntypes.len(),
+                );
+                assert_eq!(rels[i], expect, "edge ({u},{v})");
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_split_restricted_to_ntype0() {
+        let spec = DatasetSpec::paper_table1("mag-lsc", 100_000);
+        let d = spec.generate();
+        for (u, &tag) in d.split.iter().enumerate() {
+            if tag != SplitTag::None {
+                assert_eq!(d.graph.node_type[u], 0, "labeled non-paper {u}");
+            }
+        }
+        // a generous split over the same dataset shape must find papers
+        let mut spec2 = DatasetSpec::paper_table1("mag-lsc", 100_000);
+        spec2.train_frac = 0.5;
+        let d2 = spec2.generate();
+        assert!(!d2.nodes_with(SplitTag::Train).is_empty());
     }
 }

@@ -1,14 +1,17 @@
 //! Graph storage: immutable CSR structure, builders, synthetic dataset
 //! generators (the paper's OGB/Amazon workloads are reproduced as scaled
-//! RMAT graphs — see DESIGN.md §2), and binary partition IO.
+//! RMAT graphs — see docs/DESIGN.md §2), the typed [`GraphSchema`], and
+//! binary partition IO.
 
 pub mod builder;
 pub mod bundle;
 pub mod generate;
 pub mod io;
+pub mod schema;
 
 pub use builder::GraphBuilder;
 pub use generate::{Dataset, DatasetSpec, SplitTag};
+pub use schema::{EdgeTypeSpec, FanoutPlan, GraphSchema, NodeTypeSpec};
 
 /// Global node identifier (graphs up to 4B nodes).
 pub type NodeId = u32;
@@ -103,6 +106,53 @@ impl Graph {
         }
         Ok(())
     }
+
+    /// [`Self::validate`] plus schema conformance: every `rel` value must
+    /// name one of the schema's etypes and every `node_type` value one of
+    /// its ntypes; a multi-etype (multi-ntype) schema additionally
+    /// requires the per-edge (per-node) type array to be present.
+    pub fn validate_schema(&self, schema: &GraphSchema) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        self.validate()?;
+        schema.validate()?;
+        let ne = schema.n_etypes();
+        let nn = schema.n_ntypes();
+        if ne > 1 {
+            ensure!(
+                self.rel.len() == self.targets.len(),
+                "schema has {ne} edge types but the graph carries no \
+                 per-edge rel array"
+            );
+        }
+        if let Some((i, &r)) = self
+            .rel
+            .iter()
+            .enumerate()
+            .find(|&(_, &r)| r as usize >= ne)
+        {
+            anyhow::bail!(
+                "rel[{i}] = {r} out of range (schema has {ne} etypes)"
+            );
+        }
+        if nn > 1 {
+            ensure!(
+                self.node_type.len() == self.n_nodes(),
+                "schema has {nn} node types but the graph carries no \
+                 per-node type array"
+            );
+        }
+        if let Some((v, &t)) = self
+            .node_type
+            .iter()
+            .enumerate()
+            .find(|&(_, &t)| t as usize >= nn)
+        {
+            anyhow::bail!(
+                "node_type[{v}] = {t} out of range (schema has {nn} ntypes)"
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -142,5 +192,70 @@ mod tests {
         let mut g = line_graph(3);
         g.targets[0] = 99;
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_schema_accepts_conforming_graphs() {
+        // homogeneous graph + trivial schema
+        let g = line_graph(4);
+        g.validate_schema(&GraphSchema::homogeneous(8)).unwrap();
+        // typed graph + matching 2-ntype / 2-etype schema
+        let mut b = GraphBuilder::new(4);
+        b.add_undirected(0, 1, 0);
+        b.add_undirected(1, 2, 1);
+        b.add_undirected(2, 3, 0);
+        b.set_node_types(vec![0, 1, 0, 1]);
+        let g = b.build();
+        let schema = GraphSchema {
+            ntypes: vec![
+                NodeTypeSpec { name: "a".into(), feat_dim: 8 },
+                NodeTypeSpec { name: "b".into(), feat_dim: 4 },
+            ],
+            etypes: vec![
+                EdgeTypeSpec { name: "x".into(), fanout_weight: 1 },
+                EdgeTypeSpec { name: "y".into(), fanout_weight: 1 },
+            ],
+        };
+        g.validate_schema(&schema).unwrap();
+    }
+
+    #[test]
+    fn validate_schema_rejects_out_of_range_rel() {
+        let mut b = GraphBuilder::new(3);
+        b.add_undirected(0, 1, 0);
+        b.add_undirected(1, 2, 3); // rel 3 does not exist below
+        let g = b.build();
+        let err = g
+            .validate_schema(&GraphSchema::homogeneous(8))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rel["), "{err}");
+    }
+
+    #[test]
+    fn validate_schema_rejects_out_of_range_node_type() {
+        let mut b = GraphBuilder::new(3);
+        b.add_undirected(0, 1, 0);
+        b.set_node_types(vec![0, 7, 0]); // ntype 7 does not exist
+        let g = b.build();
+        let err = g
+            .validate_schema(&GraphSchema::homogeneous(8))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("node_type["), "{err}");
+    }
+
+    #[test]
+    fn validate_schema_requires_type_arrays_for_hetero_schemas() {
+        // a 2-etype schema on a graph without a rel array must fail
+        let g = line_graph(3); // no rel, no node_type
+        let schema = GraphSchema {
+            ntypes: vec![NodeTypeSpec { name: "n".into(), feat_dim: 4 }],
+            etypes: vec![
+                EdgeTypeSpec { name: "x".into(), fanout_weight: 1 },
+                EdgeTypeSpec { name: "y".into(), fanout_weight: 1 },
+            ],
+        };
+        assert!(g.validate_schema(&schema).is_err());
     }
 }

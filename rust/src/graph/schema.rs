@@ -1,0 +1,269 @@
+//! Typed graph schema: the single description of a dataset's node and
+//! edge types that every layer of the mini-batch path shares
+//! (docs/DESIGN.md §6) — the generator derives `node_type`/`rel` arrays
+//! from it, the partitioner balances per-ntype counts, the sampler splits
+//! each layer's fanout across etypes, the KVStore keeps one feature table
+//! per ntype, and the RGCN executable receives the sampled relation ids.
+//!
+//! Homogeneous graphs are **not** a separate code path: they use the
+//! trivial schema ([`GraphSchema::homogeneous`], one ntype + one etype),
+//! which degenerates every typed structure to its old untyped layout byte
+//! for byte.
+
+use anyhow::{ensure, Result};
+
+/// One node type: display name + the feature width of its KVStore table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeTypeSpec {
+    pub name: String,
+    pub feat_dim: usize,
+}
+
+/// One edge type: display name + its relative share of each layer's
+/// fanout budget (see [`FanoutPlan`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EdgeTypeSpec {
+    pub name: String,
+    pub fanout_weight: usize,
+}
+
+/// Node/edge type vocabulary of one dataset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GraphSchema {
+    pub ntypes: Vec<NodeTypeSpec>,
+    pub etypes: Vec<EdgeTypeSpec>,
+}
+
+impl GraphSchema {
+    /// The trivial 1-ntype / 1-etype schema every homogeneous graph uses.
+    pub fn homogeneous(feat_dim: usize) -> Self {
+        Self {
+            ntypes: vec![NodeTypeSpec {
+                name: "node".to_string(),
+                feat_dim,
+            }],
+            etypes: vec![EdgeTypeSpec {
+                name: "edge".to_string(),
+                fanout_weight: 1,
+            }],
+        }
+    }
+
+    pub fn n_ntypes(&self) -> usize {
+        self.ntypes.len()
+    }
+
+    pub fn n_etypes(&self) -> usize {
+        self.etypes.len()
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        self.ntypes.len() <= 1 && self.etypes.len() <= 1
+    }
+
+    /// Widest per-ntype feature dim (the padded row width of a batch).
+    pub fn max_feat_dim(&self) -> usize {
+        self.ntypes.iter().map(|t| t.feat_dim).max().unwrap_or(0)
+    }
+
+    /// Per-etype fanout weights (input to [`FanoutPlan::from_weights`]).
+    pub fn fanout_weights(&self) -> Vec<usize> {
+        self.etypes.iter().map(|e| e.fanout_weight).collect()
+    }
+
+    /// Structural validation (non-empty, positive dims, usable weights).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.ntypes.is_empty(), "schema has no node types");
+        ensure!(!self.etypes.is_empty(), "schema has no edge types");
+        for t in &self.ntypes {
+            ensure!(t.feat_dim > 0, "ntype {:?} has feat_dim 0", t.name);
+        }
+        ensure!(
+            self.etypes.iter().any(|e| e.fanout_weight > 0),
+            "every etype has fanout weight 0"
+        );
+        Ok(())
+    }
+}
+
+/// Split a per-layer fanout budget `k` across etypes proportionally to
+/// `weights` (largest-remainder rounding; deterministic; the parts always
+/// sum to exactly `k`). A single weight returns `[k]` — the homogeneous
+/// case stays the plain uniform fanout.
+///
+/// When `k` covers the active (nonzero-weight) etypes, every one of them
+/// is guaranteed ≥ 1 slot, so no relation is silently excluded from
+/// sampling by rounding. Only when `k` is smaller than the number of
+/// active etypes do the lowest-weighted ones get 0 — unavoidable, and
+/// visible in the per-etype sampled-edge counters.
+pub fn split_fanout(k: usize, weights: &[usize]) -> Vec<usize> {
+    if weights.len() <= 1 {
+        return vec![k];
+    }
+    let total: usize = weights.iter().sum();
+    if total == 0 {
+        // degenerate all-zero weights: fall back to an equal split so the
+        // sum-to-k invariant holds
+        return split_fanout(k, &vec![1usize; weights.len()]);
+    }
+    let nonzero = weights.iter().filter(|&&w| w > 0).count();
+    if k >= nonzero {
+        // floor of 1 per active etype, remainder split proportionally
+        let mut parts: Vec<usize> =
+            weights.iter().map(|&w| usize::from(w > 0)).collect();
+        for (p, e) in parts
+            .iter_mut()
+            .zip(split_proportional(k - nonzero, weights))
+        {
+            *p += e;
+        }
+        return parts;
+    }
+    split_proportional(k, weights)
+}
+
+/// Largest-remainder proportional split (parts sum to exactly `k`;
+/// ties break toward the lower index).
+fn split_proportional(k: usize, weights: &[usize]) -> Vec<usize> {
+    let total: usize = weights.iter().sum::<usize>().max(1);
+    let mut parts: Vec<usize> = Vec::with_capacity(weights.len());
+    let mut rems: Vec<(usize, usize)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (r, &w) in weights.iter().enumerate() {
+        let exact = k * w;
+        parts.push(exact / total);
+        assigned += exact / total;
+        rems.push((exact % total, r));
+    }
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, r) in rems.iter().take(k - assigned) {
+        parts[r] += 1;
+    }
+    parts
+}
+
+/// Per-layer, per-etype fanout plan: `layers[l-1][r]` is layer `l`'s
+/// fanout for etype `r`; the per-layer sums equal the block's padded row
+/// width `K_l`, so relation-aware sampling never overflows the compact
+/// layout. A single-etype plan is exactly the classic uniform fanout
+/// schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FanoutPlan {
+    layers: Vec<Vec<usize>>,
+}
+
+impl FanoutPlan {
+    /// Uniform plan (one etype): `fanouts[l-1]` = layer `l`'s K.
+    pub fn uniform(fanouts: &[usize]) -> Self {
+        Self {
+            layers: fanouts.iter().map(|&k| vec![k]).collect(),
+        }
+    }
+
+    /// Split every layer's K across etypes by explicit weights.
+    pub fn from_weights(weights: &[usize], fanouts: &[usize]) -> Self {
+        Self {
+            layers: fanouts
+                .iter()
+                .map(|&k| split_fanout(k, weights))
+                .collect(),
+        }
+    }
+
+    /// Split every layer's K by the schema's etype fanout weights.
+    pub fn from_schema(schema: &GraphSchema, fanouts: &[usize]) -> Self {
+        Self::from_weights(&schema.fanout_weights(), fanouts)
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Per-etype fanouts of layer `l` (1-based, input side first).
+    pub fn layer(&self, l: usize) -> &[usize] {
+        &self.layers[l - 1]
+    }
+
+    /// Total fanout K of layer `l` (the padded row width).
+    pub fn layer_total(&self, l: usize) -> usize {
+        self.layers[l - 1].iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_schema_is_trivial() {
+        let s = GraphSchema::homogeneous(32);
+        assert!(s.is_homogeneous());
+        assert_eq!(s.n_ntypes(), 1);
+        assert_eq!(s.n_etypes(), 1);
+        assert_eq!(s.max_feat_dim(), 32);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn split_fanout_sums_to_k() {
+        assert_eq!(split_fanout(5, &[1]), vec![5]);
+        assert_eq!(split_fanout(5, &[1, 1, 1, 1]), vec![2, 1, 1, 1]);
+        assert_eq!(split_fanout(8, &[3, 1]), vec![6, 2]);
+        assert_eq!(split_fanout(2, &[1, 1, 1]), vec![1, 1, 0]);
+        // all-zero weights degrade to an equal split, never to < k total
+        assert_eq!(split_fanout(10, &[0, 0, 0, 0]), vec![3, 3, 2, 2]);
+        // skewed weights cannot starve an active etype when k covers them
+        assert_eq!(split_fanout(5, &[8, 1, 1, 1]), vec![2, 1, 1, 1]);
+        assert!(split_fanout(6, &[100, 1, 1]).iter().all(|&p| p > 0));
+        for (k, w) in [(7usize, vec![2usize, 5, 3]), (16, vec![1, 1]), (1, vec![9, 1, 1])] {
+            let parts = split_fanout(k, &w);
+            assert_eq!(parts.iter().sum::<usize>(), k, "k={k} w={w:?}");
+            assert_eq!(parts.len(), w.len());
+        }
+    }
+
+    #[test]
+    fn split_fanout_is_deterministic_and_monotone_in_weight() {
+        let a = split_fanout(10, &[4, 2, 1]);
+        let b = split_fanout(10, &[4, 2, 1]);
+        assert_eq!(a, b);
+        assert!(a[0] >= a[1] && a[1] >= a[2], "{a:?}");
+    }
+
+    #[test]
+    fn uniform_plan_matches_classic_fanouts() {
+        let p = FanoutPlan::uniform(&[5, 10]);
+        assert_eq!(p.num_layers(), 2);
+        assert_eq!(p.layer(1), &[5]);
+        assert_eq!(p.layer(2), &[10]);
+        assert_eq!(p.layer_total(2), 10);
+    }
+
+    #[test]
+    fn schema_plan_preserves_layer_totals() {
+        let mut s = GraphSchema::homogeneous(8);
+        s.etypes = vec![
+            EdgeTypeSpec { name: "a".into(), fanout_weight: 2 },
+            EdgeTypeSpec { name: "b".into(), fanout_weight: 1 },
+            EdgeTypeSpec { name: "c".into(), fanout_weight: 1 },
+        ];
+        let p = FanoutPlan::from_schema(&s, &[5, 15]);
+        assert_eq!(p.layer_total(1), 5);
+        assert_eq!(p.layer_total(2), 15);
+        assert_eq!(p.layer(1).len(), 3);
+        assert!(p.layer(1)[0] >= p.layer(1)[1]);
+    }
+
+    #[test]
+    fn invalid_schemas_rejected() {
+        let mut s = GraphSchema::homogeneous(4);
+        s.ntypes[0].feat_dim = 0;
+        assert!(s.validate().is_err());
+        let mut s2 = GraphSchema::homogeneous(4);
+        s2.etypes.clear();
+        assert!(s2.validate().is_err());
+        let mut s3 = GraphSchema::homogeneous(4);
+        s3.etypes[0].fanout_weight = 0;
+        assert!(s3.validate().is_err());
+    }
+}

@@ -8,9 +8,13 @@
 //! trainer memory so [`KvClient::pull`](super::KvClient::pull) serves them
 //! without touching the wire:
 //!
-//! - **Scope** — one cache per trainer per tensor (normally `"feat"`).
-//!   Local rows are never cached (shared memory is already free); only
-//!   rows whose owner is a different machine enter the cache.
+//! - **Scope** — one cache per trainer per tensor group (normally the
+//!   `"feat"` feature tables). Rows are keyed by **(ntype, row id)**: a
+//!   heterogeneous graph's per-ntype tables share one budget, and the
+//!   homogeneous case is the trivial single-ntype key (byte-identical to
+//!   an untyped cache). Local rows are never cached (shared memory is
+//!   already free); only rows whose owner is a different machine enter
+//!   the cache.
 //! - **Admission** — [`CacheAdmission::All`] admits every fetched remote
 //!   row; [`CacheAdmission::Degree`] admits only vertices of degree ≥ a
 //!   threshold, prioritizing the high-degree boundary vertices that
@@ -112,8 +116,14 @@ impl CacheStats {
 /// row payload (map entry + slot record, amortized).
 const ROW_OVERHEAD_BYTES: usize = 24;
 
+/// Composite cache key: (ntype, row id). Homogeneous tensors use ntype 0.
+#[inline]
+fn key(ntype: u8, gid: NodeId) -> u64 {
+    ((ntype as u64) << 32) | gid as u64
+}
+
 struct Slot {
-    gid: NodeId,
+    key: u64,
     /// CLOCK reference bit: set on hit, cleared by a passing hand.
     referenced: bool,
 }
@@ -126,13 +136,22 @@ pub struct FeatureCache {
     budget_bytes: usize,
     admission: CacheAdmission,
     degrees: Option<Arc<Vec<u32>>>,
-    /// Row width; 0 until the first pull reveals the tensor dim.
-    dim: usize,
-    /// Max rows under the byte budget (0 until `dim` is known).
+    /// Per-ntype row widths; empty until the first pull binds them. A
+    /// homogeneous tensor binds the single-entry `[dim]`.
+    dims: Vec<usize>,
+    /// Slot stride = max per-ntype dim (rows narrower than the stride
+    /// only use their prefix). One arena keeps the flat-storage/CLOCK
+    /// machinery identical to the untyped cache; the cost is that a
+    /// narrow ntype's row occupies (and is charged) a full-width slot.
+    /// Per-width arenas would pack more rows into the same budget on
+    /// very skewed dim mixes — revisit if typed hit rates lag.
+    slot_width: usize,
+    /// Max rows under the byte budget (0 until `dims` is known).
     capacity: usize,
-    map: FxHashMap<NodeId, u32>,
+    map: FxHashMap<u64, u32>,
     slots: Vec<Slot>,
-    /// Flat row storage: slot `i` occupies `data[i*dim..(i+1)*dim]`.
+    /// Flat row storage: slot `i` occupies
+    /// `data[i*slot_width..(i+1)*slot_width]`.
     data: Vec<f32>,
     /// Slots released by [`Self::invalidate`], reused before eviction.
     free: Vec<u32>,
@@ -153,7 +172,8 @@ impl FeatureCache {
             budget_bytes,
             admission,
             degrees,
-            dim: 0,
+            dims: Vec::new(),
+            slot_width: 0,
             capacity: 0,
             map: FxHashMap::default(),
             slots: Vec::new(),
@@ -169,6 +189,16 @@ impl FeatureCache {
     /// cache).
     pub fn tensor(&self) -> &str {
         &self.tensor
+    }
+
+    /// Does `name` belong to this cache's tensor group? True for the
+    /// base name itself and for any per-ntype table `base.<ntype>` —
+    /// writes to either must invalidate.
+    pub fn covers(&self, name: &str) -> bool {
+        name == self.tensor
+            || (name.len() > self.tensor.len() + 1
+                && name.starts_with(&self.tensor)
+                && name.as_bytes()[self.tensor.len()] == b'.')
     }
 
     /// False iff the byte budget is 0 (fully disabled, zero overhead).
@@ -187,7 +217,7 @@ impl FeatureCache {
 
     /// Bytes charged against the budget (payload + bookkeeping).
     pub fn used_bytes(&self) -> usize {
-        self.map.len() * (self.dim * 4 + ROW_OVERHEAD_BYTES)
+        self.map.len() * (self.slot_width * 4 + ROW_OVERHEAD_BYTES)
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -202,31 +232,41 @@ impl FeatureCache {
         d
     }
 
-    /// Fix the row width on first use and derive the row capacity from
-    /// the byte budget.
-    pub fn ensure_dim(&mut self, dim: usize) {
-        if self.dim == dim {
+    /// Bind the per-ntype row widths on first use and derive the row
+    /// capacity from the byte budget (slots are `max(dims)` wide so any
+    /// ntype's row fits any slot).
+    pub fn ensure_dims(&mut self, dims: &[usize]) {
+        if self.dims == dims {
             return;
         }
         assert!(
-            self.dim == 0 && self.map.is_empty(),
-            "FeatureCache for {:?} re-bound from dim {} to {}",
+            self.dims.is_empty() && self.map.is_empty(),
+            "FeatureCache for {:?} re-bound from dims {:?} to {:?}",
             self.tensor,
-            self.dim,
-            dim
+            self.dims,
+            dims
         );
-        self.dim = dim;
-        self.capacity = self.budget_bytes / (dim * 4 + ROW_OVERHEAD_BYTES);
+        assert!(!dims.is_empty());
+        self.dims = dims.to_vec();
+        self.slot_width = dims.iter().copied().max().unwrap_or(0).max(1);
+        self.capacity =
+            self.budget_bytes / (self.slot_width * 4 + ROW_OVERHEAD_BYTES);
     }
 
-    /// Copy the cached row for `gid` into `out` (len = dim) and mark it
-    /// recently used. Counts a hit or a miss.
-    pub fn lookup(&mut self, gid: NodeId, out: &mut [f32]) -> bool {
-        match self.map.get(&gid) {
+    /// Single-table convenience form of [`Self::ensure_dims`].
+    pub fn ensure_dim(&mut self, dim: usize) {
+        self.ensure_dims(&[dim]);
+    }
+
+    /// Copy the cached row for `(ntype, gid)` into `out` (len =
+    /// `dims[ntype]`) and mark it recently used. Counts a hit or a miss.
+    pub fn lookup(&mut self, ntype: u8, gid: NodeId, out: &mut [f32]) -> bool {
+        match self.map.get(&key(ntype, gid)) {
             Some(&s) => {
-                let d = self.dim;
+                let d = self.dims[ntype as usize];
+                let w = self.slot_width;
                 let s = s as usize;
-                out[..d].copy_from_slice(&self.data[s * d..(s + 1) * d]);
+                out[..d].copy_from_slice(&self.data[s * w..s * w + d]);
                 self.slots[s].referenced = true;
                 self.stats.hit_rows += 1;
                 self.stats.remote_bytes_saved += (d * 4) as u64;
@@ -239,39 +279,46 @@ impl FeatureCache {
         }
     }
 
-    /// Offer a freshly fetched remote row. Subject to admission; evicts
-    /// via CLOCK when the budget is exhausted.
-    pub fn insert(&mut self, gid: NodeId, row: &[f32]) {
-        if self.capacity == 0 || self.map.contains_key(&gid) {
+    /// Offer a freshly fetched remote row of `(ntype, gid)`. Subject to
+    /// admission; evicts via CLOCK when the budget is exhausted.
+    pub fn insert(&mut self, ntype: u8, gid: NodeId, row: &[f32]) {
+        let k = key(ntype, gid);
+        if self.capacity == 0 || self.map.contains_key(&k) {
             return;
         }
         if !self.admit(gid) {
             self.stats.rejected_rows += 1;
             return;
         }
-        let d = self.dim;
+        let d = self.dims[ntype as usize];
+        let w = self.slot_width;
         let slot = if let Some(s) = self.free.pop() {
             s
         } else if self.slots.len() < self.capacity {
-            self.slots.push(Slot { gid, referenced: false });
-            self.data.resize(self.slots.len() * d, 0.0);
+            self.slots.push(Slot { key: k, referenced: false });
+            self.data.resize(self.slots.len() * w, 0.0);
             (self.slots.len() - 1) as u32
         } else {
             self.evict()
         };
         let i = slot as usize;
-        self.slots[i] = Slot { gid, referenced: false };
-        self.data[i * d..(i + 1) * d].copy_from_slice(&row[..d]);
-        self.map.insert(gid, slot);
+        self.slots[i] = Slot { key: k, referenced: false };
+        self.data[i * w..i * w + d].copy_from_slice(&row[..d]);
+        self.map.insert(k, slot);
     }
 
     /// Drop rows (sparse-update coherence: stale copies must not survive
-    /// a `push_grad` on the cached tensor).
+    /// a `push_grad` on the cached tensor group). The writer does not
+    /// know which ntype a row was cached under, so every bound ntype's
+    /// key is dropped.
     pub fn invalidate(&mut self, ids: &[NodeId]) {
+        let n_ntypes = self.dims.len().max(1) as u8;
         for &gid in ids {
-            if let Some(s) = self.map.remove(&gid) {
-                self.slots[s as usize].referenced = false;
-                self.free.push(s);
+            for t in 0..n_ntypes {
+                if let Some(s) = self.map.remove(&key(t, gid)) {
+                    self.slots[s as usize].referenced = false;
+                    self.free.push(s);
+                }
             }
         }
     }
@@ -300,7 +347,7 @@ impl FeatureCache {
             if s.referenced {
                 s.referenced = false;
             } else {
-                self.map.remove(&s.gid);
+                self.map.remove(&s.key);
                 self.stats.evicted_rows += 1;
                 return i as u32;
             }
@@ -330,7 +377,7 @@ mod tests {
         let mut c = cache_for_rows(8, dim);
         let budget = c.budget_bytes();
         for gid in 0..100u32 {
-            c.insert(gid, &row(gid, dim));
+            c.insert(0, gid, &row(gid, dim));
             assert!(c.used_bytes() <= budget, "over budget at gid {gid}");
         }
         assert_eq!(c.rows(), 8);
@@ -342,14 +389,14 @@ mod tests {
         let dim = 6;
         let mut c = cache_for_rows(16, dim);
         for gid in [3u32, 9, 11] {
-            c.insert(gid, &row(gid, dim));
+            c.insert(0, gid, &row(gid, dim));
         }
         let mut out = vec![0f32; dim];
         for gid in [9u32, 3, 11] {
-            assert!(c.lookup(gid, &mut out));
+            assert!(c.lookup(0, gid, &mut out));
             assert_eq!(out, row(gid, dim), "row {gid}");
         }
-        assert!(!c.lookup(999, &mut out));
+        assert!(!c.lookup(0, 999, &mut out));
         let s = c.stats();
         assert_eq!((s.hit_rows, s.miss_rows), (3, 1));
         assert_eq!(s.remote_bytes_saved, 3 * dim as u64 * 4);
@@ -359,14 +406,14 @@ mod tests {
     fn clock_keeps_recently_referenced_rows() {
         let dim = 2;
         let mut c = cache_for_rows(2, dim);
-        c.insert(1, &row(1, dim));
-        c.insert(2, &row(2, dim));
+        c.insert(0, 1, &row(1, dim));
+        c.insert(0, 2, &row(2, dim));
         let mut out = vec![0f32; dim];
-        assert!(c.lookup(1, &mut out)); // reference row 1
-        c.insert(3, &row(3, dim)); // must evict the unreferenced row 2
-        assert!(c.lookup(1, &mut out), "referenced row was evicted");
-        assert!(!c.lookup(2, &mut out), "unreferenced row survived");
-        assert!(c.lookup(3, &mut out));
+        assert!(c.lookup(0, 1, &mut out)); // reference row 1
+        c.insert(0, 3, &row(3, dim)); // must evict the unreferenced row 2
+        assert!(c.lookup(0, 1, &mut out), "referenced row was evicted");
+        assert!(!c.lookup(0, 2, &mut out), "unreferenced row survived");
+        assert!(c.lookup(0, 3, &mut out));
     }
 
     #[test]
@@ -375,7 +422,7 @@ mod tests {
             FeatureCache::new("feat", 0, CacheAdmission::All, None);
         c.ensure_dim(4);
         assert!(!c.is_enabled());
-        c.insert(1, &row(1, 4));
+        c.insert(0, 1, &row(1, 4));
         assert_eq!(c.rows(), 0);
         assert_eq!(c.stats(), CacheStats::default());
     }
@@ -393,13 +440,13 @@ mod tests {
         );
         c.ensure_dim(dim);
         for gid in 0..4u32 {
-            c.insert(gid, &row(gid, dim));
+            c.insert(0, gid, &row(gid, dim));
         }
         let mut out = vec![0f32; dim];
-        assert!(!c.lookup(0, &mut out)); // degree 1 < 5
-        assert!(c.lookup(1, &mut out)); // degree 10
-        assert!(!c.lookup(2, &mut out)); // degree 2
-        assert!(c.lookup(3, &mut out)); // degree 50
+        assert!(!c.lookup(0, 0, &mut out)); // degree 1 < 5
+        assert!(c.lookup(0, 1, &mut out)); // degree 10
+        assert!(!c.lookup(0, 2, &mut out)); // degree 2
+        assert!(c.lookup(0, 3, &mut out)); // degree 50
         assert_eq!(c.stats().rejected_rows, 2);
     }
 
@@ -408,33 +455,60 @@ mod tests {
         let dim = 3;
         let mut c = cache_for_rows(4, dim);
         for gid in 0..4u32 {
-            c.insert(gid, &row(gid, dim));
+            c.insert(0, gid, &row(gid, dim));
         }
         c.invalidate(&[1, 2]);
         assert_eq!(c.rows(), 2);
         let mut out = vec![0f32; dim];
-        assert!(!c.lookup(1, &mut out));
+        assert!(!c.lookup(0, 1, &mut out));
         // freed slots are reused without evicting live rows
-        c.insert(10, &row(10, dim));
-        c.insert(11, &row(11, dim));
+        c.insert(0, 10, &row(10, dim));
+        c.insert(0, 11, &row(11, dim));
         assert_eq!(c.rows(), 4);
         assert_eq!(c.stats().evicted_rows, 0);
-        assert!(c.lookup(0, &mut out) && c.lookup(3, &mut out));
+        assert!(c.lookup(0, 0, &mut out) && c.lookup(0, 3, &mut out));
     }
 
     #[test]
     fn take_delta_reports_increments_once() {
         let dim = 2;
         let mut c = cache_for_rows(4, dim);
-        c.insert(1, &row(1, dim));
+        c.insert(0, 1, &row(1, dim));
         let mut out = vec![0f32; dim];
-        c.lookup(1, &mut out);
+        c.lookup(0, 1, &mut out);
         let d1 = c.take_delta();
         assert_eq!(d1.hit_rows, 1);
         let d2 = c.take_delta();
         assert_eq!(d2, CacheStats::default());
-        c.lookup(1, &mut out);
+        c.lookup(0, 1, &mut out);
         assert_eq!(c.take_delta().hit_rows, 1);
+    }
+
+    #[test]
+    fn typed_keys_are_disjoint_and_use_their_own_dims() {
+        // two ntypes sharing one budget: same row id under different
+        // ntypes are distinct entries with their own row widths
+        let dims = [4usize, 2];
+        let budget = 8 * (4 * 4 + ROW_OVERHEAD_BYTES);
+        let mut c =
+            FeatureCache::new("feat", budget, CacheAdmission::All, None);
+        c.ensure_dims(&dims);
+        let wide = [1.0f32, 2.0, 3.0, 4.0];
+        let narrow = [9.0f32, 8.0];
+        c.insert(0, 5, &wide);
+        c.insert(1, 5, &narrow);
+        assert_eq!(c.rows(), 2);
+        let mut out4 = [0f32; 4];
+        let mut out2 = [0f32; 2];
+        assert!(c.lookup(0, 5, &mut out4));
+        assert_eq!(out4, wide);
+        assert!(c.lookup(1, 5, &mut out2));
+        assert_eq!(out2, narrow);
+        // misses on the other ntype's ids
+        assert!(!c.lookup(0, 6, &mut out4));
+        assert!(!c.lookup(1, 6, &mut out2));
+        // bytes saved respect per-ntype dims: 4*4 + 2*4
+        assert_eq!(c.stats().remote_bytes_saved, (4 * 4 + 2 * 4) as u64);
     }
 
     #[test]

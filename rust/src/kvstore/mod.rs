@@ -19,6 +19,12 @@
 //! remote pull path: repeated boundary-vertex rows are served from trainer
 //! memory with CLOCK eviction under a configurable byte budget, cutting
 //! the dominant network cost of mini-batch generation.
+//!
+//! Heterogeneous graphs store **one feature table per node type**
+//! ([`TypedFeatures`], docs/DESIGN.md §4) with independent row widths;
+//! `KvClient::pull_typed` routes each row to its ntype's table and the
+//! cache keys by `(ntype, row)`. Homogeneous graphs are the trivial
+//! single-table view of the same machinery.
 
 pub mod cache;
 pub mod embedding;
@@ -28,4 +34,4 @@ pub mod store;
 pub use cache::{CacheAdmission, CacheStats, FeatureCache};
 pub use embedding::EmbeddingTable;
 pub use policy::{HashPolicy, PartitionPolicy, RangePolicy};
-pub use store::{KvClient, KvCluster, KvServer};
+pub use store::{KvClient, KvCluster, KvServer, TypedFeatures};

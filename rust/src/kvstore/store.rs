@@ -5,11 +5,84 @@ use std::sync::{Arc, RwLock};
 
 use rustc_hash::FxHashMap;
 
-use crate::graph::NodeId;
+use crate::graph::{GraphSchema, NodeId};
 use crate::net::CostModel;
 
 use super::cache::{CacheStats, FeatureCache};
 use super::policy::PartitionPolicy;
+
+/// View over the per-ntype feature tables of one deployment: tensor name
+/// and row width per node type, plus the node→type lookup (empty = every
+/// node is type 0). A homogeneous graph uses the trivial single-entry
+/// view whose tensor name is the bare base name, so the typed pull path
+/// degenerates to the classic one byte for byte — same code, trivial
+/// schema.
+#[derive(Clone)]
+pub struct TypedFeatures {
+    /// Base tensor name ("feat"); also what the [`FeatureCache`] binds.
+    pub base: String,
+    /// Per-ntype tensor names: `base` itself when homogeneous, else
+    /// `base.<ntype-name>`.
+    pub names: Vec<String>,
+    /// Per-ntype row widths.
+    pub dims: Vec<usize>,
+    /// Node → ntype (new-ID order); empty = all type 0.
+    pub node_type: Arc<Vec<u8>>,
+}
+
+impl TypedFeatures {
+    pub fn homogeneous(base: &str, dim: usize) -> Self {
+        Self {
+            base: base.to_string(),
+            names: vec![base.to_string()],
+            dims: vec![dim],
+            node_type: Arc::new(Vec::new()),
+        }
+    }
+
+    /// Build the view a [`GraphSchema`] implies. `node_type` must be in
+    /// the same (relabeled) ID space the KVStore is registered in.
+    pub fn from_schema(
+        base: &str,
+        schema: &GraphSchema,
+        node_type: Arc<Vec<u8>>,
+    ) -> Self {
+        if schema.n_ntypes() <= 1 {
+            return Self::homogeneous(base, schema.max_feat_dim());
+        }
+        Self {
+            base: base.to_string(),
+            names: schema
+                .ntypes
+                .iter()
+                .map(|t| format!("{base}.{}", t.name))
+                .collect(),
+            dims: schema.ntypes.iter().map(|t| t.feat_dim).collect(),
+            node_type,
+        }
+    }
+
+    pub fn n_ntypes(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.names.len() == 1
+    }
+
+    #[inline]
+    pub fn ntype_of(&self, gid: NodeId) -> u8 {
+        if self.node_type.is_empty() {
+            0
+        } else {
+            self.node_type[gid as usize]
+        }
+    }
+
+    pub fn max_dim(&self) -> usize {
+        self.dims.iter().copied().max().unwrap_or(0)
+    }
+}
 
 /// One named tensor shard on a server: `n_local x dim`, row-major.
 struct Shard {
@@ -57,22 +130,27 @@ impl KvServer {
         }
     }
 
-    /// Copy row `locals[i]` straight into `out[slots[i]*dim..]` — the
-    /// scatter variant [`KvClient::pull`] uses to skip the intermediate
-    /// response buffer (§Perf: one copy per row instead of two).
+    /// Copy row `locals[i]` straight into
+    /// `out[slots[i]*stride .. slots[i]*stride + dim]` — the scatter
+    /// variant [`KvClient::pull`] uses to skip the intermediate response
+    /// buffer (§Perf: one copy per row instead of two). `stride == dim`
+    /// is the classic dense layout; typed pulls use a wider stride and
+    /// leave the row tail to the caller.
     pub fn read_rows_scattered(
         &self,
         name: &str,
         locals: &[u32],
         slots: &[usize],
         out: &mut [f32],
+        stride: usize,
     ) {
         let shard = self.shard(name);
         let dim = shard.dim;
+        debug_assert!(stride >= dim);
         let data = shard.data.read().unwrap();
         for (&l, &slot) in locals.iter().zip(slots) {
             let src = &data[l as usize * dim..(l as usize + 1) * dim];
-            out[slot * dim..(slot + 1) * dim].copy_from_slice(src);
+            out[slot * stride..slot * stride + dim].copy_from_slice(src);
         }
     }
 
@@ -166,6 +244,47 @@ impl KvCluster {
         }
     }
 
+    /// Register the per-ntype feature tables a [`TypedFeatures`] view
+    /// describes. `feats` is the uniform `n x src_dim` source matrix;
+    /// ntype `t`'s table keeps the first `dims[t]` columns of the rows
+    /// whose node is of type `t` (other rows stay zero and are never
+    /// pulled through the typed path). The single-table view registers
+    /// the source matrix as-is — byte-identical to the untyped layout.
+    ///
+    /// Capacity tradeoff: every table spans all `n` rows so the shared
+    /// `RangePolicy` local ids work unchanged — at R ntypes that stores
+    /// zero rows for the (R-1)/R of nodes not of each type. Compacting
+    /// to per-ntype row indexes needs a typed local-id map threaded
+    /// through the policy layer; deliberately out of scope here.
+    pub fn register_typed(
+        &self,
+        tf: &TypedFeatures,
+        feats: &[f32],
+        src_dim: usize,
+        policy: &dyn PartitionPolicy,
+    ) {
+        if tf.is_single() {
+            assert_eq!(tf.dims[0], src_dim);
+            self.register_partitioned(&tf.names[0], feats, src_dim, policy);
+            return;
+        }
+        let n = feats.len() / src_dim.max(1);
+        for (t, (name, &dim)) in
+            tf.names.iter().zip(&tf.dims).enumerate()
+        {
+            assert!(dim <= src_dim, "ntype {name} dim {dim} > {src_dim}");
+            let mut rows = vec![0f32; n * dim];
+            for gid in 0..n {
+                if tf.ntype_of(gid as NodeId) as usize == t {
+                    rows[gid * dim..(gid + 1) * dim].copy_from_slice(
+                        &feats[gid * src_dim..gid * src_dim + dim],
+                    );
+                }
+            }
+            self.register_partitioned(name, &rows, dim, policy);
+        }
+    }
+
     pub fn client(
         self: &Arc<Self>,
         machine: u32,
@@ -178,6 +297,8 @@ impl KvCluster {
             cache: None,
             pull_groups: Vec::new(),
             push_groups: Vec::new(),
+            typed_groups: Vec::new(),
+            slot_scratch: Vec::new(),
         }
     }
 }
@@ -194,10 +315,16 @@ pub struct KvClient {
     pub machine: u32,
     policy: Arc<dyn PartitionPolicy>,
     cache: Option<FeatureCache>,
-    /// Reusable per-owner (locals, out-slots) grouping scratch for `pull`.
+    /// Reusable per-owner (locals, id-indices) grouping scratch for
+    /// `pull`/`pull_typed`.
     pull_groups: Vec<(Vec<u32>, Vec<usize>)>,
     /// Reusable per-owner (locals, grads) grouping scratch for `push_grad`.
     push_groups: Vec<(Vec<u32>, Vec<f32>)>,
+    /// Reusable per-ntype (ids, out-slots) grouping scratch for
+    /// `pull_typed`.
+    typed_groups: Vec<(Vec<NodeId>, Vec<usize>)>,
+    /// Reusable slot-mapping scratch for the typed scatter.
+    slot_scratch: Vec<usize>,
 }
 
 impl KvClient {
@@ -238,9 +365,131 @@ impl KvClient {
             .dim_of_or(name)
             .unwrap_or_else(|| self.remote_dim(name));
         assert!(out.len() >= ids.len() * dim);
-        // group by owner, remembering destination slots (reused scratch)
+        let use_cache = self.cache_gate(name, &[dim]);
+        self.pull_strided(name, dim, dim, 0, ids, None, out, use_cache)
+    }
+
+    /// Should a pull of `name` consult the [`FeatureCache`]? Centralized
+    /// so every pull path gates — and binds the per-ntype dims — the
+    /// same way.
+    fn cache_gate(&mut self, name: &str, dims: &[usize]) -> bool {
+        let on = self
+            .cache
+            .as_ref()
+            .is_some_and(|c| c.is_enabled() && c.tensor() == name);
+        if on {
+            self.cache.as_mut().unwrap().ensure_dims(dims);
+        }
+        on
+    }
+
+    /// Typed pull: row `ids[i]` comes from its node type's table (width
+    /// `tf.dims[t]`) and lands at `out[slot * stride ..]`, with the row
+    /// tail `dims[t]..stride` zeroed — callers only zero the padding
+    /// rows beyond their real ids. The cache is consulted under
+    /// `(ntype, id)` keys when it binds `tf.base`. Single-table views
+    /// delegate to [`Self::pull`] — homogeneous graphs run the exact
+    /// same path through their trivial schema.
+    ///
+    /// Wire modeling: each ntype's rows go out as that table's own
+    /// per-owner batched request (a per-tensor KV protocol, like
+    /// DistDGL's); a cross-table per-owner batch would amortize the
+    /// request latency further but is not modeled.
+    pub fn pull_typed(
+        &mut self,
+        tf: &TypedFeatures,
+        ids: &[NodeId],
+        out: &mut [f32],
+        stride: usize,
+    ) -> usize {
+        if tf.is_single() {
+            let dim = tf.dims[0];
+            if stride == dim {
+                return self.pull(&tf.names[0], ids, out);
+            }
+            // wider batch rows than the table: strided single-table pull
+            assert!(stride >= dim);
+            assert!(out.len() >= ids.len() * stride);
+            let use_cache = self.cache_gate(&tf.base, &[dim]);
+            return self.pull_strided(
+                &tf.names[0],
+                dim,
+                stride,
+                0,
+                ids,
+                Option::None,
+                out,
+                use_cache,
+            );
+        }
+        assert!(stride >= tf.max_dim());
+        assert!(out.len() >= ids.len() * stride);
+        let use_cache = self.cache_gate(&tf.base, &tf.dims);
+        // bucket ids by ntype (reused scratch), then one strided
+        // sub-pull per ntype against its own table
+        let nt = tf.n_ntypes();
+        let mut tg = std::mem::take(&mut self.typed_groups);
+        if tg.len() != nt {
+            tg.resize_with(nt, Default::default);
+        }
+        for g in tg.iter_mut() {
+            g.0.clear();
+            g.1.clear();
+        }
+        for (slot, &gid) in ids.iter().enumerate() {
+            let t = tf.ntype_of(gid) as usize;
+            tg[t].0.push(gid);
+            tg[t].1.push(slot);
+        }
+        let mut remote_rows = 0usize;
+        for (t, (tids, tslots)) in tg.iter().enumerate() {
+            if tids.is_empty() {
+                continue;
+            }
+            remote_rows += self.pull_strided(
+                &tf.names[t],
+                tf.dims[t],
+                stride,
+                t as u8,
+                tids,
+                Some(tslots.as_slice()),
+                out,
+                use_cache,
+            );
+        }
+        self.typed_groups = tg;
+        remote_rows
+    }
+
+    /// Shared pull core: rows of `name` (width `dim`) for `ids`, written
+    /// at `slot * stride` where row `j`'s slot is `slots[j]` (`None` =
+    /// `j`, the classic dense layout). Cache lookups/inserts are keyed
+    /// `(ntype, id)`.
+    #[allow(clippy::too_many_arguments)]
+    fn pull_strided(
+        &mut self,
+        name: &str,
+        dim: usize,
+        stride: usize,
+        ntype: u8,
+        ids: &[NodeId],
+        slots: Option<&[usize]>,
+        out: &mut [f32],
+        use_cache: bool,
+    ) -> usize {
+        // strided rows: zero each row's dims..stride tail up front (one
+        // cheap pass; prefixes are fully overwritten below), so callers
+        // never pay a full-buffer memset (§Perf). No-op when stride==dim.
+        if stride > dim {
+            for (j, _) in ids.iter().enumerate() {
+                let slot = slots.map_or(j, |s| s[j]);
+                out[slot * stride + dim..(slot + 1) * stride].fill(0.0);
+            }
+        }
+        // group by owner, remembering each id's index (reused scratch)
         let nparts = self.policy.n_parts();
         let mut groups = std::mem::take(&mut self.pull_groups);
+        let mut slot_scratch = std::mem::take(&mut self.slot_scratch);
         if groups.len() != nparts {
             groups.resize_with(nparts, Default::default);
         }
@@ -248,26 +497,24 @@ impl KvClient {
             g.0.clear();
             g.1.clear();
         }
-        let use_cache = self
-            .cache
-            .as_ref()
-            .is_some_and(|c| c.is_enabled() && c.tensor() == name);
-        if use_cache {
-            self.cache.as_mut().unwrap().ensure_dim(dim);
-        }
-        for (slot, &gid) in ids.iter().enumerate() {
+        for (j, &gid) in ids.iter().enumerate() {
+            let slot = slots.map_or(j, |s| s[j]);
             let owner = self.policy.owner(gid) as usize;
             if use_cache && owner as u32 != self.machine {
                 let c = self.cache.as_mut().unwrap();
-                if c.lookup(gid, &mut out[slot * dim..(slot + 1) * dim]) {
+                if c.lookup(
+                    ntype,
+                    gid,
+                    &mut out[slot * stride..slot * stride + dim],
+                ) {
                     continue;
                 }
             }
             groups[owner].0.push(self.policy.local_of(gid));
-            groups[owner].1.push(slot);
+            groups[owner].1.push(j);
         }
         let mut remote_rows = 0usize;
-        for (owner, (locals, slots)) in groups.iter().enumerate() {
+        for (owner, (locals, idxs)) in groups.iter().enumerate() {
             if locals.is_empty() {
                 continue;
             }
@@ -294,18 +541,28 @@ impl KvClient {
                 }
             }
             // copy straight into the output slots (local and remote alike)
-            server.read_rows_scattered(name, locals, slots, out);
+            let slot_buf: &[usize] = match slots {
+                Option::None => idxs,
+                Some(s) => {
+                    slot_scratch.clear();
+                    slot_scratch.extend(idxs.iter().map(|&j| s[j]));
+                    &slot_scratch
+                }
+            };
+            server.read_rows_scattered(name, locals, slot_buf, out, stride);
             if use_cache && owner as u32 != self.machine {
                 let c = self.cache.as_mut().unwrap();
-                for &slot in slots.iter() {
+                for (&j, &slot) in idxs.iter().zip(slot_buf) {
                     c.insert(
-                        ids[slot],
-                        &out[slot * dim..(slot + 1) * dim],
+                        ntype,
+                        ids[j],
+                        &out[slot * stride..slot * stride + dim],
                     );
                 }
             }
         }
         self.pull_groups = groups;
+        self.slot_scratch = slot_scratch;
         remote_rows
     }
 
@@ -319,9 +576,10 @@ impl KvClient {
         lr: f32,
     ) {
         // coherence: a sparse update through this client must not leave
-        // stale cached copies behind
+        // stale cached copies behind — covers() also matches the typed
+        // per-ntype tables (`base.<ntype>`)
         if let Some(c) = self.cache.as_mut() {
-            if c.tensor() == name {
+            if c.covers(name) {
                 c.invalidate(ids);
             }
         }
@@ -597,6 +855,117 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// 30 nodes over 3 machines, 2 ntypes: even ids type 0 (dim 4), odd
+    /// ids type 1 (dim 2); stride 4 output rows.
+    fn typed_cluster(
+    ) -> (Arc<KvCluster>, Arc<dyn PartitionPolicy>, TypedFeatures, Vec<f32>)
+    {
+        let nm = NodeMap { part_starts: vec![0, 10, 25, 30] };
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(RangePolicy::new(nm));
+        let cost = Arc::new(CostModel::default());
+        let cluster = KvCluster::new(3, cost);
+        let src = rows(30, 4);
+        let node_type: Vec<u8> =
+            (0..30).map(|g| (g % 2) as u8).collect();
+        let tf = TypedFeatures {
+            base: "feat".into(),
+            names: vec!["feat.even".into(), "feat.odd".into()],
+            dims: vec![4, 2],
+            node_type: Arc::new(node_type),
+        };
+        cluster.register_typed(&tf, &src, 4, policy.as_ref());
+        (cluster, policy, tf, src)
+    }
+
+    #[test]
+    fn typed_pull_routes_rows_to_their_tables() {
+        let (cluster, policy, tf, src) = typed_cluster();
+        let mut client = cluster.client(1, policy);
+        let ids: Vec<NodeId> = vec![12, 1, 29, 14, 0, 27];
+        let stride = 4;
+        let mut out = vec![f32::NAN; ids.len() * stride];
+        let remote = client.pull_typed(&tf, &ids, &mut out, stride);
+        assert!(remote > 0);
+        for (i, &gid) in ids.iter().enumerate() {
+            let dim = tf.dims[tf.ntype_of(gid) as usize];
+            assert_eq!(
+                &out[i * stride..i * stride + dim],
+                &src[gid as usize * 4..gid as usize * 4 + dim],
+                "row {gid}"
+            );
+            // the tail beyond the typed dim is zeroed by the pull
+            for &x in &out[i * stride + dim..(i + 1) * stride] {
+                assert_eq!(x, 0.0, "row {gid} tail not zeroed");
+            }
+        }
+    }
+
+    #[test]
+    fn typed_pull_cache_is_byte_identical_and_keyed_per_ntype() {
+        let (cluster, policy, tf, _) = typed_cluster();
+        let mut client = cluster.client(1, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        let ids: Vec<NodeId> = vec![0, 1, 26, 29, 0, 27];
+        let stride = 4;
+        let mut cold = vec![0f32; ids.len() * stride];
+        let fetched_cold = client.pull_typed(&tf, &ids, &mut cold, stride);
+        let bytes_cold = cluster.cost.network_bytes();
+        assert!(fetched_cold > 0 && bytes_cold > 0);
+        let mut warm = vec![0f32; ids.len() * stride];
+        let fetched_warm = client.pull_typed(&tf, &ids, &mut warm, stride);
+        assert_eq!(fetched_warm, 0, "warm typed pull hit the wire");
+        assert_eq!(cluster.cost.network_bytes(), bytes_cold);
+        assert_eq!(cold, warm);
+        let s = client.cache_stats().unwrap();
+        assert!(s.hit_rows > 0);
+    }
+
+    #[test]
+    fn push_to_typed_table_invalidates_typed_cache_rows() {
+        // a sparse update on a per-ntype table must not leave a stale
+        // (ntype, row) entry behind
+        let (cluster, policy, tf, _) = typed_cluster();
+        let mut client = cluster.client(1, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        let ids: Vec<NodeId> = vec![27]; // odd -> ntype 1, remote for m1
+        let stride = 4;
+        let mut out = vec![0f32; stride];
+        client.pull_typed(&tf, &ids, &mut out, stride); // warm the cache
+        let before = out[..2].to_vec();
+        let grads = vec![3.0f32, 3.0];
+        client.push_grad("feat.odd", &ids, &grads, 0.5);
+        client.pull_typed(&tf, &ids, &mut out, stride);
+        assert_eq!(out[0], before[0] - 1.5, "stale typed cached row served");
+        assert_eq!(out[1], before[1] - 1.5);
+    }
+
+    #[test]
+    fn homogeneous_typed_view_matches_plain_pull() {
+        // the trivial single-table view must be byte- and meter-identical
+        // to a plain named pull (same code path)
+        let dim = 4;
+        let (c1, p1, data) = range_cluster(dim);
+        let (c2, p2, _) = range_cluster(dim);
+        let tf = TypedFeatures::homogeneous("feat", dim);
+        let mut plain = c1.client(1, p1);
+        let mut typed = c2.client(1, p2);
+        let ids: Vec<NodeId> = vec![12, 0, 29, 14, 0];
+        let mut a = vec![0f32; ids.len() * dim];
+        let mut b = vec![0f32; ids.len() * dim];
+        let ra = plain.pull("feat", &ids, &mut a);
+        let rb = typed.pull_typed(&tf, &ids, &mut b, dim);
+        assert_eq!(ra, rb);
+        assert_eq!(a, b);
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &a[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim]
+            );
+        }
+        assert_eq!(c1.cost.network_bytes(), c2.cost.network_bytes());
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //! [`halo`] then materializes *physical* partitions (core + HALO vertices,
 //! §5.3 Figure 6) and [`relabel`] renumbers global IDs so each partition's
 //! core vertices form a contiguous range (owner lookup = binary search in a
-//! `nparts`-sized array; global→local = one subtraction — §5.3).
+//! `nparts`-sized array; global→local = one subtraction — §5.3). See
+//! docs/DESIGN.md §3 for how this fits the whole system; typed graphs add
+//! one balance constraint per node type (docs/DESIGN.md §6).
 
 pub mod coarsen;
 pub mod halo;

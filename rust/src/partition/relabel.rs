@@ -88,6 +88,9 @@ pub fn relabel(p: &Partitioning) -> Relabeling {
 pub fn relabel_graph(g: &Graph, r: &Relabeling) -> Graph {
     let n = g.n_nodes();
     let mut b = GraphBuilder::with_capacity(n, g.n_edges());
+    if !g.rel.is_empty() {
+        b.mark_relational(); // keep the rel array even if all-zero
+    }
     for u in 0..n as NodeId {
         let nu = r.old_to_new[u as usize];
         let rels = g.rel_of(u);
@@ -123,6 +126,7 @@ pub fn relabel_dataset(d: &Dataset, r: &Relabeling) -> Dataset {
     Dataset {
         name: d.name.clone(),
         graph: relabel_graph(&d.graph, r),
+        schema: d.schema.clone(),
         feats,
         feat_dim: dim,
         labels,

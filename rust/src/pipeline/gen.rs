@@ -13,8 +13,8 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::graph::NodeId;
-use crate::kvstore::KvClient;
+use crate::graph::{FanoutPlan, NodeId};
+use crate::kvstore::{KvClient, TypedFeatures};
 use crate::metrics::Metrics;
 use crate::runtime::executable::HostBatch;
 use crate::sampler::compact::{to_block, ShapeSpec, TaskKind};
@@ -71,13 +71,20 @@ pub struct BatchGen {
     pub sampler: Arc<DistNeighborSampler>,
     pub kv: KvClient,
     pub rng: Rng,
-    /// Name of the feature tensor in the KVStore.
-    pub feat_name: String,
+    /// Per-layer, per-etype fanout schedule (uniform for homogeneous
+    /// graphs; per-layer totals equal `spec.fanouts`).
+    pub plan: FanoutPlan,
+    /// Per-ntype feature-table view (the trivial single-table view for
+    /// homogeneous graphs).
+    pub features: TypedFeatures,
     /// Name of the label tensor (dim-1 f32 rows); empty = no labels (lp).
     pub label_name: String,
     /// Sink for per-batch locality/cache counters (the pipeline installs
     /// its shared instance at start).
     pub metrics: Arc<Metrics>,
+    /// Precomputed `sampler.etype_edges.<r>` metric keys (§Perf: no
+    /// per-batch `format!` on the hot path); see [`etype_metric_keys`].
+    pub etype_keys: Vec<String>,
     /// Spent-batch recycling (see [`BatchPool`]).
     pub pool: BatchPool,
     /// Reusable staging buffer for label-row pulls.
@@ -104,11 +111,19 @@ impl BatchGen {
     /// Stages 2–4 for an explicit target set (shared by train/eval paths).
     pub fn materialize(&mut self, target: &Target) -> HostBatch {
         let spec = &self.spec;
+        // a plan whose layer totals exceed the spec's K would make
+        // to_block truncate per-seed samples, silently dropping the
+        // highest relations first — catch the misconfiguration here
+        debug_assert!(
+            (1..=self.plan.num_layers())
+                .all(|l| self.plan.layer_total(l) == spec.fanouts[l - 1]),
+            "fanout plan totals disagree with spec.fanouts"
+        );
         let flat = target.flat_nodes();
-        // stage 2: distributed neighbor sampling
+        // stage 2: distributed neighbor sampling (≤ k_r per etype)
         let samples = self.sampler.sample_blocks(
             &flat,
-            &spec.fanouts,
+            &self.plan,
             &spec.layer_nodes,
             &mut self.rng,
         );
@@ -117,7 +132,8 @@ impl BatchGen {
 
         // stage 3: CPU prefetch — features for the deduped input frontier
         // into a recycled buffer. §Perf: only the padding tail needs
-        // zeroing; the real rows are fully overwritten by the pull below.
+        // zeroing here — the pull overwrites every real row's typed
+        // prefix and zeroes its dims..stride tail itself.
         let HostBatch {
             mut feats,
             mut labels,
@@ -135,10 +151,11 @@ impl BatchGen {
             feats.set_len(n0 * f);
         }
         feats[real * f..].fill(0.0);
-        let remote_rows = self.kv.pull(
-            &self.feat_name,
+        let remote_rows = self.kv.pull_typed(
+            &self.features,
             &block.input_nodes[..real],
             &mut feats[..real * f],
+            f,
         );
 
         // labels / masks for the targets
@@ -184,6 +201,18 @@ impl BatchGen {
             "sampler.dropped_neighbors",
             block.dropped_neighbors as u64,
         );
+        for (r, &c) in block.etype_edges.iter().enumerate() {
+            if c > 0 {
+                match self.etype_keys.get(r) {
+                    Some(key) => self.metrics.inc(key, c),
+                    // data rels beyond the spec's etypes (mis-matched
+                    // variant): rare, allocate the key on demand
+                    Option::None => self
+                        .metrics
+                        .inc(&format!("sampler.etype_edges.{r}"), c),
+                }
+            }
+        }
         if let Some(d) = self.kv.take_cache_delta() {
             self.metrics.inc("cache.hit_rows", d.hit_rows);
             self.metrics.inc("cache.miss_rows", d.miss_rows);
@@ -210,10 +239,20 @@ impl BatchGen {
     }
 }
 
-/// Test-support constructors (tiny dataset; 1..n machines).
+/// The `sampler.etype_edges.<r>` counter names for `n_etypes` relations,
+/// built once per [`BatchGen`] so the per-batch metering loop never
+/// formats strings.
+pub fn etype_metric_keys(n_etypes: usize) -> Vec<String> {
+    (0..n_etypes)
+        .map(|r| format!("sampler.etype_edges.{r}"))
+        .collect()
+}
+
+/// Test-support constructors (tiny dataset; 1..n machines) and the
+/// shared sampled-batch builder used by device/executable tests.
 pub mod tests_support {
     use super::*;
-    use crate::graph::DatasetSpec;
+    use crate::graph::{Dataset, DatasetSpec};
     use crate::kvstore::{
         CacheAdmission, FeatureCache, KvCluster, RangePolicy,
     };
@@ -241,8 +280,36 @@ pub mod tests_support {
         cache_budget_bytes: usize,
     ) -> BatchGen {
         let spec_d = DatasetSpec::new("tiny", 1000, 4000);
+        tiny_gen_from(spec_d, n_train, batch, nparts, cache_budget_bytes)
+    }
+
+    /// Heterogeneous variant of [`tiny_gen_parts`]: 2 node types (dims
+    /// 32/16), 3 edge types, RGCN-shaped blocks with per-etype fanouts.
+    pub fn tiny_gen_hetero(
+        n_train: usize,
+        batch: usize,
+        nparts: usize,
+        cache_budget_bytes: usize,
+    ) -> BatchGen {
+        let mut spec_d = DatasetSpec::new("tiny-h", 1000, 4000);
+        spec_d.num_rels = 3;
+        spec_d.ntypes = vec![
+            ("a".to_string(), 0.6, 1),
+            ("b".to_string(), 0.4, 2),
+        ];
+        tiny_gen_from(spec_d, n_train, batch, nparts, cache_budget_bytes)
+    }
+
+    fn tiny_gen_from(
+        spec_d: DatasetSpec,
+        n_train: usize,
+        batch: usize,
+        nparts: usize,
+        cache_budget_bytes: usize,
+    ) -> BatchGen {
         let d = spec_d.generate();
         let n = d.n_nodes();
+        let hetero = !d.schema.is_homogeneous();
         let p = if nparts == 1 {
             Partitioning { nparts: 1, assign: vec![0; n] }
         } else {
@@ -273,13 +340,13 @@ pub mod tests_support {
         let policy = Arc::new(RangePolicy::new(NodeMap {
             part_starts: node_map.part_starts.clone(),
         }));
-        // features/labels registered in relabeled id order
-        kv.register_partitioned(
+        // per-ntype feature tables + labels, in relabeled id order
+        let features = TypedFeatures::from_schema(
             "feat",
-            &d2.feats,
-            d2.feat_dim,
-            policy.as_ref(),
+            &d2.schema,
+            Arc::new(d2.graph.node_type.clone()),
         );
+        kv.register_typed(&features, &d2.feats, d2.feat_dim, policy.as_ref());
         let labels_f32: Vec<f32> =
             d2.labels.iter().map(|&l| l as f32).collect();
         kv.register_partitioned("label", &labels_f32, 1, policy.as_ref());
@@ -294,8 +361,8 @@ pub mod tests_support {
         }
 
         let spec = ShapeSpec {
-            name: "tiny".into(),
-            model: ModelKind::Sage,
+            name: spec_d.name.clone(),
+            model: if hetero { ModelKind::Rgcn } else { ModelKind::Sage },
             task: TaskKind::NodeClassification,
             batch,
             fanouts: vec![3, 3],
@@ -306,8 +373,10 @@ pub mod tests_support {
             ],
             feat_dim: d.feat_dim,
             num_classes: d.num_classes,
-            num_rels: 1,
+            num_rels: spec_d.num_rels,
         };
+        let plan = FanoutPlan::from_schema(&d2.schema, &spec.fanouts);
+        let etype_keys = etype_metric_keys(spec.num_rels);
         let train: Vec<NodeId> = (0..n_train as NodeId).collect();
         BatchGen {
             spec,
@@ -315,18 +384,84 @@ pub mod tests_support {
             sampler,
             kv: client,
             rng: Rng::new(11),
-            feat_name: "feat".into(),
+            plan,
+            features,
             label_name: "label".into(),
             metrics: Arc::new(Metrics::new()),
+            etype_keys,
             pool: BatchPool::default(),
             label_scratch: Vec::new(),
+        }
+    }
+
+    /// Build a [`HostBatch`] whose block structure comes from *real*
+    /// neighbor sampling over a generated graph (single machine), with
+    /// random features/labels. This is the batch source for device /
+    /// executable tests — relation ids are the sampled ones, never
+    /// synthesized (the old `rand_batch` fabricated them from an RNG,
+    /// which silently trained RGCN on noise relations).
+    pub fn sampled_batch(
+        spec: &crate::runtime::manifest::VariantSpec,
+        seed: u64,
+    ) -> HostBatch {
+        sampled_shape_batch(&spec.shape_spec(), seed)
+    }
+
+    /// [`sampled_batch`] for a bare [`ShapeSpec`].
+    pub fn sampled_shape_batch(shape: &ShapeSpec, seed: u64) -> HostBatch {
+        let mut dspec = DatasetSpec::new("dev-sampled", 4000, 16_000);
+        dspec.num_rels = shape.num_rels;
+        dspec.seed = seed ^ 0x5EED;
+        let d: Dataset = dspec.generate();
+        let n = d.n_nodes();
+        let p = Partitioning { nparts: 1, assign: vec![0; n] };
+        let r = relabel::relabel(&p);
+        let d2 = relabel::relabel_dataset(&d, &r);
+        let parts = build_partitions(&d2.graph, &r.node_map);
+        let servers: Vec<Arc<SamplerServer>> = parts
+            .into_iter()
+            .map(|pp| Arc::new(SamplerServer::new(0, Arc::new(pp))))
+            .collect();
+        let sampler = DistNeighborSampler::new(
+            0,
+            servers,
+            Arc::new(r.node_map),
+            Arc::new(CostModel::default()),
+        );
+        let mut rng = Rng::new(seed);
+        let targets: Vec<NodeId> =
+            (0..shape.batch.min(n) as NodeId).collect();
+        let plan = FanoutPlan::from_schema(&d2.schema, &shape.fanouts);
+        let samples = sampler.sample_blocks(
+            &targets,
+            &plan,
+            &shape.layer_nodes,
+            &mut rng,
+        );
+        let block = to_block(shape, &samples);
+        let n0 = shape.layer_nodes[0];
+        let f = shape.feat_dim;
+        let nl = *shape.layer_nodes.last().unwrap();
+        HostBatch {
+            feats: (0..n0 * f).map(|_| rng.normal() as f32).collect(),
+            layers: block.layers,
+            labels: (0..nl)
+                .map(|_| {
+                    rng.below(shape.num_classes.max(1) as u64) as i32
+                })
+                .collect(),
+            label_mask: vec![1.0; nl],
+            pair_mask: vec![1.0; shape.batch],
+            targets: block.targets,
+            remote_rows: 0,
+            dropped_neighbors: block.dropped_neighbors,
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::tests_support::{tiny_gen, tiny_gen_parts};
+    use super::tests_support::{tiny_gen, tiny_gen_hetero, tiny_gen_parts};
     use super::*;
 
     #[test]
@@ -425,6 +560,103 @@ mod tests {
             pooled.recycle(b); // buffers reused by the next batch
         }
         assert!(!pooled.pool.is_empty());
+    }
+
+    /// Regression for the old `rand_batch` bug: the relation ids a batch
+    /// carries must be exactly the ones the sampler drew, never
+    /// synthesized. Re-runs the sampler with a cloned RNG and compares
+    /// every real edge slot of every layer.
+    #[test]
+    fn batch_rel_ids_equal_sampled_rels() {
+        let mut gen = tiny_gen_hetero(64, 16, 1, 0);
+        let target = gen.scheduler.next_batch();
+        let flat = target.flat_nodes();
+        let mut probe_rng = gen.rng.clone();
+        let samples = gen.sampler.sample_blocks(
+            &flat,
+            &gen.plan,
+            &gen.spec.layer_nodes,
+            &mut probe_rng,
+        );
+        let batch = gen.materialize(&target);
+        let l_total = gen.spec.fanouts.len();
+        let mut real_edges = 0usize;
+        let mut nonzero_rels = 0usize;
+        for (j, (_, nbrs)) in samples.iter().enumerate() {
+            let l = l_total - j; // samples are outermost-first
+            let lb = &batch.layers[l - 1];
+            let k = gen.spec.fanouts[l - 1];
+            for (i, s) in nbrs.iter().enumerate() {
+                for kk in 0..s.nbrs.len().min(k) {
+                    if lb.nbr_mask[i * k + kk] > 0.0 {
+                        assert_eq!(
+                            lb.rel[i * k + kk],
+                            s.rels[kk] as i32,
+                            "layer {l} row {i} slot {kk}"
+                        );
+                        real_edges += 1;
+                        if s.rels[kk] > 0 {
+                            nonzero_rels += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(real_edges > 0, "no real edges sampled");
+        assert!(nonzero_rels > 0, "degenerate test: only rel-0 edges");
+    }
+
+    #[test]
+    fn hetero_batch_respects_typed_tables_and_fanouts() {
+        let mut gen = tiny_gen_hetero(64, 16, 1, 0);
+        let b = gen.next();
+        // typed run flows through per-ntype tables…
+        assert_eq!(gen.features.names.len(), 2);
+        assert!(gen.features.names[0].starts_with("feat."));
+        // …and meters per-etype sampled-edge counts
+        let mut etype_total = 0u64;
+        for r in 0..gen.spec.num_rels {
+            etype_total +=
+                gen.metrics.counter(&format!("sampler.etype_edges.{r}"));
+        }
+        assert!(etype_total > 0, "no per-etype counters metered");
+        // per-etype fanout caps hold per row in every layer
+        for (l, lb) in b.layers.iter().enumerate() {
+            let k = gen.spec.fanouts[l];
+            let caps = gen.plan.layer(l + 1);
+            let n_rows = lb.self_idx.len();
+            for i in 0..n_rows {
+                let mut counts = vec![0usize; gen.spec.num_rels];
+                for kk in 0..k {
+                    if lb.nbr_mask[i * k + kk] > 0.0 {
+                        counts[lb.rel[i * k + kk] as usize] += 1;
+                    }
+                }
+                for (r, &c) in counts.iter().enumerate() {
+                    assert!(
+                        c <= caps[r],
+                        "layer {} row {i}: rel {r} has {c} > {}",
+                        l + 1,
+                        caps[r]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_cached_gen_is_byte_identical_to_uncached() {
+        let mut plain = tiny_gen_hetero(128, 16, 2, 0);
+        let mut cached = tiny_gen_hetero(128, 16, 2, 8 << 20);
+        let steps = 2 * plain.batches_per_epoch();
+        for step in 0..steps {
+            let a = plain.next();
+            let b = cached.next();
+            assert_eq!(batch_fields(&a), batch_fields(&b), "step {step}");
+            assert_eq!(a.label_mask, b.label_mask, "step {step}");
+        }
+        let stats = cached.kv.cache_stats().unwrap();
+        assert!(stats.hit_rows > 0, "typed cache never hit: {stats:?}");
     }
 
     #[test]

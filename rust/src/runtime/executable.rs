@@ -39,6 +39,9 @@ pub struct HostBatch {
 
 impl HostBatch {
     /// Host→device payload size (what the GPU prefetcher moves, §5.5.2).
+    /// The relation-segmented `seg_*` arrays are host-side observability
+    /// and are not shipped — the dense `rel` array is what the RGCN HLO
+    /// consumes.
     pub fn h2d_bytes(&self) -> u64 {
         let mut b = self.feats.len() * 4
             + self.labels.len() * 4
@@ -319,52 +322,12 @@ impl ModelExecutable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::gen::tests_support::sampled_batch;
     use crate::runtime::manifest::artifacts_dir;
-    use crate::sampler::compact::LayerBlock;
-    use crate::util::Rng;
 
     fn make_batch(spec: &VariantSpec, seed: u64) -> HostBatch {
-        let mut rng = Rng::new(seed);
-        let n = &spec.layer_nodes;
-        let mut layers = Vec::new();
-        for l in 1..=spec.fanouts.len() {
-            let k = spec.fanouts[l - 1];
-            let nl = n[l];
-            let nprev = n[l - 1];
-            layers.push(LayerBlock {
-                self_idx: (0..nl)
-                    .map(|_| rng.below(nprev as u64) as i32)
-                    .collect(),
-                nbr_idx: (0..nl * k)
-                    .map(|_| rng.below(nprev as u64) as i32)
-                    .collect(),
-                nbr_mask: (0..nl * k)
-                    .map(|_| if rng.f32() < 0.8 { 1.0 } else { 0.0 })
-                    .collect(),
-                rel: if spec.num_rels > 1 {
-                    (0..nl * k)
-                        .map(|_| rng.below(spec.num_rels as u64) as i32)
-                        .collect()
-                } else {
-                    Vec::new()
-                },
-            });
-        }
-        let nl = *n.last().unwrap();
-        HostBatch {
-            feats: (0..n[0] * spec.feat_dim)
-                .map(|_| rng.normal() as f32)
-                .collect(),
-            layers,
-            labels: (0..nl)
-                .map(|_| rng.below(spec.num_classes.max(1) as u64) as i32)
-                .collect(),
-            label_mask: vec![1.0; nl],
-            pair_mask: vec![1.0; spec.batch],
-            targets: Vec::new(),
-            remote_rows: 0,
-            dropped_neighbors: 0,
-        }
+        // real sampled block structure; rels are the sampled ones
+        sampled_batch(spec, seed)
     }
 
     fn env() -> Option<RuntimeEnv> {

@@ -47,7 +47,7 @@ impl ShapeSpec {
 }
 
 /// One layer's padded index arrays (layer l: dst array length `n_l`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct LayerBlock {
     /// `i32[n_l]` — position of dst node i in the layer-(l-1) node array.
     pub self_idx: Vec<i32>,
@@ -55,8 +55,21 @@ pub struct LayerBlock {
     pub nbr_idx: Vec<i32>,
     /// `f32[n_l * K]` — 1.0 real neighbor / 0.0 padding.
     pub nbr_mask: Vec<f32>,
-    /// `i32[n_l * K]` — relation ids (RGCN only, else empty).
+    /// `i32[n_l * K]` — the *sampled* relation id per edge slot (RGCN
+    /// variants only; this is what the executable's `rel_l` input ships).
     pub rel: Vec<i32>,
+    /// Relation-segmented CSR of the real (mask = 1) edges — one segment
+    /// per etype, built for RGCN-shaped specs over typed data (other
+    /// models skip the construction cost; the per-etype counts in
+    /// [`Block::etype_edges`] are kept for every typed run): etype `r`'s
+    /// edges are `(seg_dst[j], seg_src[j])` for
+    /// `j in seg_ptr[r] as usize .. seg_ptr[r + 1] as usize`, where
+    /// `seg_dst` indexes this layer's dst rows and `seg_src` the
+    /// layer-(l-1) node array. Host-side observability + future per-etype
+    /// kernels; not part of the device payload (the dense `rel` is).
+    pub seg_ptr: Vec<u32>,
+    pub seg_dst: Vec<i32>,
+    pub seg_src: Vec<i32>,
 }
 
 /// A compacted mini-batch structure: everything the HLO needs except the
@@ -72,6 +85,10 @@ pub struct Block {
     /// Neighbors that had to be dropped because a layer's node budget
     /// (`layer_nodes[l]`) was exhausted — observability for cap tuning.
     pub dropped_neighbors: usize,
+    /// Kept (mask = 1) edges per etype, summed across layers; empty when
+    /// the sampled data is homogeneous. Feeds the `sampler.etype_edges.*`
+    /// metrics and the bench locality summary.
+    pub etype_edges: Vec<u64>,
 }
 
 /// Build the padded block from multi-layer samples.
@@ -92,8 +109,30 @@ pub fn to_block(
         spec.layer_nodes[l_total]
     );
 
+    // typed data? (homogeneous samples carry no rels and skip all
+    // segment work — the trivial-schema path is byte-identical).
+    // §Perf: the per-layer relation bound is tracked while edges are
+    // collected — no extra pass over the sampled edge set.
+    let data_rels = samples
+        .iter()
+        .any(|(_, nbrs)| nbrs.iter().any(|s| !s.rels.is_empty()));
+    // per-etype counters are cheap and kept for every typed run; the
+    // CSR segments only matter to the relation-aware (RGCN) executable
+    // path, so other models skip their per-batch construction cost
+    let build_seg = data_rels && spec.model == ModelKind::Rgcn;
+    // pre-sized to the spec's etypes so never-sampled trailing relations
+    // still show up as explicit zero counts (grows on demand if the data
+    // carries rels beyond the spec)
+    let mut etype_edges: Vec<u64> = if data_rels {
+        vec![0; spec.num_rels.max(1)]
+    } else {
+        Vec::new()
+    };
+
     let mut layers_rev: Vec<LayerBlock> = Vec::with_capacity(l_total);
     let mut dropped = 0usize;
+    // (rel, dst row, src pos) of kept edges — reused per layer
+    let mut kept: Vec<(u8, i32, i32)> = Vec::new();
 
     // node array of the current dst layer (real entries only) + its index
     let mut dst_nodes: Vec<NodeId> = targets.clone();
@@ -120,6 +159,8 @@ pub fn to_block(
         } else {
             Vec::new()
         };
+        kept.clear();
+        let mut layer_max_rel = 0u8;
 
         for (i, s) in nbrs.iter().enumerate() {
             self_idx[i] = index[&dst_nodes[i]];
@@ -140,14 +181,60 @@ pub fn to_block(
                 };
                 nbr_idx[i * k + kk] = pos;
                 nbr_mask[i * k + kk] = 1.0;
+                let r = s.rels.get(kk).copied().unwrap_or(0);
                 if !rel.is_empty() {
-                    rel[i * k + kk] =
-                        s.rels.get(kk).copied().unwrap_or(0) as i32;
+                    rel[i * k + kk] = r as i32;
+                }
+                if data_rels {
+                    let ri = r as usize;
+                    if etype_edges.len() <= ri {
+                        etype_edges.resize(ri + 1, 0);
+                    }
+                    etype_edges[ri] += 1;
+                    if build_seg {
+                        kept.push((r, i as i32, pos));
+                        layer_max_rel = layer_max_rel.max(r);
+                    }
                 }
             }
         }
 
-        layers_rev.push(LayerBlock { self_idx, nbr_idx, nbr_mask, rel });
+        // relation-segmented CSR of this layer's kept edges; the segment
+        // count covers the schema's etypes and anything observed beyond
+        // them (a mis-matched variant must not index out of bounds)
+        let (seg_ptr, seg_dst, seg_src) = if build_seg {
+            let n_rels =
+                spec.num_rels.max(1).max(layer_max_rel as usize + 1);
+            let mut ptr = vec![0u32; n_rels + 1];
+            for &(r, _, _) in &kept {
+                ptr[r as usize + 1] += 1;
+            }
+            for r in 0..n_rels {
+                ptr[r + 1] += ptr[r];
+            }
+            let mut cursor = ptr.clone();
+            let mut dst = vec![0i32; kept.len()];
+            let mut src = vec![0i32; kept.len()];
+            for &(r, d, s_pos) in &kept {
+                let c = cursor[r as usize] as usize;
+                dst[c] = d;
+                src[c] = s_pos;
+                cursor[r as usize] += 1;
+            }
+            (ptr, dst, src)
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+
+        layers_rev.push(LayerBlock {
+            self_idx,
+            nbr_idx,
+            nbr_mask,
+            rel,
+            seg_ptr,
+            seg_dst,
+            seg_src,
+        });
         dst_nodes = src_nodes;
     }
 
@@ -157,6 +244,7 @@ pub fn to_block(
         targets,
         layers: layers_rev,
         dropped_neighbors: dropped,
+        etype_edges,
     }
 }
 
@@ -236,6 +324,78 @@ mod tests {
         assert_eq!(l1.nbr_mask[2 * 2], 0.0); // 30 -> 50 masked out
     }
 
+    /// Typed hand-built samples: dense rel slots and the per-etype CSR
+    /// must both reflect exactly the sampled relation ids.
+    #[test]
+    fn rel_segments_match_sampled_rels() {
+        let mut sp = spec(2, vec![2, 2], vec![8, 8, 4]);
+        sp.model = ModelKind::Rgcn;
+        sp.num_rels = 3;
+        let samples = vec![
+            (
+                vec![10, 20],
+                vec![
+                    SampledNbrs { nbrs: vec![20, 30], rels: vec![2, 0] },
+                    SampledNbrs { nbrs: vec![40], rels: vec![1] },
+                ],
+            ),
+            (
+                vec![10, 20, 30, 40],
+                vec![
+                    SampledNbrs { nbrs: vec![30], rels: vec![1] },
+                    SampledNbrs { nbrs: vec![], rels: vec![] },
+                    SampledNbrs { nbrs: vec![50], rels: vec![0] },
+                    SampledNbrs { nbrs: vec![10], rels: vec![2] },
+                ],
+            ),
+        ];
+        let b = to_block(&sp, &samples);
+        // dense rel (what the RGCN executable receives): layer 2
+        let l2 = &b.layers[1];
+        assert_eq!(&l2.rel[..2], &[2, 0]); // 10 -> 20(rel 2), 30(rel 0)
+        assert_eq!(l2.rel[2], 1); // 20 -> 40(rel 1)
+        // per-etype CSR segments of layer 2: rel counts 1/1/1
+        assert_eq!(l2.seg_ptr, vec![0, 1, 2, 3]);
+        // rel-0 edge is (dst row 0, src pos of 30 = 2)
+        assert_eq!((l2.seg_dst[0], l2.seg_src[0]), (0, 2));
+        // rel-1 edge is (dst row 1, src pos of 40 = 3)
+        assert_eq!((l2.seg_dst[1], l2.seg_src[1]), (1, 3));
+        // rel-2 edge is (dst row 0, src pos of 20 = 1)
+        assert_eq!((l2.seg_dst[2], l2.seg_src[2]), (0, 1));
+        // totals across both layers: rels {0: 2, 1: 2, 2: 2}
+        assert_eq!(b.etype_edges, vec![2, 2, 2]);
+        // every seg edge agrees with the dense arrays
+        for lb in &b.layers {
+            let k = 2;
+            for r in 0..3usize {
+                for j in lb.seg_ptr[r] as usize..lb.seg_ptr[r + 1] as usize {
+                    let (d, s) = (lb.seg_dst[j] as usize, lb.seg_src[j]);
+                    let row = &lb.nbr_idx[d * k..(d + 1) * k];
+                    let hit = row
+                        .iter()
+                        .enumerate()
+                        .any(|(kk, &p)| {
+                            p == s
+                                && lb.nbr_mask[d * k + kk] > 0.0
+                                && lb.rel[d * k + kk] == r as i32
+                        });
+                    assert!(hit, "seg edge (r={r}, dst={d}, src={s})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn homogeneous_samples_build_no_segments() {
+        let sp = spec(2, vec![2, 2], vec![8, 8, 4]);
+        let b = to_block(&sp, &hand_samples());
+        assert!(b.etype_edges.is_empty());
+        for lb in &b.layers {
+            assert!(lb.seg_ptr.is_empty());
+            assert!(lb.seg_dst.is_empty() && lb.seg_src.is_empty());
+        }
+    }
+
     #[test]
     fn padded_rows_have_zero_mask() {
         let sp = spec(2, vec![2, 2], vec![16, 8, 4]);
@@ -310,7 +470,7 @@ mod tests {
                 let mut rng = crate::util::Rng::new(*seed);
                 let samples = sampler.sample_blocks(
                     targets,
-                    &sp.fanouts,
+                    &crate::graph::FanoutPlan::uniform(&sp.fanouts),
                     &sp.layer_nodes,
                     &mut rng,
                 );

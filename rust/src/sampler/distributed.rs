@@ -7,7 +7,7 @@ use std::sync::{Arc, Mutex};
 
 use rustc_hash::FxHashMap;
 
-use crate::graph::NodeId;
+use crate::graph::{FanoutPlan, NodeId};
 use crate::net::CostModel;
 use crate::partition::NodeMap;
 use crate::util::Rng;
@@ -52,16 +52,17 @@ impl DistNeighborSampler {
         }
     }
 
-    /// Sample one layer for `seeds`; result[i] belongs to seeds[i].
+    /// Sample one layer for `seeds` with per-etype fanouts (`&[k]` is the
+    /// classic uniform sampler); result[i] belongs to seeds[i].
     pub fn sample_layer(
         &self,
         seeds: &[NodeId],
-        fanout: usize,
+        fanouts: &[usize],
         rng: &mut Rng,
     ) -> Vec<SampledNbrs> {
         let nparts = self.servers.len();
         if nparts == 1 {
-            return self.servers[0].sample_neighbors(seeds, fanout, rng);
+            return self.servers[0].sample_neighbors(seeds, fanouts, rng);
         }
         // §Perf fast path: locality-aware splits make all-local seed sets
         // the common case — skip the grouping pass and its allocations.
@@ -72,7 +73,7 @@ impl DistNeighborSampler {
         {
             let mut sub = rng.split(self.machine as u64);
             return self.servers[self.machine as usize]
-                .sample_neighbors(seeds, fanout, &mut sub);
+                .sample_neighbors(seeds, fanouts, &mut sub);
         }
         // group seeds by owner, remembering original slots (reused
         // scratch — the per-owner split and RNG stream derivation are
@@ -100,7 +101,7 @@ impl DistNeighborSampler {
             // results don't depend on dispatch order
             let mut sub = rng.split(owner as u64);
             let res =
-                self.servers[owner].sample_neighbors(group, fanout, &mut sub);
+                self.servers[owner].sample_neighbors(group, fanouts, &mut sub);
             if owner as u32 != self.machine {
                 let edges: usize = res.iter().map(|r| r.nbrs.len()).sum();
                 let (req, resp) = SamplerServer::wire_cost(group.len(), edges);
@@ -123,25 +124,28 @@ impl DistNeighborSampler {
     }
 
     /// Multi-layer expansion: returns per-layer (seeds, per-seed samples),
-    /// outermost (targets, layer L) first. Each layer's frontier is the
-    /// seed set ∪ newly-sampled neighbors, deduped in seed-first order and
-    /// **capped** at `layer_caps[l-1]` (= the block's padded node budget)
-    /// using exactly the drop order `compact::to_block` applies, so the
-    /// two stay in lock-step when a budget fills up.
+    /// outermost (targets, layer L) first. Each layer samples ≤ k_r
+    /// neighbors per etype per the [`FanoutPlan`] (a uniform plan is the
+    /// classic schedule). Each layer's frontier is the seed set ∪
+    /// newly-sampled neighbors, deduped in seed-first order and **capped**
+    /// at `layer_caps[l-1]` (= the block's padded node budget) using
+    /// exactly the drop order `compact::to_block` applies, so the two stay
+    /// in lock-step when a budget fills up.
     pub fn sample_blocks(
         &self,
         targets: &[NodeId],
-        fanouts: &[usize],    // fanouts[l-1] = K of layer l; iterate L..1
+        plan: &FanoutPlan,
         layer_caps: &[usize], // layer_nodes [n0, ..., nL]
         rng: &mut Rng,
     ) -> Vec<(Vec<NodeId>, Vec<SampledNbrs>)> {
-        let l_total = fanouts.len();
+        let l_total = plan.num_layers();
         assert_eq!(layer_caps.len(), l_total + 1);
         let mut layers = Vec::with_capacity(l_total);
         let mut seeds: Vec<NodeId> = targets.to_vec();
-        for (j, &fanout) in fanouts.iter().rev().enumerate() {
+        for j in 0..l_total {
+            let fanouts = plan.layer(l_total - j); // layer L first
             let cap = layer_caps[l_total - 1 - j];
-            let samples = self.sample_layer(&seeds, fanout, rng);
+            let samples = self.sample_layer(&seeds, fanouts, rng);
             let mut next = seeds.clone();
             // dedup set comes from scratch (cleared, capacity retained)
             let mut scratch = self.scratch.lock().unwrap();
@@ -203,7 +207,7 @@ mod tests {
         let (g, nm, servers, cost) = setup(3);
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let seeds: Vec<NodeId> = vec![5, 500, 900, 17, 333];
-        let res = s.sample_layer(&seeds, 4, &mut Rng::new(9));
+        let res = s.sample_layer(&seeds, &[4], &mut Rng::new(9));
         assert_eq!(res.len(), seeds.len());
         for (seed, r) in seeds.iter().zip(&res) {
             for &n in &r.nbrs {
@@ -219,12 +223,12 @@ mod tests {
         // all-local seeds
         let local: Vec<NodeId> =
             (0..10).map(|l| nm.global_of(0, l)).collect();
-        s.sample_layer(&local, 3, &mut Rng::new(1));
+        s.sample_layer(&local, &[3], &mut Rng::new(1));
         assert_eq!(cost.network_bytes(), 0);
         // all-remote seeds
         let remote: Vec<NodeId> =
             (0..10).map(|l| nm.global_of(1, l)).collect();
-        s.sample_layer(&remote, 3, &mut Rng::new(1));
+        s.sample_layer(&remote, &[3], &mut Rng::new(1));
         assert!(cost.network_bytes() > 0);
     }
 
@@ -233,8 +237,12 @@ mod tests {
         let (_, nm, servers, cost) = setup(2);
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let targets: Vec<NodeId> = vec![1, 2, 3, 4];
-        let layers =
-            s.sample_blocks(&targets, &[5, 5], &[4096, 512, 64], &mut Rng::new(2));
+        let layers = s.sample_blocks(
+            &targets,
+            &FanoutPlan::uniform(&[5, 5]),
+            &[4096, 512, 64],
+            &mut Rng::new(2),
+        );
         assert_eq!(layers.len(), 2);
         // layer 0 (outermost) seeds are the targets
         assert_eq!(layers[0].0, targets);
@@ -253,12 +261,56 @@ mod tests {
         let (_, nm, servers, cost) = setup(2);
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let targets: Vec<NodeId> = vec![10, 20, 30];
-        let a = s.sample_blocks(&targets, &[4, 4], &[1024, 128, 16], &mut Rng::new(7));
-        let b = s.sample_blocks(&targets, &[4, 4], &[1024, 128, 16], &mut Rng::new(7));
+        let plan = FanoutPlan::uniform(&[4, 4]);
+        let a = s.sample_blocks(&targets, &plan, &[1024, 128, 16], &mut Rng::new(7));
+        let b = s.sample_blocks(&targets, &plan, &[1024, 128, 16], &mut Rng::new(7));
         for (la, lb) in a.iter().zip(&b) {
             assert_eq!(la.0, lb.0);
             for (x, y) in la.1.iter().zip(&lb.1) {
                 assert_eq!(x.nbrs, y.nbrs);
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_plan_caps_each_etype_across_machines() {
+        // typed dataset over 2 machines: every seed's sample respects the
+        // per-etype budget regardless of which server answered
+        let mut spec = DatasetSpec::new("dh", 1000, 6000);
+        spec.num_rels = 3;
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(2));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let parts = build_partitions(&g, &r.node_map);
+        let servers: Vec<Arc<SamplerServer>> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(m, p)| Arc::new(SamplerServer::new(m as u32, Arc::new(p))))
+            .collect();
+        let cost = Arc::new(CostModel::default());
+        let s = DistNeighborSampler::new(
+            0,
+            servers,
+            Arc::new(r.node_map),
+            cost,
+        );
+        let seeds: Vec<NodeId> = (0..400).step_by(7).collect();
+        let fanouts = [2usize, 2, 1];
+        let res = s.sample_layer(&seeds, &fanouts, &mut Rng::new(3));
+        assert_eq!(res.len(), seeds.len());
+        for (seed, sn) in seeds.iter().zip(&res) {
+            assert_eq!(sn.rels.len(), sn.nbrs.len());
+            let mut counts = [0usize; 3];
+            for &rel in &sn.rels {
+                counts[rel as usize] += 1;
+            }
+            for (rel, &c) in counts.iter().enumerate() {
+                assert!(c <= fanouts[rel], "seed {seed} rel {rel}: {c}");
+            }
+            for &n in &sn.nbrs {
+                assert!(g.neighbors(*seed).contains(&n));
             }
         }
     }

@@ -2,11 +2,16 @@
 //!
 //! Vertex-wise neighbor sampling (the GraphSAGE algorithm the paper
 //! optimizes): each seed samples ≤ K neighbors independently, recursively
-//! per layer. The trainer-side [`DistNeighborSampler`] dispatches seed
-//! batches to owning machines ([`SamplerServer`]s answer from their
-//! physical partition via the halo closure — no server-to-server traffic),
-//! stitches frontiers, and [`compact`] re-maps the sampled subgraph into
-//! the dense padded block layout the AOT'd HLO expects (`to_block`).
+//! per layer — and on typed graphs ≤ k_r neighbors *per relation r*, per
+//! the [`FanoutPlan`](crate::graph::FanoutPlan) derived from the
+//! [`GraphSchema`](crate::graph::GraphSchema) (homogeneous graphs use the
+//! trivial 1-etype plan through the same code path). The trainer-side
+//! [`DistNeighborSampler`] dispatches seed batches to owning machines
+//! ([`SamplerServer`]s answer from their physical partition via the halo
+//! closure — no server-to-server traffic), stitches frontiers, and
+//! [`compact`] re-maps the sampled subgraph into the dense padded block
+//! layout the AOT'd HLO expects (`to_block`), with relation-segmented
+//! sections when the data is typed.
 
 pub mod compact;
 pub mod distributed;

@@ -59,6 +59,71 @@ pub fn sample_k(
     }
 }
 
+/// Relation-aware sampling: pick up to `fanouts[r]` distinct neighbors
+/// *per edge type r*, appending rel-0 picks first, then rel-1, etc.
+/// `rels` is the adjacency-aligned relation array ([`Graph::rel_of`]);
+/// edges whose rel exceeds the plan are skipped.
+///
+/// A single-etype plan (or a graph without a rel array) is *exactly*
+/// [`sample_k`] — the homogeneous case is the trivial 1-etype schema
+/// flowing through this same entry point, with an identical RNG stream.
+///
+/// `bucket_scratch`/`sel_scratch` are caller-owned buffers reused across
+/// seeds (§Perf: no allocation in the per-seed loop once warm).
+///
+/// [`Graph::rel_of`]: crate::graph::Graph::rel_of
+#[allow(clippy::too_many_arguments)]
+pub fn sample_k_per_rel(
+    nbrs: &[NodeId],
+    rels: &[u8],
+    fanouts: &[usize],
+    rng: &mut Rng,
+    out: &mut Vec<NodeId>,
+    mut pos_out: Option<&mut Vec<u32>>,
+    bucket_scratch: &mut Vec<Vec<u32>>,
+    sel_scratch: &mut Vec<NodeId>,
+) {
+    if fanouts.len() <= 1 || rels.is_empty() {
+        // single-etype plan, or a graph without a rel array driven by a
+        // multi-etype plan: sample the full layer budget uniformly (for
+        // one etype the sum IS that etype's fanout, so the homogeneous
+        // stream is untouched)
+        let k: usize = fanouts.iter().sum();
+        sample_k(nbrs, k, rng, out, pos_out);
+        return;
+    }
+    out.clear();
+    if let Some(p) = pos_out.as_deref_mut() {
+        p.clear();
+    }
+    if bucket_scratch.len() < fanouts.len() {
+        bucket_scratch.resize_with(fanouts.len(), Vec::new);
+    }
+    for b in bucket_scratch.iter_mut() {
+        b.clear();
+    }
+    debug_assert_eq!(rels.len(), nbrs.len());
+    for (i, &r) in rels.iter().enumerate() {
+        if (r as usize) < fanouts.len() {
+            bucket_scratch[r as usize].push(i as u32);
+        }
+    }
+    for (r, &k) in fanouts.iter().enumerate() {
+        let bucket = &bucket_scratch[r];
+        if bucket.is_empty() || k == 0 {
+            continue;
+        }
+        // sample edge *positions* of this relation, then map back
+        sample_k(bucket, k, rng, sel_scratch, None);
+        for &pos in sel_scratch.iter() {
+            out.push(nbrs[pos as usize]);
+            if let Some(p) = pos_out.as_deref_mut() {
+                p.push(pos);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +156,120 @@ mod tests {
         let mut out = vec![9, 9];
         sample_k(&[], 4, &mut Rng::new(3), &mut out, None);
         assert!(out.is_empty());
+    }
+
+    // ---- relation-aware sampling ----------------------------------------
+
+    fn per_rel(
+        nbrs: &[NodeId],
+        rels: &[u8],
+        fanouts: &[usize],
+        seed: u64,
+    ) -> (Vec<NodeId>, Vec<u32>) {
+        let mut out = Vec::new();
+        let mut pos = Vec::new();
+        let mut buckets = Vec::new();
+        let mut sel = Vec::new();
+        sample_k_per_rel(
+            nbrs,
+            rels,
+            fanouts,
+            &mut Rng::new(seed),
+            &mut out,
+            Some(&mut pos),
+            &mut buckets,
+            &mut sel,
+        );
+        (out, pos)
+    }
+
+    #[test]
+    fn per_rel_respects_per_etype_caps() {
+        // 12 neighbors: rels cycle 0,1,2
+        let nbrs: Vec<NodeId> = (0..12).collect();
+        let rels: Vec<u8> = (0..12).map(|i| (i % 3) as u8).collect();
+        let (out, pos) = per_rel(&nbrs, &rels, &[2, 1, 1], 5);
+        assert_eq!(out.len(), 4);
+        let mut counts = [0usize; 3];
+        for &p in &pos {
+            counts[rels[p as usize] as usize] += 1;
+        }
+        assert_eq!(counts, [2, 1, 1]);
+        // pos_out aligned and distinct
+        let set: std::collections::HashSet<_> = pos.iter().collect();
+        assert_eq!(set.len(), pos.len());
+        for (o, p) in out.iter().zip(&pos) {
+            assert_eq!(*o, nbrs[*p as usize]);
+        }
+    }
+
+    #[test]
+    fn per_rel_single_etype_plan_matches_sample_k() {
+        // the trivial 1-etype schema must reproduce sample_k bit for bit
+        let nbrs: Vec<NodeId> = (0..50).collect();
+        let rels = vec![0u8; 50];
+        let (out_a, pos_a) = per_rel(&nbrs, &rels, &[7], 9);
+        let mut out_b = Vec::new();
+        let mut pos_b = Vec::new();
+        sample_k(&nbrs, 7, &mut Rng::new(9), &mut out_b, Some(&mut pos_b));
+        assert_eq!(out_a, out_b);
+        assert_eq!(pos_a, pos_b);
+    }
+
+    #[test]
+    fn per_rel_missing_relation_yields_fewer() {
+        // no rel-1 edges at all: only the rel-0 and rel-2 budgets fill
+        let nbrs: Vec<NodeId> = (0..10).collect();
+        let rels: Vec<u8> = (0..10).map(|i| if i < 5 { 0 } else { 2 }).collect();
+        let (out, pos) = per_rel(&nbrs, &rels, &[2, 3, 2], 1);
+        assert_eq!(out.len(), 4);
+        for &p in &pos {
+            assert_ne!(rels[p as usize], 1);
+        }
+    }
+
+    // ---- large-k Floyd fallback (k > 32) --------------------------------
+
+    #[test]
+    fn large_k_samples_are_distinct_and_aligned() {
+        let nbrs: Vec<NodeId> = (100..300).collect(); // deg 200
+        for k in [33usize, 48, 64, 100] {
+            let mut out = Vec::new();
+            let mut pos = Vec::new();
+            sample_k(&nbrs, k, &mut Rng::new(7), &mut out, Some(&mut pos));
+            assert_eq!(out.len(), k, "k={k}");
+            assert_eq!(pos.len(), k, "k={k}");
+            let set: std::collections::HashSet<_> = out.iter().collect();
+            assert_eq!(set.len(), k, "duplicates at k={k}");
+            for (o, p) in out.iter().zip(&pos) {
+                assert_eq!(*o, nbrs[*p as usize], "pos_out misaligned k={k}");
+                assert!((*p as usize) < nbrs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn large_k_is_deterministic_in_seed() {
+        let nbrs: Vec<NodeId> = (0..500).collect();
+        let sample = |seed: u64| {
+            let mut out = Vec::new();
+            let mut pos = Vec::new();
+            sample_k(&nbrs, 77, &mut Rng::new(seed), &mut out, Some(&mut pos));
+            (out, pos)
+        };
+        assert_eq!(sample(11), sample(11));
+        assert_ne!(sample(11).0, sample(12).0);
+    }
+
+    #[test]
+    fn large_k_degree_at_most_k_takes_all() {
+        // deg <= k path must bypass the Floyd fallback entirely
+        let nbrs: Vec<NodeId> = (0..40).collect();
+        let mut out = Vec::new();
+        let mut pos = Vec::new();
+        sample_k(&nbrs, 64, &mut Rng::new(3), &mut out, Some(&mut pos));
+        assert_eq!(out, nbrs);
+        assert_eq!(pos, (0..40).collect::<Vec<u32>>());
     }
 
     #[test]

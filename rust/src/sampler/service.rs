@@ -9,7 +9,7 @@ use crate::graph::NodeId;
 use crate::partition::PhysPartition;
 use crate::util::Rng;
 
-use super::neighbor::sample_k;
+use super::neighbor::sample_k_per_rel;
 
 /// One sampled edge set for a seed: neighbor globals + relation types.
 #[derive(Clone, Debug, Default)]
@@ -32,17 +32,23 @@ impl SamplerServer {
         &self.part
     }
 
-    /// Sample for a batch of seeds (all must be core vertices here).
-    /// Deterministic in `rng`.
+    /// Sample for a batch of seeds (all must be core vertices here),
+    /// taking up to `fanouts[r]` neighbors per etype `r` — a one-element
+    /// `fanouts` is the classic uniform sampler (the homogeneous path is
+    /// the trivial 1-etype schema, not a separate branch). Deterministic
+    /// in `rng`.
     pub fn sample_neighbors(
         &self,
         seeds: &[NodeId],
-        fanout: usize,
+        fanouts: &[usize],
         rng: &mut Rng,
     ) -> Vec<SampledNbrs> {
+        let k_total: usize = fanouts.iter().sum();
         let mut out = Vec::with_capacity(seeds.len());
-        let mut buf: Vec<NodeId> = Vec::with_capacity(fanout);
-        let mut pos: Vec<u32> = Vec::with_capacity(fanout);
+        let mut buf: Vec<NodeId> = Vec::with_capacity(k_total);
+        let mut pos: Vec<u32> = Vec::with_capacity(k_total);
+        let mut buckets: Vec<Vec<u32>> = Vec::new();
+        let mut sel: Vec<NodeId> = Vec::new();
         let has_rel = !self.part.graph.rel.is_empty();
         for &seed in seeds {
             let local = self
@@ -55,7 +61,17 @@ impl SamplerServer {
                 self.machine
             );
             let nbrs_local = self.part.graph.neighbors(local);
-            sample_k(nbrs_local, fanout, rng, &mut buf, Some(&mut pos));
+            let rels_local = self.part.graph.rel_of(local);
+            sample_k_per_rel(
+                nbrs_local,
+                rels_local,
+                fanouts,
+                rng,
+                &mut buf,
+                Some(&mut pos),
+                &mut buckets,
+                &mut sel,
+            );
             let nbrs: Vec<NodeId> = buf
                 .iter()
                 .map(|&l| self.part.global_of(l))
@@ -110,7 +126,7 @@ mod tests {
             .map(|l| parts[0].global_of(l))
             .collect();
         let mut rng = Rng::new(5);
-        let res = server.sample_neighbors(&seeds, 5, &mut rng);
+        let res = server.sample_neighbors(&seeds, &[5], &mut rng);
         assert_eq!(res.len(), seeds.len());
         for (seed, s) in seeds.iter().zip(&res) {
             assert!(s.nbrs.len() <= 5);
@@ -130,7 +146,7 @@ mod tests {
         let mut rng = Rng::new(6);
         for l in 0..parts[0].n_core.min(100) as u32 {
             let gid = parts[0].global_of(l);
-            let res = server.sample_neighbors(&[gid], 3, &mut rng);
+            let res = server.sample_neighbors(&[gid], &[3], &mut rng);
             let deg = g.degree(gid);
             assert_eq!(res[0].nbrs.len(), deg.min(3));
         }
@@ -147,6 +163,52 @@ mod tests {
             .map(|l| p1.global_of(l))
             .find(|&g| parts[0].local_of(g).is_none())
             .expect("some vertex of p1 not known to p0");
-        server.sample_neighbors(&[foreign], 3, &mut Rng::new(1));
+        server.sample_neighbors(&[foreign], &[3], &mut Rng::new(1));
+    }
+
+    #[test]
+    fn per_etype_fanouts_cap_each_relation() {
+        // typed graph on one machine: per-rel budgets hold per seed and
+        // the reported rels match the partition's edge types
+        let mut spec = DatasetSpec::new("st", 600, 3600);
+        spec.num_rels = 3;
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(1));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let part = Arc::new(
+            build_partitions(&g, &r.node_map).into_iter().next().unwrap(),
+        );
+        let server = SamplerServer::new(0, part.clone());
+        let fanouts = [2usize, 1, 1];
+        let mut rng = Rng::new(8);
+        let seeds: Vec<NodeId> = (0..200u32).collect();
+        let res = server.sample_neighbors(&seeds, &fanouts, &mut rng);
+        for (seed, s) in seeds.iter().zip(&res) {
+            assert_eq!(s.rels.len(), s.nbrs.len());
+            let mut counts = [0usize; 3];
+            for &rel in &s.rels {
+                counts[rel as usize] += 1;
+            }
+            for (rel, &c) in counts.iter().enumerate() {
+                assert!(
+                    c <= fanouts[rel],
+                    "seed {seed}: rel {rel} sampled {c} > {}",
+                    fanouts[rel]
+                );
+            }
+            // every reported rel matches the actual edge type
+            for (&n, &rel) in s.nbrs.iter().zip(&s.rels) {
+                let local = part.local_of(*seed).unwrap();
+                let nbrs = part.graph.neighbors(local);
+                let rels = part.graph.rel_of(local);
+                let found = nbrs
+                    .iter()
+                    .zip(rels)
+                    .any(|(&l, &rl)| part.global_of(l) == n && rl == rel);
+                assert!(found, "({seed},{n}) rel {rel} not in adjacency");
+            }
+        }
     }
 }

@@ -236,9 +236,11 @@ mod tests {
             let spec = spec.clone();
             let mut params = init.clone();
             handles.push(std::thread::spawn(move || {
-                let batch = crate::trainer::device::tests::rand_batch(
-                    &spec, t,
-                );
+                // real sampled block structure (never synthesized rels)
+                let batch =
+                    crate::pipeline::gen::tests_support::sampled_batch(
+                        &spec, t,
+                    );
                 let mut last = f32::INFINITY;
                 for _ in 0..3 {
                     last = h.train(&mut params, batch.clone(), 0.3).unwrap();
@@ -249,55 +251,6 @@ mod tests {
         }
         for h in handles {
             h.join().unwrap();
-        }
-    }
-
-    pub(crate) fn rand_batch(
-        spec: &VariantSpec,
-        seed: u64,
-    ) -> HostBatch {
-        use crate::sampler::compact::LayerBlock;
-        use crate::util::Rng;
-        let mut rng = Rng::new(seed);
-        let n = &spec.layer_nodes;
-        let mut layers = Vec::new();
-        for l in 1..=spec.fanouts.len() {
-            let k = spec.fanouts[l - 1];
-            let nl = n[l];
-            let nprev = n[l - 1];
-            layers.push(LayerBlock {
-                self_idx: (0..nl)
-                    .map(|_| rng.below(nprev as u64) as i32)
-                    .collect(),
-                nbr_idx: (0..nl * k)
-                    .map(|_| rng.below(nprev as u64) as i32)
-                    .collect(),
-                nbr_mask: (0..nl * k)
-                    .map(|_| if rng.f32() < 0.8 { 1.0 } else { 0.0 })
-                    .collect(),
-                rel: if spec.num_rels > 1 {
-                    (0..nl * k)
-                        .map(|_| rng.below(spec.num_rels as u64) as i32)
-                        .collect()
-                } else {
-                    Vec::new()
-                },
-            });
-        }
-        let nl = *n.last().unwrap();
-        HostBatch {
-            feats: (0..n[0] * spec.feat_dim)
-                .map(|_| rng.normal() as f32)
-                .collect(),
-            layers,
-            labels: (0..nl)
-                .map(|_| rng.below(spec.num_classes.max(1) as u64) as i32)
-                .collect(),
-            label_mask: vec![1.0; nl],
-            pair_mask: vec![1.0; spec.batch],
-            targets: Vec::new(),
-            remote_rows: 0,
-            dropped_neighbors: 0,
         }
     }
 }

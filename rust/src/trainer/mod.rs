@@ -82,6 +82,10 @@ pub struct TrainReport {
     /// Neighbors dropped by layer budget caps, across trainers
     /// (consumed batches, same accounting as `remote_feature_rows`).
     pub dropped_neighbors: u64,
+    /// Sampled (kept) edges per etype across trainers, from the
+    /// `sampler.etype_edges.*` counters; empty on homogeneous runs.
+    /// Production-side accounting, like the `cache.*` counters.
+    pub etype_sampled_edges: Vec<u64>,
     pub final_val_acc: Option<f64>,
     /// Aggregate stage times across all trainers (for the pipeline model
     /// used by the benches — DESIGN.md §2).
@@ -124,6 +128,18 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     }
     let init_params = devices[0].initial_params()?;
     let spec = devices[0].spec()?;
+    // graceful form of the batch_gen invariant: an RGCN variant must
+    // cover every relation the deployed schema can sample
+    anyhow::ensure!(
+        spec.model != crate::sampler::compact::ModelKind::Rgcn
+            || spec.num_rels >= cluster.schema.n_etypes(),
+        "variant {:?} compiled for {} relations but the deployed schema \
+         declares {} etypes — use the matching artifact (e.g. \
+         rgcn_nc_mag) or align the dataset with num_rels=<n>",
+        spec.name,
+        spec.num_rels,
+        cluster.schema.n_etypes()
+    );
 
     // All-reduce plane: one endpoint per trainer.
     let machine_of: Vec<u32> = (0..n_trainers)
@@ -237,6 +253,19 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         )?);
     }
 
+    // per-etype sampled-edge counters (suffix after the prefix is the
+    // etype index)
+    let etype_prefix = "sampler.etype_edges.";
+    let mut etype_sampled_edges: Vec<u64> = Vec::new();
+    for (k, c) in metrics.counters_with_prefix(etype_prefix) {
+        if let Ok(r) = k[etype_prefix.len()..].parse::<usize>() {
+            if etype_sampled_edges.len() <= r {
+                etype_sampled_edges.resize(r + 1, 0);
+            }
+            etype_sampled_edges[r] = c;
+        }
+    }
+
     let report = TrainReport {
         epochs,
         total_secs,
@@ -250,6 +279,7 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         cache_remote_bytes_saved: metrics
             .counter("cache.remote_bytes_saved"),
         dropped_neighbors: metrics.counter("trainer.dropped_nbrs"),
+        etype_sampled_edges,
         final_val_acc,
         sample_secs: metrics.total_time("pipeline.sample").as_secs_f64(),
         batches_produced: metrics.counter("pipeline.batches"),
