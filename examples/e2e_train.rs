@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
          {:.2}s | kv load {:.2}s",
         s.partition_secs,
         s.edge_cut,
-        100.0 * s.edge_cut as f64 / cluster.n_edges as f64 * 2.0,
+        100.0 * cluster.edge_cut_frac(),
         s.imbalance,
         s.build_secs,
         s.load_secs

@@ -6,6 +6,7 @@
 //!
 //! Run:  make artifacts && cargo run --release --example link_prediction
 
+use distdglv2::api::DistGraph;
 use distdglv2::cluster::{Cluster, ClusterSpec};
 use distdglv2::graph::DatasetSpec;
 use distdglv2::runtime::manifest::artifacts_dir;
@@ -17,16 +18,18 @@ fn main() -> anyhow::Result<()> {
     dspec.feat_dim = 32;
     dspec.train_frac = 0.5; // lp trains on edges of many nodes
     let dataset = dspec.generate();
-    println!(
-        "dataset {}: {} nodes, {} edges (avg degree {:.1})",
-        dataset.name,
-        dataset.n_nodes(),
-        dataset.graph.n_edges(),
-        dataset.graph.n_edges() as f64 / dataset.n_nodes() as f64,
-    );
 
     let cluster =
         Cluster::deploy(&dataset, ClusterSpec::new(2, 2), artifacts_dir())?;
+    let graph = DistGraph::new(&cluster);
+    println!(
+        "graph {}: {} nodes, {} edges (avg degree {:.1}), edge cut {:.1}%",
+        dataset.name,
+        graph.num_nodes_total(),
+        graph.num_edges_total(),
+        graph.num_edges_total() as f64 / graph.num_nodes_total() as f64,
+        100.0 * cluster.edge_cut_frac(),
+    );
     let cfg = TrainConfig {
         variant: "sage_lp_dev".into(),
         lr: 0.1,

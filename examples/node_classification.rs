@@ -6,6 +6,7 @@
 //!
 //! Run:  make artifacts && cargo run --release --example node_classification
 
+use distdglv2::api::DistGraph;
 use distdglv2::cluster::{Cluster, ClusterSpec};
 use distdglv2::graph::DatasetSpec;
 use distdglv2::runtime::manifest::artifacts_dir;
@@ -34,6 +35,14 @@ fn main() -> anyhow::Result<()> {
     {
         let cluster =
             Cluster::deploy(&dataset, ClusterSpec::new(2, 2), artifacts_dir())?;
+        let graph = DistGraph::new(&cluster);
+        println!(
+            "\ndeployed for {variant}: edge cut {:.1}%, {} train items x {} \
+             trainers",
+            100.0 * cluster.edge_cut_frac(),
+            graph.train_idx(0).len(),
+            graph.n_trainers(),
+        );
         let cfg = TrainConfig {
             variant: variant.into(),
             lr,

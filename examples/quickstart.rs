@@ -1,11 +1,14 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
 //! Generates a synthetic power-law graph, deploys a 2-machine simulated
-//! cluster (partition → KVStore → sampler servers), trains GraphSAGE for
-//! one epoch with the asynchronous pipeline, and prints the loss curve.
+//! cluster (partition → KVStore → sampler servers), wraps it in the
+//! DGL-style `api::DistGraph` handle, trains GraphSAGE for one epoch with
+//! the asynchronous pipeline, and prints the loss curve. For a
+//! hand-written loop over the same API see `examples/custom_loop.rs`.
 //!
 //! Run:  make artifacts && cargo run --release --example quickstart
 
+use distdglv2::api::DistGraph;
 use distdglv2::cluster::{Cluster, ClusterSpec};
 use distdglv2::graph::DatasetSpec;
 use distdglv2::runtime::manifest::artifacts_dir;
@@ -14,12 +17,6 @@ use distdglv2::trainer::{self, TrainConfig};
 fn main() -> anyhow::Result<()> {
     // 1. A dataset: 20K-node RMAT graph with label-correlated features.
     let dataset = DatasetSpec::new("quickstart", 20_000, 120_000).generate();
-    println!(
-        "dataset: {} nodes, {} edges, {} classes",
-        dataset.n_nodes(),
-        dataset.graph.n_edges(),
-        dataset.num_classes
-    );
 
     // 2. Deploy a simulated cluster: 2 machines x 2 trainers.
     //    METIS partitioning, halo construction, KVStore, samplers.
@@ -28,15 +25,26 @@ fn main() -> anyhow::Result<()> {
         ClusterSpec::new(2, 2),
         artifacts_dir(),
     )?;
+
+    // 3. The DGL-style handle: counts, schema, splits, feature pulls.
+    let graph = DistGraph::new(&cluster);
+    println!(
+        "graph: {} nodes, {} edges, {} classes, feat dim {}",
+        graph.num_nodes_total(),
+        graph.num_edges_total(),
+        graph.num_classes(),
+        graph.ndata_dim(),
+    );
     println!(
         "deployed: edge cut {} ({:.1}% of edges), locality-aware split: {} \
          train items per trainer",
         cluster.stats.edge_cut,
-        100.0 * cluster.stats.edge_cut as f64 / cluster.n_edges as f64 * 2.0,
-        cluster.train_sets[0].len()
+        100.0 * cluster.edge_cut_frac(),
+        graph.train_idx(0).len()
     );
 
-    // 3. Train GraphSAGE (AOT-compiled HLO; Python is not involved).
+    // 4. Train GraphSAGE (AOT-compiled HLO; Python is not involved).
+    //    trainer::train drains one api::DistNodeDataLoader per rank.
     let cfg = TrainConfig {
         variant: "sage_nc_dev".into(),
         lr: 0.3,
@@ -61,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     if let Some(acc) = report.final_val_acc {
         println!(
             "validation accuracy: {acc:.3} (chance = {:.3})",
-            1.0 / cluster.num_classes as f64
+            1.0 / graph.num_classes() as f64
         );
     }
     Ok(())

@@ -183,6 +183,7 @@ fn eval_batch(
         label_mask: vec![0.0; n_l],
         pair_mask: Vec::new(),
         targets: block.targets,
+        input_nodes: block.input_nodes,
         remote_rows: 0,
         dropped_neighbors: block.dropped_neighbors,
     }

@@ -5,15 +5,54 @@
 
 use std::sync::Arc;
 
+use distdglv2::api::{DistGraph, DistNodeDataLoader};
 use distdglv2::cluster::{Cluster, ClusterSpec};
 use distdglv2::graph::{DatasetSpec, FanoutPlan};
 use distdglv2::net::CostModel;
-use distdglv2::runtime::manifest::{artifacts_dir, Manifest};
+use distdglv2::pipeline::{PipelineConfig, PipelineMode};
+use distdglv2::runtime::manifest::{artifacts_dir, Manifest, VariantSpec};
 use distdglv2::sampler::compact::{to_block, ModelKind, ShapeSpec, TaskKind};
 use distdglv2::sampler::DistNeighborSampler;
 use distdglv2::trainer::{AllReduceGroup, DeviceExecutor};
 use distdglv2::util::bench::BenchRunner;
 use distdglv2::util::Rng;
+
+/// Per-batch seconds of the legacy trainer-internal path (a raw
+/// `BatchGen`, stages 1-4 inline — what `Pipeline` runs per batch) vs.
+/// the `api::DistNodeDataLoader` facade over the same generator, both in
+/// Sync mode so the facade cost itself is on the measured path.
+fn loader_overhead_stage(
+    cl: &Cluster,
+    vspec: &VariantSpec,
+    label: &str,
+    r: &mut BenchRunner,
+) -> (f64, f64) {
+    let mut legacy = cl.batch_gen(0, vspec, &vspec.name, 41);
+    let legacy_s = r
+        .bench(&format!("legacy BatchGen::next ({label})"), || {
+            let b = legacy.next();
+            std::hint::black_box(b.targets.len());
+            legacy.recycle(b);
+        })
+        .secs();
+    let g = DistGraph::new(cl);
+    let mut loader = DistNodeDataLoader::builder(&g, vspec)
+        .seed(41)
+        .pipeline(PipelineConfig {
+            mode: PipelineMode::Sync,
+            ..Default::default()
+        })
+        .build()
+        .expect("build loader");
+    let loader_s = r
+        .bench(&format!("api loader next_batch ({label})"), || {
+            let b = loader.next_batch();
+            std::hint::black_box(b.targets.len());
+            loader.recycle(b);
+        })
+        .secs();
+    (legacy_s, loader_s)
+}
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(&artifacts_dir())?;
@@ -173,6 +212,49 @@ fn main() -> anyhow::Result<()> {
         let b = gen.next();
         std::hint::black_box(b.targets.len());
     });
+
+    // --- api facade: DistNodeDataLoader vs legacy train path ---------------
+    // The loader must add no measurable overhead over the pipeline it
+    // wraps (ISSUE 4 acceptance): same generator, same recycling, the
+    // facade's bookkeeping on the measured path. Reported batches/sec,
+    // cpu-only and under emulated network time.
+    let (leg_cpu, ldr_cpu) =
+        loader_overhead_stage(&cluster, &vspec, "cpu-only", &mut r);
+    let (leg_em, ldr_em) =
+        loader_overhead_stage(&cluster_em, &vspec, "emulated network", &mut r);
+    let cpu_overhead = ldr_cpu / leg_cpu.max(1e-12) - 1.0;
+    let em_overhead = ldr_em / leg_em.max(1e-12) - 1.0;
+    println!(
+        "loader facade: {:.1} vs {:.1} batches/s cpu-only ({:+.1}% \
+         overhead), {:.1} vs {:.1} batches/s emulated-network ({:+.1}%)",
+        1.0 / ldr_cpu,
+        1.0 / leg_cpu,
+        100.0 * cpu_overhead,
+        1.0 / ldr_em,
+        1.0 / leg_em,
+        100.0 * em_overhead,
+    );
+    std::fs::write(
+        "BENCH_loader.json",
+        format!(
+            "{{\n  \"bench\": \"hotpath.loader\",\n  \
+             \"cpu_only\": {{\"legacy_s\": {leg_cpu:.9}, \
+             \"loader_s\": {ldr_cpu:.9}, \
+             \"legacy_batches_per_s\": {:.3}, \
+             \"loader_batches_per_s\": {:.3}, \
+             \"overhead_frac\": {cpu_overhead:.5}}},\n  \
+             \"emulated_network\": {{\"legacy_s\": {leg_em:.9}, \
+             \"loader_s\": {ldr_em:.9}, \
+             \"legacy_batches_per_s\": {:.3}, \
+             \"loader_batches_per_s\": {:.3}, \
+             \"overhead_frac\": {em_overhead:.5}}}\n}}\n",
+            1.0 / leg_cpu,
+            1.0 / ldr_cpu,
+            1.0 / leg_em,
+            1.0 / ldr_em,
+        ),
+    )?;
+    println!("wrote BENCH_loader.json");
 
     // --- hetero stage: typed sampling + per-ntype pull ---------------------
     // mag-lsc-shaped typed graph: 3 ntypes (per-ntype feature tables of

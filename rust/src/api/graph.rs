@@ -1,0 +1,296 @@
+//! [`DistGraph`]: the DGL-style graph handle over a deployed cluster.
+
+use std::sync::OnceLock;
+
+use crate::cluster::Cluster;
+use crate::graph::{GraphSchema, NodeId};
+
+/// A cheap, read-only handle over a deployed [`Cluster`] exposing the
+/// DGL `DistGraph` surface: typed counts, schema, feature pulls through
+/// the distributed KVStore, and the training-set splits. Construction is
+/// O(1); the per-type count tables behind [`Self::num_nodes`] /
+/// [`Self::num_edges`] are built lazily on first use (one pass over the
+/// partitions), so handles created only to feed data loaders — the
+/// built-in trainer's case — never pay the scan.
+pub struct DistGraph<'a> {
+    cluster: &'a Cluster,
+    /// Nodes per ntype (index = schema ntype id), built on first query.
+    ntype_counts: OnceLock<Vec<usize>>,
+    /// Stored (directed) edges per etype (index = schema etype id),
+    /// built on first query.
+    etype_counts: OnceLock<Vec<u64>>,
+}
+
+impl<'a> DistGraph<'a> {
+    pub fn new(cluster: &'a Cluster) -> Self {
+        Self {
+            cluster,
+            ntype_counts: OnceLock::new(),
+            etype_counts: OnceLock::new(),
+        }
+    }
+
+    fn ntype_counts(&self) -> &[usize] {
+        self.ntype_counts.get_or_init(|| {
+            let mut counts = vec![0usize; self.schema().n_ntypes()];
+            if self.cluster.features.node_type.is_empty() {
+                counts[0] = self.cluster.n_nodes;
+            } else {
+                for &t in self.cluster.features.node_type.iter() {
+                    counts[t as usize] += 1;
+                }
+            }
+            counts
+        })
+    }
+
+    fn etype_counts(&self) -> &[u64] {
+        self.etype_counts.get_or_init(|| {
+            // every core vertex's full adjacency (with rels) is local to
+            // its owner partition, so summing core rows covers each
+            // stored edge exactly once
+            let mut counts = vec![0u64; self.schema().n_etypes()];
+            for p in &self.cluster.partitions {
+                for l in 0..p.n_core as NodeId {
+                    let rels = p.graph.rel_of(l);
+                    if rels.is_empty() {
+                        counts[0] += p.graph.degree(l) as u64;
+                    } else {
+                        for &r in rels {
+                            counts[r as usize] += 1;
+                        }
+                    }
+                }
+            }
+            counts
+        })
+    }
+
+    /// The deployed cluster behind this handle.
+    pub fn cluster(&self) -> &Cluster {
+        self.cluster
+    }
+
+    /// The dataset's typed schema (trivial for homogeneous graphs).
+    pub fn schema(&self) -> &GraphSchema {
+        &self.cluster.schema
+    }
+
+    /// Nodes of one type, by schema name (homogeneous graphs: `"node"`).
+    /// Panics on an unknown ntype name, like DGL's keyed access.
+    pub fn num_nodes(&self, ntype: &str) -> usize {
+        self.ntype_counts()[self.ntype_id(ntype)]
+    }
+
+    /// Total nodes across every type.
+    pub fn num_nodes_total(&self) -> usize {
+        self.cluster.n_nodes
+    }
+
+    /// Stored (directed) edges of one type, by schema name (homogeneous
+    /// graphs: `"edge"`). Panics on an unknown etype name.
+    pub fn num_edges(&self, etype: &str) -> u64 {
+        self.etype_counts()[self.etype_id(etype)]
+    }
+
+    /// Total stored (directed) edges across every type.
+    pub fn num_edges_total(&self) -> u64 {
+        self.cluster.n_edges as u64
+    }
+
+    /// Schema id of an ntype name.
+    pub fn ntype_id(&self, ntype: &str) -> usize {
+        self.schema()
+            .ntypes
+            .iter()
+            .position(|t| t.name == ntype)
+            .unwrap_or_else(|| {
+                panic!(
+                    "unknown ntype {ntype:?}; schema has {:?}",
+                    self.schema()
+                        .ntypes
+                        .iter()
+                        .map(|t| t.name.as_str())
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Schema id of an etype name.
+    pub fn etype_id(&self, etype: &str) -> usize {
+        self.schema()
+            .etypes
+            .iter()
+            .position(|t| t.name == etype)
+            .unwrap_or_else(|| {
+                panic!(
+                    "unknown etype {etype:?}; schema has {:?}",
+                    self.schema()
+                        .etypes
+                        .iter()
+                        .map(|t| t.name.as_str())
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Node type ids (all zero for homogeneous graphs) of the given nodes.
+    pub fn ntypes_of(&self, nodes: &[NodeId]) -> Vec<u8> {
+        nodes
+            .iter()
+            .map(|&v| self.cluster.features.ntype_of(v))
+            .collect()
+    }
+
+    /// Row width of [`Self::ndata`] pulls: the widest per-ntype feature
+    /// dim (narrower types are zero-padded on the right, exactly like
+    /// mini-batch feature rows).
+    pub fn ndata_dim(&self) -> usize {
+        self.schema().max_feat_dim()
+    }
+
+    /// Pull feature rows for arbitrary nodes through the distributed
+    /// KVStore — DGL's `g.ndata["feat"][nids]`. Returns row-major
+    /// `nodes.len() x ndata_dim()` with each row's typed prefix filled
+    /// from its ntype's table via
+    /// [`pull_typed`](crate::kvstore::KvClient::pull_typed); remote rows
+    /// are metered on the cluster cost model like any trainer pull.
+    pub fn ndata(&self, nodes: &[NodeId]) -> Vec<f32> {
+        let dim = self.ndata_dim();
+        let mut out = vec![0f32; nodes.len() * dim];
+        let mut kv = self
+            .cluster
+            .kv
+            .client(0, self.cluster.policy.clone());
+        kv.pull_typed(&self.cluster.features, nodes, &mut out, dim);
+        out
+    }
+
+    /// Host-side labels of the given nodes (accuracy computation in
+    /// custom loops).
+    pub fn node_labels(&self, nodes: &[NodeId]) -> Vec<u16> {
+        nodes
+            .iter()
+            .map(|&v| self.cluster.labels[v as usize])
+            .collect()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.cluster.num_classes
+    }
+
+    /// Trainers in the deployment (ranks `0..n_trainers()`).
+    pub fn n_trainers(&self) -> usize {
+        self.cluster.n_trainers()
+    }
+
+    /// This rank's slice of the training set (the §5.6.1 locality-aware
+    /// split; all ranks hold equally many items).
+    pub fn train_idx(&self, rank: usize) -> &[NodeId] {
+        &self.cluster.train_sets[rank]
+    }
+
+    pub fn val_idx(&self) -> &[NodeId] {
+        &self.cluster.val_nodes
+    }
+
+    pub fn test_idx(&self) -> &[NodeId] {
+        &self.cluster.test_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::graph::DatasetSpec;
+    use crate::runtime::manifest::artifacts_dir;
+
+    fn homo_graph_cluster() -> Cluster {
+        let d = DatasetSpec::new("api-g", 1500, 6000).generate();
+        Cluster::deploy(&d, ClusterSpec::new(2, 2), artifacts_dir()).unwrap()
+    }
+
+    fn hetero_cluster() -> Cluster {
+        let mut dspec =
+            DatasetSpec::new("api-h", 2000, 8000).with_mag_types();
+        dspec.train_frac = 0.3;
+        let d = dspec.generate();
+        Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts_dir()).unwrap()
+    }
+
+    #[test]
+    fn homogeneous_counts_cover_the_graph() {
+        let c = homo_graph_cluster();
+        let g = DistGraph::new(&c);
+        assert_eq!(g.num_nodes("node"), c.n_nodes);
+        assert_eq!(g.num_edges("edge"), c.n_edges as u64);
+        assert_eq!(g.num_nodes_total(), c.n_nodes);
+        assert_eq!(g.num_edges_total(), c.n_edges as u64);
+    }
+
+    #[test]
+    fn typed_counts_partition_the_totals() {
+        let c = hetero_cluster();
+        let g = DistGraph::new(&c);
+        let schema = g.schema().clone();
+        assert_eq!(schema.n_ntypes(), 3);
+        let n_sum: usize = schema
+            .ntypes
+            .iter()
+            .map(|t| g.num_nodes(&t.name))
+            .sum();
+        assert_eq!(n_sum, c.n_nodes);
+        let e_sum: u64 = schema
+            .etypes
+            .iter()
+            .map(|t| g.num_edges(&t.name))
+            .sum();
+        assert_eq!(e_sum, c.n_edges as u64);
+        // papers dominate a mag-shaped graph
+        assert!(g.num_nodes(&schema.ntypes[0].name) > c.n_nodes / 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown ntype")]
+    fn unknown_ntype_panics_with_the_vocabulary() {
+        let c = homo_graph_cluster();
+        DistGraph::new(&c).num_nodes("paper");
+    }
+
+    #[test]
+    fn ndata_pulls_match_batch_feature_rows() {
+        let c = homo_graph_cluster();
+        let g = DistGraph::new(&c);
+        let nodes: Vec<NodeId> = c.train_sets[0][..8].to_vec();
+        let rows = g.ndata(&nodes);
+        assert_eq!(rows.len(), nodes.len() * g.ndata_dim());
+        // dense gaussian features: every pulled row must be non-zero
+        for (i, row) in rows.chunks(g.ndata_dim()).enumerate() {
+            assert!(
+                row.iter().any(|&x| x != 0.0),
+                "row {i} (node {}) came back empty",
+                nodes[i]
+            );
+        }
+        // deterministic (same KVStore contents)
+        assert_eq!(rows, g.ndata(&nodes));
+    }
+
+    #[test]
+    fn splits_are_exposed_per_rank() {
+        let c = homo_graph_cluster();
+        let g = DistGraph::new(&c);
+        assert_eq!(g.n_trainers(), 4);
+        let len0 = g.train_idx(0).len();
+        assert!(len0 > 0);
+        for r in 1..g.n_trainers() {
+            assert_eq!(g.train_idx(r).len(), len0);
+        }
+        assert!(!g.val_idx().is_empty());
+        assert_eq!(
+            g.node_labels(&g.train_idx(0)[..4]).len(),
+            4
+        );
+    }
+}

@@ -1,0 +1,688 @@
+//! [`DistNodeDataLoader`]: the DGL-style mini-batch iterator that owns
+//! the 5-stage asynchronous pipeline.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::graph::NodeId;
+use crate::metrics::Metrics;
+use crate::pipeline::{BatchGen, BatchPool, Pipeline, PipelineConfig};
+use crate::runtime::executable::HostBatch;
+use crate::runtime::manifest::VariantSpec;
+use crate::sampler::compact::TaskKind;
+use crate::sampler::BatchScheduler;
+
+use super::{DistGraph, NeighborSampler};
+
+/// Which seed nodes a loader iterates — the deployment's splits, or an
+/// arbitrary node list (offline inference over any vertex set).
+#[derive(Clone, Debug)]
+pub enum Seeds {
+    /// This rank's slice of the training split (§5.6.1 locality-aware).
+    Train,
+    /// The global validation split.
+    Val,
+    /// The global test split.
+    Test,
+    /// An explicit seed list (offline inference; deduplication and order
+    /// are the caller's choice).
+    Nodes(Vec<NodeId>),
+}
+
+/// Builder for [`DistNodeDataLoader`] — DGL's
+/// `DistNodeDataLoader(g, nids, sampler, batch_size=.., shuffle=..,
+/// drop_last=..)` shape. Defaults reproduce the classic training stream
+/// byte for byte: `Seeds::Train`, the variant's own batch size and
+/// fanouts, `shuffle = true`, `drop_last = false`, the non-stop pipeline.
+pub struct DistNodeDataLoaderBuilder<'a> {
+    graph: &'a DistGraph<'a>,
+    vspec: &'a VariantSpec,
+    seeds: Seeds,
+    sampler: Option<NeighborSampler>,
+    rank: usize,
+    batch_size: Option<usize>,
+    shuffle: bool,
+    drop_last: bool,
+    seed: u64,
+    pipeline: PipelineConfig,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl<'a> DistNodeDataLoaderBuilder<'a> {
+    /// Iterate this seed set instead of the training split.
+    pub fn seeds(mut self, seeds: Seeds) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    /// Trainer rank: selects the training-split slice, the machine whose
+    /// KVStore/sampler the loader talks to, and the remote-feature cache
+    /// affinity. Default 0.
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    /// Sampling strategy; default: the variant's own fanouts under the
+    /// deployed schema (see [`NeighborSampler::validate_for`]).
+    pub fn sampler(mut self, sampler: NeighborSampler) -> Self {
+        self.sampler = Some(sampler);
+        self
+    }
+
+    /// Seeds per mini-batch; default (and maximum) is the variant's
+    /// compiled batch size — smaller batches ride in the same padded
+    /// layout, like the evaluation path always has.
+    pub fn batch_size(mut self, batch_size: usize) -> Self {
+        self.batch_size = Some(batch_size);
+        self
+    }
+
+    /// Re-permute the seed order every epoch (default `true`; turn off
+    /// for inference so batches chunk the seed list in order).
+    pub fn shuffle(mut self, shuffle: bool) -> Self {
+        self.shuffle = shuffle;
+        self
+    }
+
+    /// Skip each epoch's short tail batch (default `false`).
+    pub fn drop_last(mut self, drop_last: bool) -> Self {
+        self.drop_last = drop_last;
+        self
+    }
+
+    /// RNG seed for shuffling and neighbor sampling; a fixed seed makes
+    /// the full batch stream reproducible byte for byte.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Pipeline execution mode/depths (default: the paper's non-stop
+    /// asynchronous pipeline).
+    pub fn pipeline(mut self, cfg: PipelineConfig) -> Self {
+        self.pipeline = cfg;
+        self
+    }
+
+    /// Share a metrics sink across loaders (per-batch locality/cache
+    /// counters land here); default: a fresh private instance.
+    pub fn metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Assemble the generator, launch (or inline) the pipeline, and hand
+    /// back the loader.
+    pub fn build(self) -> Result<DistNodeDataLoader> {
+        let cluster = self.graph.cluster();
+        let shape = self.vspec.shape_spec();
+        ensure!(
+            self.rank < cluster.n_trainers(),
+            "rank {} out of range ({} trainers deployed)",
+            self.rank,
+            cluster.n_trainers()
+        );
+        let sampler = self
+            .sampler
+            .unwrap_or_else(|| NeighborSampler::from_variant(self.vspec));
+        sampler.validate_for(self.vspec, &cluster.schema)?;
+        let batch_size = self.batch_size.unwrap_or(shape.batch);
+        ensure!(batch_size > 0, "batch_size must be positive");
+        ensure!(
+            batch_size <= shape.batch,
+            "batch_size {} exceeds the variant's compiled batch {} (the \
+             padded block layout cannot grow)",
+            batch_size,
+            shape.batch
+        );
+
+        // the generator the monolithic trainer used, verbatim — the
+        // default-configured loader must stream byte-identical batches
+        let mut gen: BatchGen =
+            cluster.batch_gen(self.rank, self.vspec, &self.vspec.name, self.seed);
+        let default_schedule = matches!(self.seeds, Seeds::Train)
+            && batch_size == shape.batch
+            && self.shuffle
+            && !self.drop_last;
+        if !default_schedule {
+            gen.scheduler = match (shape.task, self.seeds) {
+                (TaskKind::LinkPrediction, Seeds::Train) => {
+                    BatchScheduler::for_edges_opts(
+                        cluster.lp_edges(self.rank, self.seed),
+                        batch_size,
+                        cluster.n_nodes as u64,
+                        self.seed,
+                        self.shuffle,
+                        self.drop_last,
+                    )
+                }
+                // non-train seeds always iterate plain nodes — for an lp
+                // variant that is the embedding-inference path
+                (_, seeds) => {
+                    let items: Vec<NodeId> = match seeds {
+                        Seeds::Train => cluster.train_sets[self.rank].clone(),
+                        Seeds::Val => cluster.val_nodes.clone(),
+                        Seeds::Test => cluster.test_nodes.clone(),
+                        // moved, not cloned — inference seed lists can
+                        // be large
+                        Seeds::Nodes(v) => v,
+                    };
+                    BatchScheduler::for_nodes_opts(
+                        items,
+                        batch_size,
+                        self.seed,
+                        self.shuffle,
+                        self.drop_last,
+                    )
+                }
+            };
+        }
+        if sampler.etype_weights().is_some() {
+            gen.plan = sampler.plan(&cluster.schema);
+        }
+        let n_seeds = gen.scheduler.n_items();
+        ensure!(n_seeds > 0, "empty seed set");
+        let epoch_len = gen.batches_per_epoch();
+        let pool = gen.pool.clone();
+        let metrics = self
+            .metrics
+            .unwrap_or_else(|| Arc::new(Metrics::new()));
+        let pipeline = Pipeline::start(gen, &self.pipeline, metrics.clone());
+        Ok(DistNodeDataLoader {
+            pipeline,
+            pool,
+            metrics,
+            epoch_len,
+            pos: 0,
+            batch_size,
+            n_seeds,
+        })
+    }
+}
+
+/// Iterator-style mini-batch loader over the deployed cluster — DGL's
+/// `DistNodeDataLoader`. One loader serves one consumer (a trainer rank
+/// or an inference pass); it owns the asynchronous sampling pipeline and
+/// recycles spent batches through its [`BatchPool`].
+///
+/// Two consumption styles:
+///
+/// - **per-epoch iteration** — `for batch in &mut loader { .. }` yields
+///   exactly [`len`](Self::len) batches, then the loader re-arms for the
+///   next epoch (the idiomatic DGL loop);
+/// - **endless stream** — [`next_batch`](Self::next_batch) for
+///   step-counted loops like the built-in trainer.
+///
+/// Return finished batches via [`recycle`](Self::recycle) (or a
+/// [`pool`](Self::pool) handle from inside a `for` loop) so the big
+/// feature buffers keep their capacity from batch to batch.
+pub struct DistNodeDataLoader {
+    pipeline: Pipeline,
+    pool: BatchPool,
+    metrics: Arc<Metrics>,
+    epoch_len: usize,
+    pos: usize,
+    batch_size: usize,
+    n_seeds: usize,
+}
+
+impl DistNodeDataLoader {
+    /// Start building a loader for `graph` that feeds `vspec`-shaped
+    /// batches.
+    pub fn builder<'a>(
+        graph: &'a DistGraph<'a>,
+        vspec: &'a VariantSpec,
+    ) -> DistNodeDataLoaderBuilder<'a> {
+        DistNodeDataLoaderBuilder {
+            graph,
+            vspec,
+            seeds: Seeds::Train,
+            sampler: None,
+            rank: 0,
+            batch_size: None,
+            shuffle: true,
+            drop_last: false,
+            seed: 7,
+            pipeline: PipelineConfig::default(),
+            metrics: None,
+        }
+    }
+
+    /// Mini-batches per epoch (after `drop_last`).
+    pub fn len(&self) -> usize {
+        self.epoch_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.epoch_len == 0
+    }
+
+    /// Seeds this loader iterates per epoch.
+    pub fn n_seeds(&self) -> usize {
+        self.n_seeds
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Next mini-batch as an endless stream (wraps epochs silently) —
+    /// the step-counted-loop style. Blocks until the pipeline has one
+    /// ready.
+    pub fn next_batch(&mut self) -> HostBatch {
+        if self.pos >= self.epoch_len {
+            self.pos = 0;
+        }
+        self.pos += 1;
+        self.pipeline.next()
+    }
+
+    /// Hand a finished batch back for buffer reuse (never required for
+    /// correctness — an unreturned batch is simply dropped).
+    pub fn recycle(&self, batch: HostBatch) {
+        self.pool.put(batch);
+    }
+
+    /// A clonable handle to the recycling pool, for returning batches
+    /// from inside a `for` loop (which holds `&mut self`) or another
+    /// thread.
+    pub fn pool(&self) -> BatchPool {
+        self.pool.clone()
+    }
+
+    /// The metrics sink receiving this loader's per-batch counters
+    /// (`kv.remote_rows`, `cache.*`, `sampler.*`, `pipeline.*`).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+}
+
+impl Iterator for DistNodeDataLoader {
+    type Item = HostBatch;
+
+    /// Yields [`len`](Self::len) batches, then `None` once — after which
+    /// the loader is re-armed for the next epoch.
+    fn next(&mut self) -> Option<HostBatch> {
+        if self.pos >= self.epoch_len {
+            self.pos = 0;
+            return None;
+        }
+        self.pos += 1;
+        Some(self.pipeline.next())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterSpec};
+    use crate::graph::DatasetSpec;
+    use crate::pipeline::PipelineMode;
+    use crate::runtime::manifest::artifacts_dir;
+    use crate::sampler::compact::ModelKind;
+
+    fn dev_vspec(
+        model: ModelKind,
+        batch: usize,
+        feat_dim: usize,
+        num_rels: usize,
+    ) -> VariantSpec {
+        VariantSpec {
+            name: "loader-dev".into(),
+            model,
+            task: TaskKind::NodeClassification,
+            batch,
+            fanouts: vec![3, 3],
+            layer_nodes: vec![
+                (batch * 16).next_multiple_of(128),
+                (batch * 4).next_multiple_of(128),
+                batch.next_multiple_of(128),
+            ],
+            feat_dim,
+            num_classes: 16,
+            num_heads: 1,
+            num_rels,
+            param_shapes: Vec::new(),
+            train_inputs: Vec::new(),
+            eval_inputs: Vec::new(),
+            train_hlo: String::new(),
+            eval_hlo: String::new(),
+            params_bin: String::new(),
+        }
+    }
+
+    fn homo_cluster(cache_budget: usize) -> (Cluster, VariantSpec) {
+        let mut dspec = DatasetSpec::new("loader-t", 1500, 6000);
+        dspec.train_frac = 0.2;
+        let d = dspec.generate();
+        let mut spec = ClusterSpec::new(2, 1);
+        spec.cache_budget_bytes = cache_budget;
+        let c = Cluster::deploy(&d, spec, artifacts_dir()).unwrap();
+        let v = dev_vspec(ModelKind::Sage, 16, d.feat_dim, 1);
+        (c, v)
+    }
+
+    fn hetero_cluster(cache_budget: usize) -> (Cluster, VariantSpec) {
+        let mut dspec =
+            DatasetSpec::new("loader-h", 2000, 8000).with_mag_types();
+        dspec.train_frac = 0.3;
+        let d = dspec.generate();
+        let mut spec = ClusterSpec::new(2, 1);
+        spec.cache_budget_bytes = cache_budget;
+        let c = Cluster::deploy(&d, spec, artifacts_dir()).unwrap();
+        let v = dev_vspec(
+            ModelKind::Rgcn,
+            16,
+            d.schema.max_feat_dim(),
+            d.schema.n_etypes(),
+        );
+        (c, v)
+    }
+
+    fn sync_cfg() -> PipelineConfig {
+        PipelineConfig { mode: PipelineMode::Sync, ..Default::default() }
+    }
+
+    fn default_loader(
+        g: &DistGraph<'_>,
+        v: &VariantSpec,
+        seed: u64,
+        mode: PipelineMode,
+    ) -> DistNodeDataLoader {
+        DistNodeDataLoader::builder(g, v)
+            .seed(seed)
+            .pipeline(PipelineConfig { mode, ..Default::default() })
+            .build()
+            .unwrap()
+    }
+
+    /// The acceptance gate: a default-configured loader streams batches
+    /// byte-identical to the legacy trainer-internal path (the raw
+    /// `Cluster::batch_gen` stream the pre-refactor `trainer::train` fed
+    /// through its private pipeline), across two epochs.
+    #[test]
+    fn loader_stream_is_byte_identical_to_legacy_pipeline() {
+        let (c, v) = homo_cluster(64 << 20);
+        let g = DistGraph::new(&c);
+        let seed = 5u64;
+        let mut legacy = c.batch_gen(0, &v, &v.name, seed);
+        let mut loader =
+            default_loader(&g, &v, seed, PipelineMode::Sync);
+        assert_eq!(loader.len(), legacy.batches_per_epoch());
+        for step in 0..2 * loader.len() {
+            assert_eq!(
+                legacy.next(),
+                loader.next_batch(),
+                "stream diverged at step {step}"
+            );
+        }
+    }
+
+    /// Same acceptance through the *asynchronous* pipeline: thread
+    /// hand-off must not reorder or alter the stream.
+    #[test]
+    fn async_loader_streams_the_same_bytes() {
+        let (c, v) = homo_cluster(64 << 20);
+        let g = DistGraph::new(&c);
+        let mut legacy = c.batch_gen(0, &v, &v.name, 9);
+        let mut loader =
+            default_loader(&g, &v, 9, PipelineMode::AsyncNonstop);
+        for step in 0..loader.len() + 2 {
+            assert_eq!(
+                legacy.next(),
+                loader.next_batch(),
+                "async stream diverged at step {step}"
+            );
+        }
+    }
+
+    #[test]
+    fn same_seed_same_stream_different_seed_differs() {
+        let (c, v) = homo_cluster(64 << 20);
+        let g = DistGraph::new(&c);
+        let mut a = default_loader(&g, &v, 11, PipelineMode::Sync);
+        let mut b = default_loader(&g, &v, 11, PipelineMode::Sync);
+        for _ in 0..a.len() {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+        let mut d = default_loader(&g, &v, 12, PipelineMode::Sync);
+        let mut a2 = default_loader(&g, &v, 11, PipelineMode::Sync);
+        assert_ne!(
+            a2.next_batch().targets,
+            d.next_batch().targets,
+            "seed must change the shuffle"
+        );
+    }
+
+    /// The payload must be byte-identical with the cache on and off; the
+    /// `remote_rows` locality counter is the one field *allowed* to
+    /// differ (hits replace fetches), so it is stripped before comparing.
+    fn strip_locality(mut b: HostBatch) -> HostBatch {
+        b.remote_rows = 0;
+        b
+    }
+
+    #[test]
+    fn cache_on_and_off_stream_identical_bytes() {
+        for hetero in [false, true] {
+            let ((c0, v), (c1, _)) = if hetero {
+                (hetero_cluster(0), hetero_cluster(64 << 20))
+            } else {
+                (homo_cluster(0), homo_cluster(64 << 20))
+            };
+            let g0 = DistGraph::new(&c0);
+            let g1 = DistGraph::new(&c1);
+            let mut off = default_loader(&g0, &v, 3, PipelineMode::Sync);
+            let mut on = default_loader(&g1, &v, 3, PipelineMode::Sync);
+            for step in 0..2 * off.len() {
+                assert_eq!(
+                    strip_locality(off.next_batch()),
+                    strip_locality(on.next_batch()),
+                    "hetero={hetero} diverged at step {step}"
+                );
+            }
+            assert!(
+                on.metrics().counter("cache.hit_rows") > 0,
+                "hetero={hetero}: warm epochs should hit the cache"
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_loader_matches_legacy_and_meters_etypes() {
+        let (c, v) = hetero_cluster(64 << 20);
+        let g = DistGraph::new(&c);
+        let mut legacy = c.batch_gen(0, &v, &v.name, 21);
+        let mut loader = default_loader(&g, &v, 21, PipelineMode::Sync);
+        for step in 0..2 * loader.len() {
+            assert_eq!(
+                legacy.next(),
+                loader.next_batch(),
+                "hetero stream diverged at step {step}"
+            );
+        }
+        let mut typed = 0u64;
+        for r in 0..v.num_rels {
+            typed += loader
+                .metrics()
+                .counter(&format!("sampler.etype_edges.{r}"));
+        }
+        assert!(typed > 0, "no per-etype counters metered");
+    }
+
+    #[test]
+    fn etype_weight_override_redirects_the_fanout() {
+        let (c, v) = hetero_cluster(0);
+        let g = DistGraph::new(&c);
+        let mut w = vec![0usize; v.num_rels];
+        w[0] = 1; // all of each layer's K to relation 0
+        let mut loader = DistNodeDataLoader::builder(&g, &v)
+            .sampler(
+                NeighborSampler::from_variant(&v).with_etype_weights(w),
+            )
+            .pipeline(sync_cfg())
+            .build()
+            .unwrap();
+        for _ in 0..loader.len() {
+            let b = loader.next_batch();
+            loader.recycle(b);
+        }
+        assert!(
+            loader.metrics().counter("sampler.etype_edges.0") > 0,
+            "weighted relation never sampled"
+        );
+        for r in 1..v.num_rels {
+            assert_eq!(
+                loader
+                    .metrics()
+                    .counter(&format!("sampler.etype_edges.{r}")),
+                0,
+                "zero-weighted relation {r} was sampled"
+            );
+        }
+    }
+
+    #[test]
+    fn no_shuffle_chunks_the_seed_list_in_order() {
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        let nodes: Vec<NodeId> = (100..165).collect();
+        let mut loader = DistNodeDataLoader::builder(&g, &v)
+            .seeds(Seeds::Nodes(nodes.clone()))
+            .shuffle(false)
+            .pipeline(sync_cfg())
+            .build()
+            .unwrap();
+        assert_eq!(loader.n_seeds(), 65);
+        assert_eq!(loader.len(), 5); // ceil(65 / 16)
+        for _epoch in 0..2 {
+            let mut seen = Vec::new();
+            for _ in 0..loader.len() {
+                seen.extend(loader.next_batch().targets);
+            }
+            assert_eq!(seen, nodes, "inference order must be preserved");
+        }
+    }
+
+    #[test]
+    fn drop_last_trims_len_and_keeps_batches_full() {
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        let nodes: Vec<NodeId> = (0..65).collect();
+        let mut loader = DistNodeDataLoader::builder(&g, &v)
+            .seeds(Seeds::Nodes(nodes))
+            .drop_last(true)
+            .pipeline(sync_cfg())
+            .build()
+            .unwrap();
+        assert_eq!(loader.len(), 4); // floor(65 / 16)
+        for _ in 0..2 * loader.len() {
+            assert_eq!(loader.next_batch().targets.len(), 16);
+        }
+    }
+
+    #[test]
+    fn builder_rejects_bad_configurations() {
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        // batch larger than the compiled layout
+        assert!(DistNodeDataLoader::builder(&g, &v)
+            .batch_size(v.batch + 1)
+            .build()
+            .is_err());
+        // empty seed set
+        assert!(DistNodeDataLoader::builder(&g, &v)
+            .seeds(Seeds::Nodes(Vec::new()))
+            .build()
+            .is_err());
+        // out-of-range rank
+        assert!(DistNodeDataLoader::builder(&g, &v)
+            .rank(99)
+            .build()
+            .is_err());
+        // mismatched sampler fanouts
+        assert!(DistNodeDataLoader::builder(&g, &v)
+            .sampler(NeighborSampler::new(vec![9]))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn iterator_yields_one_epoch_then_rearms() {
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        let mut loader = DistNodeDataLoader::builder(&g, &v)
+            .seeds(Seeds::Val)
+            .shuffle(false)
+            .pipeline(sync_cfg())
+            .build()
+            .unwrap();
+        let expect = c.val_nodes.len().div_ceil(16);
+        assert_eq!(loader.len(), expect);
+        for _epoch in 0..2 {
+            let mut n = 0usize;
+            let mut seen = std::collections::BTreeSet::new();
+            let pool = loader.pool();
+            for batch in &mut loader {
+                n += 1;
+                seen.extend(batch.targets.iter().copied());
+                pool.put(batch); // recycling from inside the loop
+            }
+            assert_eq!(n, expect, "epoch must end after len() batches");
+            assert_eq!(seen.len(), c.val_nodes.len());
+        }
+        assert!(!loader.pool().is_empty(), "recycled batches not pooled");
+    }
+
+    #[test]
+    fn recycling_does_not_change_the_stream() {
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        let mut fresh = default_loader(&g, &v, 17, PipelineMode::Sync);
+        let mut pooled = default_loader(&g, &v, 17, PipelineMode::Sync);
+        for step in 0..2 * fresh.len() {
+            let a = fresh.next_batch();
+            let b = pooled.next_batch();
+            assert_eq!(a, b, "step {step}");
+            pooled.recycle(b);
+        }
+    }
+
+    #[test]
+    fn lp_variant_trains_through_the_loader() {
+        let (c, _) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        let mut v = dev_vspec(ModelKind::Sage, 16, 32, 1);
+        v.task = TaskKind::LinkPrediction;
+        // default (Train) seeds keep the legacy edge scheduler…
+        let mut legacy = c.batch_gen(0, &v, &v.name, 31);
+        let mut loader = default_loader(&g, &v, 31, PipelineMode::Sync);
+        for step in 0..loader.len() {
+            assert_eq!(
+                legacy.next(),
+                loader.next_batch(),
+                "lp stream diverged at step {step}"
+            );
+        }
+        // …and non-default options rebuild it deterministically
+        let mut a = DistNodeDataLoader::builder(&g, &v)
+            .drop_last(true)
+            .seed(31)
+            .pipeline(sync_cfg())
+            .build()
+            .unwrap();
+        let mut b = DistNodeDataLoader::builder(&g, &v)
+            .drop_last(true)
+            .seed(31)
+            .pipeline(sync_cfg())
+            .build()
+            .unwrap();
+        for _ in 0..a.len() {
+            let ba = a.next_batch();
+            assert_eq!(ba.pair_mask.iter().sum::<f32>(), 16.0);
+            assert_eq!(ba, b.next_batch());
+        }
+    }
+}

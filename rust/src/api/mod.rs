@@ -1,0 +1,38 @@
+//! DGL-shaped public API: custom training loops over the async pipeline.
+//!
+//! DistDGLv2's usability claim is that distributed training needs "almost
+//! no code modification" relative to single-machine DGL (arxiv 2112.15345
+//! §4): the user keeps their own training loop and swaps the graph handle
+//! and data loader for distributed ones. This module is that surface for
+//! the Rust reproduction (docs/DESIGN.md §7):
+//!
+//! - [`DistGraph`] — a cheap handle over a deployed
+//!   [`Cluster`](crate::cluster::Cluster): typed node/edge counts, the
+//!   [`GraphSchema`](crate::graph::GraphSchema), feature pulls through the
+//!   distributed KVStore ([`DistGraph::ndata`]), and the per-trainer
+//!   train/val/test splits.
+//! - [`NeighborSampler`] — the sampling strategy as a value object:
+//!   per-layer fanouts, optionally split per edge type.
+//! - [`DistNodeDataLoader`] — a builder-constructed iterator over
+//!   mini-batches. It owns the 5-stage asynchronous pipeline
+//!   ([`Pipeline`](crate::pipeline::Pipeline)/[`BatchGen`](crate::pipeline::BatchGen))
+//!   internally, supports `batch_size` / `shuffle` / `drop_last` / `seed`,
+//!   and yields recyclable [`HostBatch`](crate::runtime::executable::HostBatch)es
+//!   whose buffers flow back through the
+//!   [`BatchPool`](crate::pipeline::BatchPool) (the §Perf allocation-free
+//!   hot path). Seed sets cover the train/valid/test splits plus any
+//!   explicit node list for offline inference ([`Seeds`]).
+//!
+//! [`trainer::train`](crate::trainer::train) is a thin client of this API;
+//! `examples/custom_loop.rs` is the hand-written equivalent (explicit
+//! device step + all-reduce + an inference pass). Under identical seeds
+//! the loader's batch stream is byte-identical to the pre-refactor
+//! trainer-internal pipeline — test-enforced in [`loader`].
+
+pub mod graph;
+pub mod loader;
+pub mod sampler;
+
+pub use graph::DistGraph;
+pub use loader::{DistNodeDataLoader, DistNodeDataLoaderBuilder, Seeds};
+pub use sampler::NeighborSampler;

@@ -1,0 +1,167 @@
+//! [`NeighborSampler`]: the sampling strategy as a value object.
+
+use anyhow::{ensure, Result};
+
+use crate::graph::{FanoutPlan, GraphSchema};
+use crate::runtime::manifest::VariantSpec;
+
+/// Per-layer neighbor-sampling fanouts, optionally split per edge type —
+/// DGL's `NeighborSampler([k1, k2, ...])` value object. Replaces raw
+/// fanout/plan plumbing in user code: the loader builder turns it into
+/// the [`FanoutPlan`] the distributed sampler executes.
+///
+/// The compiled HLO fixes each layer's padded width to the variant's
+/// fanouts, so a sampler attached to a loader must match its variant
+/// ([`Self::validate_for`]); per-etype *weights* only redistribute each
+/// layer's K across relations and are free to vary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NeighborSampler {
+    fanouts: Vec<usize>,
+    /// Per-etype share of each layer's K; `None` = the schema's weights
+    /// (or the cluster's `etype_fanouts` override).
+    etype_weights: Option<Vec<usize>>,
+}
+
+impl NeighborSampler {
+    /// Uniform sampler: `fanouts[l-1]` neighbors per seed at layer `l`
+    /// (input side first, like the variant specs).
+    pub fn new(fanouts: Vec<usize>) -> Self {
+        Self { fanouts, etype_weights: None }
+    }
+
+    /// The sampler a compiled variant was lowered for.
+    pub fn from_variant(vspec: &VariantSpec) -> Self {
+        Self::new(vspec.fanouts.clone())
+    }
+
+    /// Split each layer's K across edge types proportionally to
+    /// `weights` (one entry per schema etype) instead of the schema's
+    /// own fanout weights.
+    pub fn with_etype_weights(mut self, weights: Vec<usize>) -> Self {
+        self.etype_weights = Some(weights);
+        self
+    }
+
+    pub fn fanouts(&self) -> &[usize] {
+        &self.fanouts
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    pub fn etype_weights(&self) -> Option<&[usize]> {
+        self.etype_weights.as_deref()
+    }
+
+    /// The per-layer per-etype plan this sampler executes under `schema`.
+    pub fn plan(&self, schema: &GraphSchema) -> FanoutPlan {
+        match &self.etype_weights {
+            Some(w) => FanoutPlan::from_weights(w, &self.fanouts),
+            None => FanoutPlan::from_schema(schema, &self.fanouts),
+        }
+    }
+
+    /// Check this sampler is executable for a compiled variant under a
+    /// deployed schema: layer fanouts must equal the variant's (the HLO's
+    /// padded widths are lowered from them) and any per-etype weights
+    /// must cover the schema with at least one nonzero entry.
+    pub fn validate_for(
+        &self,
+        vspec: &VariantSpec,
+        schema: &GraphSchema,
+    ) -> Result<()> {
+        ensure!(
+            self.fanouts == vspec.fanouts,
+            "sampler fanouts {:?} do not match variant {:?} (compiled for \
+             {:?}); the AOT shapes fix the per-layer widths",
+            self.fanouts,
+            vspec.name,
+            vspec.fanouts
+        );
+        if let Some(w) = &self.etype_weights {
+            ensure!(
+                w.len() == schema.n_etypes(),
+                "etype weights have {} entries, schema has {} etypes",
+                w.len(),
+                schema.n_etypes()
+            );
+            ensure!(
+                w.iter().any(|&x| x > 0),
+                "etype weights must have at least one nonzero entry"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeTypeSpec, GraphSchema};
+    use crate::sampler::compact::{ModelKind, TaskKind};
+
+    fn vspec(fanouts: Vec<usize>) -> VariantSpec {
+        VariantSpec {
+            name: "t".into(),
+            model: ModelKind::Sage,
+            task: TaskKind::NodeClassification,
+            batch: 16,
+            fanouts,
+            layer_nodes: vec![512, 128, 128],
+            feat_dim: 8,
+            num_classes: 4,
+            num_heads: 1,
+            num_rels: 1,
+            param_shapes: Vec::new(),
+            train_inputs: Vec::new(),
+            eval_inputs: Vec::new(),
+            train_hlo: String::new(),
+            eval_hlo: String::new(),
+            params_bin: String::new(),
+        }
+    }
+
+    #[test]
+    fn plan_preserves_layer_totals() {
+        let mut schema = GraphSchema::homogeneous(8);
+        schema.etypes = vec![
+            EdgeTypeSpec { name: "a".into(), fanout_weight: 2 },
+            EdgeTypeSpec { name: "b".into(), fanout_weight: 1 },
+        ];
+        let s = NeighborSampler::new(vec![6, 3]);
+        let p = s.plan(&schema);
+        assert_eq!(p.layer_total(1), 6);
+        assert_eq!(p.layer_total(2), 3);
+        assert_eq!(p.layer(1).len(), 2);
+        // explicit weights override the schema's
+        let sw = NeighborSampler::new(vec![6, 3])
+            .with_etype_weights(vec![1, 1]);
+        assert_eq!(sw.plan(&schema).layer(1), &[3, 3]);
+    }
+
+    #[test]
+    fn validation_pins_fanouts_to_the_variant() {
+        let v = vspec(vec![5, 5]);
+        let schema = GraphSchema::homogeneous(8);
+        NeighborSampler::from_variant(&v)
+            .validate_for(&v, &schema)
+            .unwrap();
+        assert!(NeighborSampler::new(vec![5, 4])
+            .validate_for(&v, &schema)
+            .is_err());
+        // weights must cover the schema's etypes
+        assert!(NeighborSampler::from_variant(&v)
+            .with_etype_weights(vec![1, 1])
+            .validate_for(&v, &schema)
+            .is_err());
+        assert!(NeighborSampler::from_variant(&v)
+            .with_etype_weights(vec![0])
+            .validate_for(&v, &schema)
+            .is_err());
+        NeighborSampler::from_variant(&v)
+            .with_etype_weights(vec![3])
+            .validate_for(&v, &schema)
+            .unwrap();
+    }
+}

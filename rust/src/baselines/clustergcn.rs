@@ -157,6 +157,7 @@ impl ClusterGcnGen {
             label_mask: mask,
             pair_mask: Vec::new(),
             targets: block.targets,
+            input_nodes: block.input_nodes,
             remote_rows: 0,
             dropped_neighbors: block.dropped_neighbors,
         }

@@ -94,6 +94,7 @@ impl FullGraphGen {
             label_mask: mask,
             pair_mask: Vec::new(),
             targets: block.targets,
+            input_nodes: block.input_nodes,
             remote_rows: 0,
             dropped_neighbors: block.dropped_neighbors,
         }

@@ -272,6 +272,15 @@ impl Cluster {
         self.spec.n_machines * self.spec.trainers_per_machine
     }
 
+    /// Fraction of the graph's undirected edges cut by the partitioning,
+    /// derived in one place so every report agrees: `stats.edge_cut`
+    /// counts each cut pair once, while `n_edges` counts both stored
+    /// directions of the symmetrized graph, so the denominator is
+    /// `n_edges / 2` undirected pairs.
+    pub fn edge_cut_frac(&self) -> f64 {
+        self.stats.edge_cut as f64 / (self.n_edges as f64 / 2.0).max(1.0)
+    }
+
     /// Build one trainer's remote-feature cache per the spec knobs;
     /// `None` when `cache_budget_bytes == 0`. The auto degree-admission
     /// threshold resolves to the dataset mean degree.
@@ -344,38 +353,12 @@ impl Cluster {
                 shape.batch,
                 seed,
             ),
-            TaskKind::LinkPrediction => {
-                // lp training items: one positive edge per assigned node
-                // (its first sampled neighbor), negatives drawn uniformly
-                let mut rng = Rng::new(seed ^ 0xE18E5);
-                let part =
-                    &self.partitions[machine as usize];
-                let mut edges = Vec::with_capacity(items.len());
-                for &v in &items {
-                    if let Some(local) = part.local_of(v) {
-                        if part.is_core_local(local) {
-                            let nbrs = part.graph.neighbors(local);
-                            if !nbrs.is_empty() {
-                                let pick =
-                                    nbrs[rng.usize_below(nbrs.len())];
-                                edges.push((
-                                    v,
-                                    part.global_of(pick),
-                                ));
-                                continue;
-                            }
-                        }
-                    }
-                    // remote or isolated item: self-pair (masked later)
-                    edges.push((v, v));
-                }
-                BatchScheduler::for_edges(
-                    edges,
-                    shape.batch,
-                    self.n_nodes as u64,
-                    seed,
-                )
-            }
+            TaskKind::LinkPrediction => BatchScheduler::for_edges(
+                self.lp_edges(trainer, seed),
+                shape.batch,
+                self.n_nodes as u64,
+                seed,
+            ),
         };
         let mut kv = self.kv.client(machine, self.policy.clone());
         if let Some(cache) = self.make_feature_cache() {
@@ -398,6 +381,34 @@ impl Cluster {
             pool: BatchPool::default(),
             label_scratch: Vec::new(),
         }
+    }
+
+    /// Link-prediction training items for one trainer: one positive edge
+    /// per assigned node (its first sampled neighbor; remote or isolated
+    /// items become self-pairs, masked later). Deterministic in `seed` —
+    /// shared by [`Self::batch_gen`] and the `api` data-loader builder so
+    /// both construct byte-identical schedulers.
+    pub fn lp_edges(&self, trainer: usize, seed: u64) -> Vec<(NodeId, NodeId)> {
+        let machine = self.machine_of_trainer(trainer);
+        let items = &self.train_sets[trainer];
+        let mut rng = Rng::new(seed ^ 0xE18E5);
+        let part = &self.partitions[machine as usize];
+        let mut edges = Vec::with_capacity(items.len());
+        for &v in items {
+            if let Some(local) = part.local_of(v) {
+                if part.is_core_local(local) {
+                    let nbrs = part.graph.neighbors(local);
+                    if !nbrs.is_empty() {
+                        let pick = nbrs[rng.usize_below(nbrs.len())];
+                        edges.push((v, part.global_of(pick)));
+                        continue;
+                    }
+                }
+            }
+            // remote or isolated item: self-pair (masked later)
+            edges.push((v, v));
+        }
+        edges
     }
 
     /// The per-layer per-etype fanout schedule: each layer's K split by
@@ -639,6 +650,32 @@ mod tests {
         let mut spec2 = ClusterSpec::new(2, 1);
         spec2.etype_fanouts = vec![0]; // all-zero weights rejected
         assert!(Cluster::deploy(&d, spec2, artifacts_dir()).is_err());
+    }
+
+    #[test]
+    fn edge_cut_frac_is_a_true_pair_fraction() {
+        // edge_cut counts undirected cut pairs once; n_edges counts both
+        // stored directions — the fraction must land in (0, 1] and agree
+        // with the pairwise derivation (regression for the old examples'
+        // ad-hoc `/ n_edges * 2.0` prints, now derived in one place)
+        let c = small_cluster(4, 1);
+        let f = c.edge_cut_frac();
+        assert!(f > 0.0 && f <= 1.0, "edge cut fraction {f}");
+        let pairs = c.n_edges as f64 / 2.0;
+        assert!((f - c.stats.edge_cut as f64 / pairs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lp_edges_are_deterministic_and_anchored() {
+        let c = small_cluster(2, 1);
+        let a = c.lp_edges(0, 42);
+        let b = c.lp_edges(0, 42);
+        assert_eq!(a, b, "same seed must derive the same positive edges");
+        assert_eq!(a.len(), c.train_sets[0].len());
+        for (h, _) in &a {
+            assert!(c.train_sets[0].contains(h));
+        }
+        assert_ne!(a, c.lp_edges(0, 43), "seed must matter");
     }
 
     #[test]

@@ -105,6 +105,9 @@ impl RunConfig {
             "lr" => self.train.lr = value.parse()?,
             "epochs" => self.train.epochs = parse_usize()?,
             "max_steps" => self.train.max_steps = parse_usize()?,
+            // skip each epoch's short tail batch (the loader's DGL-style
+            // drop_last; max_steps=0 inherits the shorter epoch length)
+            "drop_last" => self.train.drop_last = parse_bool(value)?,
             "eval" => self.train.eval_each_epoch = parse_bool(value)?,
             "seed" => {
                 self.train.seed = value.parse()?;
@@ -129,7 +132,7 @@ impl RunConfig {
                  num_rels dataset_seed machines trainers partitioner \
                  multi_constraint two_level emulate_network \
                  cache_budget_bytes cache_admission etype_fanouts \
-                 variant lr epochs max_steps eval seed pipeline \
+                 variant lr epochs max_steps drop_last eval seed pipeline \
                  cpu_prefetch gpu_prefetch"
             ),
         }
@@ -261,6 +264,18 @@ mod tests {
         .is_err());
         // default: no override (schema weights apply)
         assert!(RunConfig::default().cluster.etype_fanouts.is_empty());
+    }
+
+    #[test]
+    fn drop_last_parses_and_defaults_off() {
+        assert!(!RunConfig::default().train.drop_last);
+        let cfg = RunConfig::from_args(["drop_last=true".to_string()])
+            .unwrap();
+        assert!(cfg.train.drop_last);
+        assert!(RunConfig::from_args(
+            ["drop_last=maybe".to_string()]
+        )
+        .is_err());
     }
 
     #[test]

@@ -18,9 +18,16 @@
 //! compute once; [`runtime`] loads the HLO via the PJRT C API and the rest
 //! of the system is pure Rust.
 //!
-//! Start with [`cluster::Cluster`] (deployment) and [`trainer::train`]
-//! (the synchronous-SGD driver), or see `examples/quickstart.rs`.
+//! Start with the DGL-shaped public surface in [`api`]:
+//! [`api::DistGraph`] over a deployed [`cluster::Cluster`], and
+//! [`api::DistNodeDataLoader`] for mini-batches — any loop can drain it
+//! (`examples/custom_loop.rs` shows a hand-written train + inference
+//! loop). [`trainer::train`] is the built-in synchronous-SGD driver, a
+//! thin client of the same API; `examples/quickstart.rs` is the smallest
+//! end-to-end run. The DGL → rust_pallas correspondence table lives in
+//! docs/DESIGN.md §7.
 
+pub mod api;
 pub mod baselines;
 pub mod benchsuite;
 pub mod cluster;

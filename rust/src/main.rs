@@ -6,7 +6,10 @@
 //!   info                      list available AOT variants
 //!
 //! All keys are documented by `config::RunConfig::set` (any invalid key
-//! prints the full list).
+//! prints the full list). `train` drives `trainer::train`, the thin
+//! built-in client of the `api::DistGraph` / `api::DistNodeDataLoader`
+//! surface — custom loops use the same API directly
+//! (`examples/custom_loop.rs`).
 
 use std::path::PathBuf;
 
@@ -102,10 +105,7 @@ fn cmd_partition(mut args: Vec<String>) -> Result<()> {
     let s = &cluster.stats;
     println!("partitions           {}", cfg.cluster.n_machines);
     println!("edge cut             {}", s.edge_cut);
-    println!(
-        "edge cut fraction    {:.4}",
-        s.edge_cut as f64 / d.graph.n_edges() as f64 * 2.0
-    );
+    println!("edge cut fraction    {:.4}", cluster.edge_cut_frac());
     println!("imbalance            {:.3}", s.imbalance);
     println!("partition time       {:.3}s", s.partition_secs);
     println!("build (halo/relabel) {:.3}s", s.build_secs);

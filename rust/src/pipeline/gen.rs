@@ -228,6 +228,7 @@ impl BatchGen {
             label_mask,
             pair_mask,
             targets: block.targets,
+            input_nodes: block.input_nodes,
             remote_rows,
             dropped_neighbors: block.dropped_neighbors,
         }
@@ -453,6 +454,7 @@ pub mod tests_support {
             label_mask: vec![1.0; nl],
             pair_mask: vec![1.0; shape.batch],
             targets: block.targets,
+            input_nodes: block.input_nodes,
             remote_rows: 0,
             dropped_neighbors: block.dropped_neighbors,
         }

@@ -19,7 +19,12 @@ use super::manifest::{Manifest, VariantSpec};
 
 /// A fully materialized mini-batch on the host, ready for device transfer
 /// (the output of the pipeline's compact stage).
-#[derive(Clone, Debug, Default)]
+///
+/// In DGL terms a mini-batch is the `(input_nodes, output_nodes, blocks)`
+/// triple a `DistNodeDataLoader` yields; [`HostBatch::unpack`] exposes
+/// exactly that view (`targets` are the output/seed nodes, `layers` the
+/// blocks), with the features/labels already pulled alongside.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct HostBatch {
     /// Padded input features, `n0 * feat_dim`.
     pub feats: Vec<f32>,
@@ -32,16 +37,41 @@ pub struct HostBatch {
     pub pair_mask: Vec<f32>,
     /// Real target globals (for accuracy computation on eval).
     pub targets: Vec<crate::graph::NodeId>,
+    /// Real (un-padded) input-frontier globals in layer-0 slot order —
+    /// DGL's `input_nodes`. Host-side (maps layer-0 rows, e.g. inference
+    /// embeddings, back to global ids); not part of the device payload.
+    pub input_nodes: Vec<crate::graph::NodeId>,
     /// Observability: remote feature rows + dropped neighbors.
     pub remote_rows: usize,
     pub dropped_neighbors: usize,
 }
 
 impl HostBatch {
+    /// The DGL mini-batch triple: `(input_nodes, seeds, blocks)`.
+    pub fn unpack(
+        &self,
+    ) -> (
+        &[crate::graph::NodeId],
+        &[crate::graph::NodeId],
+        &[crate::sampler::compact::LayerBlock],
+    ) {
+        (&self.input_nodes, &self.targets, &self.layers)
+    }
+
+    /// The seed (output) nodes of this mini-batch — DGL's `output_nodes`.
+    pub fn seeds(&self) -> &[crate::graph::NodeId] {
+        &self.targets
+    }
+
+    /// The per-layer message-flow blocks, input side first.
+    pub fn blocks(&self) -> &[crate::sampler::compact::LayerBlock] {
+        &self.layers
+    }
+
     /// Host→device payload size (what the GPU prefetcher moves, §5.5.2).
-    /// The relation-segmented `seg_*` arrays are host-side observability
-    /// and are not shipped — the dense `rel` array is what the RGCN HLO
-    /// consumes.
+    /// The relation-segmented `seg_*` arrays and the `input_nodes` /
+    /// `targets` id lists are host-side observability and are not
+    /// shipped — the dense `rel` array is what the RGCN HLO consumes.
     pub fn h2d_bytes(&self) -> u64 {
         let mut b = self.feats.len() * 4
             + self.labels.len() * 4

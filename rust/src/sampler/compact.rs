@@ -47,7 +47,7 @@ impl ShapeSpec {
 }
 
 /// One layer's padded index arrays (layer l: dst array length `n_l`).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerBlock {
     /// `i32[n_l]` — position of dst node i in the layer-(l-1) node array.
     pub self_idx: Vec<i32>,

@@ -55,10 +55,31 @@ pub struct BatchScheduler {
     rng: Rng,
     cursor: usize,
     order: Vec<u32>,
+    /// Re-permute the item order at each epoch boundary (training
+    /// default). `false` keeps the given item order every epoch
+    /// (evaluation / offline inference).
+    shuffle: bool,
+    /// Skip the short trailing batch of each epoch (DGL's `drop_last`).
+    /// Only effective while at least one full batch exists — a seed set
+    /// smaller than `batch_size` still yields its single short batch.
+    drop_last: bool,
 }
 
 impl BatchScheduler {
     pub fn for_nodes(items: Vec<NodeId>, batch_size: usize, seed: u64) -> Self {
+        Self::for_nodes_opts(items, batch_size, seed, true, false)
+    }
+
+    /// [`Self::for_nodes`] with explicit `shuffle` / `drop_last` behavior
+    /// (the data-loader knobs; the defaults reproduce the classic
+    /// training stream byte for byte).
+    pub fn for_nodes_opts(
+        items: Vec<NodeId>,
+        batch_size: usize,
+        seed: u64,
+        shuffle: bool,
+        drop_last: bool,
+    ) -> Self {
         let n = items.len();
         let mut s = Self {
             items_nodes: items,
@@ -68,6 +89,8 @@ impl BatchScheduler {
             rng: Rng::new(seed),
             cursor: 0,
             order: (0..n as u32).collect(),
+            shuffle,
+            drop_last,
         };
         s.reshuffle();
         s
@@ -79,6 +102,18 @@ impl BatchScheduler {
         n_nodes_total: u64,
         seed: u64,
     ) -> Self {
+        Self::for_edges_opts(items, batch_size, n_nodes_total, seed, true, false)
+    }
+
+    /// [`Self::for_edges`] with explicit `shuffle` / `drop_last` behavior.
+    pub fn for_edges_opts(
+        items: Vec<(NodeId, NodeId)>,
+        batch_size: usize,
+        n_nodes_total: u64,
+        seed: u64,
+        shuffle: bool,
+        drop_last: bool,
+    ) -> Self {
         let n = items.len();
         let mut s = Self {
             items_nodes: Vec::new(),
@@ -88,13 +123,17 @@ impl BatchScheduler {
             rng: Rng::new(seed),
             cursor: 0,
             order: (0..n as u32).collect(),
+            shuffle,
+            drop_last,
         };
         s.reshuffle();
         s
     }
 
     fn reshuffle(&mut self) {
-        self.rng.shuffle(&mut self.order);
+        if self.shuffle {
+            self.rng.shuffle(&mut self.order);
+        }
         self.cursor = 0;
     }
 
@@ -102,15 +141,29 @@ impl BatchScheduler {
         self.order.len()
     }
 
-    /// Batches per epoch (last short batch included).
+    /// Batches per epoch: the last short batch is included unless
+    /// `drop_last` is set (and a full batch exists at all).
     pub fn batches_per_epoch(&self) -> usize {
-        self.n_items().div_ceil(self.batch_size)
+        let n = self.n_items();
+        if self.drop_last && n >= self.batch_size {
+            n / self.batch_size
+        } else {
+            n.div_ceil(self.batch_size)
+        }
     }
 
-    /// Next mini-batch; wraps to a fresh shuffled epoch at the boundary.
-    /// Returns (epoch_position, Target).
+    /// Next mini-batch; wraps to a fresh (re-shuffled unless `shuffle`
+    /// is off) epoch at the boundary, skipping the short tail batch when
+    /// `drop_last` is set.
     pub fn next_batch(&mut self) -> Target {
-        if self.cursor >= self.order.len() {
+        // drop_last: a partial tail (fewer than batch_size items left,
+        // with at least one full batch in the epoch) wraps early
+        let need = if self.drop_last && self.order.len() >= self.batch_size {
+            self.batch_size
+        } else {
+            1
+        };
+        if self.cursor + need > self.order.len() {
             self.reshuffle();
         }
         let end = (self.cursor + self.batch_size).min(self.order.len());
@@ -182,6 +235,56 @@ mod tests {
             assert_eq!(*t, *h + 100);
         }
         assert!(negs.iter().all(|&n| (n as u64) < 1000));
+    }
+
+    #[test]
+    fn no_shuffle_keeps_item_order_every_epoch() {
+        let items: Vec<NodeId> = (0..40).collect();
+        let mut s = BatchScheduler::for_nodes_opts(items, 16, 9, false, false);
+        for _epoch in 0..2 {
+            let mut seen = Vec::new();
+            for _ in 0..s.batches_per_epoch() {
+                let Target::Nodes(v) = s.next_batch() else { panic!() };
+                seen.extend(v);
+            }
+            assert_eq!(seen, (0..40).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn drop_last_skips_the_short_tail() {
+        let items: Vec<NodeId> = (0..65).collect();
+        let mut s = BatchScheduler::for_nodes_opts(items, 16, 4, true, true);
+        assert_eq!(s.batches_per_epoch(), 4); // floor(65/16), not ceil
+        for _ in 0..3 * s.batches_per_epoch() {
+            let Target::Nodes(v) = s.next_batch() else { panic!() };
+            assert_eq!(v.len(), 16, "drop_last yielded a short batch");
+        }
+    }
+
+    #[test]
+    fn drop_last_with_tiny_seed_set_still_yields_batches() {
+        // fewer items than batch_size: drop_last would starve the loader,
+        // so the single short batch is kept
+        let items: Vec<NodeId> = (0..5).collect();
+        let mut s = BatchScheduler::for_nodes_opts(items, 16, 4, true, true);
+        assert_eq!(s.batches_per_epoch(), 1);
+        let Target::Nodes(v) = s.next_batch() else { panic!() };
+        assert_eq!(v.len(), 5);
+    }
+
+    #[test]
+    fn default_constructors_match_opted_defaults() {
+        // the classic constructors must produce the byte-identical stream
+        // of the explicit (shuffle=true, drop_last=false) form
+        let a: Vec<NodeId> = (0..50).collect();
+        let mut s1 = BatchScheduler::for_nodes(a.clone(), 16, 7);
+        let mut s2 = BatchScheduler::for_nodes_opts(a, 16, 7, true, false);
+        for _ in 0..2 * s1.batches_per_epoch() {
+            let Target::Nodes(x) = s1.next_batch() else { panic!() };
+            let Target::Nodes(y) = s2.next_batch() else { panic!() };
+            assert_eq!(x, y);
+        }
     }
 
     #[test]

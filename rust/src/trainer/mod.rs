@@ -18,9 +18,10 @@ pub use split::split_training_set;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::api::{DistGraph, DistNodeDataLoader, Seeds};
 use crate::cluster::Cluster;
 use crate::metrics::Metrics;
-use crate::pipeline::{BatchGen, Pipeline, PipelineConfig};
+use crate::pipeline::PipelineConfig;
 use crate::util::Rng;
 
 /// Training hyper-parameters for one run.
@@ -29,8 +30,13 @@ pub struct TrainConfig {
     pub variant: String,
     pub lr: f32,
     pub epochs: usize,
-    /// Cap on total steps (0 = epochs * batches_per_epoch).
+    /// Cap on total steps (0 = epochs * loader length). A cap that is
+    /// not a multiple of the per-epoch batch count leaves a short final
+    /// epoch window in the report (see [`epoch_windows`]).
     pub max_steps: usize,
+    /// Skip each epoch's short tail batch (DGL's `drop_last`); shrinks
+    /// the loader length accordingly, which `max_steps = 0` inherits.
+    pub drop_last: bool,
     pub pipeline: PipelineConfig,
     pub seed: u64,
     /// Evaluate on the validation set after each epoch.
@@ -44,6 +50,7 @@ impl Default for TrainConfig {
             lr: 0.3,
             epochs: 2,
             max_steps: 0,
+            drop_last: false,
             pipeline: PipelineConfig::default(),
             seed: 7,
             eval_each_epoch: false,
@@ -109,10 +116,15 @@ impl TrainReport {
 
 /// Run synchronous data-parallel training on a deployed cluster.
 ///
-/// Spawns one trainer thread per (machine, trainer-slot); each consumes
-/// its own pipeline and participates in the ring all-reduce; a device
-/// executor per machine serializes device compute (this testbed has one
-/// physical core — device *scaling* is reported via the cost model).
+/// A thin client of the public `api` surface: one
+/// [`DistNodeDataLoader`] per trainer rank drains the asynchronous
+/// pipeline exactly as any hand-written loop would
+/// (`examples/custom_loop.rs` is the open-coded equivalent — same
+/// batches, byte for byte). Spawns one trainer thread per (machine,
+/// trainer-slot); each consumes its own loader and participates in the
+/// ring all-reduce; a device executor per machine serializes device
+/// compute (this testbed has one physical core — device *scaling* is
+/// reported via the cost model).
 pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport> {
     let n_trainers = cluster.n_trainers();
     let metrics = Arc::new(Metrics::new());
@@ -147,7 +159,27 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         .collect();
     let ar = AllReduceGroup::new(machine_of.clone(), cluster.cost.clone());
 
-    let steps_per_epoch = cluster.batches_per_epoch(spec.batch, cfg.seed);
+    // One data loader per trainer rank through the public API — the same
+    // construction any custom loop performs; all pipeline/BatchGen wiring
+    // lives behind the loader.
+    let graph = DistGraph::new(cluster);
+    let mut loaders: Vec<DistNodeDataLoader> =
+        Vec::with_capacity(n_trainers);
+    for t in 0..n_trainers {
+        loaders.push(
+            DistNodeDataLoader::builder(&graph, &spec)
+                .rank(t)
+                .seeds(Seeds::Train)
+                .drop_last(cfg.drop_last)
+                .seed(cfg.seed ^ (t as u64) << 17)
+                .pipeline(cfg.pipeline.clone())
+                .metrics(metrics.clone())
+                .build()?,
+        );
+    }
+    // synchronous SGD: the splits are trimmed to equal counts at deploy,
+    // so every rank's loader agrees on the epoch length
+    let steps_per_epoch = loaders[0].len();
     let total_steps = if cfg.max_steps > 0 {
         cfg.max_steps
     } else {
@@ -157,19 +189,8 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     let cost0 = cluster.cost.snapshot();
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for t in 0..n_trainers {
+    for (t, mut loader) in loaders.into_iter().enumerate() {
         let machine = machine_of[t];
-        let gen: BatchGen = cluster.batch_gen(
-            t,
-            &spec,
-            &cfg.variant,
-            cfg.seed ^ (t as u64) << 17,
-        );
-        // shared recycling pool: spent batches flow back from this
-        // trainer thread to the sampling thread's BatchGen (§Perf)
-        let pool = gen.pool.clone();
-        let mut pipeline =
-            Pipeline::start(gen, &cfg.pipeline, metrics.clone());
         let device = devices[machine as usize].handle();
         let ep = ar.endpoint(t);
         let mut params = init_params.clone();
@@ -180,7 +201,7 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
                 let mut losses = Vec::with_capacity(total_steps);
                 for _step in 0..total_steps {
                     let batch = metrics
-                        .time("trainer.wait_batch", || pipeline.next());
+                        .time("trainer.wait_batch", || loader.next_batch());
                     metrics
                         .inc("trainer.remote_rows", batch.remote_rows as u64);
                     metrics.inc(
@@ -191,7 +212,9 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
                         metrics.time("trainer.device", || {
                             device.train_reusing(&mut params, batch, lr)
                         })?;
-                    pool.put(spent);
+                    // spent batches flow back to the sampling thread's
+                    // BatchGen through the loader's pool (§Perf)
+                    loader.recycle(spent);
                     losses.push(loss);
                     // synchronous SGD barrier: average replicas
                     metrics.time("trainer.allreduce", || {
@@ -224,12 +247,9 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     // epoch aggregation + optional eval
     let mut epochs = Vec::new();
     let mut final_val_acc = None;
-    for e in 0..cfg.epochs.max(1) {
-        let lo = e * steps_per_epoch;
-        let hi = ((e + 1) * steps_per_epoch).min(total_steps);
-        if lo >= hi {
-            break;
-        }
+    for (e, (lo, hi)) in
+        epoch_windows(steps_per_epoch, total_steps).into_iter().enumerate()
+    {
         let mean_loss = loss_curve[lo..hi]
             .iter()
             .map(|&x| x as f64)
@@ -297,4 +317,55 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
 pub fn mix_seed(seed: u64, t: usize) -> u64 {
     let mut r = Rng::new(seed);
     r.split(t as u64).next_u64()
+}
+
+/// Closed-open step windows `[lo, hi)` attributing every step of a
+/// `max_steps`-capped run to an epoch: full windows of
+/// `steps_per_epoch`, with one short final window when the cap falls
+/// inside an epoch. Unlike the pre-loader aggregation (which silently
+/// dropped steps beyond `epochs * steps_per_epoch`), every step lands in
+/// exactly one window — the loader's `len()` (which already accounts for
+/// `drop_last` and the trimmed multi-trainer split) is the
+/// `steps_per_epoch` to pass.
+pub fn epoch_windows(
+    steps_per_epoch: usize,
+    total_steps: usize,
+) -> Vec<(usize, usize)> {
+    let spe = steps_per_epoch.max(1);
+    (0..total_steps.div_ceil(spe))
+        .map(|e| (e * spe, ((e + 1) * spe).min(total_steps)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_windows_partition_every_step() {
+        // regression for the epoch-boundary off-by-one: a max_steps cap
+        // one past an epoch boundary must open a 1-step final window,
+        // and a cap exactly on the boundary must not open an empty one
+        assert_eq!(epoch_windows(5, 11), vec![(0, 5), (5, 10), (10, 11)]);
+        assert_eq!(epoch_windows(5, 10), vec![(0, 5), (5, 10)]);
+        assert_eq!(epoch_windows(5, 4), vec![(0, 4)]);
+        assert_eq!(epoch_windows(5, 0), Vec::<(usize, usize)>::new());
+        // drop_last shrinks the per-epoch count; the windows follow it
+        assert_eq!(epoch_windows(4, 9), vec![(0, 4), (4, 8), (8, 9)]);
+        for (spe, total) in [(1usize, 7usize), (3, 7), (7, 7), (16, 7)] {
+            let w = epoch_windows(spe, total);
+            assert_eq!(w[0].0, 0);
+            assert_eq!(w.last().unwrap().1, total);
+            for pair in w.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0, "windows must be contiguous");
+            }
+            assert!(w.iter().all(|&(lo, hi)| lo < hi), "no empty windows");
+        }
+    }
+
+    #[test]
+    fn epoch_windows_survive_degenerate_epoch_len() {
+        // steps_per_epoch 0 (empty split) must not divide by zero
+        assert_eq!(epoch_windows(0, 3), vec![(0, 1), (1, 2), (2, 3)]);
+    }
 }

@@ -4,12 +4,13 @@
 
 use std::path::PathBuf;
 
+use distdglv2::api::{DistGraph, DistNodeDataLoader};
 use distdglv2::cluster::{Cluster, ClusterSpec, Partitioner};
 use distdglv2::config::RunConfig;
 use distdglv2::graph::DatasetSpec;
 use distdglv2::pipeline::PipelineMode;
 use distdglv2::runtime::manifest::{artifacts_dir, Manifest};
-use distdglv2::trainer::{self, TrainConfig};
+use distdglv2::trainer::{self, DeviceExecutor, TrainConfig};
 
 fn artifacts() -> PathBuf {
     // tests run from the crate root
@@ -214,6 +215,110 @@ fn mag_lsc_rgcn_end_to_end_hetero() {
         "expected a typed edge mix, got {:?}",
         report.etype_sampled_edges
     );
+}
+
+/// The api_redesign acceptance gate, end to end: a hand-written loop
+/// over `DistGraph` + `DistNodeDataLoader` + an explicit device handle
+/// reproduces `trainer::train`'s losses and final parameters exactly —
+/// the loader streams the same bytes the trainer's internal pipeline
+/// consumed pre-refactor (1 trainer, so the all-reduce is the identity).
+#[test]
+fn custom_loop_over_the_api_matches_trainer_train() {
+    let d = small_dataset(7);
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        lr: 0.3,
+        epochs: 1,
+        max_steps: 6,
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::Sync;
+    let c1 =
+        Cluster::deploy(&d, ClusterSpec::new(1, 1), artifacts()).unwrap();
+    let report = trainer::train(&c1, &cfg).unwrap();
+
+    // a fresh, identically-deployed cluster and the open-coded loop
+    let c2 =
+        Cluster::deploy(&d, ClusterSpec::new(1, 1), artifacts()).unwrap();
+    let graph = DistGraph::new(&c2);
+    let device = DeviceExecutor::spawn(
+        c2.artifacts.clone(),
+        cfg.variant.clone(),
+        None,
+    )
+    .unwrap();
+    let spec = device.spec().unwrap();
+    let mut params = device.initial_params().unwrap();
+    let mut loader = DistNodeDataLoader::builder(&graph, &spec)
+        .seed(cfg.seed) // trainer rank 0 mixes to exactly cfg.seed
+        .pipeline(cfg.pipeline.clone())
+        .build()
+        .unwrap();
+    let handle = device.handle();
+    let mut losses = Vec::new();
+    for _ in 0..report.steps {
+        let batch = loader.next_batch();
+        let (loss, spent) =
+            handle.train_reusing(&mut params, batch, cfg.lr).unwrap();
+        loader.recycle(spent);
+        losses.push(loss);
+    }
+    assert_eq!(losses, report.loss_curve, "loss curves diverged");
+    assert_eq!(params, report.final_params, "parameters diverged");
+}
+
+/// Regression for the epoch-boundary off-by-one: a max_steps cap one
+/// past an epoch boundary must surface as a 1-step final epoch window,
+/// and drop_last must shrink the epoch length max_steps=0 inherits —
+/// both via the loader's len().
+#[test]
+fn max_steps_and_drop_last_interact_via_loader_len() {
+    let d = small_dataset(8);
+    let cluster =
+        Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts()).unwrap();
+    let m = Manifest::load(&artifacts()).unwrap();
+    let v = m.variant("sage_nc_dev").unwrap();
+    let n = cluster.train_sets[0].len();
+    let spe = n.div_ceil(v.batch);
+
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        epochs: 5,
+        max_steps: spe + 1,
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::Sync;
+    let report = trainer::train(&cluster, &cfg).unwrap();
+    assert_eq!(report.steps, spe + 1);
+    assert_eq!(report.loss_curve.len(), spe + 1);
+    assert_eq!(
+        report.epochs.len(),
+        2,
+        "one step past the boundary must open a second epoch window"
+    );
+    // the 1-step window's mean is that step's (trainer-mean) loss
+    let tail = report.epochs[1].mean_loss;
+    assert!(
+        (tail - report.loss_curve[spe] as f64).abs() < 1e-6,
+        "tail window {tail} != step loss {}",
+        report.loss_curve[spe]
+    );
+
+    if n > v.batch && n % v.batch != 0 {
+        let mut cfg2 = TrainConfig {
+            variant: "sage_nc_dev".into(),
+            epochs: 1,
+            drop_last: true,
+            ..Default::default()
+        };
+        cfg2.pipeline.mode = PipelineMode::Sync;
+        let r2 = trainer::train(&cluster, &cfg2).unwrap();
+        assert_eq!(
+            r2.steps,
+            n / v.batch,
+            "max_steps=0 must inherit the drop_last epoch length"
+        );
+    }
 }
 
 #[test]
