@@ -4,15 +4,27 @@
 //! before/after every optimization; EXPERIMENTS.md §Perf records the log.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use distdglv2::api::{DistGraph, DistNodeDataLoader};
 use distdglv2::cluster::{Cluster, ClusterSpec};
 use distdglv2::graph::{DatasetSpec, FanoutPlan};
+use distdglv2::kvstore::{KvCluster, RangePolicy, TypedFeatures};
+use distdglv2::metrics::Metrics;
 use distdglv2::net::CostModel;
-use distdglv2::pipeline::{PipelineConfig, PipelineMode};
+use distdglv2::partition::{
+    build_partitions, metis_partition, relabel, NodeMap, PartitionConfig,
+    VertexWeights,
+};
+use distdglv2::pipeline::gen::etype_metric_keys;
+use distdglv2::pipeline::{
+    BatchGen, BatchPool, Pipeline, PipelineConfig, PipelineMode,
+};
 use distdglv2::runtime::manifest::{artifacts_dir, Manifest, VariantSpec};
 use distdglv2::sampler::compact::{to_block, ModelKind, ShapeSpec, TaskKind};
-use distdglv2::sampler::DistNeighborSampler;
+use distdglv2::sampler::{
+    BatchScheduler, DistNeighborSampler, SamplerServer,
+};
 use distdglv2::trainer::{AllReduceGroup, DeviceExecutor};
 use distdglv2::util::bench::BenchRunner;
 use distdglv2::util::Rng;
@@ -355,6 +367,160 @@ fn main() -> anyhow::Result<()> {
         ),
     )?;
     println!("wrote BENCH_hetero.json");
+
+    // --- worker scaling: parallel mini-batch generation --------------------
+    // Hand-built 3-partition pipeline (trainer on machine 0, remote rows
+    // on two other owners) over a deliberately *slow* emulated link
+    // (1 GB/s, 200 µs/message) so network time dominates batch
+    // generation the way it does at paper scale. Grid: workers ∈ {1,2,4}
+    // × serial-vs-concurrent per-owner RPC × cpu-only vs emulated
+    // network. Cache off, fixed seed: every config produces the exact
+    // same batches, so modeled network bytes must be identical across
+    // the whole grid (asserted) while batches/sec scales.
+    let vw3 = VertexWeights::uniform(dataset.n_nodes());
+    let p3 =
+        metis_partition(&dataset.graph, &vw3, &PartitionConfig::new(3));
+    let r3 = relabel::relabel(&p3);
+    let d3 = relabel::relabel_dataset(&dataset, &r3);
+    let parts3 = build_partitions(&d3.graph, &r3.node_map);
+    let servers3: Vec<Arc<SamplerServer>> = parts3
+        .into_iter()
+        .enumerate()
+        .map(|(m, pp)| Arc::new(SamplerServer::new(m as u32, Arc::new(pp))))
+        .collect();
+    let nm3 = Arc::new(NodeMap {
+        part_starts: r3.node_map.part_starts.clone(),
+    });
+    let labels3: Vec<f32> = d3.labels.iter().map(|&l| l as f32).collect();
+    // seeds spread over the whole id space → multi-owner fan-out on the
+    // hot path; 8 epochs' worth keeps every config run short but steady
+    let n_seeds = (8 * shape.batch).min(d3.n_nodes());
+    let stride_w = (d3.n_nodes() / n_seeds).max(1);
+    let seeds_w: Vec<u32> = (0..n_seeds as u32)
+        .map(|i| i * stride_w as u32)
+        .collect();
+    let mk_gen = |cost: Arc<CostModel>,
+                  emulate: bool,
+                  concurrent: bool|
+     -> BatchGen {
+        let kv = KvCluster::with_options(3, cost.clone(), emulate, concurrent);
+        let policy = Arc::new(RangePolicy::new(NodeMap {
+            part_starts: nm3.part_starts.clone(),
+        }));
+        let features = TypedFeatures::from_schema(
+            "feat",
+            &d3.schema,
+            Arc::new(d3.graph.node_type.clone()),
+        );
+        kv.register_typed(&features, &d3.feats, d3.feat_dim, policy.as_ref());
+        kv.register_partitioned("label", &labels3, 1, policy.as_ref());
+        let mut sampler =
+            DistNeighborSampler::new(0, servers3.clone(), nm3.clone(), cost);
+        sampler.emulate_network_time = emulate;
+        sampler.concurrent_fanout = concurrent;
+        let client = kv.client(0, policy);
+        BatchGen {
+            spec: shape.clone(),
+            scheduler: BatchScheduler::for_nodes(
+                seeds_w.clone(),
+                shape.batch,
+                5,
+            ),
+            sampler: Arc::new(sampler),
+            kv: client,
+            seed: 7,
+            pos: 0,
+            eval_pos: 0,
+            plan: FanoutPlan::from_schema(&d3.schema, &shape.fanouts),
+            features,
+            label_name: "label".into(),
+            metrics: Arc::new(Metrics::new()),
+            etype_keys: etype_metric_keys(shape.num_rels),
+            pool: BatchPool::default(),
+            label_scratch: Vec::new(),
+        }
+    };
+    let mut rows_json: Vec<String> = Vec::new();
+    let mut bytes_seen: Option<u64> = None;
+    let mut bps_of = std::collections::HashMap::new();
+    for emulate in [false, true] {
+        for concurrent in [false, true] {
+            for workers in [1usize, 2, 4] {
+                let cost =
+                    Arc::new(CostModel::new(1e9, 200e-6, 12e9));
+                let gen = mk_gen(cost.clone(), emulate, concurrent);
+                let pool = gen.pool.clone();
+                let bpe = gen.batches_per_epoch();
+                let cfg = PipelineConfig {
+                    mode: PipelineMode::Async, // exact production count
+                    cpu_prefetch_depth: 4,
+                    gpu_prefetch_depth: 1,
+                    num_workers: workers,
+                };
+                let mut pipe =
+                    Pipeline::start(gen, &cfg, Arc::new(Metrics::new()));
+                let total = 2 * bpe;
+                let t = Instant::now();
+                for _ in 0..total {
+                    let b = pipe.next();
+                    std::hint::black_box(b.targets.len());
+                    pool.put(b);
+                }
+                let secs = t.elapsed().as_secs_f64();
+                drop(pipe);
+                let bytes = cost.network_bytes();
+                match bytes_seen {
+                    None => bytes_seen = Some(bytes),
+                    Some(b0) => assert_eq!(
+                        bytes, b0,
+                        "modeled network bytes changed across the grid"
+                    ),
+                }
+                let bps = total as f64 / secs;
+                let net = if emulate { "emulated" } else { "cpu" };
+                let rpc = if concurrent { "concurrent" } else { "serial" };
+                bps_of.insert((emulate, concurrent, workers), bps);
+                println!(
+                    "workers stage: {net:>8} net, {rpc:>10} rpc, \
+                     {workers} worker(s): {bps:8.1} batches/s \
+                     ({total} batches, {bytes} modeled B)"
+                );
+                rows_json.push(format!(
+                    "    {{\"net\": \"{net}\", \"rpc\": \"{rpc}\", \
+                     \"workers\": {workers}, \"secs\": {secs:.6}, \
+                     \"batches_per_s\": {bps:.3}, \
+                     \"net_bytes\": {bytes}}}"
+                ));
+            }
+        }
+    }
+    let speedup_em =
+        bps_of[&(true, true, 4)] / bps_of[&(true, false, 1)].max(1e-12);
+    let speedup_cpu =
+        bps_of[&(false, true, 4)] / bps_of[&(false, false, 1)].max(1e-12);
+    println!(
+        "worker scaling: 4 workers + concurrent RPC vs 1 worker serial = \
+         {speedup_em:.2}x (emulated network, expect >= 2.0), \
+         {speedup_cpu:.2}x (cpu-only)"
+    );
+    std::fs::write(
+        "BENCH_workers.json",
+        format!(
+            "{{\n  \"bench\": \"hotpath.workers\",\n  \
+             \"partitions\": 3,\n  \
+             \"batch\": {},\n  \
+             \"batches_per_config\": {},\n  \
+             \"link\": {{\"bytes_per_sec\": 1e9, \"latency_s\": 2e-4}},\n  \
+             \"rows\": [\n{}\n  ],\n  \
+             \"speedup_w4_concurrent_vs_w1_serial\": \
+             {{\"emulated\": {speedup_em:.3}, \"cpu\": {speedup_cpu:.3}}}\n\
+             }}\n",
+            shape.batch,
+            2 * (n_seeds / shape.batch.max(1)),
+            rows_json.join(",\n"),
+        ),
+    )?;
+    println!("wrote BENCH_workers.json");
 
     // --- all-reduce --------------------------------------------------------
     let param_elems: usize = vspec.param_elements();

@@ -106,6 +106,14 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
         self
     }
 
+    /// Sampling workers for this loader's pipeline (DGL's
+    /// `num_workers`); the batch stream is byte-identical for any value.
+    /// Shorthand for setting [`PipelineConfig::num_workers`].
+    pub fn num_workers(mut self, num_workers: usize) -> Self {
+        self.pipeline.num_workers = num_workers.max(1);
+        self
+    }
+
     /// Share a metrics sink across loaders (per-batch locality/cache
     /// counters land here); default: a fresh private instance.
     pub fn metrics(mut self, metrics: Arc<Metrics>) -> Self {
@@ -488,6 +496,111 @@ mod tests {
                 "hetero={hetero}: warm epochs should hit the cache"
             );
         }
+    }
+
+    /// The tentpole acceptance gate: identical `HostBatch` streams for
+    /// `num_workers` ∈ {1, 4} — hetero + homogeneous, cache off and on,
+    /// all three pipeline modes. `remote_rows` is stripped because with
+    /// a shared cache the hit/miss attribution of a row depends on which
+    /// worker touched it first; the payload bytes never do.
+    #[test]
+    fn worker_count_never_changes_the_stream() {
+        for hetero in [false, true] {
+            for cache in [0usize, 64 << 20] {
+                let ((c1, v), (c4, _)) = if hetero {
+                    (hetero_cluster(cache), hetero_cluster(cache))
+                } else {
+                    (homo_cluster(cache), homo_cluster(cache))
+                };
+                let g1 = DistGraph::new(&c1);
+                let g4 = DistGraph::new(&c4);
+                for mode in [
+                    PipelineMode::Sync,
+                    PipelineMode::Async,
+                    PipelineMode::AsyncNonstop,
+                ] {
+                    let mut one = default_loader(&g1, &v, 13, mode);
+                    let mut four = DistNodeDataLoader::builder(&g4, &v)
+                        .seed(13)
+                        .pipeline(PipelineConfig {
+                            mode,
+                            ..Default::default()
+                        })
+                        .num_workers(4)
+                        .build()
+                        .unwrap();
+                    for step in 0..2 * one.len() + 1 {
+                        assert_eq!(
+                            strip_locality(one.next_batch()),
+                            strip_locality(four.next_batch()),
+                            "hetero={hetero} cache={cache} {mode:?} \
+                             step {step}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serial vs concurrent per-owner RPC fan-out: identical batches
+    /// (including `remote_rows` — no cache here) and identical modeled
+    /// network bytes, on a 3-machine deployment so several remote owners
+    /// are in flight at once.
+    #[test]
+    fn serial_and_concurrent_rpc_stream_identical_bytes() {
+        let mk = |concurrent: bool| {
+            let mut dspec = DatasetSpec::new("loader-rpc", 1500, 6000);
+            dspec.train_frac = 0.2;
+            let d = dspec.generate();
+            let mut spec = ClusterSpec::new(3, 1);
+            spec.cache_budget_bytes = 0;
+            spec.concurrent_rpc = concurrent;
+            let c = Cluster::deploy(&d, spec, artifacts_dir()).unwrap();
+            let v = dev_vspec(ModelKind::Sage, 16, d.feat_dim, 1);
+            (c, v)
+        };
+        let (cs, v) = mk(false);
+        let (cc, _) = mk(true);
+        let gs = DistGraph::new(&cs);
+        let gc = DistGraph::new(&cc);
+        let mut serial = default_loader(&gs, &v, 23, PipelineMode::Sync);
+        let mut conc = default_loader(&gc, &v, 23, PipelineMode::Sync);
+        for step in 0..2 * serial.len() {
+            assert_eq!(
+                serial.next_batch(),
+                conc.next_batch(),
+                "fan-out strategy changed the stream at step {step}"
+            );
+        }
+        assert_eq!(
+            cs.cost.network_bytes(),
+            cc.cost.network_bytes(),
+            "fan-out strategy changed the modeled bytes"
+        );
+    }
+
+    /// Recycling through the shared pool under a real worker pool must
+    /// not change any produced batch (workers reuse returned buffers).
+    #[test]
+    fn worker_pool_with_recycling_streams_identical_bytes() {
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        let mut fresh = default_loader(&g, &v, 17, PipelineMode::Sync);
+        let mut pooled = DistNodeDataLoader::builder(&g, &v)
+            .seed(17)
+            .num_workers(3)
+            .build()
+            .unwrap();
+        for step in 0..3 * fresh.len() {
+            let a = fresh.next_batch();
+            let b = pooled.next_batch();
+            assert_eq!(a, b, "step {step}");
+            pooled.recycle(b);
+        }
+        assert!(
+            pooled.metrics().counter("pool.hit") > 0,
+            "workers never reused a recycled batch"
+        );
     }
 
     #[test]

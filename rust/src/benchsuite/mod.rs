@@ -246,6 +246,19 @@ pub fn locality_summary(report: &TrainReport) -> String {
             counts.join(" ")
         ));
     }
+    // per-stage CPU attribution (aggregated across sampling workers) and
+    // BatchPool effectiveness
+    s.push_str(&format!(
+        " | stage secs sched:{:.3} sample:{:.3} pull:{:.3} compact:{:.3} \
+         | pool hit {} / miss {} / dropped {}",
+        report.stage_schedule_secs,
+        report.stage_sample_secs,
+        report.stage_pull_secs,
+        report.stage_compact_secs,
+        report.pool_hit,
+        report.pool_miss,
+        report.pool_dropped,
+    ));
     s
 }
 

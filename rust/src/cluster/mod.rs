@@ -46,6 +46,12 @@ pub struct ClusterSpec {
     pub two_level: bool,
     /// Sleep for modeled link time on remote pulls (wall-clock fidelity).
     pub emulate_network_time: bool,
+    /// Dispatch per-owner sampler/KV requests concurrently (wall clock =
+    /// max over owners under emulation; default). `false` restores the
+    /// serial owner loops — results and modeled bytes are identical
+    /// either way (test-enforced), so this is purely a perf/ablation
+    /// knob (`concurrent_rpc` config key).
+    pub concurrent_rpc: bool,
     /// Per-trainer remote-feature cache budget (bytes); 0 disables the
     /// [`FeatureCache`] entirely (see `docs/PERF.md`).
     pub cache_budget_bytes: usize,
@@ -67,6 +73,7 @@ impl ClusterSpec {
             multi_constraint: true,
             two_level: true,
             emulate_network_time: false,
+            concurrent_rpc: true,
             cache_budget_bytes: 64 << 20,
             cache_admission: CacheAdmission::All,
             etype_fanouts: Vec::new(),
@@ -193,11 +200,12 @@ impl Cluster {
         // KVStore: features + labels partitioned by the range policy
         let t_load = Instant::now();
         let cost = Arc::new(CostModel::default());
-        let kv = if spec.emulate_network_time {
-            KvCluster::with_emulated_network(spec.n_machines, cost.clone())
-        } else {
-            KvCluster::new(spec.n_machines, cost.clone())
-        };
+        let kv = KvCluster::with_options(
+            spec.n_machines,
+            cost.clone(),
+            spec.emulate_network_time,
+            spec.concurrent_rpc,
+        );
         let policy = Arc::new(RangePolicy::new(NodeMap {
             part_starts: node_map.part_starts.clone(),
         }));
@@ -346,6 +354,7 @@ impl Cluster {
             self.cost.clone(),
         );
         sampler.emulate_network_time = self.spec.emulate_network_time;
+        sampler.concurrent_fanout = self.spec.concurrent_rpc;
         let items = self.train_sets[trainer].clone();
         let scheduler = match shape.task {
             TaskKind::NodeClassification => BatchScheduler::for_nodes(
@@ -372,7 +381,9 @@ impl Cluster {
             scheduler,
             sampler: Arc::new(sampler),
             kv,
-            rng: Rng::new(seed ^ 0xBA7C4),
+            seed: seed ^ 0xBA7C4,
+            pos: 0,
+            eval_pos: 0,
             plan,
             features: self.features.clone(),
             label_name: "label".into(),

@@ -82,6 +82,11 @@ impl RunConfig {
             "emulate_network" => {
                 self.cluster.emulate_network_time = parse_bool(value)?
             }
+            // serial vs concurrent per-owner RPC fan-out (perf ablation;
+            // the batch stream is byte-identical either way)
+            "concurrent_rpc" => {
+                self.cluster.concurrent_rpc = parse_bool(value)?
+            }
             "cache_budget_bytes" => {
                 self.cluster.cache_budget_bytes = parse_usize()?
             }
@@ -127,13 +132,22 @@ impl RunConfig {
             "gpu_prefetch" => {
                 self.train.pipeline.gpu_prefetch_depth = parse_usize()?
             }
+            // sampling workers per trainer (stage 1-4 parallelism); the
+            // batch stream is byte-identical for any value
+            "num_workers" => {
+                let n = parse_usize()?;
+                if n == 0 {
+                    bail!("num_workers must be >= 1");
+                }
+                self.train.pipeline.num_workers = n;
+            }
             _ => bail!(
                 "unknown key {key:?}; valid: dataset feat_dim classes \
                  num_rels dataset_seed machines trainers partitioner \
                  multi_constraint two_level emulate_network \
-                 cache_budget_bytes cache_admission etype_fanouts \
-                 variant lr epochs max_steps drop_last eval seed pipeline \
-                 cpu_prefetch gpu_prefetch"
+                 concurrent_rpc cache_budget_bytes cache_admission \
+                 etype_fanouts variant lr epochs max_steps drop_last eval \
+                 seed pipeline cpu_prefetch gpu_prefetch num_workers"
             ),
         }
         Ok(())
@@ -264,6 +278,22 @@ mod tests {
         .is_err());
         // default: no override (schema weights apply)
         assert!(RunConfig::default().cluster.etype_fanouts.is_empty());
+    }
+
+    #[test]
+    fn worker_and_rpc_knobs_parse() {
+        let d = RunConfig::default();
+        assert_eq!(d.train.pipeline.num_workers, 1);
+        assert!(d.cluster.concurrent_rpc);
+        let cfg = RunConfig::from_args(
+            ["num_workers=4", "concurrent_rpc=false"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.train.pipeline.num_workers, 4);
+        assert!(!cfg.cluster.concurrent_rpc);
+        assert!(
+            RunConfig::from_args(["num_workers=0".to_string()]).is_err()
+        );
     }
 
     #[test]

@@ -34,6 +34,22 @@
 //! Correctness bar (tested): cached and uncached pulls return
 //! byte-identical rows, and all randomness is untouched — the cache never
 //! consumes RNG state.
+//!
+//! **Thread-safety audit (worker pool).** The cache itself is plain
+//! single-threaded state — no interior mutability, no lock on the hit
+//! path. When a trainer runs N sampling workers, the forked
+//! [`KvClient`](super::KvClient)s share one cache behind an
+//! `Arc<Mutex<..>>` (one budget, one working set); the client locks it
+//! once for a pull's whole lookup pass and once for the insert pass, so
+//! invariants that span fields (map ↔ slots ↔ data ↔ stats) are only
+//! ever observed consistent. Under sharing, *which* worker's pull is
+//! counted as the miss for a cold row is schedule-dependent — two
+//! workers can race the same cold row and both miss — but
+//! `hit_rows + miss_rows` still equals the total remote lookups and
+//! every miss is a fetched row (test:
+//! `forked_clients_share_cache_and_stats_stay_consistent`), and served
+//! bytes are identical in every interleaving because entries are
+//! immutable copies of immutable tensor rows.
 
 use std::sync::Arc;
 

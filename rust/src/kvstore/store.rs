@@ -1,7 +1,17 @@
 //! KvServer / KvClient: batched pull & sparse push with locality-aware
 //! routing and full byte accounting.
+//!
+//! §Perf: remote per-owner pulls are dispatched **concurrently** (one
+//! scoped thread per remote owner; the local shard is scattered on the
+//! calling thread), so under `emulate_network_time` a pull's wall clock
+//! is the max over owners instead of the sum. Remote rows stage through
+//! a per-owner response buffer on that path (the wire's response framing)
+//! and are scattered — and offered to the [`FeatureCache`], in owner
+//! order, so cache state evolves exactly as in the serial loop — after
+//! the join. Byte metering and returned bytes are identical with
+//! concurrency on or off (test-enforced).
 
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use rustc_hash::FxHashMap;
 
@@ -186,30 +196,54 @@ pub struct KvCluster {
     pub cost: Arc<CostModel>,
     /// Emulate modeled link time with sleeps (wall-clock fidelity knob).
     pub emulate_network_time: bool,
+    /// Dispatch per-owner remote pulls concurrently (max-over-owners wall
+    /// clock under emulation). `false` restores the serial owner loop;
+    /// bytes and results are identical either way.
+    pub concurrent_fanout: bool,
 }
 
 impl KvCluster {
     pub fn new(n_machines: usize, cost: Arc<CostModel>) -> Arc<Self> {
-        Arc::new(Self {
-            servers: (0..n_machines as u32)
-                .map(|m| Arc::new(KvServer::new(m)))
-                .collect(),
-            cost,
-            emulate_network_time: false,
-        })
+        Self::with_options(n_machines, cost, false, true)
     }
 
     pub fn with_emulated_network(
         n_machines: usize,
         cost: Arc<CostModel>,
     ) -> Arc<Self> {
+        Self::with_options(n_machines, cost, true, true)
+    }
+
+    /// Full-knob constructor (`emulate_network_time`, `concurrent_fanout`).
+    pub fn with_options(
+        n_machines: usize,
+        cost: Arc<CostModel>,
+        emulate_network_time: bool,
+        concurrent_fanout: bool,
+    ) -> Arc<Self> {
         Arc::new(Self {
             servers: (0..n_machines as u32)
                 .map(|m| Arc::new(KvServer::new(m)))
                 .collect(),
             cost,
-            emulate_network_time: true,
+            emulate_network_time,
+            concurrent_fanout,
         })
+    }
+
+    /// Meter (and, under emulation, sleep for) one remote owner's pull
+    /// round-trip of `n_rows` rows of width `dim`.
+    fn meter_pull(&self, src: u32, owner: u32, n_rows: usize, dim: usize) {
+        let req_bytes = 16 + n_rows as u64 * 4;
+        let resp_bytes = 16 + (n_rows * dim) as u64 * 4;
+        self.cost.on_network(src, owner, req_bytes);
+        self.cost.on_network(owner, src, resp_bytes);
+        if self.emulate_network_time {
+            let secs = (req_bytes + resp_bytes) as f64
+                / self.cost.net_bytes_per_sec
+                + 2.0 * self.cost.net_latency_s;
+            spin_sleep(secs);
+        }
     }
 
     /// Register a globally partitioned tensor: `rows[gid]` goes to
@@ -299,6 +333,7 @@ impl KvCluster {
             push_groups: Vec::new(),
             typed_groups: Vec::new(),
             slot_scratch: Vec::new(),
+            pull_stage: Vec::new(),
         }
     }
 }
@@ -309,12 +344,14 @@ impl KvCluster {
 /// across calls (§Perf: the mini-batch hot path performs zero steady-state
 /// allocations here), which is why [`Self::pull`] and [`Self::push_grad`]
 /// take `&mut self`. An optional [`FeatureCache`] serves repeated remote
-/// rows from trainer memory.
+/// rows from trainer memory; it sits behind an `Arc<Mutex<..>>` so that
+/// [`Self::fork`]ed worker handles share one budget and one working set
+/// (the cache itself stays single-threaded — see its module docs).
 pub struct KvClient {
     cluster: Arc<KvCluster>,
     pub machine: u32,
     policy: Arc<dyn PartitionPolicy>,
-    cache: Option<FeatureCache>,
+    cache: Option<Arc<Mutex<FeatureCache>>>,
     /// Reusable per-owner (locals, id-indices) grouping scratch for
     /// `pull`/`pull_typed`.
     pull_groups: Vec<(Vec<u32>, Vec<usize>)>,
@@ -325,28 +362,54 @@ pub struct KvClient {
     typed_groups: Vec<(Vec<NodeId>, Vec<usize>)>,
     /// Reusable slot-mapping scratch for the typed scatter.
     slot_scratch: Vec<usize>,
+    /// Reusable per-owner response staging buffers for the concurrent
+    /// fan-out path (the wire's response framing; §Perf: capacity is
+    /// retained across batches, keeping the hot path allocation-free).
+    pull_stage: Vec<Vec<f32>>,
 }
 
 impl KvClient {
     /// Attach a remote-row cache. Pulls of `cache.tensor()` consult it;
     /// all other tensors are unaffected.
     pub fn attach_cache(&mut self, cache: FeatureCache) {
-        self.cache = Some(cache);
+        self.cache = Some(Arc::new(Mutex::new(cache)));
     }
 
-    pub fn cache(&self) -> Option<&FeatureCache> {
-        self.cache.as_ref()
+    /// The shared cache handle, if any (what [`Self::fork`] propagates).
+    pub fn shared_cache(&self) -> Option<Arc<Mutex<FeatureCache>>> {
+        self.cache.clone()
+    }
+
+    /// An independent handle over the same cluster for a sampling
+    /// worker: same machine / policy / shared [`FeatureCache`], private
+    /// grouping scratch. Cache *contents* under N forks depend on which
+    /// worker fetches a row first (hit/miss counters are
+    /// schedule-dependent); returned bytes never do — the cache is
+    /// value-transparent.
+    pub fn fork(&self) -> KvClient {
+        KvClient {
+            cluster: Arc::clone(&self.cluster),
+            machine: self.machine,
+            policy: self.policy.clone(),
+            cache: self.cache.clone(),
+            pull_groups: Vec::new(),
+            push_groups: Vec::new(),
+            typed_groups: Vec::new(),
+            slot_scratch: Vec::new(),
+            pull_stage: Vec::new(),
+        }
     }
 
     /// Cumulative cache counters, if a cache is attached.
     pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.stats())
+        self.cache.as_ref().map(|c| c.lock().unwrap().stats())
     }
 
-    /// Cache counters accumulated since the last call (for metrics
-    /// publication); `None` when no cache is attached.
-    pub fn take_cache_delta(&mut self) -> Option<CacheStats> {
-        self.cache.as_mut().map(|c| c.take_delta())
+    /// Cache counters accumulated since the last call *on any fork of
+    /// this client* (the delta cursor is shared cache state); `None`
+    /// when no cache is attached.
+    pub fn take_cache_delta(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.lock().unwrap().take_delta())
     }
 
     /// Pull rows for `ids` into `out` (len = ids.len() * dim). Local rows
@@ -373,14 +436,17 @@ impl KvClient {
     /// so every pull path gates — and binds the per-ntype dims — the
     /// same way.
     fn cache_gate(&mut self, name: &str, dims: &[usize]) -> bool {
-        let on = self
-            .cache
-            .as_ref()
-            .is_some_and(|c| c.is_enabled() && c.tensor() == name);
-        if on {
-            self.cache.as_mut().unwrap().ensure_dims(dims);
+        match &self.cache {
+            Some(c) => {
+                let mut c = c.lock().unwrap();
+                let on = c.is_enabled() && c.tensor() == name;
+                if on {
+                    c.ensure_dims(dims);
+                }
+                on
+            }
+            Option::None => false,
         }
-        on
     }
 
     /// Typed pull: row `ids[i]` comes from its node type's table (width
@@ -486,7 +552,8 @@ impl KvClient {
                 out[slot * stride + dim..(slot + 1) * stride].fill(0.0);
             }
         }
-        // group by owner, remembering each id's index (reused scratch)
+        // group by owner, remembering each id's index (reused scratch);
+        // the cache is consulted under one lock for the whole pass
         let nparts = self.policy.n_parts();
         let mut groups = std::mem::take(&mut self.pull_groups);
         let mut slot_scratch = std::mem::take(&mut self.slot_scratch);
@@ -497,67 +564,138 @@ impl KvClient {
             g.0.clear();
             g.1.clear();
         }
-        for (j, &gid) in ids.iter().enumerate() {
-            let slot = slots.map_or(j, |s| s[j]);
-            let owner = self.policy.owner(gid) as usize;
-            if use_cache && owner as u32 != self.machine {
-                let c = self.cache.as_mut().unwrap();
-                if c.lookup(
-                    ntype,
-                    gid,
-                    &mut out[slot * stride..slot * stride + dim],
-                ) {
+        {
+            let mut cache_guard = if use_cache {
+                Some(self.cache.as_ref().unwrap().lock().unwrap())
+            } else {
+                Option::None
+            };
+            for (j, &gid) in ids.iter().enumerate() {
+                let slot = slots.map_or(j, |s| s[j]);
+                let owner = self.policy.owner(gid) as usize;
+                if owner as u32 != self.machine {
+                    if let Some(c) = cache_guard.as_deref_mut() {
+                        if c.lookup(
+                            ntype,
+                            gid,
+                            &mut out[slot * stride..slot * stride + dim],
+                        ) {
+                            continue;
+                        }
+                    }
+                }
+                groups[owner].0.push(self.policy.local_of(gid));
+                groups[owner].1.push(j);
+            }
+        }
+        let machine = self.machine;
+        let n_remote = groups
+            .iter()
+            .enumerate()
+            .filter(|(o, g)| *o as u32 != machine && !g.0.is_empty())
+            .count();
+        let mut remote_rows = 0usize;
+        if self.cluster.concurrent_fanout && n_remote >= 2 {
+            // concurrent fan-out: one thread per remote owner stages its
+            // response rows into the client's reused per-owner buffers
+            // (metering + modeled link time inside the thread, so sleeps
+            // overlap); the local shard scatters on the calling thread
+            // in the meantime
+            let cluster = &self.cluster;
+            let mut stage = std::mem::take(&mut self.pull_stage);
+            if stage.len() != nparts {
+                stage.resize_with(nparts, Vec::new);
+            }
+            std::thread::scope(|sc| {
+                let mut handles = Vec::with_capacity(n_remote);
+                for (owner, (buf, (locals, _))) in
+                    stage.iter_mut().zip(groups.iter()).enumerate()
+                {
+                    if owner as u32 == machine || locals.is_empty() {
+                        continue;
+                    }
+                    handles.push(sc.spawn(move || {
+                        // rows are fully overwritten; stale contents of
+                        // a longer previous response are never read
+                        buf.resize(locals.len() * dim, 0.0);
+                        cluster.servers[owner].read_rows(name, locals, buf);
+                        cluster.meter_pull(
+                            machine,
+                            owner as u32,
+                            locals.len(),
+                            dim,
+                        );
+                    }));
+                }
+                let (locals, idxs) = &groups[machine as usize];
+                if !locals.is_empty() {
+                    let slot_buf =
+                        resolve_slots(idxs, slots, &mut slot_scratch);
+                    cluster.servers[machine as usize].read_rows_scattered(
+                        name, locals, slot_buf, out, stride,
+                    );
+                }
+                for h in handles {
+                    h.join().expect("kv fan-out thread panicked");
+                }
+            });
+            // scatter staged rows and offer them to the cache in owner
+            // order — the exact cache-state evolution of the serial loop
+            for (owner, (locals, idxs)) in groups.iter().enumerate() {
+                if owner as u32 == machine || locals.is_empty() {
                     continue;
                 }
-            }
-            groups[owner].0.push(self.policy.local_of(gid));
-            groups[owner].1.push(j);
-        }
-        let mut remote_rows = 0usize;
-        for (owner, (locals, idxs)) in groups.iter().enumerate() {
-            if locals.is_empty() {
-                continue;
-            }
-            let server = &self.cluster.servers[owner];
-            if owner as u32 != self.machine {
+                let buf = &stage[owner];
                 remote_rows += locals.len();
-                let req_bytes = 16 + locals.len() as u64 * 4;
-                let resp_bytes = 16 + (locals.len() * dim) as u64 * 4;
-                self.cluster.cost.on_network(
-                    self.machine,
-                    owner as u32,
-                    req_bytes,
-                );
-                self.cluster.cost.on_network(
-                    owner as u32,
-                    self.machine,
-                    resp_bytes,
-                );
-                if self.cluster.emulate_network_time {
-                    let secs = (req_bytes + resp_bytes) as f64
-                        / self.cluster.cost.net_bytes_per_sec
-                        + 2.0 * self.cluster.cost.net_latency_s;
-                    spin_sleep(secs);
+                let slot_buf = resolve_slots(idxs, slots, &mut slot_scratch);
+                for (i, &slot) in slot_buf.iter().enumerate() {
+                    out[slot * stride..slot * stride + dim]
+                        .copy_from_slice(&buf[i * dim..(i + 1) * dim]);
+                }
+                if use_cache {
+                    let mut c =
+                        self.cache.as_ref().unwrap().lock().unwrap();
+                    for (&j, &slot) in idxs.iter().zip(slot_buf) {
+                        c.insert(
+                            ntype,
+                            ids[j],
+                            &out[slot * stride..slot * stride + dim],
+                        );
+                    }
                 }
             }
-            // copy straight into the output slots (local and remote alike)
-            let slot_buf: &[usize] = match slots {
-                Option::None => idxs,
-                Some(s) => {
-                    slot_scratch.clear();
-                    slot_scratch.extend(idxs.iter().map(|&j| s[j]));
-                    &slot_scratch
+            self.pull_stage = stage;
+        } else {
+            for (owner, (locals, idxs)) in groups.iter().enumerate() {
+                if locals.is_empty() {
+                    continue;
                 }
-            };
-            server.read_rows_scattered(name, locals, slot_buf, out, stride);
-            if use_cache && owner as u32 != self.machine {
-                let c = self.cache.as_mut().unwrap();
-                for (&j, &slot) in idxs.iter().zip(slot_buf) {
-                    c.insert(
-                        ntype,
-                        ids[j],
-                        &out[slot * stride..slot * stride + dim],
+                let server = &self.cluster.servers[owner];
+                if owner as u32 != machine {
+                    remote_rows += locals.len();
+                    self.cluster.meter_pull(
+                        machine,
+                        owner as u32,
+                        locals.len(),
+                        dim,
                     );
+                }
+                // copy straight into the output slots (local and remote
+                // alike)
+                let slot_buf = resolve_slots(idxs, slots, &mut slot_scratch);
+                server.read_rows_scattered(
+                    name, locals, slot_buf, out, stride,
+                );
+                if use_cache && owner as u32 != machine {
+                    let mut c =
+                        self.cache.as_ref().unwrap().lock().unwrap();
+                    for (&j, &slot) in idxs.iter().zip(slot_buf) {
+                        c.insert(
+                            ntype,
+                            ids[j],
+                            &out[slot * stride..slot * stride + dim],
+                        );
+                    }
                 }
             }
         }
@@ -575,10 +713,11 @@ impl KvClient {
         grads: &[f32],
         lr: f32,
     ) {
-        // coherence: a sparse update through this client must not leave
-        // stale cached copies behind — covers() also matches the typed
-        // per-ntype tables (`base.<ntype>`)
-        if let Some(c) = self.cache.as_mut() {
+        // coherence: a sparse update through this client (or any fork
+        // sharing its cache) must not leave stale cached copies behind —
+        // covers() also matches the typed per-ntype tables (`base.<ntype>`)
+        if let Some(c) = &self.cache {
+            let mut c = c.lock().unwrap();
             if c.covers(name) {
                 c.invalidate(ids);
             }
@@ -630,6 +769,24 @@ impl KvClient {
 impl KvServer {
     fn dim_of_or(&self, name: &str) -> Option<usize> {
         self.shards.read().unwrap().get(name).map(|s| s.dim)
+    }
+}
+
+/// Map a per-owner group's id-indices to output slots: the identity when
+/// the pull is dense (`slots == None`), else resolved through the
+/// caller's slot table into the reused scratch.
+fn resolve_slots<'a>(
+    idxs: &'a [usize],
+    slots: Option<&'a [usize]>,
+    scratch: &'a mut Vec<usize>,
+) -> &'a [usize] {
+    match slots {
+        Option::None => idxs,
+        Some(s) => {
+            scratch.clear();
+            scratch.extend(idxs.iter().map(|&j| s[j]));
+            scratch
+        }
     }
 }
 
@@ -855,6 +1012,100 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn concurrent_pull_is_byte_identical_to_serial() {
+        let dim = 4;
+        let nm = NodeMap { part_starts: vec![0, 10, 25, 30] };
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(RangePolicy::new(nm));
+        let data = rows(30, dim);
+        let conc = KvCluster::new(3, Arc::new(CostModel::default()));
+        let serial = KvCluster::with_options(
+            3,
+            Arc::new(CostModel::default()),
+            false,
+            false,
+        );
+        assert!(conc.concurrent_fanout, "concurrency must be the default");
+        conc.register_partitioned("feat", &data, dim, policy.as_ref());
+        serial.register_partitioned("feat", &data, dim, policy.as_ref());
+        let mut c1 = conc.client(1, policy.clone());
+        let mut c2 = serial.client(1, policy);
+        // both remote owners (0 and 2) + local rows + duplicates
+        let ids: Vec<NodeId> = vec![0, 12, 29, 5, 26, 0, 14, 9];
+        let mut a = vec![0f32; ids.len() * dim];
+        let mut b = vec![0f32; ids.len() * dim];
+        for round in 0..3 {
+            let ra = c1.pull("feat", &ids, &mut a);
+            let rb = c2.pull("feat", &ids, &mut b);
+            assert_eq!(ra, rb, "round {round}");
+            assert_eq!(a, b, "round {round}");
+        }
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &a[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim],
+                "row {gid}"
+            );
+        }
+        assert_eq!(
+            conc.cost.network_bytes(),
+            serial.cost.network_bytes(),
+            "modeled bytes must not depend on dispatch concurrency"
+        );
+        assert_eq!(conc.cost.network_msgs(), serial.cost.network_msgs());
+    }
+
+    /// Forked clients share one FeatureCache; under concurrent use the
+    /// stats stay consistent: every remote lookup is a hit or a miss,
+    /// and every miss is a fetched remote row.
+    #[test]
+    fn forked_clients_share_cache_and_stats_stay_consistent() {
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut base = cluster.client(1, policy);
+        base.attach_cache(feat_cache(1 << 20));
+        let ids: Vec<NodeId> = (0..30).collect();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let mut c = base.fork();
+                let ids = ids.clone();
+                let data = data.clone();
+                std::thread::spawn(move || {
+                    let mut out = vec![0f32; ids.len() * dim];
+                    let mut fetched = 0usize;
+                    for _ in 0..4 {
+                        fetched += c.pull("feat", &ids, &mut out);
+                    }
+                    for (i, &gid) in ids.iter().enumerate() {
+                        assert_eq!(
+                            &out[i * dim..(i + 1) * dim],
+                            &data[gid as usize * dim
+                                ..(gid as usize + 1) * dim],
+                            "row {gid}"
+                        );
+                    }
+                    fetched
+                })
+            })
+            .collect();
+        let fetched: usize =
+            handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let s = base.cache_stats().unwrap();
+        // machine 1 owns [10, 25): rows 0..10 ∪ 25..30 are remote
+        let remote_per_pass = 15u64;
+        let passes = 2 * 4;
+        assert_eq!(s.hit_rows + s.miss_rows, passes * remote_per_pass);
+        assert_eq!(s.miss_rows as usize, fetched, "a miss that was never \
+             fetched (or a fetch that was never counted as a miss)");
+        // with a budget holding every row, only first touches miss — at
+        // worst both workers race the same cold row once
+        assert!(
+            s.hit_rows >= (passes - 2) * remote_per_pass,
+            "shared cache barely hit: {s:?}"
+        );
     }
 
     /// 30 nodes over 3 machines, 2 ntypes: even ids type 0 (dim 4), odd

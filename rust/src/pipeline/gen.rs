@@ -3,15 +3,25 @@
 //! compact to the padded block layout, and pull features/labels from the
 //! KVStore into a ready-to-transfer [`HostBatch`].
 //!
+//! Every batch is addressed by its **global index** `g` (epoch = `g /
+//! batches_per_epoch`, idx = `g % batches_per_epoch`), and all per-batch
+//! randomness — the epoch permutation, negative tails, and the sampler
+//! stream — is a pure function of `(seed, epoch, idx)` via
+//! [`Rng::for_path`]. That is what lets the pipeline's worker pool hand
+//! batch indices to N workers ([`BatchGen::fork_worker`]) and reassemble
+//! a stream that is byte-identical for any worker count.
+//!
 //! §Perf: the hot path is allocation-free across batches — the KvClient
 //! grouping scratch, the sampler's per-owner split, and the label staging
 //! buffer are all reused, and finished [`HostBatch`]es can be recycled
 //! through a [`BatchPool`] so the big `n0 * feat_dim` feature buffer keeps
 //! its capacity from batch to batch. Locality counters
-//! (`kv.remote_rows`, `sampler.dropped_neighbors`, `cache.*`) are metered
-//! into the attached [`Metrics`] every batch.
+//! (`kv.remote_rows`, `sampler.dropped_neighbors`, `cache.*`, `pool.*`)
+//! and the per-stage timers (`pipeline.schedule`/`sample`/`pull`/
+//! `compact`) are metered into the attached [`Metrics`] every batch.
 
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::graph::{FanoutPlan, NodeId};
 use crate::kvstore::{KvClient, TypedFeatures};
@@ -21,15 +31,30 @@ use crate::sampler::compact::{to_block, ShapeSpec, TaskKind};
 use crate::sampler::{BatchScheduler, DistNeighborSampler, Target};
 use crate::util::Rng;
 
-/// Recycling pool for spent [`HostBatch`]es. Clone-able: consumers keep a
-/// clone and [`BatchPool::put`] batches back once the device is done with
-/// them; [`BatchGen::materialize`] then reuses the allocations. A batch
-/// that is never returned is simply dropped — pooling is an optimization,
-/// never a correctness requirement.
+/// Stream lanes under the run seed (see [`Rng::for_path`]).
+const LANE_SAMPLE: u64 = 0x5A;
+const LANE_EVAL: u64 = 0xE7;
+
+#[derive(Default)]
+struct PoolInner {
+    slots: Vec<HostBatch>,
+    cap: usize,
+    metrics: Option<Arc<Metrics>>,
+}
+
+/// Recycling pool for spent [`HostBatch`]es. Clone-able and shared: the
+/// worker pool's generators and the consumer all hold clones of one pool;
+/// [`BatchPool::put`] returns a batch once the device is done with it and
+/// [`BatchGen::materialize_with`] reuses the allocations. A batch that is
+/// never returned is simply dropped — pooling is an optimization, never a
+/// correctness requirement. Effectiveness is observable through the
+/// `pool.hit` / `pool.miss` / `pool.dropped` counters (metered once a
+/// [`Metrics`] sink is attached, which [`Pipeline::start`] does).
+///
+/// [`Pipeline::start`]: crate::pipeline::Pipeline::start
 #[derive(Clone)]
 pub struct BatchPool {
-    slots: Arc<Mutex<Vec<HostBatch>>>,
-    cap: usize,
+    inner: Arc<Mutex<PoolInner>>,
 }
 
 impl Default for BatchPool {
@@ -40,24 +65,64 @@ impl Default for BatchPool {
 
 impl BatchPool {
     pub fn with_capacity(cap: usize) -> Self {
-        Self { slots: Arc::new(Mutex::new(Vec::new())), cap }
+        Self {
+            inner: Arc::new(Mutex::new(PoolInner {
+                slots: Vec::new(),
+                cap,
+                metrics: None,
+            })),
+        }
+    }
+
+    /// Raise the slot cap to at least `min_cap` (never shrinks). The
+    /// pipeline sizes the default pool to `num_workers +
+    /// cpu_prefetch_depth` so recycling keeps up with N producers.
+    pub fn ensure_cap(&self, min_cap: usize) {
+        let mut p = self.inner.lock().unwrap();
+        p.cap = p.cap.max(min_cap);
+    }
+
+    pub fn cap(&self) -> usize {
+        self.inner.lock().unwrap().cap
+    }
+
+    /// Meter `pool.*` counters into `metrics` from now on (all clones
+    /// share the sink).
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        self.inner.lock().unwrap().metrics = Some(metrics);
     }
 
     /// Return a spent batch for reuse (dropped if the pool is full).
     pub fn put(&self, b: HostBatch) {
-        let mut s = self.slots.lock().unwrap();
-        if s.len() < self.cap {
-            s.push(b);
+        let mut p = self.inner.lock().unwrap();
+        if p.slots.len() < p.cap {
+            p.slots.push(b);
+        } else if let Some(m) = &p.metrics {
+            m.inc("pool.dropped", 1);
         }
     }
 
     /// Take a recycled batch, or a fresh default one.
     pub fn take(&self) -> HostBatch {
-        self.slots.lock().unwrap().pop().unwrap_or_default()
+        let mut p = self.inner.lock().unwrap();
+        match p.slots.pop() {
+            Some(b) => {
+                if let Some(m) = &p.metrics {
+                    m.inc("pool.hit", 1);
+                }
+                b
+            }
+            Option::None => {
+                if let Some(m) = &p.metrics {
+                    m.inc("pool.miss", 1);
+                }
+                HostBatch::default()
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        self.inner.lock().unwrap().slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -70,7 +135,15 @@ pub struct BatchGen {
     pub scheduler: BatchScheduler,
     pub sampler: Arc<DistNeighborSampler>,
     pub kv: KvClient,
-    pub rng: Rng,
+    /// Run seed: every batch's sampler stream is
+    /// [`BatchGen::batch_rng`]`(seed, epoch, idx)` — no mutable RNG state
+    /// survives across batches.
+    pub seed: u64,
+    /// Sequential cursor (global batch index) for [`Self::next`].
+    pub pos: u64,
+    /// Per-call counter for the independent eval stream of
+    /// [`Self::materialize_nodes`].
+    pub eval_pos: u64,
     /// Per-layer, per-etype fanout schedule (uniform for homogeneous
     /// graphs; per-layer totals equal `spec.fanouts`).
     pub plan: FanoutPlan,
@@ -96,11 +169,34 @@ impl BatchGen {
         self.scheduler.batches_per_epoch()
     }
 
-    /// Produce one fully materialized mini-batch (stages 1–4).
+    /// The sampler stream for batch `(epoch, idx)` of a run seeded
+    /// `seed` — a pure function of its arguments (the worker-pool
+    /// invariant; see the module docs).
+    pub fn batch_rng(seed: u64, epoch: u64, idx: usize) -> Rng {
+        Rng::for_path(seed, &[epoch, idx as u64, LANE_SAMPLE])
+    }
+
+    /// Produce one fully materialized mini-batch (stages 1–4) of the
+    /// sequential stream.
     pub fn next(&mut self) -> HostBatch {
+        let g = self.pos;
+        self.pos += 1;
+        self.batch_at(g)
+    }
+
+    /// Produce global batch `g` (epoch `g / batches_per_epoch`, index
+    /// `g % batches_per_epoch`). Pure in `(seed, g)` for a fixed
+    /// deployment: workers claim disjoint `g`s and the reassembled
+    /// stream is identical for any worker count.
+    pub fn batch_at(&mut self, g: u64) -> HostBatch {
+        let bpe = self.batches_per_epoch().max(1) as u64;
+        let (epoch, idx) = (g / bpe, (g % bpe) as usize);
         // stage 1: schedule
-        let target = self.scheduler.next_batch();
-        self.materialize(&target)
+        let t = Instant::now();
+        let target = self.scheduler.batch_at(epoch, idx);
+        self.metrics.add_time("pipeline.schedule", t.elapsed());
+        let mut rng = Self::batch_rng(self.seed, epoch, idx);
+        self.materialize_with(&mut rng, &target)
     }
 
     /// Hand a finished batch back for buffer reuse.
@@ -108,8 +204,13 @@ impl BatchGen {
         self.pool.put(b);
     }
 
-    /// Stages 2–4 for an explicit target set (shared by train/eval paths).
-    pub fn materialize(&mut self, target: &Target) -> HostBatch {
+    /// Stages 2–4 for an explicit target set and sampler stream (shared
+    /// by the train path, the eval path, and tests).
+    pub fn materialize_with(
+        &mut self,
+        rng: &mut Rng,
+        target: &Target,
+    ) -> HostBatch {
         let spec = &self.spec;
         // a plan whose layer totals exceed the spec's K would make
         // to_block truncate per-seed samples, silently dropping the
@@ -121,19 +222,24 @@ impl BatchGen {
         );
         let flat = target.flat_nodes();
         // stage 2: distributed neighbor sampling (≤ k_r per etype)
+        let t = Instant::now();
         let samples = self.sampler.sample_blocks(
             &flat,
             &self.plan,
             &spec.layer_nodes,
-            &mut self.rng,
+            rng,
         );
+        self.metrics.add_time("pipeline.sample", t.elapsed());
         // stage 4 (compaction; paper runs this on GPU, order is the same)
+        let t = Instant::now();
         let block = to_block(spec, &samples);
+        self.metrics.add_time("pipeline.compact", t.elapsed());
 
         // stage 3: CPU prefetch — features for the deduped input frontier
         // into a recycled buffer. §Perf: only the padding tail needs
         // zeroing here — the pull overwrites every real row's typed
         // prefix and zeroes its dims..stride tail itself.
+        let t = Instant::now();
         let HostBatch {
             mut feats,
             mut labels,
@@ -193,6 +299,7 @@ impl BatchGen {
                 (labels, label_mask, pair_mask)
             }
         };
+        self.metrics.add_time("pipeline.pull", t.elapsed());
 
         // locality / cache observability (benchsuite + Table 2 reports)
         self.metrics
@@ -235,8 +342,39 @@ impl BatchGen {
     }
 
     /// Eval-batch generator over a fixed node list (validation/test).
+    /// Each call draws from its own derived stream (`LANE_EVAL`), so
+    /// interleaved eval batches never perturb the training stream.
     pub fn materialize_nodes(&mut self, nodes: &[NodeId]) -> HostBatch {
-        self.materialize(&Target::Nodes(nodes.to_vec()))
+        let mut rng =
+            Rng::for_path(self.seed, &[self.eval_pos, LANE_EVAL]);
+        self.eval_pos += 1;
+        self.materialize_with(&mut rng, &Target::Nodes(nodes.to_vec()))
+    }
+
+    /// An independent sampling worker over the same batch stream: shares
+    /// the deployment (sampler servers, KV servers, the [`BatchPool`],
+    /// the [`FeatureCache`] and the metrics sink) but owns private
+    /// scratch, so N forks materialize disjoint batch indices fully in
+    /// parallel. `fork.batch_at(g) == self.batch_at(g)` byte for byte.
+    ///
+    /// [`FeatureCache`]: crate::kvstore::FeatureCache
+    pub fn fork_worker(&self) -> BatchGen {
+        BatchGen {
+            spec: self.spec.clone(),
+            scheduler: self.scheduler.clone(),
+            sampler: Arc::new(self.sampler.fork()),
+            kv: self.kv.fork(),
+            seed: self.seed,
+            pos: self.pos,
+            eval_pos: 0,
+            plan: self.plan.clone(),
+            features: self.features.clone(),
+            label_name: self.label_name.clone(),
+            metrics: self.metrics.clone(),
+            etype_keys: self.etype_keys.clone(),
+            pool: self.pool.clone(),
+            label_scratch: Vec::new(),
+        }
     }
 }
 
@@ -384,7 +522,9 @@ pub mod tests_support {
             scheduler: BatchScheduler::for_nodes(train, batch, 3),
             sampler,
             kv: client,
-            rng: Rng::new(11),
+            seed: 11,
+            pos: 0,
+            eval_pos: 0,
             plan,
             features,
             label_name: "label".into(),
@@ -571,16 +711,18 @@ mod tests {
     #[test]
     fn batch_rel_ids_equal_sampled_rels() {
         let mut gen = tiny_gen_hetero(64, 16, 1, 0);
-        let target = gen.scheduler.next_batch();
+        // batch (epoch 0, idx 0): re-derive its pure-function stream to
+        // probe what the sampler drew
+        let target = gen.scheduler.batch_at(0, 0);
         let flat = target.flat_nodes();
-        let mut probe_rng = gen.rng.clone();
+        let mut probe_rng = BatchGen::batch_rng(gen.seed, 0, 0);
         let samples = gen.sampler.sample_blocks(
             &flat,
             &gen.plan,
             &gen.spec.layer_nodes,
             &mut probe_rng,
         );
-        let batch = gen.materialize(&target);
+        let batch = gen.next();
         let l_total = gen.spec.fanouts.len();
         let mut real_edges = 0usize;
         let mut nonzero_rels = 0usize;
@@ -679,5 +821,78 @@ mod tests {
             m.counter("kv.remote_rows") + m.counter("cache.hit_rows"),
             "every miss is a fetched remote row"
         );
+    }
+
+    /// The worker-pool invariant at the generator level: forked workers
+    /// materializing global batch indices in a scrambled order reproduce
+    /// the sequential stream byte for byte (multi-partition, so remote
+    /// sampling and pulls are on the path).
+    #[test]
+    fn forked_workers_reproduce_the_sequential_stream() {
+        let mut seq = tiny_gen_parts(96, 16, 2, 0);
+        let forks = [seq.fork_worker(), seq.fork_worker()];
+        let n = 2 * seq.batches_per_epoch();
+        let stream: Vec<HostBatch> =
+            (0..n).map(|_| seq.next()).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::new(3).shuffle(&mut order);
+        for (i, g) in order.into_iter().enumerate() {
+            let mut w = forks[i % forks.len()].fork_worker();
+            let b = w.batch_at(g as u64);
+            assert_eq!(b, stream[g], "batch {g} diverged in a fork");
+        }
+    }
+
+    #[test]
+    fn eval_batches_do_not_perturb_the_training_stream() {
+        let mut plain = tiny_gen(64, 16);
+        let mut interleaved = tiny_gen(64, 16);
+        for step in 0..4 {
+            let a = plain.next();
+            // eval between training batches draws from its own lane
+            let _ = interleaved.materialize_nodes(&[1, 2, 3]);
+            let b = interleaved.next();
+            assert_eq!(a, b, "step {step}: eval perturbed the stream");
+        }
+    }
+
+    #[test]
+    fn pool_counters_meter_hits_misses_and_drops() {
+        let metrics = Arc::new(Metrics::new());
+        let pool = BatchPool::with_capacity(2);
+        pool.attach_metrics(metrics.clone());
+        pool.ensure_cap(1); // never shrinks
+        assert_eq!(pool.cap(), 2);
+        let a = pool.take(); // miss (empty)
+        let b = pool.take(); // miss
+        pool.put(a);
+        pool.put(b);
+        pool.put(HostBatch::default()); // over cap: dropped
+        assert_eq!(metrics.counter("pool.miss"), 2);
+        assert_eq!(metrics.counter("pool.dropped"), 1);
+        let _ = pool.take(); // hit
+        assert_eq!(metrics.counter("pool.hit"), 1);
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn per_stage_timers_are_metered() {
+        let mut gen = tiny_gen_parts(64, 16, 2, 0);
+        let metrics = Arc::new(Metrics::new());
+        gen.metrics = metrics.clone();
+        for _ in 0..2 {
+            let _ = gen.next();
+        }
+        for stage in [
+            "pipeline.schedule",
+            "pipeline.sample",
+            "pipeline.pull",
+            "pipeline.compact",
+        ] {
+            assert!(
+                metrics.total_time(stage) > std::time::Duration::ZERO,
+                "{stage} never metered"
+            );
+        }
     }
 }

@@ -3,25 +3,39 @@
 //! Stages: (1) mini-batch scheduling → (2) distributed neighbor sampling →
 //! (3) CPU prefetch (feature pull from the KVStore) → (4) subgraph
 //! compaction → (5) GPU prefetch (bounded hand-off to the training
-//! thread). Stages 1–4 run in a dedicated *sampling thread* per trainer;
-//! the hand-off queue depth models the paper's "only one mini-batch ahead
-//! of time on the GPU" memory constraint, while the sampling thread itself
-//! works `cpu_prefetch_depth` batches ahead.
+//! thread). Stages 1–4 run in a pool of `num_workers` *sampling workers*
+//! per trainer (DistDGL runs multiple sampling processes per trainer for
+//! the same reason — remote round-trips hide behind each other): workers
+//! claim global batch indices from a shared cursor, materialize them
+//! independently (every batch's randomness is a pure function of
+//! `(seed, epoch, idx)` — see [`gen`]), and deliver through an in-order
+//! reassembly buffer ahead of the bounded stage-5 queue. The emitted
+//! stream is **byte-identical for any worker count** (test-enforced).
+//! The stage-5 queue depth models the paper's "only one mini-batch ahead
+//! of time on the GPU" memory constraint, while the workers together run
+//! `cpu_prefetch_depth` batches ahead.
 //!
 //! Modes reproduce the Fig 14 ablation:
 //! - [`PipelineMode::Sync`]: everything inline in the training thread
 //!   (DistDGL-v1 behaviour).
-//! - [`PipelineMode::Async`]: sampling thread overlaps with training, but
-//!   *pauses at epoch boundaries* (pipeline refill cost each epoch).
+//! - [`PipelineMode::Async`]: sampling workers overlap with training, but
+//!   *pause at epoch boundaries* (pipeline refill cost each epoch) — the
+//!   trainer grants one epoch's worth of batch indices at a time.
 //! - [`PipelineMode::AsyncNonstop`]: the paper's non-stop pipeline — the
-//!   sampling thread free-runs across epochs.
+//!   workers free-run across epochs, bounded only by the queue depths.
+//!
+//! Shutdown is explicit for every mode and worker count: dropping the
+//! [`Pipeline`] raises a stop flag (waking any worker parked on the
+//! grant condvar), closes the hand-off queue (waking any worker parked
+//! on a full queue), and joins every thread.
 
 pub mod gen;
 
 pub use gen::{BatchGen, BatchPool};
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::metrics::Metrics;
 use crate::runtime::executable::HostBatch;
@@ -36,10 +50,14 @@ pub enum PipelineMode {
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
     pub mode: PipelineMode,
-    /// Mini-batches the sampling thread may run ahead (stage 1-4 depth).
+    /// Mini-batches the sampling workers may run ahead (stage 1-4 depth).
     pub cpu_prefetch_depth: usize,
     /// Mini-batches staged for the device (stage 5 depth; paper: 1).
     pub gpu_prefetch_depth: usize,
+    /// Sampling workers per trainer (stage 1-4 parallelism; ≥ 1). The
+    /// batch stream is byte-identical for any value — this is purely a
+    /// throughput knob.
+    pub num_workers: usize,
 }
 
 impl Default for PipelineConfig {
@@ -48,14 +66,89 @@ impl Default for PipelineConfig {
             mode: PipelineMode::AsyncNonstop,
             cpu_prefetch_depth: 4,
             gpu_prefetch_depth: 1,
+            num_workers: 1,
         }
     }
 }
 
-enum Ctl {
-    /// Produce `n` more batches (Async mode: one epoch's worth at a time).
-    Produce(usize),
-    Stop,
+/// Worker-pool control plane: the shared batch-index cursor, the grant
+/// watermark (Async mode produces one epoch per grant; non-stop is an
+/// unbounded grant), the emitted watermark (bounds run-ahead: claims
+/// stay within `max_ahead` of what has been delivered in order, so one
+/// slow batch can never let the other workers buffer arbitrarily many
+/// materialized batches in the reassembly stash), and the stop flag —
+/// one mutex, one condvar.
+struct WorkerCtl {
+    state: Mutex<CtlState>,
+    cv: Condvar,
+    /// Max claimed-but-not-yet-emitted batches (`cpu_prefetch_depth` of
+    /// run-ahead + one in-hand batch per worker).
+    max_ahead: u64,
+}
+
+struct CtlState {
+    /// Next unclaimed global batch index.
+    next: u64,
+    /// Claims are allowed while `next < granted`.
+    granted: u64,
+    /// Batches delivered in order to the stage-5 queue so far.
+    emitted: u64,
+    stop: bool,
+}
+
+impl WorkerCtl {
+    fn new(granted: u64, max_ahead: u64) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(CtlState {
+                next: 0,
+                granted,
+                emitted: 0,
+                stop: false,
+            }),
+            cv: Condvar::new(),
+            max_ahead,
+        })
+    }
+
+    /// Claim the next batch index, parking until one is granted and
+    /// within the run-ahead window. `None` once the pipeline is
+    /// stopping.
+    fn claim(&self) -> Option<u64> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.stop {
+                return None;
+            }
+            if st.next < st.granted
+                && st.next < st.emitted.saturating_add(self.max_ahead)
+            {
+                let g = st.next;
+                st.next += 1;
+                return Some(g);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Allow `n` more batches to be claimed (Async epoch grant).
+    fn grant(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.granted = st.granted.saturating_add(n as u64);
+        self.cv.notify_all();
+    }
+
+    /// One more batch left the reassembly stage in order — widen the
+    /// claim window.
+    fn on_emitted(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.emitted += 1;
+        self.cv.notify_all();
+    }
+
+    fn stop(&self) {
+        self.state.lock().unwrap().stop = true;
+        self.cv.notify_all();
+    }
 }
 
 /// Trainer-facing handle: `next()` yields the next ready mini-batch.
@@ -63,13 +156,13 @@ pub struct Pipeline {
     mode: PipelineMode,
     // async modes
     rx: Option<Receiver<HostBatch>>,
-    ctl: Option<SyncSender<Ctl>>,
+    ctl: Option<Arc<WorkerCtl>>,
     pending: usize,
     epoch_len: usize,
     // sync mode
     gen: Option<BatchGen>,
     metrics: Arc<Metrics>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Pipeline {
@@ -79,8 +172,13 @@ impl Pipeline {
         cfg: &PipelineConfig,
         metrics: Arc<Metrics>,
     ) -> Pipeline {
-        // per-batch locality/cache counters land in the shared instance
+        // per-batch locality/cache/pool counters land in the shared
+        // instance; the recycling pool must hold one spare per producer
+        // plus the prefetch run-ahead to keep recycling effective
         gen.metrics = metrics.clone();
+        gen.pool.attach_metrics(metrics.clone());
+        let n_workers = cfg.num_workers.max(1);
+        gen.pool.ensure_cap(n_workers + cfg.cpu_prefetch_depth);
         let epoch_len = gen.batches_per_epoch();
         match cfg.mode {
             PipelineMode::Sync => Pipeline {
@@ -91,52 +189,122 @@ impl Pipeline {
                 epoch_len,
                 gen: Some(gen),
                 metrics,
-                handle: None,
+                handles: Vec::new(),
             },
             PipelineMode::Async | PipelineMode::AsyncNonstop => {
-                let (tx, rx) = sync_channel::<HostBatch>(
-                    cfg.cpu_prefetch_depth + cfg.gpu_prefetch_depth,
-                );
-                let (ctl_tx, ctl_rx) = sync_channel::<Ctl>(8);
                 let nonstop = cfg.mode == PipelineMode::AsyncNonstop;
-                let thread_metrics = metrics.clone();
-                let handle = std::thread::Builder::new()
-                    .name("sampling".into())
-                    .spawn(move || {
-                        let metrics = thread_metrics;
-                        if nonstop {
-                            // free-running: produce until the receiver drops
-                            loop {
-                                let b = metrics
-                                    .time("pipeline.sample", || gen.next());
-                                metrics.inc("pipeline.batches", 1);
-                                if tx.send(b).is_err() {
-                                    return;
+                let ctl = WorkerCtl::new(
+                    if nonstop { u64::MAX } else { 0 },
+                    (cfg.cpu_prefetch_depth + n_workers) as u64,
+                );
+                let mut handles = Vec::with_capacity(n_workers + 1);
+                let rx = if n_workers == 1 {
+                    // single worker: claims come out in order, no
+                    // reassembly needed — one queue of the full depth
+                    let (tx, rx) = sync_channel::<HostBatch>(
+                        (cfg.cpu_prefetch_depth + cfg.gpu_prefetch_depth)
+                            .max(1),
+                    );
+                    let ctl = ctl.clone();
+                    let metrics = metrics.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name("sampling".into())
+                            .spawn(move || {
+                                while let Some(g) = ctl.claim() {
+                                    let b = gen.batch_at(g);
+                                    metrics.inc("pipeline.batches", 1);
+                                    if tx.send(b).is_err() {
+                                        return;
+                                    }
+                                    ctl.on_emitted();
                                 }
-                            }
-                        }
-                        // stop-at-epoch mode: wait for Produce(n) grants
-                        while let Ok(Ctl::Produce(n)) = ctl_rx.recv() {
-                            for _ in 0..n {
-                                let b = metrics
-                                    .time("pipeline.sample", || gen.next());
-                                metrics.inc("pipeline.batches", 1);
-                                if tx.send(b).is_err() {
-                                    return;
+                            })
+                            .expect("spawn sampling worker"),
+                    );
+                    rx
+                } else {
+                    // worker pool: (index, batch) pairs flow to a
+                    // reassembly thread that restores stream order ahead
+                    // of the bounded stage-5 queue
+                    let (wtx, wrx) = sync_channel::<(u64, HostBatch)>(
+                        cfg.cpu_prefetch_depth.max(1),
+                    );
+                    let (tx, rx) = sync_channel::<HostBatch>(
+                        cfg.gpu_prefetch_depth.max(1),
+                    );
+                    let mut gens = Vec::with_capacity(n_workers);
+                    for _ in 1..n_workers {
+                        gens.push(gen.fork_worker());
+                    }
+                    gens.push(gen);
+                    for (w, mut g) in gens.into_iter().enumerate() {
+                        let ctl = ctl.clone();
+                        let metrics = metrics.clone();
+                        let wtx = wtx.clone();
+                        handles.push(
+                            std::thread::Builder::new()
+                                .name(format!("sampling-{w}"))
+                                .spawn(move || {
+                                    while let Some(idx) = ctl.claim() {
+                                        let b = g.batch_at(idx);
+                                        metrics.inc("pipeline.batches", 1);
+                                        if wtx.send((idx, b)).is_err() {
+                                            return;
+                                        }
+                                    }
+                                })
+                                .expect("spawn sampling worker"),
+                        );
+                    }
+                    drop(wtx); // emitter exits once every worker is gone
+                    let emit_ctl = ctl.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name("reassembly".into())
+                            .spawn(move || {
+                                let ctl = emit_ctl;
+                                // the stash never exceeds the ctl's
+                                // run-ahead window: claims stall until
+                                // `emitted` catches up
+                                let mut expected = 0u64;
+                                let mut stash: BTreeMap<u64, HostBatch> =
+                                    BTreeMap::new();
+                                while let Ok((idx, b)) = wrx.recv() {
+                                    stash.insert(idx, b);
+                                    while let Some(b) =
+                                        stash.remove(&expected)
+                                    {
+                                        if tx.send(b).is_err() {
+                                            return;
+                                        }
+                                        expected += 1;
+                                        ctl.on_emitted();
+                                    }
                                 }
-                            }
-                        }
-                    })
-                    .expect("spawn sampling thread");
+                                // workers stopped: flush the in-order tail
+                                while let Some(b) = stash.remove(&expected)
+                                {
+                                    if tx.send(b).is_err() {
+                                        return;
+                                    }
+                                    expected += 1;
+                                    ctl.on_emitted();
+                                }
+                            })
+                            .expect("spawn reassembly thread"),
+                    );
+                    rx
+                };
                 Pipeline {
                     mode: cfg.mode,
                     rx: Some(rx),
-                    ctl: Some(ctl_tx),
+                    ctl: Some(ctl),
                     pending: 0,
                     epoch_len,
                     gen: None,
                     metrics,
-                    handle: Some(handle),
+                    handles,
                 }
             }
         }
@@ -151,26 +319,21 @@ impl Pipeline {
         match self.mode {
             PipelineMode::Sync => {
                 let gen = self.gen.as_mut().unwrap();
-                let m = &self.metrics;
-                m.inc("pipeline.batches", 1);
-                m.time("pipeline.sample", || gen.next())
+                self.metrics.inc("pipeline.batches", 1);
+                gen.next()
             }
             PipelineMode::AsyncNonstop => self
                 .rx
                 .as_ref()
                 .unwrap()
                 .recv()
-                .expect("sampling thread died"),
+                .expect("sampling workers died"),
             PipelineMode::Async => {
                 if self.pending == 0 {
                     // epoch boundary: grant the next epoch (pipeline must
                     // refill from empty — the startup overhead the
                     // non-stop mode removes)
-                    self.ctl
-                        .as_ref()
-                        .unwrap()
-                        .send(Ctl::Produce(self.epoch_len))
-                        .expect("sampling thread died");
+                    self.ctl.as_ref().unwrap().grant(self.epoch_len);
                     self.pending = self.epoch_len;
                 }
                 self.pending -= 1;
@@ -178,7 +341,7 @@ impl Pipeline {
                     .as_ref()
                     .unwrap()
                     .recv()
-                    .expect("sampling thread died")
+                    .expect("sampling workers died")
             }
         }
     }
@@ -186,11 +349,14 @@ impl Pipeline {
 
 impl Drop for Pipeline {
     fn drop(&mut self) {
+        // explicit shutdown, any mode / worker count: raise stop (wakes
+        // claim-parked workers), close the hand-off queue (wakes workers
+        // parked on a full queue), then join everything
         if let Some(ctl) = &self.ctl {
-            let _ = ctl.try_send(Ctl::Stop);
+            ctl.stop();
         }
-        self.rx.take(); // unblocks a sender stuck on a full queue
-        if let Some(h) = self.handle.take() {
+        self.rx.take();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -199,11 +365,12 @@ impl Drop for Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pipeline::gen::tests_support::tiny_gen;
+    use crate::pipeline::gen::tests_support::{tiny_gen, tiny_gen_parts};
 
-    fn run_mode(mode: PipelineMode) -> Vec<usize> {
+    fn run_mode(mode: PipelineMode, num_workers: usize) -> Vec<usize> {
         let gen = tiny_gen(64, 16); // 64 train nodes, batch 16
-        let cfg = PipelineConfig { mode, ..Default::default() };
+        let cfg =
+            PipelineConfig { mode, num_workers, ..Default::default() };
         let metrics = Arc::new(Metrics::new());
         let mut p = Pipeline::start(gen, &cfg, metrics);
         let epoch = p.batches_per_epoch();
@@ -212,43 +379,76 @@ mod tests {
     }
 
     #[test]
-    fn all_modes_deliver_every_batch() {
+    fn all_modes_deliver_every_batch_at_any_worker_count() {
         for mode in [
             PipelineMode::Sync,
             PipelineMode::Async,
             PipelineMode::AsyncNonstop,
         ] {
-            let sizes = run_mode(mode);
-            assert_eq!(sizes.len(), 8, "{mode:?}");
-            assert!(sizes.iter().all(|&s| s == 16), "{mode:?}: {sizes:?}");
+            for workers in [1, 3] {
+                let sizes = run_mode(mode, workers);
+                assert_eq!(sizes.len(), 8, "{mode:?} x{workers}");
+                assert!(
+                    sizes.iter().all(|&s| s == 16),
+                    "{mode:?} x{workers}: {sizes:?}"
+                );
+            }
+        }
+    }
+
+    /// The tentpole invariant at the pipeline level: the delivered stream
+    /// is byte-identical for any worker count, in every async mode.
+    #[test]
+    fn worker_pool_streams_identical_batches() {
+        for mode in [PipelineMode::Async, PipelineMode::AsyncNonstop] {
+            let mk = |workers: usize| {
+                let gen = tiny_gen_parts(96, 16, 2, 0);
+                let cfg = PipelineConfig {
+                    mode,
+                    num_workers: workers,
+                    ..Default::default()
+                };
+                Pipeline::start(gen, &cfg, Arc::new(Metrics::new()))
+            };
+            let mut one = mk(1);
+            let mut four = mk(4);
+            for step in 0..2 * one.batches_per_epoch() + 3 {
+                assert_eq!(
+                    one.next(),
+                    four.next(),
+                    "{mode:?}: stream diverged at step {step}"
+                );
+            }
         }
     }
 
     #[test]
     fn async_pipeline_overlaps_production() {
-        // the sampling thread should have batches ready before next() is
-        // called: after a short sleep the queue must already be full
-        let gen = tiny_gen(256, 16);
-        let cfg = PipelineConfig {
-            mode: PipelineMode::AsyncNonstop,
-            cpu_prefetch_depth: 4,
-            gpu_prefetch_depth: 1,
-        };
-        let metrics = Arc::new(Metrics::new());
-        let mut p = Pipeline::start(gen, &cfg, metrics.clone());
-        std::thread::sleep(std::time::Duration::from_millis(300));
-        assert!(metrics.counter("pipeline.batches") >= 4);
-        let t = std::time::Instant::now();
-        let _ = p.next();
-        assert!(
-            t.elapsed() < std::time::Duration::from_millis(50),
-            "first batch was not prefetched"
-        );
+        // the sampling workers should have batches ready before next()
+        // is called: after a short sleep the queue must already be full
+        for workers in [1, 2] {
+            let gen = tiny_gen(256, 16);
+            let cfg = PipelineConfig {
+                mode: PipelineMode::AsyncNonstop,
+                cpu_prefetch_depth: 4,
+                gpu_prefetch_depth: 1,
+                num_workers: workers,
+            };
+            let metrics = Arc::new(Metrics::new());
+            let mut p = Pipeline::start(gen, &cfg, metrics.clone());
+            std::thread::sleep(std::time::Duration::from_millis(300));
+            assert!(metrics.counter("pipeline.batches") >= 4);
+            let t = std::time::Instant::now();
+            let _ = p.next();
+            assert!(
+                t.elapsed() < std::time::Duration::from_millis(50),
+                "first batch was not prefetched (x{workers})"
+            );
+        }
     }
 
     #[test]
     fn pipeline_meters_locality_and_cache_counters() {
-        use crate::pipeline::gen::tests_support::tiny_gen_parts;
         // 2 machines + a cache: the shared metrics must pick up the
         // per-batch kv/cache counters from the sampling thread
         let gen = tiny_gen_parts(64, 16, 2, 8 << 20);
@@ -268,10 +468,92 @@ mod tests {
     }
 
     #[test]
+    fn per_stage_timers_flow_through_the_pipeline() {
+        let gen = tiny_gen(64, 16);
+        let cfg = PipelineConfig::default();
+        let metrics = Arc::new(Metrics::new());
+        let mut p = Pipeline::start(gen, &cfg, metrics.clone());
+        for _ in 0..p.batches_per_epoch() {
+            let _ = p.next();
+        }
+        for stage in [
+            "pipeline.schedule",
+            "pipeline.sample",
+            "pipeline.pull",
+            "pipeline.compact",
+        ] {
+            assert!(
+                metrics.total_time(stage) > std::time::Duration::ZERO,
+                "{stage} not metered through the async pipeline"
+            );
+        }
+    }
+
+    /// Shutdown must be prompt for every mode and worker count, even
+    /// dropped mid-epoch with the hand-off queue full and workers parked
+    /// on it (the old control-plane bug: `AsyncNonstop` never read its
+    /// ctl channel, shutdown relied on the queue teardown alone).
+    #[test]
+    fn dropping_pipeline_mid_epoch_stops_all_workers() {
+        for mode in [
+            PipelineMode::Sync,
+            PipelineMode::Async,
+            PipelineMode::AsyncNonstop,
+        ] {
+            for workers in [1, 4] {
+                let gen = tiny_gen(256, 16);
+                let cfg = PipelineConfig {
+                    mode,
+                    num_workers: workers,
+                    ..Default::default()
+                };
+                let metrics = Arc::new(Metrics::new());
+                let mut p = Pipeline::start(gen, &cfg, metrics);
+                // consume one batch so async modes are mid-epoch, then
+                // give the workers time to fill every queue
+                let _ = p.next();
+                if mode != PipelineMode::Sync {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(100),
+                    );
+                }
+                drop(p); // must not hang (joins every thread)
+            }
+        }
+    }
+
+    #[test]
     fn dropping_pipeline_stops_thread() {
         let gen = tiny_gen(64, 16);
         let cfg = PipelineConfig::default();
         let p = Pipeline::start(gen, &cfg, Arc::new(Metrics::new()));
         drop(p); // must not hang
+    }
+
+    #[test]
+    fn async_mode_produces_only_granted_epochs() {
+        // stop-at-epoch: without a grant (no next() call), workers must
+        // not produce anything
+        let gen = tiny_gen(64, 16);
+        let cfg = PipelineConfig {
+            mode: PipelineMode::Async,
+            num_workers: 2,
+            ..Default::default()
+        };
+        let metrics = Arc::new(Metrics::new());
+        let mut p = Pipeline::start(gen, &cfg, metrics.clone());
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(
+            metrics.counter("pipeline.batches"),
+            0,
+            "Async workers produced without a grant"
+        );
+        let epoch = p.batches_per_epoch();
+        for _ in 0..epoch {
+            let _ = p.next();
+        }
+        // exactly one epoch granted → at most one epoch produced
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(metrics.counter("pipeline.batches"), epoch as u64);
     }
 }

@@ -2,6 +2,14 @@
 //! set to owning machines, stitch the per-seed results back in order
 //! (§5.5.1). Local seeds hit the local server through shared memory; remote
 //! requests are batched per machine and metered.
+//!
+//! §Perf: per-owner requests are dispatched **concurrently** (scoped
+//! threads, one per remote owner, the local shard on the calling thread)
+//! so under `emulate_network_time` a layer's wall clock is the max over
+//! owners instead of the sum. Each owner's RNG stream is derived up front
+//! in owner order — the exact derivation the serial loop performs — so
+//! sampled neighborhoods are bit-identical with concurrency on or off
+//! (test-enforced).
 
 use std::sync::{Arc, Mutex};
 
@@ -32,6 +40,10 @@ pub struct DistNeighborSampler {
     node_map: Arc<NodeMap>,
     cost: Arc<CostModel>,
     pub emulate_network_time: bool,
+    /// Dispatch per-owner requests concurrently (wall clock = max over
+    /// owners under emulation). `false` restores the serial loop — byte
+    /// metering and sampled neighborhoods are identical either way.
+    pub concurrent_fanout: bool,
     scratch: Mutex<SamplerScratch>,
 }
 
@@ -48,7 +60,37 @@ impl DistNeighborSampler {
             node_map,
             cost,
             emulate_network_time: false,
+            concurrent_fanout: true,
             scratch: Mutex::new(SamplerScratch::default()),
+        }
+    }
+
+    /// An independent handle over the same deployment for a sampling
+    /// worker: shares the servers / node map / cost model, owns private
+    /// scratch (the scratch mutex never contends across workers).
+    pub fn fork(&self) -> Self {
+        Self {
+            machine: self.machine,
+            servers: self.servers.clone(),
+            node_map: self.node_map.clone(),
+            cost: self.cost.clone(),
+            emulate_network_time: self.emulate_network_time,
+            concurrent_fanout: self.concurrent_fanout,
+            scratch: Mutex::new(SamplerScratch::default()),
+        }
+    }
+
+    /// Meter (and, under emulation, sleep for) one remote owner's
+    /// request/response round-trip.
+    fn meter_remote(&self, owner: u32, n_seeds: usize, res: &[SampledNbrs]) {
+        let edges: usize = res.iter().map(|r| r.nbrs.len()).sum();
+        let (req, resp) = SamplerServer::wire_cost(n_seeds, edges);
+        self.cost.on_network(self.machine, owner, req);
+        self.cost.on_network(owner, self.machine, resp);
+        if self.emulate_network_time {
+            let secs = (req + resp) as f64 / self.cost.net_bytes_per_sec
+                + 2.0 * self.cost.net_latency_s;
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
         }
     }
 
@@ -76,10 +118,12 @@ impl DistNeighborSampler {
                 .sample_neighbors(seeds, fanouts, &mut sub);
         }
         // group seeds by owner, remembering original slots (reused
-        // scratch — the per-owner split and RNG stream derivation are
-        // unchanged, so sampled neighborhoods are bit-identical)
-        let mut scratch = self.scratch.lock().unwrap();
-        let groups = &mut scratch.groups;
+        // scratch, taken out of the lock so the dispatch below never
+        // holds it)
+        let mut groups = {
+            let mut scratch = self.scratch.lock().unwrap();
+            std::mem::take(&mut scratch.groups)
+        };
         if groups.len() != nparts {
             groups.resize_with(nparts, Default::default);
         }
@@ -92,34 +136,87 @@ impl DistNeighborSampler {
             groups[owner].0.push(s);
             groups[owner].1.push(slot);
         }
-        let mut out: Vec<SampledNbrs> = vec![SampledNbrs::default(); seeds.len()];
-        for (owner, (group, slots)) in groups.iter().enumerate() {
-            if group.is_empty() {
-                continue;
-            }
-            // each owner machine uses an independent derived RNG stream so
-            // results don't depend on dispatch order
-            let mut sub = rng.split(owner as u64);
-            let res =
-                self.servers[owner].sample_neighbors(group, fanouts, &mut sub);
-            if owner as u32 != self.machine {
-                let edges: usize = res.iter().map(|r| r.nbrs.len()).sum();
-                let (req, resp) = SamplerServer::wire_cost(group.len(), edges);
-                self.cost.on_network(self.machine, owner as u32, req);
-                self.cost.on_network(owner as u32, self.machine, resp);
-                if self.emulate_network_time {
-                    let secs = (req + resp) as f64
-                        / self.cost.net_bytes_per_sec
-                        + 2.0 * self.cost.net_latency_s;
-                    std::thread::sleep(std::time::Duration::from_secs_f64(
-                        secs,
+        // derive every non-empty owner's independent stream up front, in
+        // owner order — exactly the derivation the serial loop performs,
+        // so results are bit-identical regardless of dispatch concurrency
+        let mut subs: Vec<Option<Rng>> = groups
+            .iter()
+            .enumerate()
+            .map(|(owner, (group, _))| {
+                (!group.is_empty()).then(|| rng.split(owner as u64))
+            })
+            .collect();
+        let n_remote = groups
+            .iter()
+            .enumerate()
+            .filter(|(o, g)| *o as u32 != self.machine && !g.0.is_empty())
+            .count();
+        let mut results: Vec<Option<Vec<SampledNbrs>>> =
+            (0..nparts).map(|_| None).collect();
+        if self.concurrent_fanout && n_remote >= 2 {
+            // concurrent fan-out: one thread per remote owner, the local
+            // shard on the calling thread (overlapping the round-trips)
+            std::thread::scope(|sc| {
+                let mut handles = Vec::with_capacity(n_remote);
+                for (owner, sub) in subs.iter_mut().enumerate() {
+                    if owner as u32 == self.machine {
+                        continue;
+                    }
+                    let Some(sub) = sub.take() else { continue };
+                    let group = &groups[owner].0;
+                    handles.push((
+                        owner,
+                        sc.spawn(move || {
+                            let mut sub = sub;
+                            let res = self.servers[owner]
+                                .sample_neighbors(group, fanouts, &mut sub);
+                            self.meter_remote(
+                                owner as u32,
+                                group.len(),
+                                &res,
+                            );
+                            res
+                        }),
                     ));
                 }
+                let m = self.machine as usize;
+                if let Some(mut sub) = subs[m].take() {
+                    results[m] = Some(self.servers[m].sample_neighbors(
+                        &groups[m].0,
+                        fanouts,
+                        &mut sub,
+                    ));
+                }
+                for (owner, h) in handles {
+                    results[owner] = Some(
+                        h.join().expect("sampler fan-out thread panicked"),
+                    );
+                }
+            });
+        } else {
+            for (owner, sub) in subs.iter_mut().enumerate() {
+                let Some(mut sub) = sub.take() else { continue };
+                let res = self.servers[owner].sample_neighbors(
+                    &groups[owner].0,
+                    fanouts,
+                    &mut sub,
+                );
+                if owner as u32 != self.machine {
+                    self.meter_remote(owner as u32, groups[owner].0.len(), &res);
+                }
+                results[owner] = Some(res);
             }
-            for (r, &slot) in res.into_iter().zip(slots) {
+        }
+        // stitch per-seed results back into request slot order
+        let mut out: Vec<SampledNbrs> =
+            vec![SampledNbrs::default(); seeds.len()];
+        for (owner, res) in results.into_iter().enumerate() {
+            let Some(res) = res else { continue };
+            for (r, &slot) in res.into_iter().zip(&groups[owner].1) {
                 out[slot] = r;
             }
         }
+        self.scratch.lock().unwrap().groups = groups;
         out
     }
 
@@ -269,6 +366,96 @@ mod tests {
             for (x, y) in la.1.iter().zip(&lb.1) {
                 assert_eq!(x.nbrs, y.nbrs);
             }
+        }
+    }
+
+    /// The fan-out invariant: concurrent dispatch is bit-identical to the
+    /// serial loop — same neighborhoods, same rels, same modeled bytes —
+    /// across many seeds with ≥3 partitions (so several remote threads
+    /// really contend).
+    #[test]
+    fn concurrent_fanout_is_bit_identical_to_serial() {
+        let (_, nm, servers, _) = setup(4);
+        let serial_cost = Arc::new(CostModel::default());
+        let conc_cost = Arc::new(CostModel::default());
+        let mut serial = DistNeighborSampler::new(
+            0,
+            servers.clone(),
+            nm.clone(),
+            serial_cost.clone(),
+        );
+        serial.concurrent_fanout = false;
+        let conc =
+            DistNeighborSampler::new(0, servers, nm, conc_cost.clone());
+        assert!(conc.concurrent_fanout, "concurrency must be the default");
+        for seed in 0..20u64 {
+            let seeds: Vec<NodeId> = (0..300u32)
+                .map(|i| (i * 31 + seed as NodeId * 7) % 1000)
+                .collect();
+            let a = serial.sample_layer(&seeds, &[5], &mut Rng::new(seed));
+            let b = conc.sample_layer(&seeds, &[5], &mut Rng::new(seed));
+            assert_eq!(a.len(), b.len());
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.nbrs, y.nbrs, "seed {seed} slot {i}");
+                assert_eq!(x.rels, y.rels, "seed {seed} slot {i}");
+            }
+            // multi-layer expansion stays in lock-step too
+            let plan = FanoutPlan::uniform(&[4, 3]);
+            let caps = [2048usize, 256, 64];
+            let la = serial.sample_blocks(
+                &seeds[..40],
+                &plan,
+                &caps,
+                &mut Rng::new(seed ^ 0xA5),
+            );
+            let lb = conc.sample_blocks(
+                &seeds[..40],
+                &plan,
+                &caps,
+                &mut Rng::new(seed ^ 0xA5),
+            );
+            for (x, y) in la.iter().zip(&lb) {
+                assert_eq!(x.0, y.0, "seed {seed}");
+                for (sx, sy) in x.1.iter().zip(&y.1) {
+                    assert_eq!(sx.nbrs, sy.nbrs, "seed {seed}");
+                }
+            }
+        }
+        assert_eq!(
+            serial_cost.network_bytes(),
+            conc_cost.network_bytes(),
+            "modeled bytes must not depend on dispatch concurrency"
+        );
+        assert_eq!(serial_cost.network_msgs(), conc_cost.network_msgs());
+    }
+
+    /// Repeated concurrent runs under thread-scheduling noise return the
+    /// same result every time (no hidden ordering dependence).
+    #[test]
+    fn concurrent_fanout_is_stable_across_runs() {
+        let (_, nm, servers, cost) = setup(3);
+        let s = DistNeighborSampler::new(0, servers, nm, cost);
+        let seeds: Vec<NodeId> = (0..500u32).map(|i| (i * 13) % 1000).collect();
+        let baseline = s.sample_layer(&seeds, &[4], &mut Rng::new(42));
+        for run in 0..10 {
+            let again = s.sample_layer(&seeds, &[4], &mut Rng::new(42));
+            for (i, (x, y)) in baseline.iter().zip(&again).enumerate() {
+                assert_eq!(x.nbrs, y.nbrs, "run {run} slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fork_samples_identically() {
+        let (_, nm, servers, cost) = setup(3);
+        let s = DistNeighborSampler::new(0, servers, nm, cost);
+        let f = s.fork();
+        let seeds: Vec<NodeId> = vec![5, 500, 900, 17, 333];
+        let a = s.sample_layer(&seeds, &[4], &mut Rng::new(9));
+        let b = f.sample_layer(&seeds, &[4], &mut Rng::new(9));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.nbrs, y.nbrs);
+            assert_eq!(x.rels, y.rels);
         }
     }
 

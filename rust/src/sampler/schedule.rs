@@ -2,9 +2,23 @@
 //! the trainer's assigned training items and target construction for both
 //! tasks — node classification (seed nodes) and link prediction (positive
 //! edges + uniform negative tails, rows laid out [heads | tails | negs]).
+//!
+//! The schedule is a **pure function of `(seed, epoch, batch_idx)`**: the
+//! epoch permutation and each batch's negative tails are derived with
+//! [`Rng::for_path`] instead of a sequential mutable RNG stream, so any
+//! sampling worker can compute any batch independently
+//! ([`BatchScheduler::batch_at`]) and the emitted stream is identical for
+//! every worker count. The classic sequential
+//! [`BatchScheduler::next_batch`] is a thin cursor over the same function.
+
+use std::sync::Arc;
 
 use crate::graph::NodeId;
 use crate::util::Rng;
+
+/// Stream lanes under the scheduler seed (see [`Rng::for_path`]).
+const LANE_SHUFFLE: u64 = 0x5C;
+const LANE_NEG: u64 = 0x4E;
 
 /// Targets of one mini-batch, ready for multi-layer sampling.
 #[derive(Clone, Debug)]
@@ -44,17 +58,21 @@ impl Target {
 }
 
 /// Per-trainer epoch scheduler over its assigned training items.
+///
+/// Clone-able: the item lists are shared (`Arc`), and all schedule state
+/// is derived on demand from `(seed, epoch, batch_idx)`, so every clone
+/// yields the exact same batches — a worker pool hands each worker a
+/// clone and coordinates only on *which* global batch index to produce.
+#[derive(Clone)]
 pub struct BatchScheduler {
     /// Node-classification: assigned train vertices. Link-prediction:
     /// assigned (head, tail) edges.
-    items_nodes: Vec<NodeId>,
-    items_edges: Vec<(NodeId, NodeId)>,
+    items_nodes: Arc<Vec<NodeId>>,
+    items_edges: Arc<Vec<(NodeId, NodeId)>>,
     pub batch_size: usize,
     /// Negative-sampling id range (all graph vertices).
     pub n_nodes_total: u64,
-    rng: Rng,
-    cursor: usize,
-    order: Vec<u32>,
+    seed: u64,
     /// Re-permute the item order at each epoch boundary (training
     /// default). `false` keeps the given item order every epoch
     /// (evaluation / offline inference).
@@ -63,6 +81,12 @@ pub struct BatchScheduler {
     /// Only effective while at least one full batch exists — a seed set
     /// smaller than `batch_size` still yields its single short batch.
     drop_last: bool,
+    /// Sequential cursor for [`Self::next_batch`] (global batch index).
+    pos: u64,
+    /// Cached permutation for `cached_epoch` (pure recomputation — kept
+    /// only to avoid re-shuffling on every `batch_at` of the same epoch).
+    cached_epoch: u64,
+    order: Vec<u32>,
 }
 
 impl BatchScheduler {
@@ -80,19 +104,19 @@ impl BatchScheduler {
         shuffle: bool,
         drop_last: bool,
     ) -> Self {
-        let n = items.len();
         let mut s = Self {
-            items_nodes: items,
-            items_edges: Vec::new(),
+            items_nodes: Arc::new(items),
+            items_edges: Arc::new(Vec::new()),
             batch_size,
             n_nodes_total: 0,
-            rng: Rng::new(seed),
-            cursor: 0,
-            order: (0..n as u32).collect(),
+            seed,
             shuffle,
             drop_last,
+            pos: 0,
+            cached_epoch: 0,
+            order: Vec::new(),
         };
-        s.reshuffle();
+        s.order = s.epoch_order(0);
         s
     }
 
@@ -114,31 +138,28 @@ impl BatchScheduler {
         shuffle: bool,
         drop_last: bool,
     ) -> Self {
-        let n = items.len();
         let mut s = Self {
-            items_nodes: Vec::new(),
-            items_edges: items,
+            items_nodes: Arc::new(Vec::new()),
+            items_edges: Arc::new(items),
             batch_size,
             n_nodes_total,
-            rng: Rng::new(seed),
-            cursor: 0,
-            order: (0..n as u32).collect(),
+            seed,
             shuffle,
             drop_last,
+            pos: 0,
+            cached_epoch: 0,
+            order: Vec::new(),
         };
-        s.reshuffle();
+        s.order = s.epoch_order(0);
         s
     }
 
-    fn reshuffle(&mut self) {
-        if self.shuffle {
-            self.rng.shuffle(&mut self.order);
-        }
-        self.cursor = 0;
-    }
-
     pub fn n_items(&self) -> usize {
-        self.order.len()
+        if self.items_nodes.is_empty() {
+            self.items_edges.len()
+        } else {
+            self.items_nodes.len()
+        }
     }
 
     /// Batches per epoch: the last short batch is included unless
@@ -152,23 +173,33 @@ impl BatchScheduler {
         }
     }
 
-    /// Next mini-batch; wraps to a fresh (re-shuffled unless `shuffle`
-    /// is off) epoch at the boundary, skipping the short tail batch when
-    /// `drop_last` is set.
-    pub fn next_batch(&mut self) -> Target {
-        // drop_last: a partial tail (fewer than batch_size items left,
-        // with at least one full batch in the epoch) wraps early
-        let need = if self.drop_last && self.order.len() >= self.batch_size {
-            self.batch_size
-        } else {
-            1
-        };
-        if self.cursor + need > self.order.len() {
-            self.reshuffle();
+    /// The item permutation of `epoch` — a pure function of
+    /// `(seed, epoch)`.
+    fn epoch_order(&self, epoch: u64) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.n_items() as u32).collect();
+        if self.shuffle {
+            Rng::for_path(self.seed, &[epoch, LANE_SHUFFLE])
+                .shuffle(&mut order);
         }
-        let end = (self.cursor + self.batch_size).min(self.order.len());
-        let idxs = &self.order[self.cursor..end];
-        self.cursor = end;
+        order
+    }
+
+    fn ensure_epoch(&mut self, epoch: u64) {
+        if self.cached_epoch != epoch || self.order.len() != self.n_items() {
+            self.order = self.epoch_order(epoch);
+            self.cached_epoch = epoch;
+        }
+    }
+
+    /// Mini-batch `idx` of `epoch` — a pure function of
+    /// `(seed, epoch, idx)`; `idx` must be `< batches_per_epoch()`.
+    /// `&mut self` only maintains the cached permutation.
+    pub fn batch_at(&mut self, epoch: u64, idx: usize) -> Target {
+        debug_assert!(idx < self.batches_per_epoch());
+        self.ensure_epoch(epoch);
+        let lo = idx * self.batch_size;
+        let hi = (lo + self.batch_size).min(self.order.len());
+        let idxs = &self.order[lo..hi];
         if !self.items_nodes.is_empty() {
             Target::Nodes(
                 idxs.iter()
@@ -176,6 +207,12 @@ impl BatchScheduler {
                     .collect(),
             )
         } else {
+            // negative tails come from this batch's own derived stream,
+            // never from shared mutable state
+            let mut rng = Rng::for_path(
+                self.seed,
+                &[epoch, idx as u64, LANE_NEG],
+            );
             let mut heads = Vec::with_capacity(idxs.len());
             let mut tails = Vec::with_capacity(idxs.len());
             let mut negs = Vec::with_capacity(idxs.len());
@@ -183,10 +220,21 @@ impl BatchScheduler {
                 let (h, t) = self.items_edges[i as usize];
                 heads.push(h);
                 tails.push(t);
-                negs.push(self.rng.below(self.n_nodes_total) as NodeId);
+                negs.push(rng.below(self.n_nodes_total) as NodeId);
             }
             Target::Edges { heads, tails, negs }
         }
+    }
+
+    /// Next mini-batch of the sequential stream; wraps to a fresh
+    /// (re-shuffled unless `shuffle` is off) epoch at the boundary,
+    /// skipping the short tail batch when `drop_last` is set. Identical
+    /// to walking [`Self::batch_at`] in `(epoch, idx)` order.
+    pub fn next_batch(&mut self) -> Target {
+        let bpe = self.batches_per_epoch().max(1) as u64;
+        let (epoch, idx) = (self.pos / bpe, (self.pos % bpe) as usize);
+        self.pos += 1;
+        self.batch_at(epoch, idx)
     }
 }
 
@@ -289,6 +337,9 @@ mod tests {
 
     #[test]
     fn flat_nodes_layout_for_lp() {
+        // the absolute [heads | tails | negs] row order is what to_block
+        // and the lp pair masks assume — assert it directly, not through
+        // flat_nodes-vs-flat_nodes comparisons
         let t = Target::Edges {
             heads: vec![1, 2],
             tails: vec![3, 4],
@@ -296,5 +347,36 @@ mod tests {
         };
         assert_eq!(t.flat_nodes(), vec![1, 2, 3, 4, 5, 6]);
         assert_eq!(t.n_items(), 2);
+    }
+
+    /// The worker-pool invariant at the scheduler level: random access by
+    /// global batch index — in any order, from any clone — reproduces the
+    /// sequential stream exactly, for both tasks.
+    #[test]
+    fn batch_at_matches_sequential_stream_in_any_order() {
+        let nodes = BatchScheduler::for_nodes((0..70).collect(), 16, 11);
+        let edges = BatchScheduler::for_edges(
+            (0..70).map(|i| (i, i + 1)).collect(),
+            16,
+            500,
+            11,
+        );
+        for mut seq in [nodes, edges] {
+            let bpe = seq.batches_per_epoch() as u64;
+            let mut ra = seq.clone();
+            let stream: Vec<Target> =
+                (0..3 * bpe).map(|_| seq.next_batch()).collect();
+            // visit global indices in a scrambled order, as workers would
+            let mut gs: Vec<u64> = (0..3 * bpe).collect();
+            Rng::new(5).shuffle(&mut gs);
+            for g in gs {
+                let t = ra.batch_at(g / bpe, (g % bpe) as usize);
+                assert_eq!(
+                    t.flat_nodes(),
+                    stream[g as usize].flat_nodes(),
+                    "batch {g} diverged from the sequential stream"
+                );
+            }
+        }
     }
 }

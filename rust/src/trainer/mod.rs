@@ -93,11 +93,27 @@ pub struct TrainReport {
     /// `sampler.etype_edges.*` counters; empty on homogeneous runs.
     /// Production-side accounting, like the `cache.*` counters.
     pub etype_sampled_edges: Vec<u64>,
+    /// BatchPool recycling counters across trainers (production-side
+    /// accounting, like `cache.*`): takes served from the pool, takes
+    /// that allocated fresh, and returns discarded because the pool was
+    /// full (a persistent `pool.dropped` stream means the pool cap is
+    /// too small for the worker count / prefetch depth).
+    pub pool_hit: u64,
+    pub pool_miss: u64,
+    pub pool_dropped: u64,
     pub final_val_acc: Option<f64>,
-    /// Aggregate stage times across all trainers (for the pipeline model
-    /// used by the benches — DESIGN.md §2).
+    /// Aggregate stage 1-4 CPU time across all trainers and sampling
+    /// workers (for the pipeline model used by the benches — DESIGN.md
+    /// §2): the sum of the four per-stage timers below.
     pub sample_secs: f64,
-    /// Batches actually produced by the sampling threads (non-stop mode
+    /// Per-stage breakdown of `sample_secs` (`pipeline.schedule` /
+    /// `pipeline.sample` / `pipeline.pull` / `pipeline.compact`),
+    /// aggregated across workers.
+    pub stage_schedule_secs: f64,
+    pub stage_sample_secs: f64,
+    pub stage_pull_secs: f64,
+    pub stage_compact_secs: f64,
+    /// Batches actually produced by the sampling workers (non-stop mode
     /// overproduces; unit-cost calibration must divide by this).
     pub batches_produced: u64,
     pub device_secs: f64,
@@ -300,8 +316,26 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
             .counter("cache.remote_bytes_saved"),
         dropped_neighbors: metrics.counter("trainer.dropped_nbrs"),
         etype_sampled_edges,
+        pool_hit: metrics.counter("pool.hit"),
+        pool_miss: metrics.counter("pool.miss"),
+        pool_dropped: metrics.counter("pool.dropped"),
         final_val_acc,
-        sample_secs: metrics.total_time("pipeline.sample").as_secs_f64(),
+        sample_secs: ["schedule", "sample", "pull", "compact"]
+            .iter()
+            .map(|s| {
+                metrics.total_time(&format!("pipeline.{s}")).as_secs_f64()
+            })
+            .sum(),
+        stage_schedule_secs: metrics
+            .total_time("pipeline.schedule")
+            .as_secs_f64(),
+        stage_sample_secs: metrics
+            .total_time("pipeline.sample")
+            .as_secs_f64(),
+        stage_pull_secs: metrics.total_time("pipeline.pull").as_secs_f64(),
+        stage_compact_secs: metrics
+            .total_time("pipeline.compact")
+            .as_secs_f64(),
         batches_produced: metrics.counter("pipeline.batches"),
         device_secs: metrics.total_time("trainer.device").as_secs_f64(),
         allreduce_secs: metrics
