@@ -90,18 +90,17 @@ fn main() -> anyhow::Result<()> {
         .to_vec();
     let sampler = gen.sampler.clone();
     r.bench("sample_blocks (2 layers, fanout 5)", || {
-        let s = sampler.sample_blocks(
-            &targets,
-            &plan,
-            &shape.layer_nodes,
-            &mut rng,
-        );
+        let s = sampler
+            .sample_blocks(&targets, &plan, &shape.layer_nodes, &mut rng)
+            .unwrap();
         std::hint::black_box(s.len());
     });
 
     // --- stage 4: compaction --------------------------------------------
     let samples =
-        sampler.sample_blocks(&targets, &plan, &shape.layer_nodes, &mut rng);
+        sampler
+            .sample_blocks(&targets, &plan, &shape.layer_nodes, &mut rng)
+            .unwrap();
     r.bench("to_block (compaction)", || {
         let b = to_block(&shape, &samples);
         std::hint::black_box(b.input_nodes.len());
@@ -115,11 +114,13 @@ fn main() -> anyhow::Result<()> {
     let cpu_uncached = r.bench(
         &format!("kv pull (uncached, {n_rows} feature rows)"),
         || {
-            let n = uncached.pull(
-                "feat",
-                &block.input_nodes,
-                &mut feats[..n_rows * shape.feat_dim],
-            );
+            let n = uncached
+                .pull(
+                    "feat",
+                    &block.input_nodes,
+                    &mut feats[..n_rows * shape.feat_dim],
+                )
+                .unwrap();
             std::hint::black_box(n);
         },
     );
@@ -128,11 +129,13 @@ fn main() -> anyhow::Result<()> {
     let cpu_cached = r.bench(
         "kv pull (cached, warm, cpu-only)", // warmup iters fill the cache
         || {
-            let n = cached_cpu.pull(
-                "feat",
-                &block.input_nodes,
-                &mut feats[..n_rows * shape.feat_dim],
-            );
+            let n = cached_cpu
+                .pull(
+                    "feat",
+                    &block.input_nodes,
+                    &mut feats[..n_rows * shape.feat_dim],
+                )
+                .unwrap();
             std::hint::black_box(n);
         },
     );
@@ -146,31 +149,33 @@ fn main() -> anyhow::Result<()> {
         Cluster::deploy(&dataset, em_spec, artifacts_dir())?;
     let gen_em = cluster_em.batch_gen(0, &vspec, "sage_nc_dev", 3);
     let mut rng_em = Rng::new(17);
-    let samples_em = gen_em.sampler.sample_blocks(
-        &targets,
-        &plan,
-        &shape.layer_nodes,
-        &mut rng_em,
-    );
+    let samples_em = gen_em
+        .sampler
+        .sample_blocks(&targets, &plan, &shape.layer_nodes, &mut rng_em)
+        .unwrap();
     let block_em = to_block(&shape, &samples_em);
     let n_rows_em = block_em.input_nodes.len();
     let mut un_em = cluster_em.kv.client(0, cluster_em.policy.clone());
     let em_uncached = r.bench("kv pull (uncached)", || {
-        let n = un_em.pull(
-            "feat",
-            &block_em.input_nodes,
-            &mut feats[..n_rows_em * shape.feat_dim],
-        );
+        let n = un_em
+            .pull(
+                "feat",
+                &block_em.input_nodes,
+                &mut feats[..n_rows_em * shape.feat_dim],
+            )
+            .unwrap();
         std::hint::black_box(n);
     });
     let mut ca_em = cluster_em.kv.client(0, cluster_em.policy.clone());
     ca_em.attach_cache(cluster_em.make_feature_cache().unwrap());
     let em_cached = r.bench("kv pull (cached, warm)", || {
-        let n = ca_em.pull(
-            "feat",
-            &block_em.input_nodes,
-            &mut feats[..n_rows_em * shape.feat_dim],
-        );
+        let n = ca_em
+            .pull(
+                "feat",
+                &block_em.input_nodes,
+                &mut feats[..n_rows_em * shape.feat_dim],
+            )
+            .unwrap();
         std::hint::black_box(n);
     });
     let cstats = ca_em.cache_stats().unwrap();
@@ -302,20 +307,14 @@ fn main() -> anyhow::Result<()> {
         .to_vec();
     let mut hrng = Rng::new(23);
     let h_sample = r.bench("hetero sample_blocks (per-etype fanouts)", || {
-        let s = hsampler.sample_blocks(
-            &htargets,
-            &hplan,
-            &hshape.layer_nodes,
-            &mut hrng,
-        );
+        let s = hsampler
+            .sample_blocks(&htargets, &hplan, &hshape.layer_nodes, &mut hrng)
+            .unwrap();
         std::hint::black_box(s.len());
     });
-    let hsamples = hsampler.sample_blocks(
-        &htargets,
-        &hplan,
-        &hshape.layer_nodes,
-        &mut hrng,
-    );
+    let hsamples = hsampler
+        .sample_blocks(&htargets, &hplan, &hshape.layer_nodes, &mut hrng)
+        .unwrap();
     let h_compact = r.bench("hetero to_block (rel-segmented)", || {
         let b = to_block(&hshape, &hsamples);
         std::hint::black_box(b.input_nodes.len());
@@ -330,12 +329,14 @@ fn main() -> anyhow::Result<()> {
     let h_pull = r.bench(
         &format!("hetero typed kv pull ({h_rows} rows, 3 ntype tables)"),
         || {
-            let n = hkv.pull_typed(
-                &hcluster.features,
-                &hblock.input_nodes,
-                &mut hfeats[..h_rows * hshape.feat_dim],
-                hshape.feat_dim,
-            );
+            let n = hkv
+                .pull_typed(
+                    &hcluster.features,
+                    &hblock.input_nodes,
+                    &mut hfeats[..h_rows * hshape.feat_dim],
+                    hshape.feat_dim,
+                )
+                .unwrap();
             std::hint::black_box(n);
         },
     );
@@ -462,7 +463,7 @@ fn main() -> anyhow::Result<()> {
                 let total = 2 * bpe;
                 let t = Instant::now();
                 for _ in 0..total {
-                    let b = pipe.next();
+                    let b = pipe.next().unwrap();
                     std::hint::black_box(b.targets.len());
                     pool.put(b);
                 }

@@ -1,0 +1,141 @@
+//! Recovery-time bench (docs/PERF.md §Recovery): checkpoint cadence ×
+//! failure-point grid. For each cadence the run checkpoints every N
+//! steps; for each failure point we resume from the latest snapshot at
+//! or before the failure and measure restore time, redo (replay) time,
+//! and lost steps. Byte-identity of the replayed stream against the
+//! no-checkpoint baseline is asserted on every grid cell — the bench
+//! doubles as an end-to-end exact-resume check. Emits
+//! `BENCH_recovery.json`. Requires `make artifacts`.
+
+use std::time::Instant;
+
+use distdglv2::cluster::{Cluster, ClusterSpec};
+use distdglv2::ft::Checkpoint;
+use distdglv2::graph::{Dataset, DatasetSpec};
+use distdglv2::pipeline::PipelineMode;
+use distdglv2::runtime::manifest::artifacts_dir;
+use distdglv2::trainer::{self, TrainConfig};
+
+const STEPS: usize = 12;
+
+fn deploy(dataset: &Dataset) -> anyhow::Result<Cluster> {
+    Cluster::deploy(dataset, ClusterSpec::new(2, 1), artifacts_dir())
+}
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        lr: 0.3,
+        epochs: 1,
+        max_steps: STEPS,
+        seed: 29,
+        ..Default::default()
+    };
+    // worst case for exact resume: deepest overlap, worker pool on
+    cfg.pipeline.mode = PipelineMode::AsyncNonstop;
+    cfg.pipeline.num_workers = 2;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut dspec = DatasetSpec::new("recovery-bench", 6000, 30_000);
+    dspec.seed = 31;
+    let dataset = dspec.generate();
+
+    // no-checkpoint baseline: the stream every grid cell must replay
+    let t = Instant::now();
+    let baseline = trainer::train(&deploy(&dataset)?, &base_cfg())?;
+    let base_secs = t.elapsed().as_secs_f64();
+    println!(
+        "baseline: {STEPS} steps in {base_secs:.3}s (no checkpoints)"
+    );
+
+    let dir = std::env::temp_dir().join("ddgl_bench_recovery");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    println!("\n=== recovery grid (cadence x failure point) ===");
+    println!(
+        "{:<8} {:>6} {:>7} {:>11} {:>9} {:>6}",
+        "cadence", "fail@", "resume", "restore(s)", "redo(s)", "lost"
+    );
+    let mut rows: Vec<String> = Vec::new();
+    for cadence in [1usize, 2, 4] {
+        let cdir = dir.join(format!("cadence_{cadence}"));
+        std::fs::create_dir_all(&cdir)?;
+        let mut cfg = base_cfg();
+        cfg.checkpoint_every = cadence;
+        cfg.checkpoint_dir = cdir.to_string_lossy().into_owned();
+        let t = Instant::now();
+        let ckpt_run = trainer::train(&deploy(&dataset)?, &cfg)?;
+        let ckpt_secs = t.elapsed().as_secs_f64();
+        assert_eq!(
+            ckpt_run.loss_curve, baseline.loss_curve,
+            "checkpointing perturbed the training stream"
+        );
+        assert_eq!(ckpt_run.ft_checkpoints as usize, STEPS / cadence);
+        println!(
+            "cadence {cadence}: +{:.1}% wall overhead, {} B written",
+            100.0 * (ckpt_secs / base_secs - 1.0),
+            ckpt_run.ft_checkpoint_bytes,
+        );
+
+        for fail_step in [3usize, 7, 11] {
+            // latest snapshot at or before the failure point
+            let resume_step = fail_step / cadence * cadence;
+            let (restore_secs, redo_secs) = if resume_step == 0 {
+                // failed before the first snapshot: full restart
+                (0.0, base_secs)
+            } else {
+                let mut rcfg = base_cfg();
+                rcfg.resume_from =
+                    Checkpoint::path_for(&cdir, resume_step as u64)
+                        .to_string_lossy()
+                        .into_owned();
+                let t = Instant::now();
+                let resumed = trainer::train(&deploy(&dataset)?, &rcfg)?;
+                let redo = t.elapsed().as_secs_f64();
+                assert_eq!(resumed.resumed_at, resume_step as u64);
+                assert_eq!(resumed.steps, STEPS - resume_step);
+                assert_eq!(
+                    resumed.loss_curve,
+                    baseline.loss_curve[resume_step..].to_vec(),
+                    "resume from step {resume_step} diverged"
+                );
+                (resumed.ft_recovery_secs, redo)
+            };
+            let lost = fail_step - resume_step;
+            println!(
+                "{:<8} {:>6} {:>7} {:>11.4} {:>9.3} {:>6}",
+                cadence, fail_step, resume_step, restore_secs,
+                redo_secs, lost,
+            );
+            rows.push(format!(
+                "    {{\"cadence\": {cadence}, \"fail_step\": {fail_step}, \
+                 \"resume_step\": {resume_step}, \
+                 \"restore_secs\": {restore_secs:.6}, \
+                 \"redo_secs\": {redo_secs:.6}, \"lost_steps\": {lost}, \
+                 \"ckpt_bytes\": {}, \"ckpt_overhead_secs\": {:.6}, \
+                 \"identical\": true}}",
+                ckpt_run.ft_checkpoint_bytes,
+                (ckpt_secs - base_secs).max(0.0),
+            ));
+        }
+    }
+
+    std::fs::write(
+        "BENCH_recovery.json",
+        format!(
+            "{{\n  \"bench\": \"recovery\",\n  \
+             \"steps\": {STEPS},\n  \
+             \"machines\": 2,\n  \
+             \"pipeline\": \"nonstop\",\n  \
+             \"baseline_secs\": {base_secs:.6},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            rows.join(",\n"),
+        ),
+    )?;
+    println!("\nwrote BENCH_recovery.json");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

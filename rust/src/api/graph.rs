@@ -162,7 +162,8 @@ impl<'a> DistGraph<'a> {
             .cluster
             .kv
             .client(0, self.cluster.policy.clone());
-        kv.pull_typed(&self.cluster.features, nodes, &mut out, dim);
+        kv.pull_typed(&self.cluster.features, nodes, &mut out, dim)
+            .expect("feature tables registered at deploy");
         out
     }
 

@@ -7,6 +7,7 @@ use anyhow::{ensure, Result};
 
 use crate::graph::NodeId;
 use crate::metrics::Metrics;
+use crate::net::RpcError;
 use crate::pipeline::{BatchGen, BatchPool, Pipeline, PipelineConfig};
 use crate::runtime::executable::HostBatch;
 use crate::runtime::manifest::VariantSpec;
@@ -45,6 +46,7 @@ pub struct DistNodeDataLoaderBuilder<'a> {
     shuffle: bool,
     drop_last: bool,
     seed: u64,
+    start_at: u64,
     pipeline: PipelineConfig,
     metrics: Option<Arc<Metrics>>,
 }
@@ -96,6 +98,16 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
     /// the full batch stream reproducible byte for byte.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Resume the stream at global batch `start` (counted from the
+    /// first batch of a fresh loader) — the exact-resume entry point
+    /// (docs/DESIGN.md §8): a loader built with `.start_at(k)` yields
+    /// precisely what a fresh loader with the same seed yields after
+    /// `k` batches. Default 0 (a fresh stream).
+    pub fn start_at(mut self, start: u64) -> Self {
+        self.start_at = start;
         self
     }
 
@@ -197,13 +209,19 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
         let metrics = self
             .metrics
             .unwrap_or_else(|| Arc::new(Metrics::new()));
-        let pipeline = Pipeline::start(gen, &self.pipeline, metrics.clone());
+        let pipeline = Pipeline::start_at(
+            gen,
+            &self.pipeline,
+            metrics.clone(),
+            self.start_at,
+        );
         Ok(DistNodeDataLoader {
             pipeline,
             pool,
             metrics,
             epoch_len,
-            pos: 0,
+            // epoch accounting continues where the resumed stream is
+            pos: (self.start_at % epoch_len.max(1) as u64) as usize,
             batch_size,
             n_seeds,
         })
@@ -253,6 +271,7 @@ impl DistNodeDataLoader {
             shuffle: true,
             drop_last: false,
             seed: 7,
+            start_at: 0,
             pipeline: PipelineConfig::default(),
             metrics: None,
         }
@@ -278,8 +297,17 @@ impl DistNodeDataLoader {
 
     /// Next mini-batch as an endless stream (wraps epochs silently) —
     /// the step-counted-loop style. Blocks until the pipeline has one
-    /// ready.
+    /// ready. Panics on an unrecoverable RPC failure; fault-tolerant
+    /// drivers use [`Self::try_next_batch`].
     pub fn next_batch(&mut self) -> HostBatch {
+        self.try_next_batch().expect("mini-batch pipeline failed")
+    }
+
+    /// Fallible [`Self::next_batch`]: an unrecoverable RPC failure (a
+    /// server outage with retries exhausted — injected or real)
+    /// surfaces as a typed [`RpcError`]; the sampling workers have
+    /// already drained cleanly and drop joins them (docs/DESIGN.md §8).
+    pub fn try_next_batch(&mut self) -> Result<HostBatch, RpcError> {
         if self.pos >= self.epoch_len {
             self.pos = 0;
         }
@@ -311,14 +339,17 @@ impl Iterator for DistNodeDataLoader {
     type Item = HostBatch;
 
     /// Yields [`len`](Self::len) batches, then `None` once — after which
-    /// the loader is re-armed for the next epoch.
+    /// the loader is re-armed for the next epoch. A pipeline failure
+    /// also ends the epoch (cleanly, no panic); use
+    /// [`try_next_batch`](DistNodeDataLoader::try_next_batch) to
+    /// observe the error itself.
     fn next(&mut self) -> Option<HostBatch> {
         if self.pos >= self.epoch_len {
             self.pos = 0;
             return None;
         }
         self.pos += 1;
-        Some(self.pipeline.next())
+        self.pipeline.next().ok()
     }
 }
 
@@ -540,6 +571,105 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The fault-tolerance acceptance gate (docs/DESIGN.md §8): a
+    /// loader built with `.start_at(k)` must stream byte-identical
+    /// batches to a fresh loader after `k` batches — hetero and
+    /// homogeneous, cache off and on, all three pipeline modes, worker
+    /// counts 1 and 4, with `k` landing mid-second-epoch so resume
+    /// crosses a reshuffle boundary.
+    #[test]
+    fn start_at_resumes_byte_identically_across_the_matrix() {
+        for hetero in [false, true] {
+            for cache in [0usize, 64 << 20] {
+                let ((ca, v), (cb, _)) = if hetero {
+                    (hetero_cluster(cache), hetero_cluster(cache))
+                } else {
+                    (homo_cluster(cache), homo_cluster(cache))
+                };
+                let ga = DistGraph::new(&ca);
+                let gb = DistGraph::new(&cb);
+                for mode in [
+                    PipelineMode::Sync,
+                    PipelineMode::Async,
+                    PipelineMode::AsyncNonstop,
+                ] {
+                    for workers in [1usize, 4] {
+                        let cfg = PipelineConfig {
+                            mode,
+                            ..Default::default()
+                        };
+                        let mut straight =
+                            DistNodeDataLoader::builder(&ga, &v)
+                                .seed(19)
+                                .pipeline(cfg.clone())
+                                .num_workers(workers)
+                                .build()
+                                .unwrap();
+                        let k = straight.len() as u64 + 3;
+                        for _ in 0..k {
+                            let _ = straight.next_batch();
+                        }
+                        let mut resumed =
+                            DistNodeDataLoader::builder(&gb, &v)
+                                .seed(19)
+                                .pipeline(cfg)
+                                .num_workers(workers)
+                                .start_at(k)
+                                .build()
+                                .unwrap();
+                        for step in 0..straight.len() + 2 {
+                            assert_eq!(
+                                strip_locality(straight.next_batch()),
+                                strip_locality(resumed.next_batch()),
+                                "hetero={hetero} cache={cache} {mode:?} \
+                                 x{workers}: resumed stream diverged at \
+                                 step {step} past batch {k}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// An unrecoverable injected outage must surface from
+    /// `try_next_batch` as the typed error — no panic — after which the
+    /// loader drops cleanly (satellite 2 at the API layer).
+    #[test]
+    fn injected_outage_surfaces_as_typed_error_and_drains() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        let mut plan = FaultPlan::new();
+        // machine 1's KV server dies for good after 4 admitted RPCs
+        plan.kv_outages.push(FailWindow::permanent(1, 4));
+        plan.backoff = std::time::Duration::ZERO;
+        c.set_fault_plan(Arc::new(plan));
+        let mut loader = DistNodeDataLoader::builder(&g, &v)
+            .num_workers(2)
+            .build()
+            .unwrap();
+        let mut saw = Option::None;
+        for _ in 0..4 * loader.len() {
+            match loader.try_next_batch() {
+                Ok(b) => loader.recycle(b),
+                Err(e) => {
+                    saw = Some(e);
+                    break;
+                }
+            }
+        }
+        assert_eq!(
+            saw,
+            Some(crate::net::RpcError::ServerDown {
+                machine: 1,
+                role: "kv"
+            }),
+            "outage never surfaced as a typed error"
+        );
+        drop(loader); // joins the drained worker pool without hanging
     }
 
     /// Serial vs concurrent per-owner RPC fan-out: identical batches

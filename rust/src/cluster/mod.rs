@@ -4,11 +4,12 @@
 //! set across trainers — everything `trainer::train` needs to run.
 
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::ft::FaultPlan;
 use crate::graph::{Dataset, FanoutPlan, GraphSchema, NodeId, SplitTag};
 use crate::kvstore::{
     CacheAdmission, FeatureCache, KvCluster, RangePolicy, TypedFeatures,
@@ -118,6 +119,10 @@ pub struct Cluster {
     pub n_nodes: usize,
     pub n_edges: usize,
     pub stats: DeployStats,
+    /// Injected failure/straggler schedule (docs/DESIGN.md §8); applied
+    /// to the KV fabric immediately and to every sampler built by
+    /// [`Self::batch_gen`] afterwards.
+    fault: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl Cluster {
@@ -273,7 +278,21 @@ impl Cluster {
                 edge_cut,
                 imbalance,
             },
+            fault: Mutex::new(None),
         })
+    }
+
+    /// Install a fault-injection / straggler plan cluster-wide: the
+    /// KVStore fabric picks it up immediately; samplers built by later
+    /// [`Self::batch_gen`] calls (i.e. later loaders) inherit it.
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        self.kv.set_fault_plan(plan.clone());
+        *self.fault.lock().unwrap() = Some(plan);
+    }
+
+    /// The installed fault plan, if any (for reporting its counters).
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.fault.lock().unwrap().clone()
     }
 
     pub fn n_trainers(&self) -> usize {
@@ -355,6 +374,9 @@ impl Cluster {
         );
         sampler.emulate_network_time = self.spec.emulate_network_time;
         sampler.concurrent_fanout = self.spec.concurrent_rpc;
+        if let Some(plan) = self.fault.lock().unwrap().clone() {
+            sampler.set_fault_plan(plan);
+        }
         let items = self.train_sets[trainer].clone();
         let scheduler = match shape.task {
             TaskKind::NodeClassification => BatchScheduler::for_nodes(

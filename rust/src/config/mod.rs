@@ -141,13 +141,23 @@ impl RunConfig {
                 }
                 self.train.pipeline.num_workers = n;
             }
+            // fault tolerance (docs/DESIGN.md §8): rank 0 snapshots the
+            // run every N steps; `resume_from=` replays the exact stream
+            "checkpoint_every" => {
+                self.train.checkpoint_every = parse_usize()?
+            }
+            "checkpoint_dir" => {
+                self.train.checkpoint_dir = value.to_string()
+            }
+            "resume_from" => self.train.resume_from = value.to_string(),
             _ => bail!(
                 "unknown key {key:?}; valid: dataset feat_dim classes \
                  num_rels dataset_seed machines trainers partitioner \
                  multi_constraint two_level emulate_network \
                  concurrent_rpc cache_budget_bytes cache_admission \
                  etype_fanouts variant lr epochs max_steps drop_last eval \
-                 seed pipeline cpu_prefetch gpu_prefetch num_workers"
+                 seed pipeline cpu_prefetch gpu_prefetch num_workers \
+                 checkpoint_every checkpoint_dir resume_from"
             ),
         }
         Ok(())
@@ -304,6 +314,33 @@ mod tests {
         assert!(cfg.train.drop_last);
         assert!(RunConfig::from_args(
             ["drop_last=maybe".to_string()]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn checkpoint_knobs_parse_and_default_off() {
+        let d = RunConfig::default();
+        assert_eq!(d.train.checkpoint_every, 0);
+        assert!(d.train.checkpoint_dir.is_empty());
+        assert!(d.train.resume_from.is_empty());
+        let cfg = RunConfig::from_args(
+            [
+                "checkpoint_every=50",
+                "checkpoint_dir=/tmp/ckpts",
+                "resume_from=/tmp/ckpts/ckpt_00000100.ckpt",
+            ]
+            .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.train.checkpoint_every, 50);
+        assert_eq!(cfg.train.checkpoint_dir, "/tmp/ckpts");
+        assert_eq!(
+            cfg.train.resume_from,
+            "/tmp/ckpts/ckpt_00000100.ckpt"
+        );
+        assert!(RunConfig::from_args(
+            ["checkpoint_every=x".to_string()]
         )
         .is_err());
     }

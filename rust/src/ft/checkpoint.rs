@@ -1,0 +1,297 @@
+//! Checkpoint / exact-resume state (docs/DESIGN.md §8).
+//!
+//! A [`Checkpoint`] is everything needed to continue training with a
+//! byte-identical stream: the run seed, the global step, the dense
+//! model parameters (synchronized across ranks by the preceding
+//! all-reduce, so one copy suffices), and every KVStore shard — feature
+//! tables, labels, and learnable embeddings whose optimizer state
+//! *lives* in the KVStore (`kvstore/embedding.rs`). Batch composition
+//! has been a pure function of `(seed, global_step)` since PR 5, so no
+//! sampler or scheduler state needs saving: restoring `(seed, step)`
+//! and restarting the loaders at `step` replays the exact stream.
+//!
+//! The on-disk format follows `graph/bundle.rs`: magic + version, then
+//! little-endian length-prefixed sections; foreign files and stale
+//! versions are rejected with descriptive errors.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::kvstore::KvServer;
+
+const MAGIC: u32 = 0xC8EC_4D17;
+const VERSION: u32 = 0xFA00_0001;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u64(r)? as usize;
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// A full training snapshot: `(seed, step)` + model params + every
+/// KVStore shard, name-sorted per server for a deterministic encoding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub seed: u64,
+    /// Global step the snapshot was taken *after*: resuming replays
+    /// batches `step..`.
+    pub step: u64,
+    pub params: Vec<Vec<f32>>,
+    /// Per KV server (machine order): `(tensor, dim, rows)`.
+    pub shards: Vec<Vec<(String, usize, Vec<f32>)>>,
+}
+
+impl Checkpoint {
+    /// The canonical file name the trainer writes at `step`.
+    pub fn path_for(dir: &Path, step: u64) -> PathBuf {
+        dir.join(format!("ckpt_{step:08}.ckpt"))
+    }
+
+    /// Snapshot the cluster: params + every server's shards.
+    pub fn capture(
+        seed: u64,
+        step: u64,
+        params: &[Vec<f32>],
+        servers: &[Arc<KvServer>],
+    ) -> Checkpoint {
+        Checkpoint {
+            seed,
+            step,
+            params: params.to_vec(),
+            shards: servers.iter().map(|s| s.export_shards()).collect(),
+        }
+    }
+
+    /// Write the restored shards back into a (re)deployed cluster's
+    /// servers. The server count must match the snapshot's.
+    pub fn restore(&self, servers: &[Arc<KvServer>]) -> Result<()> {
+        ensure!(
+            servers.len() == self.shards.len(),
+            "checkpoint holds {} servers, cluster has {}",
+            self.shards.len(),
+            servers.len()
+        );
+        for (server, shards) in servers.iter().zip(&self.shards) {
+            for (name, dim, data) in shards {
+                server.import_shard(name, *dim, data.clone());
+            }
+        }
+        Ok(())
+    }
+
+    /// Persist to `path`; returns the bytes written.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(
+            File::create(path)
+                .with_context(|| format!("create {path:?}"))?,
+        );
+        write_u32(&mut w, MAGIC)?;
+        write_u32(&mut w, VERSION)?;
+        write_u64(&mut w, self.seed)?;
+        write_u64(&mut w, self.step)?;
+        write_u64(&mut w, self.params.len() as u64)?;
+        for p in &self.params {
+            write_f32s(&mut w, p)?;
+        }
+        write_u64(&mut w, self.shards.len() as u64)?;
+        for server in &self.shards {
+            write_u64(&mut w, server.len() as u64)?;
+            for (name, dim, data) in server {
+                write_str(&mut w, name)?;
+                write_u64(&mut w, *dim as u64)?;
+                write_f32s(&mut w, data)?;
+            }
+        }
+        w.flush()?;
+        Ok(std::fs::metadata(path)?.len())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let magic = read_u32(&mut r)?;
+        if magic != MAGIC {
+            bail!("bad checkpoint magic in {path:?}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!(
+                "unsupported checkpoint version {version:#010x} in \
+                 {path:?} ({VERSION:#010x} expected)"
+            );
+        }
+        let seed = read_u64(&mut r)?;
+        let step = read_u64(&mut r)?;
+        let n_params = read_u64(&mut r)? as usize;
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(read_f32s(&mut r)?);
+        }
+        let n_servers = read_u64(&mut r)? as usize;
+        let mut shards = Vec::with_capacity(n_servers);
+        for _ in 0..n_servers {
+            let n_tensors = read_u64(&mut r)? as usize;
+            let mut server = Vec::with_capacity(n_tensors);
+            for _ in 0..n_tensors {
+                let name = read_str(&mut r)?;
+                let dim = read_u64(&mut r)? as usize;
+                let data = read_f32s(&mut r)?;
+                server.push((name, dim, data));
+            }
+            shards.push(server);
+        }
+        Ok(Checkpoint { seed, step, params, shards })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeId;
+    use crate::kvstore::{EmbeddingTable, KvCluster, RangePolicy};
+    use crate::net::CostModel;
+    use crate::partition::NodeMap;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ddgl_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_byte_identically() {
+        let ck = Checkpoint {
+            seed: 7,
+            step: 42,
+            params: vec![vec![1.0, -2.5, 3.25], vec![0.0; 5]],
+            shards: vec![
+                vec![
+                    ("emb".into(), 2, vec![0.5f32; 8]),
+                    ("feat".into(), 3, vec![1.5f32; 9]),
+                ],
+                vec![("feat".into(), 3, vec![-1.0f32; 6])],
+            ],
+        };
+        let p = tmp("rt.ckpt");
+        let bytes = ck.save(&p).unwrap();
+        assert!(bytes > 0);
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_stale_versions() {
+        let p = tmp("junk.ckpt");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // right magic, wrong version
+        let mut bytes = MAGIC.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn restore_rewinds_mutated_embedding_rows() {
+        // the shard snapshot must do real work: mutate an embedding,
+        // checkpoint, mutate again, restore — reads must rewind to the
+        // snapshot (this is the path a resumed run takes for learnable
+        // embeddings whose optimizer state lives in the KVStore)
+        let nm = NodeMap { part_starts: vec![0, 8, 16] };
+        let policy: Arc<RangePolicy> = Arc::new(RangePolicy::new(nm));
+        let cluster = KvCluster::new(2, Arc::new(CostModel::default()));
+        let emb = EmbeddingTable::create(
+            &cluster, policy.as_ref(), "emb", 16, 4, 0.1, 7,
+        );
+        let mut client = cluster.client(0, policy.clone());
+        let ids: Vec<NodeId> = vec![2, 12];
+        let grads = vec![1.0f32; 2 * 4];
+        emb.update(&mut client, &ids, &grads, 0.25).unwrap();
+
+        let ck = Checkpoint::capture(7, 1, &[], &cluster.servers);
+        let mut at_ckpt = vec![0f32; 2 * 4];
+        emb.gather(&mut client, &ids, &mut at_ckpt).unwrap();
+
+        emb.update(&mut client, &ids, &grads, 0.25).unwrap(); // diverge
+        let mut diverged = vec![0f32; 2 * 4];
+        emb.gather(&mut client, &ids, &mut diverged).unwrap();
+        assert_ne!(at_ckpt, diverged);
+
+        ck.restore(&cluster.servers).unwrap();
+        let mut restored = vec![0f32; 2 * 4];
+        emb.gather(&mut client, &ids, &mut restored).unwrap();
+        assert_eq!(at_ckpt, restored, "restore must rewind the shard");
+    }
+
+    #[test]
+    fn restore_rejects_server_count_mismatch() {
+        let ck = Checkpoint {
+            seed: 1,
+            step: 0,
+            params: vec![],
+            shards: vec![vec![]],
+        };
+        let cluster = KvCluster::new(2, Arc::new(CostModel::default()));
+        assert!(ck.restore(&cluster.servers).is_err());
+    }
+}

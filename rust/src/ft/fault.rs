@@ -1,0 +1,280 @@
+//! Failure injection + straggler emulation (docs/DESIGN.md §8).
+//!
+//! A [`FaultPlan`] is an immutable description of the faults a run must
+//! survive: KV/sampler server outages (by request index), transport
+//! message drops and delays, and bounded retry/backoff policy. The plan
+//! is shared (`Arc`) by every client it is installed on and keeps its
+//! own atomic call counters, so an outage window like "requests 10..13
+//! to machine 1 fail" is *transient*: each retry advances the counter
+//! and eventually escapes the window, while `count = u64::MAX` models a
+//! machine that never comes back and exhausts the retry budget into
+//! [`RpcError::ServerDown`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::metrics::Metrics;
+use crate::net::RpcError;
+
+/// One injected outage: `machine` fails every request whose per-plan
+/// call counter lands in `[after, after + count)`.
+#[derive(Clone, Copy, Debug)]
+pub struct FailWindow {
+    pub machine: u32,
+    pub after: u64,
+    pub count: u64,
+}
+
+impl FailWindow {
+    /// A machine that goes down at request `after` and never recovers.
+    pub fn permanent(machine: u32, after: u64) -> Self {
+        Self { machine, after, count: u64::MAX }
+    }
+
+    /// A machine that fails `count` requests starting at `after`, then
+    /// answers again (a restarted server / healed link).
+    pub fn transient(machine: u32, after: u64, count: u64) -> Self {
+        Self { machine, after, count }
+    }
+
+    fn covers(&self, machine: u32, call: u64) -> bool {
+        self.machine == machine
+            && call >= self.after
+            && call - self.after < self.count
+    }
+}
+
+/// Injected-fault schedule + retry policy, shared by every RPC client
+/// it is installed on (`Cluster::set_fault_plan`).
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// Outage windows over the KVStore request counter.
+    pub kv_outages: Vec<FailWindow>,
+    /// Outage windows over the sampler request counter.
+    pub sampler_outages: Vec<FailWindow>,
+    /// Drop every Nth transport message (0 = never drop).
+    pub drop_every: u64,
+    /// Added latency per transport message (straggler link).
+    pub delay: Duration,
+    /// Failed requests are retried this many times before the caller
+    /// sees [`RpcError::ServerDown`].
+    pub max_retries: u32,
+    /// Sleep between retries.
+    pub backoff: Duration,
+    kv_calls: AtomicU64,
+    sampler_calls: AtomicU64,
+    msg_calls: AtomicU64,
+    retries: AtomicU64,
+    kv_failures: AtomicU64,
+    sampler_failures: AtomicU64,
+    dropped_msgs: AtomicU64,
+    delayed_msgs: AtomicU64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultPlan {
+    /// A fault-free plan with the default retry policy (3 retries,
+    /// 1 ms backoff): installing it changes nothing until outage
+    /// windows / drop / delay knobs are set.
+    pub fn new() -> Self {
+        Self {
+            kv_outages: Vec::new(),
+            sampler_outages: Vec::new(),
+            drop_every: 0,
+            delay: Duration::ZERO,
+            max_retries: 3,
+            backoff: Duration::from_millis(1),
+            kv_calls: AtomicU64::new(0),
+            sampler_calls: AtomicU64::new(0),
+            msg_calls: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            kv_failures: AtomicU64::new(0),
+            sampler_failures: AtomicU64::new(0),
+            dropped_msgs: AtomicU64::new(0),
+            delayed_msgs: AtomicU64::new(0),
+        }
+    }
+
+    fn fails(
+        windows: &[FailWindow],
+        calls: &AtomicU64,
+        failures: &AtomicU64,
+        machine: u32,
+    ) -> bool {
+        let c = calls.fetch_add(1, Ordering::Relaxed);
+        if windows.iter().any(|w| w.covers(machine, c)) {
+            failures.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn admit(
+        &self,
+        windows: &[FailWindow],
+        calls: &AtomicU64,
+        failures: &AtomicU64,
+        machine: u32,
+        role: &'static str,
+    ) -> Result<(), RpcError> {
+        if !Self::fails(windows, calls, failures, machine) {
+            return Ok(());
+        }
+        for _ in 0..self.max_retries {
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            if !self.backoff.is_zero() {
+                std::thread::sleep(self.backoff);
+            }
+            if !Self::fails(windows, calls, failures, machine) {
+                return Ok(());
+            }
+        }
+        Err(RpcError::ServerDown { machine, role })
+    }
+
+    /// Gate one KVStore request to `machine`: advances the KV call
+    /// counter (retries included, so transient windows heal) and
+    /// returns `ServerDown` once the retry budget is spent.
+    pub fn admit_kv(&self, machine: u32) -> Result<(), RpcError> {
+        self.admit(
+            &self.kv_outages,
+            &self.kv_calls,
+            &self.kv_failures,
+            machine,
+            "kv",
+        )
+    }
+
+    /// Gate one sampler request to `machine` (same contract as
+    /// [`Self::admit_kv`] over the sampler call counter).
+    pub fn admit_sampler(&self, machine: u32) -> Result<(), RpcError> {
+        self.admit(
+            &self.sampler_outages,
+            &self.sampler_calls,
+            &self.sampler_failures,
+            machine,
+            "sampler",
+        )
+    }
+
+    /// Gate one transport message: returns `false` when the message
+    /// must be dropped, sleeping the injected per-message delay first.
+    pub fn admit_message(&self) -> bool {
+        let c = self.msg_calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.delay.is_zero() {
+            self.delayed_msgs.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.delay);
+        }
+        if self.drop_every > 0 && c % self.drop_every == 0 {
+            self.dropped_msgs.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn kv_failures(&self) -> u64 {
+        self.kv_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn sampler_failures(&self) -> u64 {
+        self.sampler_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped_msgs(&self) -> u64 {
+        self.dropped_msgs.load(Ordering::Relaxed)
+    }
+
+    pub fn delayed_msgs(&self) -> u64 {
+        self.delayed_msgs.load(Ordering::Relaxed)
+    }
+
+    /// Export the injection counters as `ft.*` metrics.
+    pub fn publish(&self, m: &Metrics) {
+        m.inc("ft.retries", self.retries());
+        m.inc(
+            "ft.injected_failures",
+            self.kv_failures() + self.sampler_failures(),
+        );
+        m.inc("ft.dropped_msgs", self.dropped_msgs());
+        m.inc("ft.delayed_msgs", self.delayed_msgs());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast(mut p: FaultPlan) -> FaultPlan {
+        p.backoff = Duration::ZERO;
+        p
+    }
+
+    #[test]
+    fn transient_window_heals_within_the_retry_budget() {
+        let mut p = fast(FaultPlan::new());
+        p.kv_outages = vec![FailWindow::transient(1, 0, 2)];
+        // calls 0 and 1 fail; retries advance the counter past the
+        // window, so the request ultimately succeeds
+        assert_eq!(p.admit_kv(1), Ok(()));
+        assert_eq!(p.retries(), 2);
+        assert_eq!(p.kv_failures(), 2);
+        // later calls are clean
+        assert_eq!(p.admit_kv(1), Ok(()));
+        assert_eq!(p.retries(), 2);
+    }
+
+    #[test]
+    fn permanent_outage_exhausts_retries_into_server_down() {
+        let mut p = fast(FaultPlan::new());
+        p.kv_outages = vec![FailWindow::permanent(0, 0)];
+        assert_eq!(
+            p.admit_kv(0),
+            Err(RpcError::ServerDown { machine: 0, role: "kv" })
+        );
+        assert_eq!(p.retries(), 3);
+        // other machines are unaffected
+        assert_eq!(p.admit_kv(1), Ok(()));
+    }
+
+    #[test]
+    fn sampler_and_kv_counters_are_independent() {
+        let mut p = fast(FaultPlan::new());
+        p.sampler_outages = vec![FailWindow::permanent(2, 0)];
+        assert_eq!(p.admit_kv(2), Ok(()));
+        assert_eq!(
+            p.admit_sampler(2),
+            Err(RpcError::ServerDown { machine: 2, role: "sampler" })
+        );
+    }
+
+    #[test]
+    fn drop_every_counts_and_drops() {
+        let mut p = fast(FaultPlan::new());
+        p.drop_every = 3;
+        let delivered =
+            (0..9).filter(|_| p.admit_message()).count();
+        assert_eq!(delivered, 6);
+        assert_eq!(p.dropped_msgs(), 3);
+    }
+
+    #[test]
+    fn publish_exports_ft_counters() {
+        let mut p = fast(FaultPlan::new());
+        p.kv_outages = vec![FailWindow::transient(0, 0, 1)];
+        p.admit_kv(0).unwrap();
+        let m = Metrics::new();
+        p.publish(&m);
+        assert_eq!(m.counter("ft.retries"), 1);
+        assert_eq!(m.counter("ft.injected_failures"), 1);
+    }
+}

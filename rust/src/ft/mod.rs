@@ -1,0 +1,25 @@
+//! Fault tolerance: checkpoint/exact-resume + failure injection
+//! (docs/DESIGN.md §8).
+//!
+//! Production trainers get preempted; without this layer any failure
+//! loses the run (the gap the distributed-GNN survey flags for the
+//! whole DistDGL generation). Two halves:
+//!
+//! - [`Checkpoint`] — snapshot `(seed, step)`, model params, and every
+//!   KVStore shard; because batch composition is a pure function of
+//!   `(seed, global_step)`, restoring the snapshot and restarting the
+//!   loaders at `step` (`DistNodeDataLoader::builder().start_at(step)`)
+//!   replays a byte-identical stream (test-enforced across modes,
+//!   worker counts, cache on/off, hetero + homogeneous).
+//! - [`FaultPlan`] — injected KV/sampler outages, transport message
+//!   drop/delay, and per-machine slowdown factors
+//!   ([`CostModel::set_slowdown`](crate::net::CostModel::set_slowdown)),
+//!   with bounded retry/backoff on the RPC paths surfacing
+//!   [`RpcError`](crate::net::RpcError) instead of panics so the
+//!   pipeline drains cleanly on unrecoverable failure.
+
+pub mod checkpoint;
+pub mod fault;
+
+pub use checkpoint::Checkpoint;
+pub use fault::{FailWindow, FaultPlan};

@@ -10,6 +10,7 @@
 use std::sync::Arc;
 
 use crate::graph::NodeId;
+use crate::net::RpcError;
 use crate::util::Rng;
 
 use super::policy::PartitionPolicy;
@@ -40,13 +41,15 @@ impl EmbeddingTable {
         Self { name: name.to_string(), dim, n_rows }
     }
 
-    /// Gather rows for a mini-batch.
+    /// Gather rows for a mini-batch. Returns the remote-row count, or
+    /// the RPC error of the underlying pull (injected outage, unknown
+    /// tensor on a mis-deployed cluster).
     pub fn gather(
         &self,
         client: &mut KvClient,
         ids: &[NodeId],
         out: &mut [f32],
-    ) -> usize {
+    ) -> Result<usize, RpcError> {
         client.pull(&self.name, ids, out)
     }
 
@@ -57,8 +60,8 @@ impl EmbeddingTable {
         ids: &[NodeId],
         grads: &[f32],
         lr: f32,
-    ) {
-        client.push_grad(&self.name, ids, grads, lr);
+    ) -> Result<(), RpcError> {
+        client.push_grad(&self.name, ids, grads, lr)
     }
 }
 
@@ -87,11 +90,11 @@ mod tests {
         let mut client = cluster.client(0, policy);
         let ids = vec![2 as NodeId, 12];
         let mut before = vec![0f32; 2 * 4];
-        emb.gather(&mut client, &ids, &mut before);
+        emb.gather(&mut client, &ids, &mut before).unwrap();
         let grads = vec![1.0f32; 2 * 4];
-        emb.update(&mut client, &ids, &grads, 0.25);
+        emb.update(&mut client, &ids, &grads, 0.25).unwrap();
         let mut after = vec![0f32; 2 * 4];
-        emb.gather(&mut client, &ids, &mut after);
+        emb.gather(&mut client, &ids, &mut after).unwrap();
         for (b, a) in before.iter().zip(&after) {
             assert!((b - 0.25 - a).abs() < 1e-6);
         }
@@ -111,8 +114,10 @@ mod tests {
         let ids: Vec<NodeId> = (0..16).collect();
         let mut a = vec![0f32; 16 * 3];
         let mut b = vec![0f32; 16 * 3];
-        e1.gather(&mut c1.client(0, policy.clone()), &ids, &mut a);
-        e2.gather(&mut c2.client(0, policy.clone()), &ids, &mut b);
+        e1.gather(&mut c1.client(0, policy.clone()), &ids, &mut a)
+            .unwrap();
+        e2.gather(&mut c2.client(0, policy.clone()), &ids, &mut b)
+            .unwrap();
         assert_eq!(a, b);
     }
 }

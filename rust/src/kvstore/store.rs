@@ -15,8 +15,9 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use rustc_hash::FxHashMap;
 
+use crate::ft::FaultPlan;
 use crate::graph::{GraphSchema, NodeId};
-use crate::net::CostModel;
+use crate::net::{CostModel, RpcError};
 
 use super::cache::{CacheStats, FeatureCache};
 use super::policy::PartitionPolicy;
@@ -120,24 +121,51 @@ impl KvServer {
         );
     }
 
-    fn shard(&self, name: &str) -> Arc<Shard> {
-        self.shards
-            .read()
-            .unwrap()
-            .get(name)
-            .unwrap_or_else(|| panic!("tensor {name:?} not registered"))
-            .clone()
+    /// The local shard of `name`, or the typed decode error a real
+    /// server would send back for a request naming an unknown tensor.
+    fn shard(&self, name: &str) -> Result<Arc<Shard>, RpcError> {
+        self.shards.read().unwrap().get(name).cloned().ok_or_else(|| {
+            RpcError::UnknownTensor {
+                name: name.to_string(),
+                machine: self.machine,
+            }
+        })
+    }
+
+    /// Snapshot every shard as `(name, dim, rows)`, name-sorted so the
+    /// encoding — and therefore a checkpoint file — is deterministic.
+    pub fn export_shards(&self) -> Vec<(String, usize, Vec<f32>)> {
+        let shards = self.shards.read().unwrap();
+        let mut out: Vec<(String, usize, Vec<f32>)> = shards
+            .iter()
+            .map(|(name, s)| {
+                (name.clone(), s.dim, s.data.read().unwrap().clone())
+            })
+            .collect();
+        out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Overwrite (or create) one shard from a checkpoint snapshot.
+    pub fn import_shard(&self, name: &str, dim: usize, data: Vec<f32>) {
+        self.register(name, data, dim);
     }
 
     /// Copy rows `locals` into `out` (len = locals.len() * dim).
-    pub fn read_rows(&self, name: &str, locals: &[u32], out: &mut [f32]) {
-        let shard = self.shard(name);
+    pub fn read_rows(
+        &self,
+        name: &str,
+        locals: &[u32],
+        out: &mut [f32],
+    ) -> Result<(), RpcError> {
+        let shard = self.shard(name)?;
         let dim = shard.dim;
         let data = shard.data.read().unwrap();
         for (i, &l) in locals.iter().enumerate() {
             let src = &data[l as usize * dim..(l as usize + 1) * dim];
             out[i * dim..(i + 1) * dim].copy_from_slice(src);
         }
+        Ok(())
     }
 
     /// Copy row `locals[i]` straight into
@@ -153,8 +181,8 @@ impl KvServer {
         slots: &[usize],
         out: &mut [f32],
         stride: usize,
-    ) {
-        let shard = self.shard(name);
+    ) -> Result<(), RpcError> {
+        let shard = self.shard(name)?;
         let dim = shard.dim;
         debug_assert!(stride >= dim);
         let data = shard.data.read().unwrap();
@@ -162,6 +190,7 @@ impl KvServer {
             let src = &data[l as usize * dim..(l as usize + 1) * dim];
             out[slot * stride..slot * stride + dim].copy_from_slice(src);
         }
+        Ok(())
     }
 
     /// Row-sparse SGD update: `row[l] -= lr * grad[i]` for each local row.
@@ -171,8 +200,8 @@ impl KvServer {
         locals: &[u32],
         grads: &[f32],
         lr: f32,
-    ) {
-        let shard = self.shard(name);
+    ) -> Result<(), RpcError> {
+        let shard = self.shard(name)?;
         let dim = shard.dim;
         assert_eq!(grads.len(), locals.len() * dim);
         let mut data = shard.data.write().unwrap();
@@ -182,10 +211,11 @@ impl KvServer {
                 *d -= lr * g;
             }
         }
+        Ok(())
     }
 
-    pub fn dim_of(&self, name: &str) -> usize {
-        self.shard(name).dim
+    pub fn dim_of(&self, name: &str) -> Result<usize, RpcError> {
+        Ok(self.shard(name)?.dim)
     }
 }
 
@@ -200,6 +230,10 @@ pub struct KvCluster {
     /// clock under emulation). `false` restores the serial owner loop;
     /// bytes and results are identical either way.
     pub concurrent_fanout: bool,
+    /// Injected-fault schedule shared by every client (including forks
+    /// created before the plan was installed — they read this slot per
+    /// request). `None` = fault-free.
+    fault: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl KvCluster {
@@ -228,7 +262,19 @@ impl KvCluster {
             cost,
             emulate_network_time,
             concurrent_fanout,
+            fault: Mutex::new(None),
         })
+    }
+
+    /// Install an injected-fault schedule: every subsequent request from
+    /// any client of this cluster is gated through `plan`.
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *self.fault.lock().unwrap() = Some(plan);
+    }
+
+    /// The installed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.fault.lock().unwrap().clone()
     }
 
     /// Meter (and, under emulation, sleep for) one remote owner's pull
@@ -242,7 +288,9 @@ impl KvCluster {
             let secs = (req_bytes + resp_bytes) as f64
                 / self.cost.net_bytes_per_sec
                 + 2.0 * self.cost.net_latency_s;
-            spin_sleep(secs);
+            // straggler emulation: a slow machine stretches every link
+            // it terminates (docs/DESIGN.md §8)
+            spin_sleep(secs * self.cost.pair_slowdown(src, owner));
         }
     }
 
@@ -417,16 +465,21 @@ impl KvClient {
     /// [`FeatureCache`] when possible, otherwise grouped per owner into
     /// one batched request each, with request+response bytes metered.
     /// Returns the number of rows actually *fetched* from remote machines
-    /// (locality observability — cache hits do not count).
+    /// (locality observability — cache hits do not count), or the typed
+    /// RPC error an unknown tensor / injected outage produces (§8:
+    /// errors propagate as values so the pipeline drains cleanly).
     pub fn pull(
         &mut self,
         name: &str,
         ids: &[NodeId],
         out: &mut [f32],
-    ) -> usize {
-        let dim = self.cluster.servers[self.machine as usize]
+    ) -> Result<usize, RpcError> {
+        let dim = match self.cluster.servers[self.machine as usize]
             .dim_of_or(name)
-            .unwrap_or_else(|| self.remote_dim(name));
+        {
+            Some(d) => d,
+            Option::None => self.remote_dim(name)?,
+        };
         assert!(out.len() >= ids.len() * dim);
         let use_cache = self.cache_gate(name, &[dim]);
         self.pull_strided(name, dim, dim, 0, ids, None, out, use_cache)
@@ -467,7 +520,7 @@ impl KvClient {
         ids: &[NodeId],
         out: &mut [f32],
         stride: usize,
-    ) -> usize {
+    ) -> Result<usize, RpcError> {
         if tf.is_single() {
             let dim = tf.dims[0];
             if stride == dim {
@@ -508,11 +561,12 @@ impl KvClient {
             tg[t].1.push(slot);
         }
         let mut remote_rows = 0usize;
+        let mut err: Option<RpcError> = None;
         for (t, (tids, tslots)) in tg.iter().enumerate() {
             if tids.is_empty() {
                 continue;
             }
-            remote_rows += self.pull_strided(
+            match self.pull_strided(
                 &tf.names[t],
                 tf.dims[t],
                 stride,
@@ -521,16 +575,27 @@ impl KvClient {
                 Some(tslots.as_slice()),
                 out,
                 use_cache,
-            );
+            ) {
+                Ok(r) => remote_rows += r,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
         }
         self.typed_groups = tg;
-        remote_rows
+        match err {
+            Some(e) => Err(e),
+            Option::None => Ok(remote_rows),
+        }
     }
 
     /// Shared pull core: rows of `name` (width `dim`) for `ids`, written
     /// at `slot * stride` where row `j`'s slot is `slots[j]` (`None` =
     /// `j`, the classic dense layout). Cache lookups/inserts are keyed
-    /// `(ntype, id)`.
+    /// `(ntype, id)`. On `Err` the output buffer contents are
+    /// unspecified, but the client's reused scratch survives — the next
+    /// call after a healed fault runs clean.
     #[allow(clippy::too_many_arguments)]
     fn pull_strided(
         &mut self,
@@ -542,7 +607,7 @@ impl KvClient {
         slots: Option<&[usize]>,
         out: &mut [f32],
         use_cache: bool,
-    ) -> usize {
+    ) -> Result<usize, RpcError> {
         // strided rows: zero each row's dims..stride tail up front (one
         // cheap pass; prefixes are fully overwritten below), so callers
         // never pay a full-buffer memset (§Perf). No-op when stride==dim.
@@ -594,7 +659,9 @@ impl KvClient {
             .enumerate()
             .filter(|(o, g)| *o as u32 != machine && !g.0.is_empty())
             .count();
+        let fault = self.cluster.fault_plan();
         let mut remote_rows = 0usize;
+        let mut err: Option<RpcError> = None;
         if self.cluster.concurrent_fanout && n_remote >= 2 {
             // concurrent fan-out: one thread per remote owner stages its
             // response rows into the client's reused per-owner buffers
@@ -607,6 +674,7 @@ impl KvClient {
                 stage.resize_with(nparts, Vec::new);
             }
             std::thread::scope(|sc| {
+                let fault_ref = &fault;
                 let mut handles = Vec::with_capacity(n_remote);
                 for (owner, (buf, (locals, _))) in
                     stage.iter_mut().zip(groups.iter()).enumerate()
@@ -614,53 +682,78 @@ impl KvClient {
                     if owner as u32 == machine || locals.is_empty() {
                         continue;
                     }
-                    handles.push(sc.spawn(move || {
-                        // rows are fully overwritten; stale contents of
-                        // a longer previous response are never read
-                        buf.resize(locals.len() * dim, 0.0);
-                        cluster.servers[owner].read_rows(name, locals, buf);
-                        cluster.meter_pull(
-                            machine,
-                            owner as u32,
-                            locals.len(),
-                            dim,
-                        );
-                    }));
+                    handles.push(sc.spawn(
+                        move || -> Result<(), RpcError> {
+                            if let Some(f) = fault_ref {
+                                f.admit_kv(owner as u32)?;
+                            }
+                            // rows are fully overwritten; stale contents
+                            // of a longer previous response are never read
+                            buf.resize(locals.len() * dim, 0.0);
+                            cluster.servers[owner]
+                                .read_rows(name, locals, buf)?;
+                            cluster.meter_pull(
+                                machine,
+                                owner as u32,
+                                locals.len(),
+                                dim,
+                            );
+                            Ok(())
+                        },
+                    ));
                 }
                 let (locals, idxs) = &groups[machine as usize];
                 if !locals.is_empty() {
                     let slot_buf =
                         resolve_slots(idxs, slots, &mut slot_scratch);
-                    cluster.servers[machine as usize].read_rows_scattered(
-                        name, locals, slot_buf, out, stride,
-                    );
+                    if let Err(e) = cluster.servers[machine as usize]
+                        .read_rows_scattered(
+                            name, locals, slot_buf, out, stride,
+                        )
+                    {
+                        err.get_or_insert(e);
+                    }
                 }
                 for h in handles {
-                    h.join().expect("kv fan-out thread panicked");
+                    match h.join() {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => {
+                            err.get_or_insert(e);
+                        }
+                        Err(_) => {
+                            err.get_or_insert(RpcError::WorkerLost(
+                                "kv fan-out",
+                            ));
+                        }
+                    }
                 }
             });
-            // scatter staged rows and offer them to the cache in owner
-            // order — the exact cache-state evolution of the serial loop
-            for (owner, (locals, idxs)) in groups.iter().enumerate() {
-                if owner as u32 == machine || locals.is_empty() {
-                    continue;
-                }
-                let buf = &stage[owner];
-                remote_rows += locals.len();
-                let slot_buf = resolve_slots(idxs, slots, &mut slot_scratch);
-                for (i, &slot) in slot_buf.iter().enumerate() {
-                    out[slot * stride..slot * stride + dim]
-                        .copy_from_slice(&buf[i * dim..(i + 1) * dim]);
-                }
-                if use_cache {
-                    let mut c =
-                        self.cache.as_ref().unwrap().lock().unwrap();
-                    for (&j, &slot) in idxs.iter().zip(slot_buf) {
-                        c.insert(
-                            ntype,
-                            ids[j],
-                            &out[slot * stride..slot * stride + dim],
-                        );
+            if err.is_none() {
+                // scatter staged rows and offer them to the cache in
+                // owner order — the exact cache-state evolution of the
+                // serial loop
+                for (owner, (locals, idxs)) in groups.iter().enumerate() {
+                    if owner as u32 == machine || locals.is_empty() {
+                        continue;
+                    }
+                    let buf = &stage[owner];
+                    remote_rows += locals.len();
+                    let slot_buf =
+                        resolve_slots(idxs, slots, &mut slot_scratch);
+                    for (i, &slot) in slot_buf.iter().enumerate() {
+                        out[slot * stride..slot * stride + dim]
+                            .copy_from_slice(&buf[i * dim..(i + 1) * dim]);
+                    }
+                    if use_cache {
+                        let mut c =
+                            self.cache.as_ref().unwrap().lock().unwrap();
+                        for (&j, &slot) in idxs.iter().zip(slot_buf) {
+                            c.insert(
+                                ntype,
+                                ids[j],
+                                &out[slot * stride..slot * stride + dim],
+                            );
+                        }
                     }
                 }
             }
@@ -672,6 +765,12 @@ impl KvClient {
                 }
                 let server = &self.cluster.servers[owner];
                 if owner as u32 != machine {
+                    if let Some(f) = &fault {
+                        if let Err(e) = f.admit_kv(owner as u32) {
+                            err = Some(e);
+                            break;
+                        }
+                    }
                     remote_rows += locals.len();
                     self.cluster.meter_pull(
                         machine,
@@ -683,9 +782,12 @@ impl KvClient {
                 // copy straight into the output slots (local and remote
                 // alike)
                 let slot_buf = resolve_slots(idxs, slots, &mut slot_scratch);
-                server.read_rows_scattered(
+                if let Err(e) = server.read_rows_scattered(
                     name, locals, slot_buf, out, stride,
-                );
+                ) {
+                    err = Some(e);
+                    break;
+                }
                 if use_cache && owner as u32 != machine {
                     let mut c =
                         self.cache.as_ref().unwrap().lock().unwrap();
@@ -701,18 +803,23 @@ impl KvClient {
         }
         self.pull_groups = groups;
         self.slot_scratch = slot_scratch;
-        remote_rows
+        match err {
+            Some(e) => Err(e),
+            Option::None => Ok(remote_rows),
+        }
     }
 
     /// Push row gradients (sparse embedding update, §3.1 "sparse
     /// parameters"): routed to owners, applied as SGD on the server.
+    /// On `Err` some owners may already have applied their rows — the
+    /// recovery story is checkpoint rollback, not partial-push undo.
     pub fn push_grad(
         &mut self,
         name: &str,
         ids: &[NodeId],
         grads: &[f32],
         lr: f32,
-    ) {
+    ) -> Result<(), RpcError> {
         // coherence: a sparse update through this client (or any fork
         // sharing its cache) must not leave stale cached copies behind —
         // covers() also matches the typed per-ntype tables (`base.<ntype>`)
@@ -739,11 +846,19 @@ impl KvClient {
                 .1
                 .extend_from_slice(&grads[i * dim..(i + 1) * dim]);
         }
+        let fault = self.cluster.fault_plan();
+        let mut err: Option<RpcError> = None;
         for (owner, (locals, g)) in groups.iter().enumerate() {
             if locals.is_empty() {
                 continue;
             }
             if owner as u32 != self.machine {
+                if let Some(f) = &fault {
+                    if let Err(e) = f.admit_kv(owner as u32) {
+                        err = Some(e);
+                        break;
+                    }
+                }
                 let bytes = 16 + (locals.len() * (1 + dim)) as u64 * 4;
                 self.cluster.cost.on_network(
                     self.machine,
@@ -751,18 +866,30 @@ impl KvClient {
                     bytes,
                 );
             }
-            self.cluster.servers[owner].apply_grads(name, locals, g, lr);
-        }
-        self.push_groups = groups;
-    }
-
-    fn remote_dim(&self, name: &str) -> usize {
-        for s in &self.cluster.servers {
-            if let Some(d) = s.dim_of_or(name) {
-                return d;
+            if let Err(e) = self.cluster.servers[owner]
+                .apply_grads(name, locals, g, lr)
+            {
+                err = Some(e);
+                break;
             }
         }
-        panic!("tensor {name:?} not registered anywhere");
+        self.push_groups = groups;
+        match err {
+            Some(e) => Err(e),
+            Option::None => Ok(()),
+        }
+    }
+
+    fn remote_dim(&self, name: &str) -> Result<usize, RpcError> {
+        for s in &self.cluster.servers {
+            if let Some(d) = s.dim_of_or(name) {
+                return Ok(d);
+            }
+        }
+        Err(RpcError::UnknownTensor {
+            name: name.to_string(),
+            machine: self.machine,
+        })
     }
 }
 
@@ -837,7 +964,7 @@ mod tests {
         let mut client = cluster.client(1, policy);
         let ids: Vec<NodeId> = vec![12, 0, 29, 14]; // local, remote, remote, local
         let mut out = vec![0f32; ids.len() * dim];
-        let remote = client.pull("feat", &ids, &mut out);
+        let remote = client.pull("feat", &ids, &mut out).unwrap();
         assert_eq!(remote, 2);
         for (i, &gid) in ids.iter().enumerate() {
             assert_eq!(
@@ -854,9 +981,9 @@ mod tests {
         let (cluster, policy, _) = range_cluster(dim);
         let mut client = cluster.client(0, policy);
         let mut out = vec![0f32; dim];
-        client.pull("feat", &[3], &mut out);
+        client.pull("feat", &[3], &mut out).unwrap();
         assert_eq!(cluster.cost.network_bytes(), 0);
-        client.pull("feat", &[27], &mut out);
+        client.pull("feat", &[27], &mut out).unwrap();
         assert!(cluster.cost.network_bytes() > 0);
     }
 
@@ -867,9 +994,9 @@ mod tests {
         let mut client = cluster.client(0, policy);
         let ids = vec![5 as NodeId, 20];
         let grads = vec![1.0f32, 1.0, 2.0, 2.0];
-        client.push_grad("feat", &ids, &grads, 0.5);
+        client.push_grad("feat", &ids, &grads, 0.5).unwrap();
         let mut out = vec![0f32; 2 * dim];
-        client.pull("feat", &ids, &mut out);
+        client.pull("feat", &ids, &mut out).unwrap();
         assert_eq!(out[0], data[10] - 0.5);
         assert_eq!(out[2], data[40] - 1.0);
     }
@@ -886,7 +1013,7 @@ mod tests {
         let mut client = cluster.client(0, policy);
         let ids: Vec<NodeId> = (0..11).collect();
         let mut out = vec![0f32; 11 * dim];
-        client.pull("x", &ids, &mut out);
+        client.pull("x", &ids, &mut out).unwrap();
         assert_eq!(out, data);
     }
 
@@ -907,7 +1034,7 @@ mod tests {
                 let (cluster, policy, data) = range_cluster(dim);
                 let mut client = cluster.client(2, policy);
                 let mut out = vec![0f32; ids.len() * dim];
-                client.pull("feat", ids, &mut out);
+                client.pull("feat", ids, &mut out).unwrap();
                 for (i, &gid) in ids.iter().enumerate() {
                     let expect =
                         &data[gid as usize * dim..(gid as usize + 1) * dim];
@@ -933,13 +1060,13 @@ mod tests {
         client.attach_cache(feat_cache(1 << 20));
         let ids: Vec<NodeId> = vec![12, 0, 29, 14, 0, 27];
         let mut cold = vec![0f32; ids.len() * dim];
-        let fetched_cold = client.pull("feat", &ids, &mut cold);
+        let fetched_cold = client.pull("feat", &ids, &mut cold).unwrap();
         let bytes_after_cold = cluster.cost.network_bytes();
         assert!(fetched_cold > 0 && bytes_after_cold > 0);
         // warm pull: every remote row is cached → no new network bytes,
         // and the result matches the source byte for byte
         let mut warm = vec![0f32; ids.len() * dim];
-        let fetched_warm = client.pull("feat", &ids, &mut warm);
+        let fetched_warm = client.pull("feat", &ids, &mut warm).unwrap();
         assert_eq!(fetched_warm, 0);
         assert_eq!(cluster.cost.network_bytes(), bytes_after_cold);
         assert_eq!(cold, warm);
@@ -967,8 +1094,8 @@ mod tests {
         let mut a = vec![0f32; ids.len() * dim];
         let mut b = vec![0f32; ids.len() * dim];
         for _ in 0..2 {
-            let ra = plain.pull("feat", &ids, &mut a);
-            let rb = zeroed.pull("feat", &ids, &mut b);
+            let ra = plain.pull("feat", &ids, &mut a).unwrap();
+            let rb = zeroed.pull("feat", &ids, &mut b).unwrap();
             assert_eq!(ra, rb);
             assert_eq!(a, b);
         }
@@ -985,10 +1112,10 @@ mod tests {
         client.attach_cache(feat_cache(1 << 20));
         let ids = vec![20 as NodeId]; // remote for machine 0
         let mut out = vec![0f32; dim];
-        client.pull("feat", &ids, &mut out); // populate cache
+        client.pull("feat", &ids, &mut out).unwrap(); // populate cache
         let grads = vec![2.0f32, 2.0];
-        client.push_grad("feat", &ids, &grads, 0.5);
-        client.pull("feat", &ids, &mut out);
+        client.push_grad("feat", &ids, &grads, 0.5).unwrap();
+        client.pull("feat", &ids, &mut out).unwrap();
         assert_eq!(out[0], data[40] - 1.0, "stale cached row served");
     }
 
@@ -1004,7 +1131,7 @@ mod tests {
             let k = 5 + round * 5;
             let ids: Vec<NodeId> =
                 (0..k).map(|i| ((i * 7 + round) % 30) as NodeId).collect();
-            client.pull("feat", &ids, &mut out[..k * dim]);
+            client.pull("feat", &ids, &mut out[..k * dim]).unwrap();
             for (i, &gid) in ids.iter().enumerate() {
                 assert_eq!(
                     &out[i * dim..(i + 1) * dim],
@@ -1038,8 +1165,8 @@ mod tests {
         let mut a = vec![0f32; ids.len() * dim];
         let mut b = vec![0f32; ids.len() * dim];
         for round in 0..3 {
-            let ra = c1.pull("feat", &ids, &mut a);
-            let rb = c2.pull("feat", &ids, &mut b);
+            let ra = c1.pull("feat", &ids, &mut a).unwrap();
+            let rb = c2.pull("feat", &ids, &mut b).unwrap();
             assert_eq!(ra, rb, "round {round}");
             assert_eq!(a, b, "round {round}");
         }
@@ -1077,7 +1204,7 @@ mod tests {
                     let mut out = vec![0f32; ids.len() * dim];
                     let mut fetched = 0usize;
                     for _ in 0..4 {
-                        fetched += c.pull("feat", &ids, &mut out);
+                        fetched += c.pull("feat", &ids, &mut out).unwrap();
                     }
                     for (i, &gid) in ids.iter().enumerate() {
                         assert_eq!(
@@ -1138,7 +1265,8 @@ mod tests {
         let ids: Vec<NodeId> = vec![12, 1, 29, 14, 0, 27];
         let stride = 4;
         let mut out = vec![f32::NAN; ids.len() * stride];
-        let remote = client.pull_typed(&tf, &ids, &mut out, stride);
+        let remote =
+            client.pull_typed(&tf, &ids, &mut out, stride).unwrap();
         assert!(remote > 0);
         for (i, &gid) in ids.iter().enumerate() {
             let dim = tf.dims[tf.ntype_of(gid) as usize];
@@ -1162,11 +1290,13 @@ mod tests {
         let ids: Vec<NodeId> = vec![0, 1, 26, 29, 0, 27];
         let stride = 4;
         let mut cold = vec![0f32; ids.len() * stride];
-        let fetched_cold = client.pull_typed(&tf, &ids, &mut cold, stride);
+        let fetched_cold =
+            client.pull_typed(&tf, &ids, &mut cold, stride).unwrap();
         let bytes_cold = cluster.cost.network_bytes();
         assert!(fetched_cold > 0 && bytes_cold > 0);
         let mut warm = vec![0f32; ids.len() * stride];
-        let fetched_warm = client.pull_typed(&tf, &ids, &mut warm, stride);
+        let fetched_warm =
+            client.pull_typed(&tf, &ids, &mut warm, stride).unwrap();
         assert_eq!(fetched_warm, 0, "warm typed pull hit the wire");
         assert_eq!(cluster.cost.network_bytes(), bytes_cold);
         assert_eq!(cold, warm);
@@ -1184,11 +1314,13 @@ mod tests {
         let ids: Vec<NodeId> = vec![27]; // odd -> ntype 1, remote for m1
         let stride = 4;
         let mut out = vec![0f32; stride];
-        client.pull_typed(&tf, &ids, &mut out, stride); // warm the cache
+        client
+            .pull_typed(&tf, &ids, &mut out, stride)
+            .unwrap(); // warm the cache
         let before = out[..2].to_vec();
         let grads = vec![3.0f32, 3.0];
-        client.push_grad("feat.odd", &ids, &grads, 0.5);
-        client.pull_typed(&tf, &ids, &mut out, stride);
+        client.push_grad("feat.odd", &ids, &grads, 0.5).unwrap();
+        client.pull_typed(&tf, &ids, &mut out, stride).unwrap();
         assert_eq!(out[0], before[0] - 1.5, "stale typed cached row served");
         assert_eq!(out[1], before[1] - 1.5);
     }
@@ -1206,8 +1338,8 @@ mod tests {
         let ids: Vec<NodeId> = vec![12, 0, 29, 14, 0];
         let mut a = vec![0f32; ids.len() * dim];
         let mut b = vec![0f32; ids.len() * dim];
-        let ra = plain.pull("feat", &ids, &mut a);
-        let rb = typed.pull_typed(&tf, &ids, &mut b, dim);
+        let ra = plain.pull("feat", &ids, &mut a).unwrap();
+        let rb = typed.pull_typed(&tf, &ids, &mut b, dim).unwrap();
         assert_eq!(ra, rb);
         assert_eq!(a, b);
         for (i, &gid) in ids.iter().enumerate() {
@@ -1217,6 +1349,89 @@ mod tests {
             );
         }
         assert_eq!(c1.cost.network_bytes(), c2.cost.network_bytes());
+    }
+
+    #[test]
+    fn unknown_tensor_is_a_typed_error_not_a_panic() {
+        let dim = 4;
+        let (cluster, policy, _) = range_cluster(dim);
+        let mut client = cluster.client(1, policy);
+        let mut out = vec![0f32; dim];
+        let err = client.pull("nope", &[0], &mut out).unwrap_err();
+        assert_eq!(
+            err,
+            RpcError::UnknownTensor { name: "nope".into(), machine: 1 }
+        );
+        // pushes surface the same decode error
+        let err =
+            client.push_grad("nope", &[0], &[0.0; 4], 0.1).unwrap_err();
+        assert!(matches!(err, RpcError::UnknownTensor { .. }));
+        // the client survives: a valid pull still works afterwards
+        client.pull("feat", &[12], &mut out).unwrap();
+    }
+
+    #[test]
+    fn transient_kv_outage_heals_through_retries() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut plan = FaultPlan::new();
+        plan.kv_outages = vec![FailWindow::transient(0, 0, 2)];
+        plan.backoff = std::time::Duration::ZERO;
+        let plan = Arc::new(plan);
+        cluster.set_fault_plan(plan.clone());
+        let mut client = cluster.client(1, policy);
+        let ids: Vec<NodeId> = vec![0, 3]; // owner 0, remote for m1
+        let mut out = vec![0f32; ids.len() * dim];
+        let remote = client.pull("feat", &ids, &mut out).unwrap();
+        assert_eq!(remote, 2);
+        assert!(plan.retries() >= 2, "outage must have cost retries");
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &out[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim]
+            );
+        }
+    }
+
+    #[test]
+    fn permanent_kv_outage_is_server_down_serial_and_concurrent() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let dim = 4;
+        for concurrent in [false, true] {
+            let nm = NodeMap { part_starts: vec![0, 10, 25, 30] };
+            let policy: Arc<dyn PartitionPolicy> =
+                Arc::new(RangePolicy::new(nm));
+            let cluster = KvCluster::with_options(
+                3,
+                Arc::new(CostModel::default()),
+                false,
+                concurrent,
+            );
+            cluster.register_partitioned(
+                "feat",
+                &rows(30, dim),
+                dim,
+                policy.as_ref(),
+            );
+            let mut plan = FaultPlan::new();
+            plan.kv_outages = vec![FailWindow::permanent(0, 0)];
+            plan.backoff = std::time::Duration::ZERO;
+            cluster.set_fault_plan(Arc::new(plan));
+            let mut client = cluster.client(1, policy);
+            // both remote owners engaged so the concurrent path fans out
+            let ids: Vec<NodeId> = vec![0, 27];
+            let mut out = vec![0f32; ids.len() * dim];
+            let err = client.pull("feat", &ids, &mut out).unwrap_err();
+            assert_eq!(
+                err,
+                RpcError::ServerDown { machine: 0, role: "kv" },
+                "concurrent={concurrent}"
+            );
+            // owner 2 is healthy: pulls avoiding machine 0 still succeed
+            let n = client.pull("feat", &[27, 14], &mut out).unwrap();
+            assert_eq!(n, 1, "concurrent={concurrent}");
+        }
     }
 
     #[test]
@@ -1230,7 +1445,7 @@ mod tests {
                 std::thread::spawn(move || {
                     let mut out = vec![0f32; dim];
                     for gid in 0..30u32 {
-                        c.pull("feat", &[gid], &mut out);
+                        c.pull("feat", &[gid], &mut out).unwrap();
                         assert_eq!(
                             &out[..],
                             &data[gid as usize * dim..(gid as usize + 1) * dim]

@@ -12,3 +12,40 @@ pub mod transport;
 
 pub use model::CostModel;
 pub use transport::{Endpoint, Message, Transport};
+
+/// Typed error for every RPC boundary in the system (KVStore pulls,
+/// sampler requests, pipeline fan-out). Injected faults
+/// ([`crate::ft::FaultPlan`]) and lost worker threads surface as values
+/// of this type through `Result` instead of poisoning threads with
+/// panics, so the pipeline can drain cleanly and the trainer can decide
+/// to resume from a checkpoint (docs/DESIGN.md §8).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RpcError {
+    /// A request named a tensor the addressed server never registered.
+    UnknownTensor { name: String, machine: u32 },
+    /// A server stayed unreachable through the bounded retry loop.
+    ServerDown { machine: u32, role: &'static str },
+    /// A fan-out / pipeline worker thread died before replying.
+    WorkerLost(&'static str),
+}
+
+impl std::fmt::Display for RpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RpcError::UnknownTensor { name, machine } => write!(
+                f,
+                "tensor {name:?} not registered on machine {machine}"
+            ),
+            RpcError::ServerDown { machine, role } => write!(
+                f,
+                "{role} server on machine {machine} unreachable \
+                 (retries exhausted)"
+            ),
+            RpcError::WorkerLost(what) => {
+                write!(f, "{what} worker thread lost")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RpcError {}

@@ -6,6 +6,7 @@
 //! (DESIGN.md §2).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Thread-safe byte/time accounting for the whole cluster.
 #[derive(Debug)]
@@ -21,6 +22,9 @@ pub struct CostModel {
     net_msgs: AtomicU64,
     pcie_bytes: AtomicU64,
     pcie_xfers: AtomicU64,
+    /// Per-machine straggler factors (≥ 1.0 slows every link touching
+    /// that machine); indexed by machine, missing entries mean 1.0.
+    slowdown: Mutex<Vec<f64>>,
 }
 
 impl Default for CostModel {
@@ -44,7 +48,27 @@ impl CostModel {
             net_msgs: AtomicU64::new(0),
             pcie_bytes: AtomicU64::new(0),
             pcie_xfers: AtomicU64::new(0),
+            slowdown: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Mark `machine` as a straggler: every emulated transfer touching
+    /// it is stretched by `factor` (clamped to ≥ 1.0). Modeled bytes
+    /// are unaffected — a slow machine moves the same data, later
+    /// (docs/DESIGN.md §8).
+    pub fn set_slowdown(&self, machine: u32, factor: f64) {
+        let mut s = self.slowdown.lock().unwrap();
+        if s.len() <= machine as usize {
+            s.resize(machine as usize + 1, 1.0);
+        }
+        s[machine as usize] = factor.max(1.0);
+    }
+
+    /// The straggler factor of a link: the slower endpoint dominates.
+    pub fn pair_slowdown(&self, src: u32, dst: u32) -> f64 {
+        let s = self.slowdown.lock().unwrap();
+        let of = |m: u32| s.get(m as usize).copied().unwrap_or(1.0);
+        of(src).max(of(dst))
     }
 
     pub fn on_network(&self, _src: u32, _dst: u32, bytes: u64) {
@@ -135,6 +159,19 @@ mod tests {
         c.on_network(0, 1, 1_000_000_000);
         let t = c.modeled_network_secs();
         assert!((t - (1.0 + 1e-5)).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn slowdown_defaults_to_unity_and_takes_the_link_max() {
+        let c = CostModel::default();
+        assert_eq!(c.pair_slowdown(0, 1), 1.0);
+        c.set_slowdown(2, 3.5);
+        assert_eq!(c.pair_slowdown(0, 2), 3.5);
+        assert_eq!(c.pair_slowdown(2, 0), 3.5);
+        assert_eq!(c.pair_slowdown(0, 1), 1.0);
+        // factors below 1.0 are clamped (no speedups by accident)
+        c.set_slowdown(2, 0.1);
+        assert_eq!(c.pair_slowdown(0, 2), 1.0);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use super::model::CostModel;
+use crate::ft::FaultPlan;
 
 /// Machine-level service ports (which server on the machine gets the
 /// message).
@@ -49,6 +50,8 @@ pub struct Transport {
     receivers: Mutex<Vec<Option<Receiver<Message>>>>,
     machine_of: Vec<u32>,
     pub cost: Arc<CostModel>,
+    /// Injected message drop/delay schedule (docs/DESIGN.md §8).
+    fault: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl Transport {
@@ -77,7 +80,15 @@ impl Transport {
             receivers: Mutex::new(receivers),
             machine_of,
             cost,
+            fault: Mutex::new(None),
         })
+    }
+
+    /// Gate every subsequent cross-machine send through `plan`'s
+    /// drop/delay schedule (local sends stay untouched — shared memory
+    /// does not lose messages).
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *self.fault.lock().unwrap() = Some(plan);
     }
 
     pub fn n_machines(&self) -> usize {
@@ -94,11 +105,19 @@ impl Transport {
     }
 
     /// Send `msg` to `dst`'s mailbox, charging the cost model when the
-    /// message crosses a machine boundary.
+    /// message crosses a machine boundary. A cross-machine message may
+    /// be delayed or silently dropped by an installed [`FaultPlan`] —
+    /// exactly the loss model protocols above must tolerate.
     pub fn send(&self, src: u32, dst: u32, msg: Message) {
         let (sm, dm) =
             (self.machine_of[src as usize], self.machine_of[dst as usize]);
         if sm != dm {
+            let plan = self.fault.lock().unwrap().clone();
+            if let Some(f) = plan {
+                if !f.admit_message() {
+                    return; // lost on the wire: never metered, never seen
+                }
+            }
             self.cost.on_network(sm, dm, msg.wire_bytes());
         }
         // local sends are free (shared memory path, §5.4)
@@ -170,6 +189,31 @@ mod tests {
         let t = Transport::new(1, CostModel::default());
         let _a = t.endpoint(0);
         let _b = t.endpoint(0);
+    }
+
+    #[test]
+    fn fault_plan_drops_and_delays_cross_machine_messages() {
+        use crate::ft::FaultPlan;
+        let t = Transport::new(2, CostModel::default());
+        let e0 = t.endpoint(0);
+        let e1 = t.endpoint(1);
+        let mut plan = FaultPlan::new();
+        plan.drop_every = 2; // every 2nd cross-machine message vanishes
+        plan.delay = std::time::Duration::from_micros(50);
+        let plan = Arc::new(plan);
+        t.set_fault_plan(plan.clone());
+        for i in 0..6u64 {
+            e0.send(1, Port::KvStore, i, vec![]);
+        }
+        let got: Vec<u64> =
+            std::iter::from_fn(|| e1.try_recv().map(|m| m.tag)).collect();
+        assert_eq!(got, vec![0, 2, 4], "odd-indexed sends dropped");
+        assert_eq!(plan.dropped_msgs(), 3);
+        assert_eq!(plan.delayed_msgs(), 6);
+        // local sends bypass the wire and its faults entirely
+        e1.send(1, Port::Control, 9, vec![]);
+        assert_eq!(e1.try_recv().unwrap().tag, 9);
+        assert_eq!(plan.dropped_msgs(), 3);
     }
 
     #[test]

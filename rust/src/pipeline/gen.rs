@@ -26,6 +26,7 @@ use std::time::Instant;
 use crate::graph::{FanoutPlan, NodeId};
 use crate::kvstore::{KvClient, TypedFeatures};
 use crate::metrics::Metrics;
+use crate::net::RpcError;
 use crate::runtime::executable::HostBatch;
 use crate::sampler::compact::{to_block, ShapeSpec, TaskKind};
 use crate::sampler::{BatchScheduler, DistNeighborSampler, Target};
@@ -177,18 +178,33 @@ impl BatchGen {
     }
 
     /// Produce one fully materialized mini-batch (stages 1–4) of the
-    /// sequential stream.
+    /// sequential stream. Panics on RPC failure — fault-tolerant
+    /// drivers use [`Self::try_next`].
     pub fn next(&mut self) -> HostBatch {
+        self.try_next().expect("mini-batch generation failed")
+    }
+
+    /// Fallible [`Self::next`]: injected outages / decode errors on the
+    /// sampler or KVStore path surface as [`RpcError`] values.
+    pub fn try_next(&mut self) -> Result<HostBatch, RpcError> {
         let g = self.pos;
         self.pos += 1;
-        self.batch_at(g)
+        self.try_batch_at(g)
     }
 
     /// Produce global batch `g` (epoch `g / batches_per_epoch`, index
     /// `g % batches_per_epoch`). Pure in `(seed, g)` for a fixed
     /// deployment: workers claim disjoint `g`s and the reassembled
-    /// stream is identical for any worker count.
+    /// stream is identical for any worker count. Panics on RPC failure
+    /// — fault-tolerant drivers use [`Self::try_batch_at`].
     pub fn batch_at(&mut self, g: u64) -> HostBatch {
+        self.try_batch_at(g).expect("mini-batch generation failed")
+    }
+
+    /// Fallible [`Self::batch_at`]. Purity in `(seed, g)` holds across
+    /// failures: a batch retried after a healed fault is byte-identical
+    /// to the one an undisturbed run produces.
+    pub fn try_batch_at(&mut self, g: u64) -> Result<HostBatch, RpcError> {
         let bpe = self.batches_per_epoch().max(1) as u64;
         let (epoch, idx) = (g / bpe, (g % bpe) as usize);
         // stage 1: schedule
@@ -205,12 +221,14 @@ impl BatchGen {
     }
 
     /// Stages 2–4 for an explicit target set and sampler stream (shared
-    /// by the train path, the eval path, and tests).
+    /// by the train path, the eval path, and tests). On `Err` a pooled
+    /// buffer may be dropped instead of recycled — pooling is an
+    /// optimization, so this only costs a later `pool.miss`.
     pub fn materialize_with(
         &mut self,
         rng: &mut Rng,
         target: &Target,
-    ) -> HostBatch {
+    ) -> Result<HostBatch, RpcError> {
         let spec = &self.spec;
         // a plan whose layer totals exceed the spec's K would make
         // to_block truncate per-seed samples, silently dropping the
@@ -228,7 +246,7 @@ impl BatchGen {
             &self.plan,
             &spec.layer_nodes,
             rng,
-        );
+        )?;
         self.metrics.add_time("pipeline.sample", t.elapsed());
         // stage 4 (compaction; paper runs this on GPU, order is the same)
         let t = Instant::now();
@@ -262,7 +280,7 @@ impl BatchGen {
             &block.input_nodes[..real],
             &mut feats[..real * f],
             f,
-        );
+        )?;
 
         // labels / masks for the targets
         let n_l = *spec.layer_nodes.last().unwrap();
@@ -275,7 +293,7 @@ impl BatchGen {
                     &self.label_name,
                     &block.targets,
                     &mut self.label_scratch,
-                );
+                )?;
                 labels.clear();
                 labels.resize(n_l, 0);
                 label_mask.clear();
@@ -328,7 +346,7 @@ impl BatchGen {
                 .inc("cache.remote_bytes_saved", d.remote_bytes_saved);
         }
 
-        HostBatch {
+        Ok(HostBatch {
             feats,
             layers: block.layers,
             labels,
@@ -338,7 +356,7 @@ impl BatchGen {
             input_nodes: block.input_nodes,
             remote_rows,
             dropped_neighbors: block.dropped_neighbors,
-        }
+        })
     }
 
     /// Eval-batch generator over a fixed node list (validation/test).
@@ -349,6 +367,7 @@ impl BatchGen {
             Rng::for_path(self.seed, &[self.eval_pos, LANE_EVAL]);
         self.eval_pos += 1;
         self.materialize_with(&mut rng, &Target::Nodes(nodes.to_vec()))
+            .expect("eval batch generation failed")
     }
 
     /// An independent sampling worker over the same batch stream: shares
@@ -573,12 +592,9 @@ pub mod tests_support {
         let targets: Vec<NodeId> =
             (0..shape.batch.min(n) as NodeId).collect();
         let plan = FanoutPlan::from_schema(&d2.schema, &shape.fanouts);
-        let samples = sampler.sample_blocks(
-            &targets,
-            &plan,
-            &shape.layer_nodes,
-            &mut rng,
-        );
+        let samples = sampler
+            .sample_blocks(&targets, &plan, &shape.layer_nodes, &mut rng)
+            .expect("single-machine sampling cannot fail");
         let block = to_block(shape, &samples);
         let n0 = shape.layer_nodes[0];
         let f = shape.feat_dim;
@@ -716,12 +732,15 @@ mod tests {
         let target = gen.scheduler.batch_at(0, 0);
         let flat = target.flat_nodes();
         let mut probe_rng = BatchGen::batch_rng(gen.seed, 0, 0);
-        let samples = gen.sampler.sample_blocks(
-            &flat,
-            &gen.plan,
-            &gen.spec.layer_nodes,
-            &mut probe_rng,
-        );
+        let samples = gen
+            .sampler
+            .sample_blocks(
+                &flat,
+                &gen.plan,
+                &gen.spec.layer_nodes,
+                &mut probe_rng,
+            )
+            .unwrap();
         let batch = gen.next();
         let l_total = gen.spec.fanouts.len();
         let mut real_edges = 0usize;

@@ -28,6 +28,15 @@
 //! [`Pipeline`] raises a stop flag (waking any worker parked on the
 //! grant condvar), closes the hand-off queue (waking any worker parked
 //! on a full queue), and joins every thread.
+//!
+//! Fault tolerance (docs/DESIGN.md §8): the hand-off queues carry
+//! `Result<HostBatch, RpcError>`. A worker that hits an unrecoverable
+//! RPC failure forwards the typed error in stream order, raises stop,
+//! and exits; the trainer sees `Err` from [`Pipeline::next`] and the
+//! whole pool drains cleanly instead of panicking. [`Pipeline::start_at`]
+//! resumes the stream at an arbitrary global batch index — because
+//! batch `g` is a pure function of `(seed, g)`, a resumed pipeline is
+//! byte-identical to an undisturbed one (test-enforced).
 
 pub mod gen;
 
@@ -38,6 +47,7 @@ use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::metrics::Metrics;
+use crate::net::RpcError;
 use crate::runtime::executable::HostBatch;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,12 +107,12 @@ struct CtlState {
 }
 
 impl WorkerCtl {
-    fn new(granted: u64, max_ahead: u64) -> Arc<Self> {
+    fn new(start: u64, granted: u64, max_ahead: u64) -> Arc<Self> {
         Arc::new(Self {
             state: Mutex::new(CtlState {
-                next: 0,
+                next: start,
                 granted,
-                emitted: 0,
+                emitted: start,
                 stop: false,
             }),
             cv: Condvar::new(),
@@ -155,9 +165,13 @@ impl WorkerCtl {
 pub struct Pipeline {
     mode: PipelineMode,
     // async modes
-    rx: Option<Receiver<HostBatch>>,
+    rx: Option<Receiver<Result<HostBatch, RpcError>>>,
     ctl: Option<Arc<WorkerCtl>>,
     pending: usize,
+    /// Size of the next Async grant: a partial epoch right after
+    /// `start_at` (so grants realign with epoch boundaries), a full
+    /// epoch from then on.
+    next_grant: usize,
     epoch_len: usize,
     // sync mode
     gen: Option<BatchGen>,
@@ -168,9 +182,22 @@ pub struct Pipeline {
 impl Pipeline {
     /// Launch (or inline) the pipeline for one trainer.
     pub fn start(
+        gen: BatchGen,
+        cfg: &PipelineConfig,
+        metrics: Arc<Metrics>,
+    ) -> Pipeline {
+        Self::start_at(gen, cfg, metrics, 0)
+    }
+
+    /// Launch the pipeline with the stream cursor at global batch
+    /// `start` — the exact-resume entry point (docs/DESIGN.md §8).
+    /// `start_at(k)` then `next()` yields precisely the batches a fresh
+    /// pipeline yields after `k` `next()` calls.
+    pub fn start_at(
         mut gen: BatchGen,
         cfg: &PipelineConfig,
         metrics: Arc<Metrics>,
+        start: u64,
     ) -> Pipeline {
         // per-batch locality/cache/pool counters land in the shared
         // instance; the recycling pool must hold one spare per producer
@@ -180,12 +207,18 @@ impl Pipeline {
         let n_workers = cfg.num_workers.max(1);
         gen.pool.ensure_cap(n_workers + cfg.cpu_prefetch_depth);
         let epoch_len = gen.batches_per_epoch();
+        gen.pos = start;
+        // Async grants realign with epoch boundaries: finish the
+        // partial epoch `start` lands in, then grant whole epochs
+        let first_grant =
+            epoch_len - (start as usize) % epoch_len.max(1);
         match cfg.mode {
             PipelineMode::Sync => Pipeline {
                 mode: cfg.mode,
                 rx: None,
                 ctl: None,
                 pending: 0,
+                next_grant: epoch_len,
                 epoch_len,
                 gen: Some(gen),
                 metrics,
@@ -194,17 +227,20 @@ impl Pipeline {
             PipelineMode::Async | PipelineMode::AsyncNonstop => {
                 let nonstop = cfg.mode == PipelineMode::AsyncNonstop;
                 let ctl = WorkerCtl::new(
-                    if nonstop { u64::MAX } else { 0 },
+                    start,
+                    if nonstop { u64::MAX } else { start },
                     (cfg.cpu_prefetch_depth + n_workers) as u64,
                 );
                 let mut handles = Vec::with_capacity(n_workers + 1);
                 let rx = if n_workers == 1 {
                     // single worker: claims come out in order, no
                     // reassembly needed — one queue of the full depth
-                    let (tx, rx) = sync_channel::<HostBatch>(
-                        (cfg.cpu_prefetch_depth + cfg.gpu_prefetch_depth)
-                            .max(1),
-                    );
+                    let (tx, rx) =
+                        sync_channel::<Result<HostBatch, RpcError>>(
+                            (cfg.cpu_prefetch_depth
+                                + cfg.gpu_prefetch_depth)
+                                .max(1),
+                        );
                     let ctl = ctl.clone();
                     let metrics = metrics.clone();
                     handles.push(
@@ -212,12 +248,25 @@ impl Pipeline {
                             .name("sampling".into())
                             .spawn(move || {
                                 while let Some(g) = ctl.claim() {
-                                    let b = gen.batch_at(g);
-                                    metrics.inc("pipeline.batches", 1);
-                                    if tx.send(b).is_err() {
-                                        return;
+                                    match gen.try_batch_at(g) {
+                                        Ok(b) => {
+                                            metrics.inc(
+                                                "pipeline.batches",
+                                                1,
+                                            );
+                                            if tx.send(Ok(b)).is_err() {
+                                                return;
+                                            }
+                                            ctl.on_emitted();
+                                        }
+                                        Err(e) => {
+                                            // unrecoverable: forward the
+                                            // typed error, stop the pool
+                                            let _ = tx.send(Err(e));
+                                            ctl.stop();
+                                            return;
+                                        }
                                     }
-                                    ctl.on_emitted();
                                 }
                             })
                             .expect("spawn sampling worker"),
@@ -227,12 +276,16 @@ impl Pipeline {
                     // worker pool: (index, batch) pairs flow to a
                     // reassembly thread that restores stream order ahead
                     // of the bounded stage-5 queue
-                    let (wtx, wrx) = sync_channel::<(u64, HostBatch)>(
-                        cfg.cpu_prefetch_depth.max(1),
+                    let (wtx, wrx) = sync_channel::<(
+                        u64,
+                        Result<HostBatch, RpcError>,
+                    )>(
+                        cfg.cpu_prefetch_depth.max(1)
                     );
-                    let (tx, rx) = sync_channel::<HostBatch>(
-                        cfg.gpu_prefetch_depth.max(1),
-                    );
+                    let (tx, rx) =
+                        sync_channel::<Result<HostBatch, RpcError>>(
+                            cfg.gpu_prefetch_depth.max(1),
+                        );
                     let mut gens = Vec::with_capacity(n_workers);
                     for _ in 1..n_workers {
                         gens.push(gen.fork_worker());
@@ -247,10 +300,25 @@ impl Pipeline {
                                 .name(format!("sampling-{w}"))
                                 .spawn(move || {
                                     while let Some(idx) = ctl.claim() {
-                                        let b = g.batch_at(idx);
-                                        metrics.inc("pipeline.batches", 1);
-                                        if wtx.send((idx, b)).is_err() {
-                                            return;
+                                        match g.try_batch_at(idx) {
+                                            Ok(b) => {
+                                                metrics.inc(
+                                                    "pipeline.batches",
+                                                    1,
+                                                );
+                                                if wtx
+                                                    .send((idx, Ok(b)))
+                                                    .is_err()
+                                                {
+                                                    return;
+                                                }
+                                            }
+                                            Err(e) => {
+                                                let _ = wtx
+                                                    .send((idx, Err(e)));
+                                                ctl.stop();
+                                                return;
+                                            }
                                         }
                                     }
                                 })
@@ -267,9 +335,11 @@ impl Pipeline {
                                 // the stash never exceeds the ctl's
                                 // run-ahead window: claims stall until
                                 // `emitted` catches up
-                                let mut expected = 0u64;
-                                let mut stash: BTreeMap<u64, HostBatch> =
-                                    BTreeMap::new();
+                                let mut expected = start;
+                                let mut stash: BTreeMap<
+                                    u64,
+                                    Result<HostBatch, RpcError>,
+                                > = BTreeMap::new();
                                 while let Ok((idx, b)) = wrx.recv() {
                                     stash.insert(idx, b);
                                     while let Some(b) =
@@ -301,6 +371,7 @@ impl Pipeline {
                     rx: Some(rx),
                     ctl: Some(ctl),
                     pending: 0,
+                    next_grant: first_grant,
                     epoch_len,
                     gen: None,
                     metrics,
@@ -314,34 +385,36 @@ impl Pipeline {
         self.epoch_len
     }
 
-    /// Fetch the next mini-batch (blocking).
-    pub fn next(&mut self) -> HostBatch {
+    /// Fetch the next mini-batch (blocking). `Err` means an
+    /// unrecoverable RPC failure (retries exhausted); the worker pool
+    /// has already stopped and [`Drop`] will join it cleanly.
+    pub fn next(&mut self) -> Result<HostBatch, RpcError> {
         match self.mode {
             PipelineMode::Sync => {
                 let gen = self.gen.as_mut().unwrap();
+                let b = gen.try_next()?;
                 self.metrics.inc("pipeline.batches", 1);
-                gen.next()
+                Ok(b)
             }
-            PipelineMode::AsyncNonstop => self
-                .rx
-                .as_ref()
-                .unwrap()
-                .recv()
-                .expect("sampling workers died"),
+            PipelineMode::AsyncNonstop => {
+                self.rx.as_ref().unwrap().recv().unwrap_or(Err(
+                    RpcError::WorkerLost("sampling pipeline"),
+                ))
+            }
             PipelineMode::Async => {
                 if self.pending == 0 {
                     // epoch boundary: grant the next epoch (pipeline must
                     // refill from empty — the startup overhead the
                     // non-stop mode removes)
-                    self.ctl.as_ref().unwrap().grant(self.epoch_len);
-                    self.pending = self.epoch_len;
+                    let n = self.next_grant;
+                    self.ctl.as_ref().unwrap().grant(n);
+                    self.pending = n;
+                    self.next_grant = self.epoch_len;
                 }
                 self.pending -= 1;
-                self.rx
-                    .as_ref()
-                    .unwrap()
-                    .recv()
-                    .expect("sampling workers died")
+                self.rx.as_ref().unwrap().recv().unwrap_or(Err(
+                    RpcError::WorkerLost("sampling pipeline"),
+                ))
             }
         }
     }
@@ -375,7 +448,9 @@ mod tests {
         let mut p = Pipeline::start(gen, &cfg, metrics);
         let epoch = p.batches_per_epoch();
         assert_eq!(epoch, 4);
-        (0..2 * epoch).map(|_| p.next().targets.len()).collect()
+        (0..2 * epoch)
+            .map(|_| p.next().unwrap().targets.len())
+            .collect()
     }
 
     #[test]
@@ -414,8 +489,8 @@ mod tests {
             let mut four = mk(4);
             for step in 0..2 * one.batches_per_epoch() + 3 {
                 assert_eq!(
-                    one.next(),
-                    four.next(),
+                    one.next().unwrap(),
+                    four.next().unwrap(),
                     "{mode:?}: stream diverged at step {step}"
                 );
             }
@@ -439,7 +514,7 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(300));
             assert!(metrics.counter("pipeline.batches") >= 4);
             let t = std::time::Instant::now();
-            let _ = p.next();
+            let _ = p.next().unwrap();
             assert!(
                 t.elapsed() < std::time::Duration::from_millis(50),
                 "first batch was not prefetched (x{workers})"
@@ -459,7 +534,7 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let mut p = Pipeline::start(gen, &cfg, metrics.clone());
         for _ in 0..2 * p.batches_per_epoch() {
-            let _ = p.next();
+            let _ = p.next().unwrap();
         }
         assert!(metrics.counter("kv.remote_rows") > 0);
         assert!(metrics.counter("cache.hit_rows") > 0);
@@ -474,7 +549,7 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let mut p = Pipeline::start(gen, &cfg, metrics.clone());
         for _ in 0..p.batches_per_epoch() {
-            let _ = p.next();
+            let _ = p.next().unwrap();
         }
         for stage in [
             "pipeline.schedule",
@@ -511,7 +586,7 @@ mod tests {
                 let mut p = Pipeline::start(gen, &cfg, metrics);
                 // consume one batch so async modes are mid-epoch, then
                 // give the workers time to fill every queue
-                let _ = p.next();
+                let _ = p.next().unwrap();
                 if mode != PipelineMode::Sync {
                     std::thread::sleep(
                         std::time::Duration::from_millis(100),
@@ -550,10 +625,111 @@ mod tests {
         );
         let epoch = p.batches_per_epoch();
         for _ in 0..epoch {
-            let _ = p.next();
+            let _ = p.next().unwrap();
         }
         // exactly one epoch granted → at most one epoch produced
         std::thread::sleep(std::time::Duration::from_millis(100));
         assert_eq!(metrics.counter("pipeline.batches"), epoch as u64);
+    }
+
+    /// Exact resume at the pipeline level (docs/DESIGN.md §8):
+    /// `start_at(k)` must continue the stream precisely where a straight
+    /// run left off — every mode, multiple worker counts, across the
+    /// next epoch boundary (which exercises the partial Async grant).
+    #[test]
+    fn start_at_resumes_the_exact_stream() {
+        for mode in [
+            PipelineMode::Sync,
+            PipelineMode::Async,
+            PipelineMode::AsyncNonstop,
+        ] {
+            for workers in [1, 4] {
+                let cfg = PipelineConfig {
+                    mode,
+                    num_workers: workers,
+                    ..Default::default()
+                };
+                let k = 7u64; // mid-epoch (epoch_len = 6)
+                let mut straight = Pipeline::start(
+                    tiny_gen_parts(96, 16, 2, 0),
+                    &cfg,
+                    Arc::new(Metrics::new()),
+                );
+                for _ in 0..k {
+                    let _ = straight.next().unwrap();
+                }
+                let mut resumed = Pipeline::start_at(
+                    tiny_gen_parts(96, 16, 2, 0),
+                    &cfg,
+                    Arc::new(Metrics::new()),
+                    k,
+                );
+                for step in 0..9 {
+                    assert_eq!(
+                        straight.next().unwrap(),
+                        resumed.next().unwrap(),
+                        "{mode:?} x{workers}: resumed stream diverged \
+                         at step {step} past batch {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite 2 (extends `dropping_pipeline_mid_epoch_stops_all_
+    /// workers`): an *injected server failure* mid-epoch must surface
+    /// as the typed error — not a panic — and the pool must drain
+    /// cleanly on drop, for every mode and worker count.
+    #[test]
+    fn injected_failure_mid_epoch_drains_cleanly_in_every_mode() {
+        use crate::ft::{FailWindow, FaultPlan};
+        for mode in [
+            PipelineMode::Sync,
+            PipelineMode::Async,
+            PipelineMode::AsyncNonstop,
+        ] {
+            for workers in [1, 4] {
+                let gen = tiny_gen_parts(96, 16, 2, 0);
+                let mut plan = FaultPlan::new();
+                // machine 1's sampler dies after a few admitted RPCs:
+                // the first batches succeed, then one fails mid-epoch
+                plan.sampler_outages.push(FailWindow::permanent(1, 6));
+                plan.backoff = std::time::Duration::ZERO;
+                gen.sampler.set_fault_plan(Arc::new(plan));
+                let cfg = PipelineConfig {
+                    mode,
+                    num_workers: workers,
+                    ..Default::default()
+                };
+                let mut p = Pipeline::start(
+                    gen,
+                    &cfg,
+                    Arc::new(Metrics::new()),
+                );
+                let mut saw_err = false;
+                for _ in 0..4 * p.batches_per_epoch() {
+                    match p.next() {
+                        Ok(_) => {}
+                        Err(e) => {
+                            assert_eq!(
+                                e,
+                                RpcError::ServerDown {
+                                    machine: 1,
+                                    role: "sampler"
+                                },
+                                "{mode:?} x{workers}"
+                            );
+                            saw_err = true;
+                            break;
+                        }
+                    }
+                }
+                assert!(
+                    saw_err,
+                    "{mode:?} x{workers}: injected outage never surfaced"
+                );
+                drop(p); // must join every worker without hanging
+            }
+        }
     }
 }

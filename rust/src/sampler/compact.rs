@@ -468,12 +468,14 @@ mod tests {
                     num_rels: 1,
                 };
                 let mut rng = crate::util::Rng::new(*seed);
-                let samples = sampler.sample_blocks(
-                    targets,
-                    &crate::graph::FanoutPlan::uniform(&sp.fanouts),
-                    &sp.layer_nodes,
-                    &mut rng,
-                );
+                let samples = sampler
+                    .sample_blocks(
+                        targets,
+                        &crate::graph::FanoutPlan::uniform(&sp.fanouts),
+                        &sp.layer_nodes,
+                        &mut rng,
+                    )
+                    .unwrap();
                 let b = to_block(&sp, &samples);
                 // check layer L (last LayerBlock) against samples[0]
                 let l_total = sp.num_layers();

@@ -15,8 +15,9 @@ use std::sync::{Arc, Mutex};
 
 use rustc_hash::FxHashMap;
 
+use crate::ft::FaultPlan;
 use crate::graph::{FanoutPlan, NodeId};
-use crate::net::CostModel;
+use crate::net::{CostModel, RpcError};
 use crate::partition::NodeMap;
 use crate::util::Rng;
 
@@ -45,6 +46,11 @@ pub struct DistNeighborSampler {
     /// metering and sampled neighborhoods are identical either way.
     pub concurrent_fanout: bool,
     scratch: Mutex<SamplerScratch>,
+    /// Injected-fault schedule gating remote requests ([`fork`]ed
+    /// handles share the installed plan). `None` = fault-free.
+    ///
+    /// [`fork`]: Self::fork
+    fault: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl DistNeighborSampler {
@@ -62,7 +68,17 @@ impl DistNeighborSampler {
             emulate_network_time: false,
             concurrent_fanout: true,
             scratch: Mutex::new(SamplerScratch::default()),
+            fault: Mutex::new(None),
         }
+    }
+
+    /// Gate every subsequent remote sampling request through `plan`.
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *self.fault.lock().unwrap() = Some(plan);
+    }
+
+    fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.fault.lock().unwrap().clone()
     }
 
     /// An independent handle over the same deployment for a sampling
@@ -77,6 +93,7 @@ impl DistNeighborSampler {
             emulate_network_time: self.emulate_network_time,
             concurrent_fanout: self.concurrent_fanout,
             scratch: Mutex::new(SamplerScratch::default()),
+            fault: Mutex::new(self.fault.lock().unwrap().clone()),
         }
     }
 
@@ -90,21 +107,31 @@ impl DistNeighborSampler {
         if self.emulate_network_time {
             let secs = (req + resp) as f64 / self.cost.net_bytes_per_sec
                 + 2.0 * self.cost.net_latency_s;
+            // straggler emulation (docs/DESIGN.md §8)
+            let secs =
+                secs * self.cost.pair_slowdown(self.machine, owner);
             std::thread::sleep(std::time::Duration::from_secs_f64(secs));
         }
     }
 
     /// Sample one layer for `seeds` with per-etype fanouts (`&[k]` is the
-    /// classic uniform sampler); result[i] belongs to seeds[i].
+    /// classic uniform sampler); result[i] belongs to seeds[i]. Remote
+    /// requests are gated through the installed [`FaultPlan`] (if any):
+    /// an unrecoverable injected outage surfaces as
+    /// [`RpcError::ServerDown`] with the RNG stream fully consumed, so a
+    /// retried batch after recovery samples the same neighborhoods.
     pub fn sample_layer(
         &self,
         seeds: &[NodeId],
         fanouts: &[usize],
         rng: &mut Rng,
-    ) -> Vec<SampledNbrs> {
+    ) -> Result<Vec<SampledNbrs>, RpcError> {
         let nparts = self.servers.len();
         if nparts == 1 {
-            return self.servers[0].sample_neighbors(seeds, fanouts, rng);
+            // single machine: shared memory, nothing to inject
+            return Ok(
+                self.servers[0].sample_neighbors(seeds, fanouts, rng)
+            );
         }
         // §Perf fast path: locality-aware splits make all-local seed sets
         // the common case — skip the grouping pass and its allocations.
@@ -114,8 +141,8 @@ impl DistNeighborSampler {
             .all(|&s| self.node_map.owner(s) == self.machine)
         {
             let mut sub = rng.split(self.machine as u64);
-            return self.servers[self.machine as usize]
-                .sample_neighbors(seeds, fanouts, &mut sub);
+            return Ok(self.servers[self.machine as usize]
+                .sample_neighbors(seeds, fanouts, &mut sub));
         }
         // group seeds by owner, remembering original slots (reused
         // scratch, taken out of the lock so the dispatch below never
@@ -151,12 +178,15 @@ impl DistNeighborSampler {
             .enumerate()
             .filter(|(o, g)| *o as u32 != self.machine && !g.0.is_empty())
             .count();
+        let fault = self.fault_plan();
         let mut results: Vec<Option<Vec<SampledNbrs>>> =
             (0..nparts).map(|_| None).collect();
+        let mut err: Option<RpcError> = None;
         if self.concurrent_fanout && n_remote >= 2 {
             // concurrent fan-out: one thread per remote owner, the local
             // shard on the calling thread (overlapping the round-trips)
             std::thread::scope(|sc| {
+                let fault_ref = &fault;
                 let mut handles = Vec::with_capacity(n_remote);
                 for (owner, sub) in subs.iter_mut().enumerate() {
                     if owner as u32 == self.machine {
@@ -166,17 +196,24 @@ impl DistNeighborSampler {
                     let group = &groups[owner].0;
                     handles.push((
                         owner,
-                        sc.spawn(move || {
-                            let mut sub = sub;
-                            let res = self.servers[owner]
-                                .sample_neighbors(group, fanouts, &mut sub);
-                            self.meter_remote(
-                                owner as u32,
-                                group.len(),
-                                &res,
-                            );
-                            res
-                        }),
+                        sc.spawn(
+                            move || -> Result<Vec<SampledNbrs>, RpcError> {
+                                if let Some(f) = fault_ref {
+                                    f.admit_sampler(owner as u32)?;
+                                }
+                                let mut sub = sub;
+                                let res = self.servers[owner]
+                                    .sample_neighbors(
+                                        group, fanouts, &mut sub,
+                                    );
+                                self.meter_remote(
+                                    owner as u32,
+                                    group.len(),
+                                    &res,
+                                );
+                                Ok(res)
+                            },
+                        ),
                     ));
                 }
                 let m = self.machine as usize;
@@ -188,14 +225,30 @@ impl DistNeighborSampler {
                     ));
                 }
                 for (owner, h) in handles {
-                    results[owner] = Some(
-                        h.join().expect("sampler fan-out thread panicked"),
-                    );
+                    match h.join() {
+                        Ok(Ok(res)) => results[owner] = Some(res),
+                        Ok(Err(e)) => {
+                            err.get_or_insert(e);
+                        }
+                        Err(_) => {
+                            err.get_or_insert(RpcError::WorkerLost(
+                                "sampler fan-out",
+                            ));
+                        }
+                    }
                 }
             });
         } else {
             for (owner, sub) in subs.iter_mut().enumerate() {
                 let Some(mut sub) = sub.take() else { continue };
+                if owner as u32 != self.machine {
+                    if let Some(f) = &fault {
+                        if let Err(e) = f.admit_sampler(owner as u32) {
+                            err = Some(e);
+                            break;
+                        }
+                    }
+                }
                 let res = self.servers[owner].sample_neighbors(
                     &groups[owner].0,
                     fanouts,
@@ -217,7 +270,10 @@ impl DistNeighborSampler {
             }
         }
         self.scratch.lock().unwrap().groups = groups;
-        out
+        match err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
     }
 
     /// Multi-layer expansion: returns per-layer (seeds, per-seed samples),
@@ -234,7 +290,7 @@ impl DistNeighborSampler {
         plan: &FanoutPlan,
         layer_caps: &[usize], // layer_nodes [n0, ..., nL]
         rng: &mut Rng,
-    ) -> Vec<(Vec<NodeId>, Vec<SampledNbrs>)> {
+    ) -> Result<Vec<(Vec<NodeId>, Vec<SampledNbrs>)>, RpcError> {
         let l_total = plan.num_layers();
         assert_eq!(layer_caps.len(), l_total + 1);
         let mut layers = Vec::with_capacity(l_total);
@@ -242,7 +298,7 @@ impl DistNeighborSampler {
         for j in 0..l_total {
             let fanouts = plan.layer(l_total - j); // layer L first
             let cap = layer_caps[l_total - 1 - j];
-            let samples = self.sample_layer(&seeds, fanouts, rng);
+            let samples = self.sample_layer(&seeds, fanouts, rng)?;
             let mut next = seeds.clone();
             // dedup set comes from scratch (cleared, capacity retained)
             let mut scratch = self.scratch.lock().unwrap();
@@ -265,7 +321,7 @@ impl DistNeighborSampler {
             layers.push((seeds, samples));
             seeds = next;
         }
-        layers
+        Ok(layers)
     }
 }
 
@@ -304,7 +360,7 @@ mod tests {
         let (g, nm, servers, cost) = setup(3);
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let seeds: Vec<NodeId> = vec![5, 500, 900, 17, 333];
-        let res = s.sample_layer(&seeds, &[4], &mut Rng::new(9));
+        let res = s.sample_layer(&seeds, &[4], &mut Rng::new(9)).unwrap();
         assert_eq!(res.len(), seeds.len());
         for (seed, r) in seeds.iter().zip(&res) {
             for &n in &r.nbrs {
@@ -320,12 +376,12 @@ mod tests {
         // all-local seeds
         let local: Vec<NodeId> =
             (0..10).map(|l| nm.global_of(0, l)).collect();
-        s.sample_layer(&local, &[3], &mut Rng::new(1));
+        s.sample_layer(&local, &[3], &mut Rng::new(1)).unwrap();
         assert_eq!(cost.network_bytes(), 0);
         // all-remote seeds
         let remote: Vec<NodeId> =
             (0..10).map(|l| nm.global_of(1, l)).collect();
-        s.sample_layer(&remote, &[3], &mut Rng::new(1));
+        s.sample_layer(&remote, &[3], &mut Rng::new(1)).unwrap();
         assert!(cost.network_bytes() > 0);
     }
 
@@ -334,12 +390,14 @@ mod tests {
         let (_, nm, servers, cost) = setup(2);
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let targets: Vec<NodeId> = vec![1, 2, 3, 4];
-        let layers = s.sample_blocks(
-            &targets,
-            &FanoutPlan::uniform(&[5, 5]),
-            &[4096, 512, 64],
-            &mut Rng::new(2),
-        );
+        let layers = s
+            .sample_blocks(
+                &targets,
+                &FanoutPlan::uniform(&[5, 5]),
+                &[4096, 512, 64],
+                &mut Rng::new(2),
+            )
+            .unwrap();
         assert_eq!(layers.len(), 2);
         // layer 0 (outermost) seeds are the targets
         assert_eq!(layers[0].0, targets);
@@ -359,8 +417,12 @@ mod tests {
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let targets: Vec<NodeId> = vec![10, 20, 30];
         let plan = FanoutPlan::uniform(&[4, 4]);
-        let a = s.sample_blocks(&targets, &plan, &[1024, 128, 16], &mut Rng::new(7));
-        let b = s.sample_blocks(&targets, &plan, &[1024, 128, 16], &mut Rng::new(7));
+        let a = s
+            .sample_blocks(&targets, &plan, &[1024, 128, 16], &mut Rng::new(7))
+            .unwrap();
+        let b = s
+            .sample_blocks(&targets, &plan, &[1024, 128, 16], &mut Rng::new(7))
+            .unwrap();
         for (la, lb) in a.iter().zip(&b) {
             assert_eq!(la.0, lb.0);
             for (x, y) in la.1.iter().zip(&lb.1) {
@@ -392,8 +454,12 @@ mod tests {
             let seeds: Vec<NodeId> = (0..300u32)
                 .map(|i| (i * 31 + seed as NodeId * 7) % 1000)
                 .collect();
-            let a = serial.sample_layer(&seeds, &[5], &mut Rng::new(seed));
-            let b = conc.sample_layer(&seeds, &[5], &mut Rng::new(seed));
+            let a = serial
+                .sample_layer(&seeds, &[5], &mut Rng::new(seed))
+                .unwrap();
+            let b = conc
+                .sample_layer(&seeds, &[5], &mut Rng::new(seed))
+                .unwrap();
             assert_eq!(a.len(), b.len());
             for (i, (x, y)) in a.iter().zip(&b).enumerate() {
                 assert_eq!(x.nbrs, y.nbrs, "seed {seed} slot {i}");
@@ -402,18 +468,22 @@ mod tests {
             // multi-layer expansion stays in lock-step too
             let plan = FanoutPlan::uniform(&[4, 3]);
             let caps = [2048usize, 256, 64];
-            let la = serial.sample_blocks(
-                &seeds[..40],
-                &plan,
-                &caps,
-                &mut Rng::new(seed ^ 0xA5),
-            );
-            let lb = conc.sample_blocks(
-                &seeds[..40],
-                &plan,
-                &caps,
-                &mut Rng::new(seed ^ 0xA5),
-            );
+            let la = serial
+                .sample_blocks(
+                    &seeds[..40],
+                    &plan,
+                    &caps,
+                    &mut Rng::new(seed ^ 0xA5),
+                )
+                .unwrap();
+            let lb = conc
+                .sample_blocks(
+                    &seeds[..40],
+                    &plan,
+                    &caps,
+                    &mut Rng::new(seed ^ 0xA5),
+                )
+                .unwrap();
             for (x, y) in la.iter().zip(&lb) {
                 assert_eq!(x.0, y.0, "seed {seed}");
                 for (sx, sy) in x.1.iter().zip(&y.1) {
@@ -436,9 +506,11 @@ mod tests {
         let (_, nm, servers, cost) = setup(3);
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let seeds: Vec<NodeId> = (0..500u32).map(|i| (i * 13) % 1000).collect();
-        let baseline = s.sample_layer(&seeds, &[4], &mut Rng::new(42));
+        let baseline =
+            s.sample_layer(&seeds, &[4], &mut Rng::new(42)).unwrap();
         for run in 0..10 {
-            let again = s.sample_layer(&seeds, &[4], &mut Rng::new(42));
+            let again =
+                s.sample_layer(&seeds, &[4], &mut Rng::new(42)).unwrap();
             for (i, (x, y)) in baseline.iter().zip(&again).enumerate() {
                 assert_eq!(x.nbrs, y.nbrs, "run {run} slot {i}");
             }
@@ -451,11 +523,80 @@ mod tests {
         let s = DistNeighborSampler::new(0, servers, nm, cost);
         let f = s.fork();
         let seeds: Vec<NodeId> = vec![5, 500, 900, 17, 333];
-        let a = s.sample_layer(&seeds, &[4], &mut Rng::new(9));
-        let b = f.sample_layer(&seeds, &[4], &mut Rng::new(9));
+        let a = s.sample_layer(&seeds, &[4], &mut Rng::new(9)).unwrap();
+        let b = f.sample_layer(&seeds, &[4], &mut Rng::new(9)).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.nbrs, y.nbrs);
             assert_eq!(x.rels, y.rels);
+        }
+    }
+
+    #[test]
+    fn transient_sampler_outage_heals_and_stays_deterministic() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let (_, nm, servers, cost) = setup(2);
+        let clean =
+            DistNeighborSampler::new(0, servers.clone(), nm.clone(), cost);
+        let faulty = DistNeighborSampler::new(
+            0,
+            servers,
+            nm.clone(),
+            Arc::new(CostModel::default()),
+        );
+        let mut plan = FaultPlan::new();
+        plan.sampler_outages = vec![FailWindow::transient(1, 0, 2)];
+        plan.backoff = std::time::Duration::ZERO;
+        let plan = Arc::new(plan);
+        faulty.set_fault_plan(plan.clone());
+        let remote: Vec<NodeId> =
+            (0..10).map(|l| nm.global_of(1, l)).collect();
+        let a = clean
+            .sample_layer(&remote, &[3], &mut Rng::new(5))
+            .unwrap();
+        let b = faulty
+            .sample_layer(&remote, &[3], &mut Rng::new(5))
+            .unwrap();
+        assert!(plan.retries() >= 2, "outage must have cost retries");
+        // retries must not perturb the sampled stream
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.nbrs, y.nbrs);
+        }
+    }
+
+    #[test]
+    fn permanent_sampler_outage_is_server_down_both_dispatch_modes() {
+        use crate::ft::{FailWindow, FaultPlan};
+        for concurrent in [false, true] {
+            let (_, nm, servers, cost) = setup(3);
+            let mut s = DistNeighborSampler::new(0, servers, nm, cost);
+            s.concurrent_fanout = concurrent;
+            let mut plan = FaultPlan::new();
+            plan.sampler_outages = vec![FailWindow::permanent(1, 0)];
+            plan.backoff = std::time::Duration::ZERO;
+            s.set_fault_plan(Arc::new(plan));
+            // wide seed set touches every partition → machine 1 is hit
+            let seeds: Vec<NodeId> = (0..1000).step_by(3).collect();
+            let err = s
+                .sample_layer(&seeds, &[4], &mut Rng::new(11))
+                .unwrap_err();
+            assert_eq!(
+                err,
+                RpcError::ServerDown { machine: 1, role: "sampler" },
+                "concurrent={concurrent}"
+            );
+            // a fork shares the plan: multi-layer expansion fails too,
+            // as a value, not a panic
+            let f = s.fork();
+            let got = f.sample_blocks(
+                &seeds[..20],
+                &FanoutPlan::uniform(&[4, 4]),
+                &[2048, 256, 32],
+                &mut Rng::new(11),
+            );
+            assert!(matches!(
+                got,
+                Err(RpcError::ServerDown { machine: 1, role: "sampler" })
+            ));
         }
     }
 
@@ -485,7 +626,8 @@ mod tests {
         );
         let seeds: Vec<NodeId> = (0..400).step_by(7).collect();
         let fanouts = [2usize, 2, 1];
-        let res = s.sample_layer(&seeds, &fanouts, &mut Rng::new(3));
+        let res =
+            s.sample_layer(&seeds, &fanouts, &mut Rng::new(3)).unwrap();
         assert_eq!(res.len(), seeds.len());
         for (seed, sn) in seeds.iter().zip(&res) {
             assert_eq!(sn.rels.len(), sn.nbrs.len());

@@ -15,11 +15,13 @@ pub use allreduce::AllReduceGroup;
 pub use device::{DeviceExecutor, DeviceHandle};
 pub use split::split_training_set;
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::api::{DistGraph, DistNodeDataLoader, Seeds};
 use crate::cluster::Cluster;
+use crate::ft::Checkpoint;
 use crate::metrics::Metrics;
 use crate::pipeline::PipelineConfig;
 use crate::util::Rng;
@@ -41,6 +43,17 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Evaluate on the validation set after each epoch.
     pub eval_each_epoch: bool,
+    /// Write a full checkpoint every this many global steps, at the
+    /// all-reduce barrier (0 = never). Requires `checkpoint_dir`.
+    pub checkpoint_every: usize,
+    /// Directory receiving `ckpt_<step>.ckpt` files ("" = no
+    /// checkpoints).
+    pub checkpoint_dir: String,
+    /// Path of a checkpoint to resume from ("" = fresh run). The run
+    /// restores KV shards + params and replays the exact batch stream
+    /// from the saved step (docs/DESIGN.md §8) — byte-identical to a
+    /// run that never stopped (test-enforced).
+    pub resume_from: String,
 }
 
 impl Default for TrainConfig {
@@ -54,6 +67,9 @@ impl Default for TrainConfig {
             pipeline: PipelineConfig::default(),
             seed: 7,
             eval_each_epoch: false,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
+            resume_from: String::new(),
         }
     }
 }
@@ -119,6 +135,20 @@ pub struct TrainReport {
     pub device_secs: f64,
     pub allreduce_secs: f64,
     pub wait_secs: f64,
+    /// Fault-tolerance counters (docs/DESIGN.md §8); all zero on an
+    /// undisturbed, checkpoint-free run.
+    pub ft_checkpoints: u64,
+    pub ft_checkpoint_bytes: u64,
+    /// RPC retries spent healing transient injected outages.
+    pub ft_retries: u64,
+    /// Injected KV/sampler failures admitted by the fault plan.
+    pub ft_injected_failures: u64,
+    /// Wall-clock seconds loading + restoring the resume checkpoint
+    /// (0.0 on a fresh run).
+    pub ft_recovery_secs: f64,
+    /// Global step this run resumed from (0 = fresh run); `steps`
+    /// counts only the steps executed *this* run.
+    pub resumed_at: u64,
     /// Final synchronized parameters.
     pub final_params: Vec<Vec<f32>>,
 }
@@ -154,7 +184,7 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
             Some(cluster.cost.clone()),
         )?);
     }
-    let init_params = devices[0].initial_params()?;
+    let mut init_params = devices[0].initial_params()?;
     let spec = devices[0].spec()?;
     // graceful form of the batch_gen invariant: an RGCN variant must
     // cover every relation the deployed schema can sample
@@ -168,6 +198,30 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         spec.num_rels,
         cluster.schema.n_etypes()
     );
+
+    // Exact resume (docs/DESIGN.md §8): restore every KVStore shard and
+    // the synchronized params from the snapshot, then restart every
+    // loader at the saved global step — batch composition is a pure
+    // function of (seed, step), so the replayed stream is byte-identical
+    // to the one a never-interrupted run consumes.
+    let mut start_step = 0usize;
+    let mut ft_recovery_secs = 0.0f64;
+    if !cfg.resume_from.is_empty() {
+        let t_rec = Instant::now();
+        let ck = Checkpoint::load(Path::new(&cfg.resume_from))?;
+        anyhow::ensure!(
+            ck.seed == cfg.seed,
+            "checkpoint {} was written by a run with seed {}, this run \
+             uses {} — the replayed stream would differ",
+            cfg.resume_from,
+            ck.seed,
+            cfg.seed
+        );
+        ck.restore(&cluster.kv.servers)?;
+        start_step = ck.step as usize;
+        init_params = ck.params;
+        ft_recovery_secs = t_rec.elapsed().as_secs_f64();
+    }
 
     // All-reduce plane: one endpoint per trainer.
     let machine_of: Vec<u32> = (0..n_trainers)
@@ -188,6 +242,7 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
                 .seeds(Seeds::Train)
                 .drop_last(cfg.drop_last)
                 .seed(cfg.seed ^ (t as u64) << 17)
+                .start_at(start_step as u64)
                 .pipeline(cfg.pipeline.clone())
                 .metrics(metrics.clone())
                 .build()?,
@@ -201,6 +256,12 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     } else {
         cfg.epochs * steps_per_epoch
     };
+    anyhow::ensure!(
+        start_step < total_steps,
+        "resume step {start_step} is not before the run's last step \
+         {total_steps} — nothing left to train"
+    );
+    let run_steps = total_steps - start_step;
 
     let cost0 = cluster.cost.snapshot();
     let t0 = Instant::now();
@@ -212,12 +273,23 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         let mut params = init_params.clone();
         let lr = cfg.lr;
         let metrics = metrics.clone();
+        // rank 0 writes checkpoints at the barrier: params are
+        // synchronized there, and the KV tables are read-only during
+        // training, so the snapshot is consistent
+        let write_ckpt = t == 0
+            && cfg.checkpoint_every > 0
+            && !cfg.checkpoint_dir.is_empty();
+        let ckpt_every = cfg.checkpoint_every.max(1);
+        let ckpt_dir = cfg.checkpoint_dir.clone();
+        let ckpt_seed = cfg.seed;
+        let servers = cluster.kv.servers.clone();
         handles.push(std::thread::spawn(
             move || -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
-                let mut losses = Vec::with_capacity(total_steps);
-                for _step in 0..total_steps {
-                    let batch = metrics
-                        .time("trainer.wait_batch", || loader.next_batch());
+                let mut losses = Vec::with_capacity(run_steps);
+                for step in start_step..total_steps {
+                    let batch = metrics.time("trainer.wait_batch", || {
+                        loader.try_next_batch()
+                    })?;
                     metrics
                         .inc("trainer.remote_rows", batch.remote_rows as u64);
                     metrics.inc(
@@ -236,6 +308,18 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
                     metrics.time("trainer.allreduce", || {
                         ep.allreduce_params(&mut params)
                     });
+                    if write_ckpt && (step + 1) % ckpt_every == 0 {
+                        let at = (step + 1) as u64;
+                        let ck = Checkpoint::capture(
+                            ckpt_seed, at, &params, &servers,
+                        );
+                        let bytes = ck.save(&Checkpoint::path_for(
+                            Path::new(&ckpt_dir),
+                            at,
+                        ))?;
+                        metrics.inc("ft.checkpoints", 1);
+                        metrics.inc("ft.checkpoint_bytes", bytes);
+                    }
                 }
                 Ok((losses, params))
             },
@@ -253,20 +337,26 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     let cost1 = cluster.cost.snapshot();
     let delta = cost0.delta(&cost1);
 
-    // mean loss across trainers per step
-    let loss_curve: Vec<f32> = (0..total_steps)
+    // mean loss across trainers per executed step (a resumed run's
+    // curve starts at `start_step`; index 0 is that step's loss)
+    let loss_curve: Vec<f32> = (0..run_steps)
         .map(|s| {
             curves.iter().map(|c| c[s]).sum::<f32>() / n_trainers as f32
         })
         .collect();
 
-    // epoch aggregation + optional eval
+    // epoch aggregation + optional eval — windows are laid out over the
+    // *global* step axis, then clipped to what this run executed
     let mut epochs = Vec::new();
     let mut final_val_acc = None;
     for (e, (lo, hi)) in
         epoch_windows(steps_per_epoch, total_steps).into_iter().enumerate()
     {
-        let mean_loss = loss_curve[lo..hi]
+        let lo = lo.max(start_step);
+        if lo >= hi {
+            continue; // fully replayed by the checkpoint
+        }
+        let mean_loss = loss_curve[lo - start_step..hi - start_step]
             .iter()
             .map(|&x| x as f64)
             .sum::<f64>()
@@ -274,7 +364,7 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         epochs.push(EpochStats {
             epoch: e,
             mean_loss,
-            secs: total_secs * (hi - lo) as f64 / total_steps as f64,
+            secs: total_secs * (hi - lo) as f64 / run_steps as f64,
             val_acc: None,
         });
     }
@@ -302,10 +392,16 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         }
     }
 
+    // injected-fault accounting (retries, admitted failures, message
+    // drops/delays) flows into the same metrics sink as everything else
+    if let Some(plan) = cluster.fault_plan() {
+        plan.publish(&metrics);
+    }
+
     let report = TrainReport {
         epochs,
         total_secs,
-        steps: total_steps,
+        steps: run_steps,
         loss_curve,
         net_bytes: delta.net_bytes,
         pcie_bytes: delta.pcie_bytes,
@@ -342,6 +438,12 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
             .total_time("trainer.allreduce")
             .as_secs_f64(),
         wait_secs: metrics.total_time("trainer.wait_batch").as_secs_f64(),
+        ft_checkpoints: metrics.counter("ft.checkpoints"),
+        ft_checkpoint_bytes: metrics.counter("ft.checkpoint_bytes"),
+        ft_retries: metrics.counter("ft.retries"),
+        ft_injected_failures: metrics.counter("ft.injected_failures"),
+        ft_recovery_secs,
+        resumed_at: start_step as u64,
         final_params,
     };
     Ok(report)

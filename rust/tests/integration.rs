@@ -354,6 +354,102 @@ fn max_steps_and_drop_last_interact_via_loader_len() {
     }
 }
 
+/// The fault-tolerance tentpole, end to end: train N steps straight
+/// (checkpointing along the way), then pretend the job died — a fresh
+/// deployment resuming from the mid-run checkpoint must replay the
+/// remaining steps with an identical loss stream and identical final
+/// parameters, bit for bit.
+#[test]
+fn checkpoint_resume_is_byte_identical_to_straight_run() {
+    let d = small_dataset(9);
+    let dir = std::env::temp_dir().join("ddgl_resume_itest");
+    let _ = std::fs::remove_dir_all(&dir);
+    let c1 =
+        Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts()).unwrap();
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        epochs: 1,
+        max_steps: 8,
+        checkpoint_every: 3,
+        checkpoint_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::AsyncNonstop;
+    cfg.pipeline.num_workers = 2;
+    let straight = trainer::train(&c1, &cfg).expect("straight run");
+    assert_eq!(straight.ft_checkpoints, 2, "steps 3 and 6");
+    assert!(straight.ft_checkpoint_bytes > 0);
+    assert_eq!(straight.resumed_at, 0);
+
+    // "crash" after step 6: redeploy and resume from the latest
+    // checkpoint, replaying global steps 6..8
+    let c2 =
+        Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts()).unwrap();
+    let mut rcfg = cfg.clone();
+    rcfg.checkpoint_every = 0;
+    rcfg.checkpoint_dir = String::new();
+    rcfg.resume_from = distdglv2::ft::Checkpoint::path_for(&dir, 6)
+        .to_string_lossy()
+        .into_owned();
+    let resumed = trainer::train(&c2, &rcfg).expect("resumed run");
+    assert_eq!(resumed.resumed_at, 6);
+    assert_eq!(resumed.steps, 2);
+    assert!(resumed.ft_recovery_secs > 0.0);
+    assert_eq!(
+        resumed.loss_curve,
+        straight.loss_curve[6..].to_vec(),
+        "resumed loss stream diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        resumed.final_params, straight.final_params,
+        "resumed final parameters diverged"
+    );
+
+    // a seed-mismatched checkpoint must be refused, not silently replay
+    // a different stream
+    rcfg.seed = cfg.seed ^ 1;
+    assert!(trainer::train(&c2, &rcfg).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Transient injected outages heal through bounded retries without
+/// changing a single byte of the run; the retry work is reported.
+#[test]
+fn transient_faults_heal_and_training_is_unchanged() {
+    use distdglv2::ft::{FailWindow, FaultPlan};
+    let d = small_dataset(10);
+    let c1 =
+        Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts()).unwrap();
+    let c2 =
+        Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts()).unwrap();
+    let mut plan = FaultPlan::new();
+    // transient windows over call-counter slots 5..7 on BOTH machines:
+    // the two trainer threads interleave their remote RPCs
+    // non-deterministically, so covering every machine pins the injected
+    // failure count (exactly 2 per subsystem) regardless of which
+    // trainer's request lands in the window
+    for m in 0..2 {
+        plan.kv_outages.push(FailWindow::transient(m, 5, 2));
+        plan.sampler_outages.push(FailWindow::transient(m, 5, 2));
+    }
+    plan.backoff = std::time::Duration::ZERO;
+    c2.set_fault_plan(std::sync::Arc::new(plan));
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        epochs: 1,
+        max_steps: 6,
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::Sync;
+    let clean = trainer::train(&c1, &cfg).expect("clean run");
+    let faulty = trainer::train(&c2, &cfg).expect("faulty run");
+    assert_eq!(clean.loss_curve, faulty.loss_curve);
+    assert_eq!(clean.final_params, faulty.final_params);
+    assert!(faulty.ft_retries >= 4, "retries {}", faulty.ft_retries);
+    assert!(faulty.ft_injected_failures >= 4);
+    assert_eq!(clean.ft_retries, 0);
+}
+
 #[test]
 fn run_config_round_trips_through_cluster() {
     let cfg = RunConfig::from_args(
