@@ -1,0 +1,203 @@
+//! Elastic-membership bench (docs/PERF.md §Elastic): reconfiguration
+//! cost for {shrink, grow, demote-straggler} scenarios across failure
+//! boundaries, decomposed into drain (pipeline teardown) + checkpoint +
+//! re-split (loader/all-reduce rebuild) + warmup (pipeline refill).
+//! Every shrink cell also asserts the determinism contract end to end:
+//! the post-shrink tail of the elastic run is byte-identical (losses
+//! and final params) to a fresh deployment of the smaller world resumed
+//! from the reconfiguration checkpoint. Emits `BENCH_elastic.json`.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use distdglv2::cluster::{Cluster, ClusterSpec};
+use distdglv2::coordinator::parse_elastic_schedule;
+use distdglv2::ft::{Checkpoint, FaultPlan};
+use distdglv2::graph::{Dataset, DatasetSpec};
+use distdglv2::pipeline::PipelineMode;
+use distdglv2::runtime::manifest::artifacts_dir;
+use distdglv2::trainer::{self, TrainConfig};
+
+const EPOCHS: usize = 3;
+const SEED: u64 = 29;
+
+fn deploy(dataset: &Dataset, per: usize) -> anyhow::Result<Cluster> {
+    Cluster::deploy(dataset, ClusterSpec::new(2, per), artifacts_dir())
+}
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        lr: 0.3,
+        epochs: 1,
+        seed: SEED,
+        ..Default::default()
+    };
+    // worst case for the drain/warmup phases: deepest overlap, worker
+    // pool on — the same setup the recovery bench stresses
+    cfg.pipeline.mode = PipelineMode::AsyncNonstop;
+    cfg.pipeline.num_workers = 2;
+    cfg
+}
+
+/// Steps per epoch of a topology, probed with a one-epoch classic run.
+fn probe_spe(dataset: &Dataset, per: usize) -> anyhow::Result<usize> {
+    let mut cfg = base_cfg();
+    cfg.epochs = 1;
+    Ok(trainer::train(&deploy(dataset, per)?, &cfg)?.steps)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut dspec = DatasetSpec::new("elastic-bench", 6000, 30_000);
+    dspec.seed = 31;
+    let dataset = dspec.generate();
+
+    let dir = std::env::temp_dir().join("ddgl_bench_elastic");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    let spe_big = probe_spe(&dataset, 2)?; // (2 machines, 2 trainers)
+    let spe_small = probe_spe(&dataset, 1)?; // (2 machines, 1 trainer)
+    println!("steps/epoch: world4 {spe_big}, world2 {spe_small}");
+
+    println!("\n=== elastic reconfiguration grid ===");
+    println!(
+        "{:<18} {:>5} {:>5}->{:<5} {:>8} {:>9} {:>9} {:>9} {:>9}",
+        "scenario", "epoch", "from", "to", "at_step", "drain(s)",
+        "ckpt(s)", "resplit(s)", "warmup(s)"
+    );
+    let mut rows: Vec<String> = Vec::new();
+
+    for boundary in [1u64, 2] {
+        for scenario in ["shrink", "grow", "demote"] {
+            let cdir = dir.join(format!("{scenario}_{boundary}"));
+            std::fs::create_dir_all(&cdir)?;
+            let (per, spe) = match scenario {
+                "grow" => (1, spe_small),
+                _ => (2, spe_big),
+            };
+            let cluster = deploy(&dataset, per)?;
+            let mut cfg = base_cfg();
+            cfg.epochs = EPOCHS;
+            cfg.max_steps = EPOCHS * spe;
+            cfg.checkpoint_dir = cdir.to_string_lossy().into_owned();
+            match scenario {
+                "shrink" => {
+                    cfg.elastic =
+                        parse_elastic_schedule(&format!("{boundary}:2"))?;
+                }
+                "grow" => {
+                    cfg.elastic =
+                        parse_elastic_schedule(&format!("{boundary}:4"))?;
+                }
+                "demote" => {
+                    // machine 1 computes far slower than the fleet; the
+                    // coordinator must notice within `patience` epochs
+                    let mut plan = FaultPlan::new();
+                    plan.step_slowdowns
+                        .push((1, Duration::from_millis(100)));
+                    cluster.set_fault_plan(Arc::new(plan));
+                    cfg.demote_stragglers = true;
+                    cfg.straggler_factor = 2.0;
+                    cfg.straggler_patience = boundary as usize;
+                }
+                _ => unreachable!(),
+            }
+
+            let t = Instant::now();
+            let report = trainer::train(&cluster, &cfg)?;
+            let wall = t.elapsed().as_secs_f64();
+            assert_eq!(
+                report.ft_reconfigurations, 1,
+                "{scenario}@{boundary}: expected exactly one \
+                 reconfiguration"
+            );
+            let rc = &report.reconfigurations[0];
+            assert_eq!(rc.boundary, boundary);
+            assert_eq!(rc.at_step, boundary as usize * spe);
+            if scenario == "demote" {
+                assert_eq!(report.ft_demotions, 1);
+                assert_eq!(rc.demoted_machines, vec![1]);
+            } else {
+                assert_eq!(report.ft_demotions, 0);
+            }
+
+            // shrink determinism: fresh smaller world resumed from the
+            // reconfiguration checkpoint replays the identical tail
+            let identical = if scenario == "shrink" {
+                let mut rcfg = base_cfg();
+                rcfg.epochs = EPOCHS;
+                rcfg.max_steps = EPOCHS * spe;
+                rcfg.resume_from =
+                    Checkpoint::path_for(&cdir, rc.at_step as u64)
+                        .to_string_lossy()
+                        .into_owned();
+                let resumed =
+                    trainer::train(&deploy(&dataset, 1)?, &rcfg)?;
+                assert_eq!(resumed.resumed_at, rc.at_step as u64);
+                assert_eq!(
+                    resumed.loss_curve,
+                    report.loss_curve[rc.at_step..].to_vec(),
+                    "shrink@{boundary}: post-shrink tail diverged from \
+                     the fresh smaller-world resume"
+                );
+                assert_eq!(
+                    resumed.final_params, report.final_params,
+                    "shrink@{boundary}: final params diverged"
+                );
+                "true"
+            } else {
+                "null"
+            };
+
+            println!(
+                "{:<18} {:>5} {:>5}->{:<5} {:>8} {:>9.4} {:>9.4} \
+                 {:>9.4} {:>9.4}",
+                scenario,
+                boundary,
+                rc.from_world,
+                rc.to_world,
+                rc.at_step,
+                rc.drain_secs,
+                rc.checkpoint_secs,
+                rc.resplit_secs,
+                rc.warmup_secs,
+            );
+            rows.push(format!(
+                "    {{\"scenario\": \"{scenario}\", \
+                 \"boundary\": {boundary}, \
+                 \"from_world\": {}, \"to_world\": {}, \
+                 \"at_step\": {}, \"drain_secs\": {:.6}, \
+                 \"checkpoint_secs\": {:.6}, \"resplit_secs\": {:.6}, \
+                 \"warmup_secs\": {:.6}, \"demotions\": {}, \
+                 \"wall_secs\": {wall:.6}, \"identical\": {identical}}}",
+                rc.from_world,
+                rc.to_world,
+                rc.at_step,
+                rc.drain_secs,
+                rc.checkpoint_secs,
+                rc.resplit_secs,
+                rc.warmup_secs,
+                report.ft_demotions,
+            ));
+        }
+    }
+
+    std::fs::write(
+        "BENCH_elastic.json",
+        format!(
+            "{{\n  \"bench\": \"elastic\",\n  \
+             \"epochs\": {EPOCHS},\n  \
+             \"machines\": 2,\n  \
+             \"steps_per_epoch_world4\": {spe_big},\n  \
+             \"steps_per_epoch_world2\": {spe_small},\n  \
+             \"pipeline\": \"nonstop\",\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            rows.join(",\n"),
+        ),
+    )?;
+    println!("\nwrote BENCH_elastic.json");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

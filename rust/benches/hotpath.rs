@@ -534,10 +534,10 @@ fn main() -> anyhow::Result<()> {
             );
             let hs: Vec<_> = (0..4)
                 .map(|t| {
-                    let p = group.endpoint(t);
+                    let p = group.endpoint(t).unwrap();
                     std::thread::spawn(move || {
                         let mut d = vec![t as f32; 14000];
-                        p.allreduce_mean(&mut d);
+                        p.allreduce_mean(&mut d).unwrap();
                     })
                 })
                 .collect();

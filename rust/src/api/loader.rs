@@ -42,6 +42,7 @@ pub struct DistNodeDataLoaderBuilder<'a> {
     seeds: Seeds,
     sampler: Option<NeighborSampler>,
     rank: usize,
+    machine: Option<u32>,
     batch_size: Option<usize>,
     shuffle: bool,
     drop_last: bool,
@@ -63,6 +64,20 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
     /// affinity. Default 0.
     pub fn rank(mut self, rank: usize) -> Self {
         self.rank = rank;
+        self
+    }
+
+    /// Anchor the loader on an explicit machine instead of deriving one
+    /// from [`Self::rank`] — the elastic-membership path (docs/DESIGN.md
+    /// §9), where (machine, seed set) come from a membership re-split
+    /// rather than the deploy-time trainer grid, and the logical rank
+    /// may exceed the deployed trainer count after a grow. Requires
+    /// [`Seeds::Nodes`] (the deployment's rank-sliced splits are
+    /// meaningless off-grid). With the same seed set, seed, and knobs,
+    /// the stream is byte-identical to the rank-derived loader on that
+    /// machine (test-enforced).
+    pub fn machine(mut self, machine: u32) -> Self {
+        self.machine = Some(machine);
         self
     }
 
@@ -138,12 +153,27 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
     pub fn build(self) -> Result<DistNodeDataLoader> {
         let cluster = self.graph.cluster();
         let shape = self.vspec.shape_spec();
-        ensure!(
-            self.rank < cluster.n_trainers(),
-            "rank {} out of range ({} trainers deployed)",
-            self.rank,
-            cluster.n_trainers()
-        );
+        if let Some(machine) = self.machine {
+            ensure!(
+                (machine as usize) < cluster.spec.n_machines,
+                "machine {} out of range ({} machines deployed)",
+                machine,
+                cluster.spec.n_machines
+            );
+            ensure!(
+                matches!(self.seeds, Seeds::Nodes(_)),
+                "a machine-anchored loader needs an explicit seed set \
+                 (Seeds::Nodes) — the deployment's splits are sliced by \
+                 rank, not by machine"
+            );
+        } else {
+            ensure!(
+                self.rank < cluster.n_trainers(),
+                "rank {} out of range ({} trainers deployed)",
+                self.rank,
+                cluster.n_trainers()
+            );
+        }
         let sampler = self
             .sampler
             .unwrap_or_else(|| NeighborSampler::from_variant(self.vspec));
@@ -160,8 +190,23 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
 
         // the generator the monolithic trainer used, verbatim — the
         // default-configured loader must stream byte-identical batches
-        let mut gen: BatchGen =
-            cluster.batch_gen(self.rank, self.vspec, &self.vspec.name, self.seed);
+        let mut gen: BatchGen = if let Some(machine) = self.machine {
+            let items = match self.seeds {
+                // cloned, not moved: the scheduler rebuild below (a
+                // Seeds::Nodes loader is never `default_schedule`)
+                // consumes `self.seeds` again
+                Seeds::Nodes(ref v) => v.clone(),
+                _ => unreachable!("checked above"),
+            };
+            cluster.batch_gen_on(machine, items, self.vspec, self.seed)
+        } else {
+            cluster.batch_gen(
+                self.rank,
+                self.vspec,
+                &self.vspec.name,
+                self.seed,
+            )
+        };
         let default_schedule = matches!(self.seeds, Seeds::Train)
             && batch_size == shape.batch
             && self.shuffle
@@ -267,6 +312,7 @@ impl DistNodeDataLoader {
             seeds: Seeds::Train,
             sampler: None,
             rank: 0,
+            machine: None,
             batch_size: None,
             shuffle: true,
             drop_last: false,
@@ -628,6 +674,140 @@ mod tests {
                                  step {step} past batch {k}"
                             );
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A machine-anchored loader fed this rank's own seed slice must
+    /// stream byte-identical batches to the rank-derived loader — the
+    /// bridge the elastic trainer crosses when it rebuilds loaders from
+    /// a membership re-split (docs/DESIGN.md §9).
+    #[test]
+    fn elastic_machine_override_streams_the_rank_path_bytes() {
+        let (c, v) = homo_cluster(0);
+        let g = DistGraph::new(&c);
+        for rank in 0..c.n_trainers() {
+            let m = c.machine_of_trainer(rank);
+            let mut by_rank = DistNodeDataLoader::builder(&g, &v)
+                .rank(rank)
+                .seed(29 ^ (rank as u64) << 17)
+                .pipeline(sync_cfg())
+                .build()
+                .unwrap();
+            let mut by_machine = DistNodeDataLoader::builder(&g, &v)
+                .machine(m)
+                .seeds(Seeds::Nodes(c.train_sets[rank].clone()))
+                .seed(29 ^ (rank as u64) << 17)
+                .pipeline(sync_cfg())
+                .build()
+                .unwrap();
+            assert_eq!(by_rank.len(), by_machine.len());
+            for step in 0..2 * by_rank.len() {
+                assert_eq!(
+                    by_rank.next_batch(),
+                    by_machine.next_batch(),
+                    "rank {rank} diverged at step {step}"
+                );
+            }
+        }
+        // a machine override without an explicit seed set is rejected,
+        // as is an out-of-range machine
+        assert!(DistNodeDataLoader::builder(&g, &v)
+            .machine(0)
+            .build()
+            .is_err());
+        assert!(DistNodeDataLoader::builder(&g, &v)
+            .machine(9)
+            .seeds(Seeds::Nodes(vec![1, 2, 3]))
+            .build()
+            .is_err());
+    }
+
+    /// The shrink ≡ fresh-resume contract at the loader layer: a (2,2)
+    /// deployment re-split for one trainer per machine and resumed at
+    /// batch `k` must stream byte-identical batches to a fresh (2,1)
+    /// deployment's rank loaders resumed at the same `k` — hetero and
+    /// homogeneous, sampling workers 1 and 4, with `k` mid-second-epoch
+    /// so the resume crosses a reshuffle boundary.
+    #[test]
+    fn elastic_shrink_resplit_matches_a_fresh_smaller_deploy() {
+        for hetero in [false, true] {
+            let (mk_big, v): (Cluster, VariantSpec) = {
+                let (spec_d, vv) = if hetero {
+                    let mut dspec = DatasetSpec::new("loader-h", 2000, 8000)
+                        .with_mag_types();
+                    dspec.train_frac = 0.3;
+                    let d = dspec.generate();
+                    let vv = dev_vspec(
+                        ModelKind::Rgcn,
+                        16,
+                        d.schema.max_feat_dim(),
+                        d.schema.n_etypes(),
+                    );
+                    (d, vv)
+                } else {
+                    let mut dspec = DatasetSpec::new("loader-t", 1500, 6000);
+                    dspec.train_frac = 0.2;
+                    let d = dspec.generate();
+                    let vv = dev_vspec(ModelKind::Sage, 16, d.feat_dim, 1);
+                    (d, vv)
+                };
+                let mut spec = ClusterSpec::new(2, 2);
+                spec.cache_budget_bytes = 0;
+                (Cluster::deploy(&spec_d, spec, artifacts_dir()).unwrap(), vv)
+            };
+            let small = {
+                let d = if hetero {
+                    let mut dspec = DatasetSpec::new("loader-h", 2000, 8000)
+                        .with_mag_types();
+                    dspec.train_frac = 0.3;
+                    dspec.generate()
+                } else {
+                    let mut dspec = DatasetSpec::new("loader-t", 1500, 6000);
+                    dspec.train_frac = 0.2;
+                    dspec.generate()
+                };
+                let mut spec = ClusterSpec::new(2, 1);
+                spec.cache_budget_bytes = 0;
+                Cluster::deploy(&d, spec, artifacts_dir()).unwrap()
+            };
+            let big = mk_big;
+            // the re-split for machines {0,1} x 1 trainer IS the fresh
+            // deployment's split
+            let sets = big.train_sets_for(&[0, 1], 1);
+            assert_eq!(sets, small.train_sets, "hetero={hetero}");
+            let gbig = DistGraph::new(&big);
+            let gsmall = DistGraph::new(&small);
+            for workers in [1usize, 4] {
+                for r in 0..2usize {
+                    let seed = 19 ^ (r as u64) << 17;
+                    let mut fresh = DistNodeDataLoader::builder(&gsmall, &v)
+                        .rank(r)
+                        .seed(seed)
+                        .num_workers(workers)
+                        .build()
+                        .unwrap();
+                    let k = fresh.len() as u64 + 2;
+                    let mut shrunk = DistNodeDataLoader::builder(&gbig, &v)
+                        .machine(r as u32)
+                        .seeds(Seeds::Nodes(sets[r].clone()))
+                        .seed(seed)
+                        .start_at(k)
+                        .num_workers(workers)
+                        .build()
+                        .unwrap();
+                    for _ in 0..k {
+                        let _ = fresh.next_batch();
+                    }
+                    for step in 0..fresh.len() + 2 {
+                        assert_eq!(
+                            strip_locality(fresh.next_batch()),
+                            strip_locality(shrunk.next_batch()),
+                            "hetero={hetero} x{workers} rank {r}: \
+                             shrunk stream diverged at step {step}"
+                        );
                     }
                 }
             }

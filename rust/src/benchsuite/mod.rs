@@ -259,22 +259,26 @@ pub fn locality_summary(report: &TrainReport) -> String {
         report.pool_miss,
         report.pool_dropped,
     ));
-    // fault-tolerance counters (docs/DESIGN.md §8): only shown when the
-    // run checkpointed, resumed, or absorbed injected faults
+    // fault-tolerance counters (docs/DESIGN.md §8-9): only shown when
+    // the run checkpointed, resumed, reconfigured, or absorbed injected
+    // faults
     if report.ft_checkpoints > 0
         || report.ft_retries > 0
         || report.ft_injected_failures > 0
         || report.resumed_at > 0
+        || report.ft_reconfigurations > 0
     {
         s.push_str(&format!(
             " | ft ckpts {} ({} B) retries {} failures {} \
-             resumed@{} recovery {:.3}s",
+             resumed@{} recovery {:.3}s reconfigs {} demotions {}",
             report.ft_checkpoints,
             report.ft_checkpoint_bytes,
             report.ft_retries,
             report.ft_injected_failures,
             report.resumed_at,
             report.ft_recovery_secs,
+            report.ft_reconfigurations,
+            report.ft_demotions,
         ));
     }
     s

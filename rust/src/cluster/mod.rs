@@ -24,7 +24,7 @@ use crate::pipeline::{BatchGen, BatchPool};
 use crate::runtime::manifest::VariantSpec;
 use crate::sampler::compact::{ModelKind, TaskKind};
 use crate::sampler::{BatchScheduler, DistNeighborSampler, SamplerServer};
-use crate::trainer::{split_training_set, DeviceHandle};
+use crate::trainer::{split_training_set_for, DeviceHandle};
 use crate::util::Rng;
 
 /// Which first-level partitioner to deploy with (Fig 14 ablation knobs).
@@ -108,6 +108,11 @@ pub struct Cluster {
     pub partitions: Vec<Arc<PhysPartition>>,
     /// Per-trainer training items (node ids; lp derives edges from these).
     pub train_sets: Vec<Vec<NodeId>>,
+    /// The full (unsplit) training set in new-ID space — the input every
+    /// membership re-split draws from ([`Self::train_sets_for`]), kept so
+    /// elastic reconfiguration can recompute shares for any surviving
+    /// machine subset without redeploying.
+    pub train_ids: Vec<NodeId>,
     pub val_nodes: Vec<NodeId>,
     pub test_nodes: Vec<NodeId>,
     /// Per-node degree in new-ID order (drives degree-aware cache
@@ -227,32 +232,12 @@ impl Cluster {
         kv.register_partitioned("label", &labels_f32, 1, policy.as_ref());
         let load_secs = t_load.elapsed().as_secs_f64();
 
-        // training-set split (§5.6.1)
+        // training-set split (§5.6.1): derived from the full membership
+        // via the same pure function elastic reconfiguration re-invokes
+        // on every membership change ([`Self::train_sets_for`]) — the
+        // deploy split IS the full-membership split, by construction
         let train: Vec<NodeId> = d2.nodes_with(SplitTag::Train);
-        let machine_sets = split_training_set(
-            train,
-            &node_map,
-            spec.n_machines,
-            1,
-        );
-        let mut train_sets: Vec<Vec<NodeId>> = Vec::new();
-        for (m, set) in machine_sets.into_iter().enumerate() {
-            train_sets.extend(split_within_machine(
-                set,
-                &partitions[m],
-                spec.trainers_per_machine,
-                spec.two_level,
-                spec.seed ^ m as u64,
-            ));
-        }
-        // synchronous SGD: equalize counts exactly (trim to min)
-        let min_len =
-            train_sets.iter().map(|s| s.len()).min().unwrap_or(0);
-        for s in train_sets.iter_mut() {
-            s.truncate(min_len);
-        }
-
-        Ok(Cluster {
+        let mut cluster = Cluster {
             spec,
             artifacts,
             schema,
@@ -264,7 +249,8 @@ impl Cluster {
             sampler_servers,
             partitions,
             degrees: Arc::new(degrees),
-            train_sets,
+            train_sets: Vec::new(),
+            train_ids: train,
             val_nodes: d2.nodes_with(SplitTag::Val),
             test_nodes: d2.nodes_with(SplitTag::Test),
             labels: Arc::new(d2.labels.clone()),
@@ -279,7 +265,49 @@ impl Cluster {
                 imbalance,
             },
             fault: Mutex::new(None),
-        })
+        };
+        let all: Vec<u32> =
+            (0..cluster.spec.n_machines as u32).collect();
+        cluster.train_sets = cluster
+            .train_sets_for(&all, cluster.spec.trainers_per_machine);
+        Ok(cluster)
+    }
+
+    /// Re-split the full training set for an arbitrary surviving machine
+    /// membership (elastic reconfiguration, docs/DESIGN.md §9). Pure in
+    /// `(machines, per_machine)` given the deployed graph: every
+    /// survivor recomputes its share independently and agrees
+    /// byte-for-byte, and for the full machine list this reproduces the
+    /// deploy split exactly (deploy calls it). Equalizes counts to the
+    /// minimum, as synchronous SGD requires identical batch counts.
+    pub fn train_sets_for(
+        &self,
+        machines: &[u32],
+        per_machine: usize,
+    ) -> Vec<Vec<NodeId>> {
+        let machine_sets = split_training_set_for(
+            self.train_ids.clone(),
+            &self.node_map,
+            machines,
+            1,
+        );
+        let mut sets: Vec<Vec<NodeId>> = Vec::new();
+        for (i, set) in machine_sets.into_iter().enumerate() {
+            let m = machines[i] as usize;
+            sets.extend(split_within_machine(
+                set,
+                &self.partitions[m],
+                per_machine,
+                self.spec.two_level,
+                self.spec.seed ^ m as u64,
+            ));
+        }
+        // synchronous SGD: equalize counts exactly (trim to min)
+        let min_len = sets.iter().map(|s| s.len()).min().unwrap_or(0);
+        for s in sets.iter_mut() {
+            s.truncate(min_len);
+        }
+        sets
     }
 
     /// Install a fault-injection / straggler plan cluster-wide: the
@@ -350,7 +378,26 @@ impl Cluster {
         _variant: &str,
         seed: u64,
     ) -> BatchGen {
-        let machine = self.machine_of_trainer(trainer);
+        self.batch_gen_on(
+            self.machine_of_trainer(trainer),
+            self.train_sets[trainer].clone(),
+            vspec,
+            seed,
+        )
+    }
+
+    /// Build a mini-batch generator anchored on an explicit machine over
+    /// an explicit item set — the elastic path, where the (machine,
+    /// items) pair comes from a membership re-split rather than the
+    /// deploy-time trainer grid. [`Self::batch_gen`] is the deploy-grid
+    /// special case.
+    pub fn batch_gen_on(
+        &self,
+        machine: u32,
+        items: Vec<NodeId>,
+        vspec: &VariantSpec,
+        seed: u64,
+    ) -> BatchGen {
         let shape = vspec.shape_spec();
         // an RGCN variant compiled for fewer relations than the schema
         // declares would silently zero the out-of-range relations'
@@ -377,7 +424,6 @@ impl Cluster {
         if let Some(plan) = self.fault.lock().unwrap().clone() {
             sampler.set_fault_plan(plan);
         }
-        let items = self.train_sets[trainer].clone();
         let scheduler = match shape.task {
             TaskKind::NodeClassification => BatchScheduler::for_nodes(
                 items,
@@ -385,7 +431,7 @@ impl Cluster {
                 seed,
             ),
             TaskKind::LinkPrediction => BatchScheduler::for_edges(
-                self.lp_edges(trainer, seed),
+                self.lp_edges_on(machine, &items, seed),
                 shape.batch,
                 self.n_nodes as u64,
                 seed,
@@ -422,8 +468,21 @@ impl Cluster {
     /// shared by [`Self::batch_gen`] and the `api` data-loader builder so
     /// both construct byte-identical schedulers.
     pub fn lp_edges(&self, trainer: usize, seed: u64) -> Vec<(NodeId, NodeId)> {
-        let machine = self.machine_of_trainer(trainer);
-        let items = &self.train_sets[trainer];
+        self.lp_edges_on(
+            self.machine_of_trainer(trainer),
+            &self.train_sets[trainer],
+            seed,
+        )
+    }
+
+    /// [`Self::lp_edges`] over an explicit (machine, items) pair — the
+    /// elastic counterpart, same determinism contract.
+    pub fn lp_edges_on(
+        &self,
+        machine: u32,
+        items: &[NodeId],
+        seed: u64,
+    ) -> Vec<(NodeId, NodeId)> {
         let mut rng = Rng::new(seed ^ 0xE18E5);
         let part = &self.partitions[machine as usize];
         let mut edges = Vec::with_capacity(items.len());
@@ -572,6 +631,36 @@ mod tests {
         assert!(lens.iter().all(|&l| l == lens[0]), "{lens:?}");
         assert!(lens[0] > 0);
         assert!(c.stats.edge_cut > 0);
+    }
+
+    #[test]
+    fn elastic_membership_resplit_matches_a_fresh_smaller_deploy() {
+        // the shrink ≡ fresh-resume foundation: partitioning depends
+        // only on n_machines, so a (2,2) cluster re-split for one
+        // trainer per machine must reproduce a fresh (2,1) deploy's
+        // train sets byte-for-byte
+        let d = DatasetSpec::new("cl", 1500, 6000).generate();
+        let big = Cluster::deploy(
+            &d,
+            ClusterSpec::new(2, 2),
+            artifacts_dir(),
+        )
+        .unwrap();
+        let small = Cluster::deploy(
+            &d,
+            ClusterSpec::new(2, 1),
+            artifacts_dir(),
+        )
+        .unwrap();
+        assert_eq!(big.train_sets_for(&[0, 1], 1), small.train_sets);
+        // full membership reproduces the deploy split exactly
+        assert_eq!(big.train_sets_for(&[0, 1], 2), big.train_sets);
+        // demoting machine 0 keeps the split total and balanced on the
+        // survivor, drawing from the full stored training set
+        let solo = big.train_sets_for(&[1], 2);
+        assert_eq!(solo.len(), 2);
+        assert_eq!(solo[0].len(), solo[1].len());
+        assert!(solo[0].len() * 2 > big.train_ids.len() - 2);
     }
 
     #[test]

@@ -150,6 +150,58 @@ impl RunConfig {
                 self.train.checkpoint_dir = value.to_string()
             }
             "resume_from" => self.train.resume_from = value.to_string(),
+            // SGD momentum over the post-all-reduce mean gradient; 0.0
+            // is plain SGD (byte-identical to the pre-momentum trainer)
+            "momentum" => {
+                let m: f32 =
+                    value.parse().with_context(|| format!("{key}={value}"))?;
+                if !(0.0..1.0).contains(&m) {
+                    bail!("momentum must be in [0, 1), got {value}");
+                }
+                self.train.momentum = m;
+            }
+            // keep only the newest N checkpoints (0 = keep everything)
+            "checkpoint_keep" => {
+                self.train.checkpoint_keep = parse_usize()?
+            }
+            // elastic membership (docs/DESIGN.md §9): planned resize
+            // schedule "E:W,E:W,..." — at cumulative epoch boundary E,
+            // reshape the membership to W trainers
+            "elastic" => {
+                self.train.elastic =
+                    crate::coordinator::parse_elastic_schedule(value)?
+            }
+            // demote machines whose compute step time persistently
+            // exceeds straggler_factor x the fleet median
+            "demote_stragglers" => {
+                self.train.demote_stragglers = parse_bool(value)?
+            }
+            "straggler_factor" => {
+                let f: f64 =
+                    value.parse().with_context(|| format!("{key}={value}"))?;
+                if f <= 1.0 {
+                    bail!("straggler_factor must be > 1, got {value}");
+                }
+                self.train.straggler_factor = f;
+            }
+            "straggler_patience" => {
+                let p = parse_usize()?;
+                if p == 0 {
+                    bail!("straggler_patience must be >= 1");
+                }
+                self.train.straggler_patience = p;
+            }
+            // seconds of epoch-boundary silence before a rank is
+            // declared dead and its machine demoted
+            "heartbeat_timeout" => {
+                let secs: f64 =
+                    value.parse().with_context(|| format!("{key}={value}"))?;
+                if !(secs > 0.0) {
+                    bail!("heartbeat_timeout must be > 0, got {value}");
+                }
+                self.train.heartbeat_timeout =
+                    std::time::Duration::from_secs_f64(secs);
+            }
             _ => bail!(
                 "unknown key {key:?}; valid: dataset feat_dim classes \
                  num_rels dataset_seed machines trainers partitioner \
@@ -157,7 +209,9 @@ impl RunConfig {
                  concurrent_rpc cache_budget_bytes cache_admission \
                  etype_fanouts variant lr epochs max_steps drop_last eval \
                  seed pipeline cpu_prefetch gpu_prefetch num_workers \
-                 checkpoint_every checkpoint_dir resume_from"
+                 checkpoint_every checkpoint_dir resume_from momentum \
+                 checkpoint_keep elastic demote_stragglers \
+                 straggler_factor straggler_patience heartbeat_timeout"
             ),
         }
         Ok(())
@@ -343,6 +397,63 @@ mod tests {
             ["checkpoint_every=x".to_string()]
         )
         .is_err());
+    }
+
+    #[test]
+    fn elastic_knobs_parse_and_default_off() {
+        use crate::coordinator::ResizeEvent;
+        use std::time::Duration;
+        let d = RunConfig::default();
+        assert_eq!(d.train.momentum, 0.0);
+        assert_eq!(d.train.checkpoint_keep, 0);
+        assert!(d.train.elastic.is_empty());
+        assert!(!d.train.demote_stragglers);
+        assert!(!d.train.is_elastic());
+        let cfg = RunConfig::from_args(
+            [
+                "momentum=0.9",
+                "checkpoint_keep=3",
+                "elastic=2:2,4:8",
+                "demote_stragglers=true",
+                "straggler_factor=2.5",
+                "straggler_patience=1",
+                "heartbeat_timeout=0.5",
+            ]
+            .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.train.momentum, 0.9);
+        assert_eq!(cfg.train.checkpoint_keep, 3);
+        assert_eq!(
+            cfg.train.elastic,
+            vec![
+                ResizeEvent { boundary: 2, world: 2 },
+                ResizeEvent { boundary: 4, world: 8 },
+            ]
+        );
+        assert!(cfg.train.demote_stragglers);
+        assert_eq!(cfg.train.straggler_factor, 2.5);
+        assert_eq!(cfg.train.straggler_patience, 1);
+        assert_eq!(
+            cfg.train.heartbeat_timeout,
+            Duration::from_millis(500)
+        );
+        assert!(cfg.train.is_elastic());
+        // validation: each knob rejects out-of-domain values
+        for bad in [
+            "momentum=1.0",
+            "momentum=-0.1",
+            "elastic=2",
+            "elastic=0:4",
+            "straggler_factor=1.0",
+            "straggler_patience=0",
+            "heartbeat_timeout=0",
+        ] {
+            assert!(
+                RunConfig::from_args([bad.to_string()]).is_err(),
+                "{bad} should be rejected"
+            );
+        }
     }
 
     #[test]

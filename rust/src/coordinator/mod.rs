@@ -1,1 +1,644 @@
-// paper's L3 coordination contribution
+//! Coordination layer (paper §L3): the `Coordinator` owns the elastic
+//! membership view of the trainer fleet — rank assignment, the
+//! epoch-boundary barrier, heartbeat-based health, straggler demotion,
+//! and planned grow/shrink events — and publishes a new *membership
+//! epoch* whenever the trainer set changes (docs/DESIGN.md §9).
+//!
+//! The design is deliberately decision-at-the-barrier: health signals
+//! (heartbeats, failure reports, step timings) accumulate freely during
+//! an epoch, but the membership only ever changes at the epoch-boundary
+//! barrier where all surviving ranks rendezvous. That makes every
+//! reconfiguration a clean cut: parameters are synchronized (the
+//! all-reduce ran), pipelines can drain, rank 0 can checkpoint, and the
+//! new view is a pure function of (old view, who is dead/slow, the
+//! planned schedule) — never of arrival order.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+/// One immutable membership epoch: which machines participate and how
+/// many trainer ranks each hosts. Ranks are machine-major —
+/// rank `r` lives on `machines[r / per_machine]` — so the mapping is a
+/// pure function of the view and never of join order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MembershipView {
+    /// Monotonic membership epoch (bumped by every reconfiguration).
+    pub epoch: u64,
+    /// Participating machine ids, ascending.
+    pub machines: Vec<u32>,
+    /// Trainer ranks hosted per machine (uniform grid).
+    pub per_machine: usize,
+}
+
+impl MembershipView {
+    /// The full grid every run starts from: machines `0..n_machines`,
+    /// each hosting `per_machine` ranks.
+    pub fn initial(n_machines: usize, per_machine: usize) -> Self {
+        Self {
+            epoch: 0,
+            machines: (0..n_machines as u32).collect(),
+            per_machine: per_machine.max(1),
+        }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.machines.len() * self.per_machine
+    }
+
+    /// Machine hosting rank `r` (machine-major grid).
+    pub fn machine_of(&self, rank: usize) -> u32 {
+        self.machines[rank / self.per_machine]
+    }
+
+    /// Per-rank machine vector, as `AllReduceGroup::new` expects.
+    pub fn machine_vec(&self) -> Vec<u32> {
+        (0..self.world_size()).map(|r| self.machine_of(r)).collect()
+    }
+}
+
+/// A planned elastic resize: at cumulative epoch-boundary `boundary`,
+/// change the world size to `world` trainers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResizeEvent {
+    pub boundary: u64,
+    pub world: usize,
+}
+
+/// Parse the config `elastic=E:W[,E:W...]` schedule (at the E-th epoch
+/// boundary, resize to W trainers). Events are sorted by boundary;
+/// duplicate boundaries are rejected.
+pub fn parse_elastic_schedule(s: &str) -> Result<Vec<ResizeEvent>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (b, w) = part.split_once(':').ok_or_else(|| {
+            anyhow!("elastic event '{part}' is not of the form E:W")
+        })?;
+        let boundary: u64 = b.trim().parse().map_err(|_| {
+            anyhow!("bad elastic boundary '{b}' (want a positive int)")
+        })?;
+        let world: usize = w.trim().parse().map_err(|_| {
+            anyhow!("bad elastic world '{w}' (want a positive int)")
+        })?;
+        ensure!(boundary > 0, "elastic boundary must be >= 1 in '{part}'");
+        ensure!(world > 0, "elastic world must be >= 1 in '{part}'");
+        out.push(ResizeEvent { boundary, world });
+    }
+    out.sort_by_key(|e| e.boundary);
+    for w in out.windows(2) {
+        ensure!(
+            w[0].boundary != w[1].boundary,
+            "duplicate elastic boundary {}",
+            w[0].boundary
+        );
+    }
+    Ok(out)
+}
+
+/// Coordinator policy knobs (TrainConfig carries the same fields).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// A rank that neither arrives at the barrier nor heartbeats for
+    /// this long is declared dead and its machine demoted. Must exceed
+    /// the slowest expected step.
+    pub heartbeat_timeout: Duration,
+    /// A machine is a straggler when its mean step time exceeds
+    /// `straggler_factor ×` the fleet's (lower-)median machine.
+    pub straggler_factor: f64,
+    /// Consecutive straggling boundaries before demotion.
+    pub straggler_patience: usize,
+    /// Master switch for timing-based demotion (failure-based removal
+    /// is always on).
+    pub demote_stragglers: bool,
+    /// Planned resize schedule, sorted by boundary.
+    pub planned: Vec<ResizeEvent>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            heartbeat_timeout: Duration::from_secs(5),
+            straggler_factor: 3.0,
+            straggler_patience: 2,
+            demote_stragglers: false,
+            planned: Vec::new(),
+        }
+    }
+}
+
+/// What the barrier tells every arriving rank to do next.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Membership unchanged — run the next epoch as-is.
+    Continue,
+    /// Membership changed: drain, checkpoint (rank 0), re-split, and
+    /// rebuild loaders + all-reduce group for this new view.
+    Reconfigure(MembershipView),
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Beat {
+    last: Option<Instant>,
+    secs: f64,
+    n: u64,
+}
+
+struct CoState {
+    view: MembershipView,
+    /// Cumulative epoch boundaries decided (drives `planned` events).
+    boundaries: u64,
+    /// Barrier generation (one per completed boundary).
+    generation: u64,
+    gen_started: Instant,
+    arrived: BTreeSet<usize>,
+    decision: Decision,
+    beats: BTreeMap<usize, Beat>,
+    failed: BTreeSet<usize>,
+    /// Consecutive straggling boundaries, per machine.
+    strikes: BTreeMap<u32, u32>,
+    demotions: u64,
+    shutdown: bool,
+}
+
+/// Membership owner + epoch-boundary barrier. One per elastic run,
+/// shared (`Arc`) by every trainer thread across all membership epochs.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    state: Mutex<CoState>,
+    cv: Condvar,
+}
+
+impl Coordinator {
+    pub fn new(view: MembershipView, cfg: CoordinatorConfig) -> Arc<Self> {
+        Arc::new(Self {
+            cfg,
+            state: Mutex::new(CoState {
+                view,
+                boundaries: 0,
+                generation: 0,
+                gen_started: Instant::now(),
+                arrived: BTreeSet::new(),
+                decision: Decision::Continue,
+                beats: BTreeMap::new(),
+                failed: BTreeSet::new(),
+                strikes: BTreeMap::new(),
+                demotions: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Current membership view (the next round's, once a
+    /// `Reconfigure` decision has been published).
+    pub fn view(&self) -> MembershipView {
+        self.state.lock().unwrap().view.clone()
+    }
+
+    /// Cumulative epoch boundaries decided so far.
+    pub fn boundaries(&self) -> u64 {
+        self.state.lock().unwrap().boundaries
+    }
+
+    /// Machines removed from the membership so far (dead + straggler).
+    pub fn demotions(&self) -> u64 {
+        self.state.lock().unwrap().demotions
+    }
+
+    /// Record one finished step for `rank` (`step_secs` wall time).
+    /// Doubles as the liveness signal for `heartbeat_timeout`.
+    pub fn heartbeat(&self, rank: usize, step_secs: f64) {
+        let mut st = self.state.lock().unwrap();
+        let b = st.beats.entry(rank).or_default();
+        b.last = Some(Instant::now());
+        b.secs += step_secs;
+        b.n += 1;
+    }
+
+    /// Report `rank` unrecoverably failed (e.g. its feature server is
+    /// gone). The rank keeps joining the barrier as a zombie so the
+    /// ring all-reduce never deadlocks; its machine is demoted at the
+    /// next boundary.
+    pub fn report_failure(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.failed.insert(rank);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Release every current and future barrier waiter with
+    /// `Continue` (clean end-of-run; no decision is ever made again).
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Epoch-boundary barrier. Blocks until every rank of the current
+    /// view has arrived (ranks silent longer than `heartbeat_timeout`
+    /// are declared dead instead), then the last arriver decides
+    /// Continue vs Reconfigure and all ranks return that decision.
+    pub fn barrier(&self, rank: usize) -> Decision {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.generation;
+        st.arrived.insert(rank);
+        self.cv.notify_all();
+        loop {
+            if st.shutdown {
+                return Decision::Continue;
+            }
+            if st.generation != gen {
+                // someone else completed this generation
+                return st.decision.clone();
+            }
+            self.reap_stale(&mut st);
+            if Self::complete(&st) {
+                let d = self.decide(&mut st);
+                st.generation = gen + 1;
+                st.arrived.clear();
+                self.cv.notify_all();
+                return d;
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(st, self.cfg.heartbeat_timeout)
+                .unwrap();
+            st = g;
+        }
+    }
+
+    /// Declare dead any rank that has neither arrived nor heartbeat
+    /// within the timeout (measured from its last beat, or from the
+    /// round start if it never reported).
+    fn reap_stale(&self, st: &mut CoState) {
+        let now = Instant::now();
+        for r in 0..st.view.world_size() {
+            if st.arrived.contains(&r) || st.failed.contains(&r) {
+                continue;
+            }
+            let last = st
+                .beats
+                .get(&r)
+                .and_then(|b| b.last)
+                .unwrap_or(st.gen_started);
+            if now.duration_since(last) > self.cfg.heartbeat_timeout {
+                st.failed.insert(r);
+            }
+        }
+    }
+
+    fn complete(st: &CoState) -> bool {
+        (0..st.view.world_size())
+            .all(|r| st.arrived.contains(&r) || st.failed.contains(&r))
+    }
+
+    /// Compute the boundary decision: demote dead/straggling machines,
+    /// apply any planned resize, publish the next view. Pure in
+    /// (old view, failed set, timings, schedule) — survivor identity
+    /// and arrival order never matter.
+    fn decide(&self, st: &mut CoState) -> Decision {
+        st.boundaries += 1;
+        let old = st.view.clone();
+        let mut demoted: BTreeSet<u32> = BTreeSet::new();
+        for &r in &st.failed {
+            demoted.insert(old.machine_of(r));
+        }
+        if self.cfg.demote_stragglers {
+            self.mark_stragglers(st, &old, &mut demoted);
+        }
+        let mut machines: Vec<u32> = old
+            .machines
+            .iter()
+            .copied()
+            .filter(|m| !demoted.contains(m))
+            .collect();
+        if machines.is_empty() {
+            // never demote the last machine standing: keep the old
+            // view and hope the fault heals rather than abandon the run
+            machines = old.machines.clone();
+            demoted.clear();
+        }
+        let mut per = old.per_machine;
+        if let Some(ev) = self
+            .cfg
+            .planned
+            .iter()
+            .find(|e| e.boundary == st.boundaries)
+        {
+            if ev.world >= machines.len() {
+                per = (ev.world / machines.len()).max(1);
+            } else {
+                // shrinking below one rank per machine: keep the
+                // first `world` machines (ascending ids — pure in the
+                // view, not in who asked)
+                machines.truncate(ev.world);
+                per = 1;
+            }
+        }
+        // reset per-round health for the next epoch
+        st.failed.clear();
+        st.beats.clear();
+        st.gen_started = Instant::now();
+        let changed = machines != old.machines || per != old.per_machine;
+        st.decision = if changed {
+            st.demotions += demoted.len() as u64;
+            st.view = MembershipView {
+                epoch: old.epoch + 1,
+                machines,
+                per_machine: per,
+            };
+            Decision::Reconfigure(st.view.clone())
+        } else {
+            Decision::Continue
+        };
+        st.decision.clone()
+    }
+
+    /// Strike machines whose mean step time exceeds
+    /// `straggler_factor ×` the lower-median machine; demote after
+    /// `straggler_patience` consecutive strikes (never below one
+    /// machine). Requires a timing sample from every machine.
+    fn mark_stragglers(
+        &self,
+        st: &mut CoState,
+        old: &MembershipView,
+        demoted: &mut BTreeSet<u32>,
+    ) {
+        let mut means: Vec<(u32, f64)> = Vec::new();
+        for (i, &m) in old.machines.iter().enumerate() {
+            let lo = i * old.per_machine;
+            let mut sum = 0.0;
+            let mut n = 0u64;
+            for r in lo..lo + old.per_machine {
+                if let Some(b) = st.beats.get(&r) {
+                    if b.n > 0 {
+                        sum += b.secs / b.n as f64;
+                        n += 1;
+                    }
+                }
+            }
+            if n > 0 {
+                means.push((m, sum / n as f64));
+            }
+        }
+        if means.len() < old.machines.len() || means.len() < 2 {
+            return;
+        }
+        let mut sorted: Vec<f64> = means.iter().map(|&(_, v)| v).collect();
+        sorted.sort_by(f64::total_cmp);
+        // lower median: with two machines this is the *fast* one, so a
+        // single slow host is compared against its healthy peer
+        let median = sorted[(sorted.len() - 1) / 2];
+        for &(m, mean) in &means {
+            if median > 0.0 && mean > self.cfg.straggler_factor * median {
+                *st.strikes.entry(m).or_insert(0) += 1;
+            } else {
+                st.strikes.remove(&m);
+            }
+        }
+        for &(m, _) in &means {
+            let struck = st.strikes.get(&m).copied().unwrap_or(0)
+                >= self.cfg.straggler_patience as u32;
+            if struck
+                && !demoted.contains(&m)
+                && old.machines.len() - demoted.len() > 1
+            {
+                demoted.insert(m);
+                st.strikes.remove(&m);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run one full barrier round on every rank of the current view.
+    fn round(co: &Arc<Coordinator>) -> Vec<Decision> {
+        let world = co.view().world_size();
+        std::thread::scope(|s| {
+            let hs: Vec<_> = (0..world)
+                .map(|r| {
+                    let co = co.clone();
+                    s.spawn(move || co.barrier(r))
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn membership_view_maps_ranks_machine_major() {
+        let v = MembershipView::initial(3, 2);
+        assert_eq!(v.world_size(), 6);
+        assert_eq!(v.machine_vec(), vec![0, 0, 1, 1, 2, 2]);
+        let shrunk = MembershipView {
+            epoch: 1,
+            machines: vec![0, 2],
+            per_machine: 1,
+        };
+        assert_eq!(shrunk.world_size(), 2);
+        assert_eq!(shrunk.machine_of(1), 2);
+    }
+
+    #[test]
+    fn elastic_schedule_parses_and_rejects_garbage() {
+        let evs = parse_elastic_schedule("3:2, 1:4").unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                ResizeEvent { boundary: 1, world: 4 },
+                ResizeEvent { boundary: 3, world: 2 },
+            ]
+        );
+        assert!(parse_elastic_schedule("").unwrap().is_empty());
+        assert!(parse_elastic_schedule("nope").is_err());
+        assert!(parse_elastic_schedule("0:2").is_err());
+        assert!(parse_elastic_schedule("2:0").is_err());
+        assert!(parse_elastic_schedule("1:2,1:3").is_err());
+    }
+
+    #[test]
+    fn barrier_is_continue_for_a_healthy_round() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig::default(),
+        );
+        co.heartbeat(0, 0.001);
+        co.heartbeat(1, 0.001);
+        let ds = round(&co);
+        assert!(ds.iter().all(|d| *d == Decision::Continue));
+        assert_eq!(co.boundaries(), 1);
+        assert_eq!(co.view().epoch, 0);
+    }
+
+    #[test]
+    fn planned_resize_reshapes_the_membership_at_its_boundary() {
+        // grow 2 -> 4 at boundary 2
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig {
+                planned: vec![ResizeEvent { boundary: 2, world: 4 }],
+                ..Default::default()
+            },
+        );
+        assert!(round(&co).iter().all(|d| *d == Decision::Continue));
+        let ds = round(&co);
+        let want = MembershipView {
+            epoch: 1,
+            machines: vec![0, 1],
+            per_machine: 2,
+        };
+        assert!(ds
+            .iter()
+            .all(|d| *d == Decision::Reconfigure(want.clone())));
+        assert_eq!(co.view(), want);
+        // shrink below one-per-machine: 2 machines -> world 1
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig {
+                planned: vec![ResizeEvent { boundary: 1, world: 1 }],
+                ..Default::default()
+            },
+        );
+        let ds = round(&co);
+        let want = MembershipView {
+            epoch: 1,
+            machines: vec![0],
+            per_machine: 1,
+        };
+        assert!(ds
+            .iter()
+            .all(|d| *d == Decision::Reconfigure(want.clone())));
+        // no machine was *demoted* (planned resize, not a failure)
+        assert_eq!(co.demotions(), 0);
+    }
+
+    #[test]
+    fn dead_rank_demotes_its_machine() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 2),
+            CoordinatorConfig::default(),
+        );
+        co.report_failure(3); // machine 1
+        let ds = round(&co);
+        let want = MembershipView {
+            epoch: 1,
+            machines: vec![0],
+            per_machine: 2,
+        };
+        assert!(ds
+            .iter()
+            .all(|d| *d == Decision::Reconfigure(want.clone())));
+        assert_eq!(co.demotions(), 1);
+    }
+
+    #[test]
+    fn never_demotes_the_last_machine() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig::default(),
+        );
+        co.report_failure(0);
+        co.report_failure(1);
+        let ds = round(&co);
+        assert!(ds.iter().all(|d| *d == Decision::Continue));
+        assert_eq!(co.demotions(), 0);
+        assert_eq!(co.view().machines, vec![0, 1]);
+    }
+
+    #[test]
+    fn straggler_demoted_after_patience_rounds() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig {
+                demote_stragglers: true,
+                straggler_factor: 2.0,
+                straggler_patience: 2,
+                ..Default::default()
+            },
+        );
+        // round 1: machine 1 is 20x slower -> first strike, no demotion
+        co.heartbeat(0, 0.001);
+        co.heartbeat(1, 0.020);
+        assert!(round(&co).iter().all(|d| *d == Decision::Continue));
+        // round 2: still slow -> second strike -> demoted
+        co.heartbeat(0, 0.001);
+        co.heartbeat(1, 0.020);
+        let ds = round(&co);
+        let want = MembershipView {
+            epoch: 1,
+            machines: vec![0],
+            per_machine: 1,
+        };
+        assert!(ds
+            .iter()
+            .all(|d| *d == Decision::Reconfigure(want.clone())));
+        assert_eq!(co.demotions(), 1);
+    }
+
+    #[test]
+    fn straggler_strikes_reset_when_the_machine_recovers() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig {
+                demote_stragglers: true,
+                straggler_factor: 2.0,
+                straggler_patience: 2,
+                ..Default::default()
+            },
+        );
+        co.heartbeat(0, 0.001);
+        co.heartbeat(1, 0.020); // strike 1
+        round(&co);
+        co.heartbeat(0, 0.001);
+        co.heartbeat(1, 0.001); // recovered: strikes reset
+        round(&co);
+        co.heartbeat(0, 0.001);
+        co.heartbeat(1, 0.020); // strike 1 again, not 2
+        assert!(round(&co).iter().all(|d| *d == Decision::Continue));
+        assert_eq!(co.demotions(), 0);
+    }
+
+    #[test]
+    fn silent_rank_is_reaped_after_heartbeat_timeout() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig {
+                heartbeat_timeout: Duration::from_millis(30),
+                ..Default::default()
+            },
+        );
+        co.heartbeat(0, 0.001);
+        // rank 1 never arrives and never beats
+        let d = co.barrier(0);
+        let want = MembershipView {
+            epoch: 1,
+            machines: vec![0],
+            per_machine: 1,
+        };
+        assert_eq!(d, Decision::Reconfigure(want));
+        assert_eq!(co.demotions(), 1);
+    }
+
+    #[test]
+    fn shutdown_releases_barrier_waiters() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig::default(),
+        );
+        std::thread::scope(|s| {
+            let waiter = {
+                let co = co.clone();
+                s.spawn(move || co.barrier(0))
+            };
+            std::thread::sleep(Duration::from_millis(10));
+            co.shutdown();
+            assert_eq!(waiter.join().unwrap(), Decision::Continue);
+        });
+        // future barriers return immediately too
+        assert_eq!(co.barrier(1), Decision::Continue);
+    }
+}

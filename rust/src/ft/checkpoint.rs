@@ -13,6 +13,18 @@
 //! The on-disk format follows `graph/bundle.rs`: magic + version, then
 //! little-endian length-prefixed sections; foreign files and stale
 //! versions are rejected with descriptive errors.
+//!
+//! Version 2 (this header) adds the stateful-optimizer payload —
+//! momentum coefficient + velocity tensors (identical across ranks, so
+//! one copy suffices; see `trainer::apply_momentum`) — and the elastic
+//! [`MembershipView`] the snapshot was taken under, so a resumed run
+//! knows which trainer grid produced it. Version-1 files predate
+//! optimizer state and are rejected: silently resuming them would drop
+//! velocity and break the byte-identity contract.
+//!
+//! Writes are atomic: the encoder streams into `<path>.tmp` and only a
+//! final `rename` publishes the checkpoint, so a crash mid-write can
+//! never leave a truncated file that poisons `resume_from`.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -21,10 +33,11 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::coordinator::MembershipView;
 use crate::kvstore::KvServer;
 
 const MAGIC: u32 = 0xC8EC_4D17;
-const VERSION: u32 = 0xFA00_0001;
+const VERSION: u32 = 0xFA00_0002;
 
 fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -90,6 +103,16 @@ pub struct Checkpoint {
     pub params: Vec<Vec<f32>>,
     /// Per KV server (machine order): `(tensor, dim, rows)`.
     pub shards: Vec<Vec<(String, usize, Vec<f32>)>>,
+    /// Momentum coefficient the run trained with (0.0 = plain SGD,
+    /// `velocity` empty).
+    pub momentum: f32,
+    /// Momentum velocity per parameter tensor. Synchronized params in,
+    /// synchronized mean gradient in — so velocity is identical across
+    /// ranks and one copy restores every rank.
+    pub velocity: Vec<Vec<f32>>,
+    /// Membership epoch the snapshot was taken under (None for
+    /// fixed-membership runs).
+    pub membership: Option<MembershipView>,
 }
 
 impl Checkpoint {
@@ -110,7 +133,27 @@ impl Checkpoint {
             step,
             params: params.to_vec(),
             shards: servers.iter().map(|s| s.export_shards()).collect(),
+            momentum: 0.0,
+            velocity: Vec::new(),
+            membership: None,
         }
+    }
+
+    /// Attach momentum-SGD state (coefficient + per-tensor velocity).
+    pub fn with_optimizer(
+        mut self,
+        momentum: f32,
+        velocity: Vec<Vec<f32>>,
+    ) -> Self {
+        self.momentum = momentum;
+        self.velocity = velocity;
+        self
+    }
+
+    /// Record the membership epoch the snapshot was taken under.
+    pub fn with_membership(mut self, view: MembershipView) -> Self {
+        self.membership = Some(view);
+        self
     }
 
     /// Write the restored shards back into a (re)deployed cluster's
@@ -130,14 +173,18 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Persist to `path`; returns the bytes written.
+    /// Persist to `path`; returns the bytes written. The write is
+    /// crash-safe: everything streams into `<path>.tmp` and a final
+    /// atomic rename publishes it, so `resume_from` never sees a
+    /// truncated file.
     pub fn save(&self, path: &Path) -> Result<u64> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
+        let tmp = tmp_path(path);
         let mut w = BufWriter::new(
-            File::create(path)
-                .with_context(|| format!("create {path:?}"))?,
+            File::create(&tmp)
+                .with_context(|| format!("create {tmp:?}"))?,
         );
         write_u32(&mut w, MAGIC)?;
         write_u32(&mut w, VERSION)?;
@@ -156,7 +203,31 @@ impl Checkpoint {
                 write_f32s(&mut w, data)?;
             }
         }
-        w.flush()?;
+        // v2 sections: optimizer state + membership record
+        write_u32(&mut w, self.momentum.to_bits())?;
+        write_u64(&mut w, self.velocity.len() as u64)?;
+        for v in &self.velocity {
+            write_f32s(&mut w, v)?;
+        }
+        match &self.membership {
+            None => write_u32(&mut w, 0)?,
+            Some(view) => {
+                write_u32(&mut w, 1)?;
+                write_u64(&mut w, view.epoch)?;
+                write_u64(&mut w, view.per_machine as u64)?;
+                write_u64(&mut w, view.machines.len() as u64)?;
+                for &m in &view.machines {
+                    write_u32(&mut w, m)?;
+                }
+            }
+        }
+        let f = w
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flush {tmp:?}: {e}"))?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publish {tmp:?} -> {path:?}"))?;
         Ok(std::fs::metadata(path)?.len())
     }
 
@@ -195,8 +266,78 @@ impl Checkpoint {
             }
             shards.push(server);
         }
-        Ok(Checkpoint { seed, step, params, shards })
+        let momentum = f32::from_bits(read_u32(&mut r)?);
+        let n_vel = read_u64(&mut r)? as usize;
+        let mut velocity = Vec::with_capacity(n_vel);
+        for _ in 0..n_vel {
+            velocity.push(read_f32s(&mut r)?);
+        }
+        let membership = match read_u32(&mut r)? {
+            0 => None,
+            1 => {
+                let epoch = read_u64(&mut r)?;
+                let per_machine = read_u64(&mut r)? as usize;
+                let n_m = read_u64(&mut r)? as usize;
+                let mut machines = Vec::with_capacity(n_m);
+                for _ in 0..n_m {
+                    machines.push(read_u32(&mut r)?);
+                }
+                Some(MembershipView { epoch, machines, per_machine })
+            }
+            x => bail!("bad membership flag {x} in {path:?}"),
+        };
+        Ok(Checkpoint {
+            seed,
+            step,
+            params,
+            shards,
+            momentum,
+            velocity,
+            membership,
+        })
     }
+
+    /// Delete all but the newest `keep` checkpoints in `dir` (plus any
+    /// orphaned `.tmp` from a crashed writer). `keep == 0` disables
+    /// pruning. Returns how many files were removed.
+    pub fn prune(dir: &Path, keep: usize) -> Result<usize> {
+        if keep == 0 || !dir.exists() {
+            return Ok(0);
+        }
+        let mut ckpts: Vec<PathBuf> = Vec::new();
+        let mut removed = 0usize;
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            let name = match p.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n,
+                None => continue,
+            };
+            if name.starts_with("ckpt_") && name.ends_with(".ckpt.tmp")
+            {
+                std::fs::remove_file(&p)?;
+                removed += 1;
+            } else if name.starts_with("ckpt_")
+                && name.ends_with(".ckpt")
+            {
+                ckpts.push(p);
+            }
+        }
+        // zero-padded step numbers: name order == step order
+        ckpts.sort();
+        let n = ckpts.len();
+        for p in ckpts.into_iter().take(n.saturating_sub(keep)) {
+            std::fs::remove_file(&p)?;
+            removed += 1;
+        }
+        Ok(removed)
+    }
+}
+
+/// `<path>.tmp` sibling used for the atomic write.
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
 }
 
 #[cfg(test)]
@@ -226,12 +367,32 @@ mod tests {
                 ],
                 vec![("feat".into(), 3, vec![-1.0f32; 6])],
             ],
+            momentum: 0.9,
+            velocity: vec![vec![0.125, -0.25, 0.5], vec![1.0; 5]],
+            membership: Some(MembershipView {
+                epoch: 3,
+                machines: vec![0, 2],
+                per_machine: 2,
+            }),
         };
         let p = tmp("rt.ckpt");
         let bytes = ck.save(&p).unwrap();
         assert!(bytes > 0);
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(ck, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn plain_sgd_checkpoint_roundtrips_without_optimizer_state() {
+        // capture() defaults: momentum 0, no velocity, no membership
+        let ck = Checkpoint::capture(3, 5, &[vec![1.0f32; 4]], &[]);
+        assert_eq!(ck.momentum, 0.0);
+        assert!(ck.velocity.is_empty());
+        assert!(ck.membership.is_none());
+        let p = tmp("plain.ckpt");
+        ck.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), ck);
         std::fs::remove_file(&p).ok();
     }
 
@@ -249,6 +410,60 @@ mod tests {
         let err = Checkpoint::load(&p).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_pre_momentum_v1_checkpoints_descriptively() {
+        // a PR 6 era file: right magic, version 1 header — it has no
+        // optimizer-state sections, so silently accepting it would
+        // resume with dropped velocity and break byte-identity
+        let p = tmp("v1.ckpt");
+        let mut bytes = MAGIC.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&0xFA00_0001u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 24]); // seed/step/empty sections
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("0xfa000001"), "{err}");
+        assert!(err.contains("0xfa000002 expected"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_tmp_file() {
+        let ck = Checkpoint::capture(1, 2, &[vec![1.0f32]], &[]);
+        let p = tmp("atomic.ckpt");
+        ck.save(&p).unwrap();
+        assert!(p.exists());
+        assert!(
+            !tmp_path(&p).exists(),
+            "tmp file must be renamed away"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn prune_keeps_the_newest_n_and_sweeps_orphaned_tmps() {
+        let dir = std::env::temp_dir().join("ddgl_ckpt_prune_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = Checkpoint::capture(1, 0, &[], &[]);
+        for step in [2u64, 4, 8, 16] {
+            ck.save(&Checkpoint::path_for(&dir, step)).unwrap();
+        }
+        // a crashed writer's leftover
+        let orphan = dir.join("ckpt_00000099.ckpt.tmp");
+        std::fs::write(&orphan, b"partial").unwrap();
+        // keep = 0 disables pruning entirely
+        assert_eq!(Checkpoint::prune(&dir, 0).unwrap(), 0);
+        assert!(Checkpoint::path_for(&dir, 2).exists());
+        let removed = Checkpoint::prune(&dir, 2).unwrap();
+        assert_eq!(removed, 3); // steps 2, 4 + the orphan
+        assert!(!Checkpoint::path_for(&dir, 2).exists());
+        assert!(!Checkpoint::path_for(&dir, 4).exists());
+        assert!(Checkpoint::path_for(&dir, 8).exists());
+        assert!(Checkpoint::path_for(&dir, 16).exists());
+        assert!(!orphan.exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -290,6 +505,9 @@ mod tests {
             step: 0,
             params: vec![],
             shards: vec![vec![]],
+            momentum: 0.0,
+            velocity: vec![],
+            membership: None,
         };
         let cluster = KvCluster::new(2, Arc::new(CostModel::default()));
         assert!(ck.restore(&cluster.servers).is_err());

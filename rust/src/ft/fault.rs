@@ -56,6 +56,13 @@ pub struct FaultPlan {
     pub drop_every: u64,
     /// Added latency per transport message (straggler link).
     pub delay: Duration,
+    /// Per-machine *compute* slowdown: every train step taken by a
+    /// trainer on `machine` sleeps this long (an oversubscribed or
+    /// thermally-throttled host). Unlike `delay`/CostModel link
+    /// slowdowns — which are symmetric across a link — this perturbs
+    /// one machine's step timings only, which is exactly the signal
+    /// the coordinator's straggler demotion keys off.
+    pub step_slowdowns: Vec<(u32, Duration)>,
     /// Failed requests are retried this many times before the caller
     /// sees [`RpcError::ServerDown`].
     pub max_retries: u32,
@@ -69,6 +76,7 @@ pub struct FaultPlan {
     sampler_failures: AtomicU64,
     dropped_msgs: AtomicU64,
     delayed_msgs: AtomicU64,
+    straggler_steps: AtomicU64,
 }
 
 impl Default for FaultPlan {
@@ -87,6 +95,7 @@ impl FaultPlan {
             sampler_outages: Vec::new(),
             drop_every: 0,
             delay: Duration::ZERO,
+            step_slowdowns: Vec::new(),
             max_retries: 3,
             backoff: Duration::from_millis(1),
             kv_calls: AtomicU64::new(0),
@@ -97,6 +106,7 @@ impl FaultPlan {
             sampler_failures: AtomicU64::new(0),
             dropped_msgs: AtomicU64::new(0),
             delayed_msgs: AtomicU64::new(0),
+            straggler_steps: AtomicU64::new(0),
         }
     }
 
@@ -178,6 +188,27 @@ impl FaultPlan {
         true
     }
 
+    /// Injected compute slowdown for one train step on `machine`
+    /// (`Duration::ZERO` when the machine is healthy). The trainer
+    /// sleeps this inside the step so the coordinator's heartbeat
+    /// timings see it.
+    pub fn step_delay(&self, machine: u32) -> Duration {
+        let d: Duration = self
+            .step_slowdowns
+            .iter()
+            .filter(|(m, _)| *m == machine)
+            .map(|&(_, d)| d)
+            .sum();
+        if !d.is_zero() {
+            self.straggler_steps.fetch_add(1, Ordering::Relaxed);
+        }
+        d
+    }
+
+    pub fn straggler_steps(&self) -> u64 {
+        self.straggler_steps.load(Ordering::Relaxed)
+    }
+
     pub fn retries(&self) -> u64 {
         self.retries.load(Ordering::Relaxed)
     }
@@ -207,6 +238,7 @@ impl FaultPlan {
         );
         m.inc("ft.dropped_msgs", self.dropped_msgs());
         m.inc("ft.delayed_msgs", self.delayed_msgs());
+        m.inc("ft.straggler_steps", self.straggler_steps());
     }
 }
 
@@ -265,6 +297,17 @@ mod tests {
             (0..9).filter(|_| p.admit_message()).count();
         assert_eq!(delivered, 6);
         assert_eq!(p.dropped_msgs(), 3);
+    }
+
+    #[test]
+    fn step_slowdown_hits_only_its_machine() {
+        let mut p = fast(FaultPlan::new());
+        p.step_slowdowns =
+            vec![(1, Duration::from_millis(3))];
+        assert_eq!(p.step_delay(0), Duration::ZERO);
+        assert_eq!(p.step_delay(1), Duration::from_millis(3));
+        assert_eq!(p.step_delay(1), Duration::from_millis(3));
+        assert_eq!(p.straggler_steps(), 2);
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod baselines;
 pub mod benchsuite;
 pub mod cluster;
 pub mod config;
+pub mod coordinator;
 pub mod ft;
 pub mod graph;
 pub mod kvstore;

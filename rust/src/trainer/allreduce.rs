@@ -9,10 +9,52 @@
 //! endpoint→machine mapping; same-machine hops are free (NVLink/shared
 //! memory in the paper's g4dn nodes).
 
+use std::fmt;
 use std::sync::Arc;
 
 use crate::net::transport::{Endpoint, Port, Transport};
 use crate::net::CostModel;
+
+/// Typed collective failures. A duplicate-rank bug or a dropped ring
+/// peer surfaces as a descriptive `Err` the caller can drain on — not
+/// a panic that poisons the group mutex across trainer threads.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AllReduceError {
+    /// `endpoint(rank)` was called twice for the same rank.
+    AlreadyClaimed { rank: usize },
+    /// `endpoint(rank)` with `rank >= world`.
+    RankOutOfRange { rank: usize, world: usize },
+    /// A ring neighbour's mailbox closed mid-collective (the rank
+    /// died): the reduction cannot complete. With the in-process
+    /// transport the fabric outlives every participant, so this arm
+    /// is the contract for a future socket transport; live-rank loss
+    /// is instead handled above the ring (the coordinator keeps dead
+    /// ranks participating as zombies until the epoch boundary).
+    PeerDropped { rank: usize, phase: &'static str, step: usize },
+}
+
+impl fmt::Display for AllReduceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::AlreadyClaimed { rank } => write!(
+                f,
+                "all-reduce participant {rank} already claimed \
+                 (duplicate rank in the trainer grid?)"
+            ),
+            Self::RankOutOfRange { rank, world } => write!(
+                f,
+                "all-reduce rank {rank} out of range for world {world}"
+            ),
+            Self::PeerDropped { rank, phase, step } => write!(
+                f,
+                "ring peer of rank {rank} dropped during {phase} \
+                 step {step}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AllReduceError {}
 
 pub struct AllReduceGroup {
     /// Keeps the fabric (and its cost meter) alive for the group's life.
@@ -36,17 +78,29 @@ impl AllReduceGroup {
         })
     }
 
-    /// Claim trainer `t`'s participant handle (once).
-    pub fn endpoint(self: &Arc<Self>, t: usize) -> Participant {
-        let ep = self.endpoints.lock().unwrap()[t]
+    /// Claim trainer `t`'s participant handle (once). A second claim
+    /// or an out-of-range rank is a typed error, and the group stays
+    /// usable for the other ranks.
+    pub fn endpoint(
+        self: &Arc<Self>,
+        t: usize,
+    ) -> Result<Participant, AllReduceError> {
+        let mut slots = self.endpoints.lock().unwrap();
+        if t >= slots.len() {
+            return Err(AllReduceError::RankOutOfRange {
+                rank: t,
+                world: self.n,
+            });
+        }
+        let ep = slots[t]
             .take()
-            .expect("participant already claimed");
-        Participant {
+            .ok_or(AllReduceError::AlreadyClaimed { rank: t })?;
+        Ok(Participant {
             ep,
             rank: t,
             n: self.n,
             seq: std::cell::Cell::new(0),
-        }
+        })
     }
 }
 
@@ -60,9 +114,12 @@ pub struct Participant {
 impl Participant {
     /// In-place mean all-reduce across the group. All participants must
     /// call with identically-shaped data each round.
-    pub fn allreduce_mean(&self, data: &mut [f32]) {
+    pub fn allreduce_mean(
+        &self,
+        data: &mut [f32],
+    ) -> Result<(), AllReduceError> {
         if self.n == 1 {
-            return;
+            return Ok(());
         }
         let seq = self.seq.get();
         self.seq.set(seq + 1);
@@ -90,7 +147,13 @@ impl Participant {
                 tag(seq, 0, s),
                 f32s_to_bytes(&data[r]),
             );
-            let msg = self.ep.recv().expect("ring peer dropped");
+            let msg = self.ep.recv().ok_or(
+                AllReduceError::PeerDropped {
+                    rank,
+                    phase: "reduce-scatter",
+                    step: s,
+                },
+            )?;
             debug_assert_eq!(msg.tag, tag(seq, 0, s));
             let recv_idx = (rank + n - s - 1) % n;
             let r = chunk(recv_idx);
@@ -112,7 +175,13 @@ impl Participant {
                 tag(seq, 1, s),
                 f32s_to_bytes(&data[r]),
             );
-            let msg = self.ep.recv().expect("ring peer dropped");
+            let msg = self.ep.recv().ok_or(
+                AllReduceError::PeerDropped {
+                    rank,
+                    phase: "all-gather",
+                    step: s,
+                },
+            )?;
             debug_assert_eq!(msg.tag, tag(seq, 1, s));
             let recv_idx = (rank + n - s) % n;
             let r = chunk(recv_idx);
@@ -126,23 +195,28 @@ impl Participant {
         for d in data.iter_mut() {
             *d *= inv;
         }
+        Ok(())
     }
 
     /// Mean all-reduce over a parameter list (flattens per tensor).
-    pub fn allreduce_params(&self, params: &mut [Vec<f32>]) {
+    pub fn allreduce_params(
+        &self,
+        params: &mut [Vec<f32>],
+    ) -> Result<(), AllReduceError> {
         // single flat buffer: fewer ring rounds, matches DDP bucketing
         let total: usize = params.iter().map(|p| p.len()).sum();
         let mut flat = Vec::with_capacity(total);
         for p in params.iter() {
             flat.extend_from_slice(p);
         }
-        self.allreduce_mean(&mut flat);
+        self.allreduce_mean(&mut flat)?;
         let mut off = 0;
         for p in params.iter_mut() {
             let len = p.len();
             p.copy_from_slice(&flat[off..off + len]);
             off += len;
         }
+        Ok(())
     }
 }
 
@@ -172,9 +246,9 @@ mod tests {
             .collect();
         let mut handles = Vec::new();
         for (t, mut data) in inputs.clone().into_iter().enumerate() {
-            let p = group.endpoint(t);
+            let p = group.endpoint(t).unwrap();
             handles.push(std::thread::spawn(move || {
-                p.allreduce_mean(&mut data);
+                p.allreduce_mean(&mut data).unwrap();
                 data
             }));
         }
@@ -227,12 +301,12 @@ mod tests {
         let group = AllReduceGroup::new((0..n as u32).collect(), cost);
         let mut handles = Vec::new();
         for t in 0..n {
-            let p = group.endpoint(t as usize);
+            let p = group.endpoint(t as usize).unwrap();
             handles.push(std::thread::spawn(move || {
                 let mut params =
                     vec![vec![t as f32; 5], vec![(t * 10) as f32; 3]];
                 for _round in 0..4 {
-                    p.allreduce_params(&mut params);
+                    p.allreduce_params(&mut params).unwrap();
                 }
                 params
             }));
@@ -254,10 +328,10 @@ mod tests {
             AllReduceGroup::new(vec![0, 0, 1, 1], cost.clone());
         let mut handles = Vec::new();
         for t in 0..4 {
-            let p = group.endpoint(t);
+            let p = group.endpoint(t).unwrap();
             handles.push(std::thread::spawn(move || {
                 let mut d = vec![t as f32; 40];
-                p.allreduce_mean(&mut d);
+                p.allreduce_mean(&mut d).unwrap();
             }));
         }
         for h in handles {
@@ -269,4 +343,31 @@ mod tests {
         let total_payload = 4 * 2 * 3 * (10 * 4 + 24); // n * phases * steps * (chunk+hdr)
         assert!(bytes < total_payload as u64, "{bytes}");
     }
+
+    #[test]
+    fn duplicate_claim_is_a_typed_error_not_a_panic() {
+        let cost = Arc::new(CostModel::default());
+        let group = AllReduceGroup::new(vec![0, 0], cost);
+        let _p0 = group.endpoint(0).unwrap();
+        assert_eq!(
+            group.endpoint(0).unwrap_err(),
+            AllReduceError::AlreadyClaimed { rank: 0 }
+        );
+        // the group mutex is not poisoned: other ranks still claim
+        let _p1 = group.endpoint(1).unwrap();
+        let msg =
+            AllReduceError::AlreadyClaimed { rank: 0 }.to_string();
+        assert!(msg.contains("participant 0"), "{msg}");
+    }
+
+    #[test]
+    fn out_of_range_rank_is_a_typed_error() {
+        let cost = Arc::new(CostModel::default());
+        let group = AllReduceGroup::new(vec![0, 1], cost);
+        assert_eq!(
+            group.endpoint(7).unwrap_err(),
+            AllReduceError::RankOutOfRange { rank: 7, world: 2 }
+        );
+    }
+
 }

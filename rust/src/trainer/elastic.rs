@@ -1,0 +1,550 @@
+//! Elastic-membership training driver (docs/DESIGN.md §9).
+//!
+//! Runs synchronous data-parallel SGD in *rounds*: within a round the
+//! membership is frozen and every rank executes the classic step loop
+//! (batch → device → ring all-reduce → momentum); at each epoch
+//! boundary every surviving rank rendezvouses at the
+//! [`Coordinator`] barrier, which decides `Continue` or
+//! `Reconfigure(new view)` from the health signals accumulated during
+//! the epoch (heartbeats, failure reports, planned resizes).
+//!
+//! On `Reconfigure` the round ends as a clean cut:
+//!
+//! 1. **drain** — every rank drops its loader, joining the sampling
+//!    workers;
+//! 2. **checkpoint** — the driver captures params + momentum velocity +
+//!    the new membership record (rank state is synchronized at the
+//!    boundary, so one copy is exact for everyone);
+//! 3. **re-split** — [`Cluster::train_sets_for`] recomputes every
+//!    survivor's training share as a pure function of the new
+//!    membership, and loaders + the all-reduce group are rebuilt for
+//!    the new world size, resuming the batch stream at the boundary's
+//!    global step;
+//! 4. **warmup** — the next round's first batch refills the pipeline.
+//!
+//! Determinism contract (test-enforced): because the re-split is pure
+//! and per-rank loader seeds depend only on the logical rank, a run
+//! that shrinks at boundary E streams byte-identical batches per rank —
+//! and lands on byte-identical parameters — as a fresh deployment of
+//! the smaller world resumed from the boundary checkpoint.
+//!
+//! A rank that loses its feature/sampler servers mid-epoch
+//! (unrecoverable [`RpcError`](crate::net::RpcError)) cannot simply
+//! exit: the ring all-reduce would deadlock. It becomes a *zombie* —
+//! reports the failure, drops its loader, and keeps joining the
+//! collective with unchanged parameters (and the same post-all-reduce
+//! momentum update, which is rank-identical) until the boundary, where
+//! the coordinator demotes its machine.
+//!
+//! Heartbeats carry *compute-only* step time — measured **before** the
+//! all-reduce. The collective synchronizes every rank to the slowest
+//! one, so a heartbeat taken after it would show near-identical times
+//! on every machine and mask the very stragglers it is meant to expose.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::api::{DistGraph, DistNodeDataLoader, Seeds};
+use crate::cluster::Cluster;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, Decision, MembershipView,
+};
+use crate::ft::Checkpoint;
+use crate::metrics::Metrics;
+
+use super::{
+    apply_momentum, epoch_windows, AllReduceGroup, DeviceExecutor,
+    EpochStats, TrainConfig, TrainReport,
+};
+
+/// One membership reconfiguration, with its cost decomposition — the
+/// `BENCH_elastic.json` row and the `reconfigurations` entries in
+/// [`TrainReport`].
+#[derive(Clone, Debug)]
+pub struct ReconfigStats {
+    /// Cumulative epoch-boundary count at which the decision was made.
+    pub boundary: u64,
+    /// Global step of the clean cut (== the checkpoint's step).
+    pub at_step: usize,
+    pub from_world: usize,
+    pub to_world: usize,
+    /// Machines removed by failure or straggler demotion (empty for a
+    /// planned resize).
+    pub demoted_machines: Vec<u32>,
+    /// Max over ranks of the pipeline-teardown time.
+    pub drain_secs: f64,
+    /// Reconfiguration checkpoint capture + write (0.0 when the run has
+    /// no `checkpoint_dir`).
+    pub checkpoint_secs: f64,
+    /// Membership re-split + loader/all-reduce rebuild.
+    pub resplit_secs: f64,
+    /// Next round's time-to-first-batch (pipeline refill), max over
+    /// ranks.
+    pub warmup_secs: f64,
+}
+
+/// What one rank thread hands back at the end of a round.
+struct RoundOut {
+    /// Losses from the round's executed steps (shorter than the round
+    /// for a zombie — it stops training but keeps synchronizing).
+    losses: Vec<f32>,
+    params: Vec<Vec<f32>>,
+    velocity: Vec<Vec<f32>>,
+    /// The barrier decision that ended the round (`Continue` = ran to
+    /// the final step).
+    decision: Decision,
+    /// Global step after the round's last executed step.
+    stopped_at: usize,
+    drain_secs: f64,
+    first_batch_secs: f64,
+}
+
+/// Elastic counterpart of [`super::train`] — entered through it
+/// whenever [`TrainConfig::is_elastic`] holds.
+pub fn train_elastic(
+    cluster: &Cluster,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let metrics = Arc::new(Metrics::new());
+
+    // Device executors for every deployed machine: a demoted machine's
+    // executor idles, and a planned grow can re-occupy it.
+    let mut devices = Vec::with_capacity(cluster.spec.n_machines);
+    for _ in 0..cluster.spec.n_machines {
+        devices.push(DeviceExecutor::spawn(
+            cluster.artifacts.clone(),
+            cfg.variant.clone(),
+            Some(cluster.cost.clone()),
+        )?);
+    }
+    let mut params = devices[0].initial_params()?;
+    let spec = devices[0].spec()?;
+    anyhow::ensure!(
+        spec.model != crate::sampler::compact::ModelKind::Rgcn
+            || spec.num_rels >= cluster.schema.n_etypes(),
+        "variant {:?} compiled for {} relations but the deployed schema \
+         declares {} etypes — use the matching artifact (e.g. \
+         rgcn_nc_mag) or align the dataset with num_rels=<n>",
+        spec.name,
+        spec.num_rels,
+        cluster.schema.n_etypes()
+    );
+
+    // Exact resume, same contract as the classic loop — which is what a
+    // post-shrink "fresh" deployment runs, so the two must agree byte
+    // for byte on everything restored here.
+    let mut start_step = 0usize;
+    let mut ft_recovery_secs = 0.0f64;
+    let mut velocity: Vec<Vec<f32>> = Vec::new();
+    if !cfg.resume_from.is_empty() {
+        let t_rec = Instant::now();
+        let ck = Checkpoint::load(Path::new(&cfg.resume_from))?;
+        anyhow::ensure!(
+            ck.seed == cfg.seed,
+            "checkpoint {} was written by a run with seed {}, this run \
+             uses {} — the replayed stream would differ",
+            cfg.resume_from,
+            ck.seed,
+            cfg.seed
+        );
+        anyhow::ensure!(
+            ck.momentum == cfg.momentum,
+            "checkpoint {} was written with momentum {}, this run uses \
+             {} — the resumed optimizer state would be inconsistent",
+            cfg.resume_from,
+            ck.momentum,
+            cfg.momentum
+        );
+        ck.restore(&cluster.kv.servers)?;
+        start_step = ck.step as usize;
+        params = ck.params;
+        velocity = ck.velocity;
+        ft_recovery_secs = t_rec.elapsed().as_secs_f64();
+    }
+
+    let co = Coordinator::new(
+        MembershipView::initial(
+            cluster.spec.n_machines,
+            cluster.spec.trainers_per_machine,
+        ),
+        CoordinatorConfig {
+            heartbeat_timeout: cfg.heartbeat_timeout,
+            straggler_factor: cfg.straggler_factor,
+            straggler_patience: cfg.straggler_patience,
+            demote_stragglers: cfg.demote_stragglers,
+            planned: cfg.elastic.clone(),
+        },
+    );
+    let graph = DistGraph::new(cluster);
+    let plan = cluster.fault_plan();
+
+    let mut merged: Vec<f32> = Vec::new();
+    let mut reconfigs: Vec<ReconfigStats> = Vec::new();
+    let mut pending: Option<ReconfigStats> = None;
+    let mut total_steps = cfg.max_steps;
+    let mut spe0 = 0usize;
+    let mut start = start_step;
+    let cost0 = cluster.cost.snapshot();
+    let t0 = Instant::now();
+
+    loop {
+        let view = co.view();
+        let world = view.world_size();
+
+        // re-split + rebuild: a pure function of the membership view,
+        // so every round (and any fresh deployment of the same world)
+        // computes identical shares
+        let t_resplit = Instant::now();
+        let sets =
+            cluster.train_sets_for(&view.machines, view.per_machine);
+        let mut loaders = Vec::with_capacity(world);
+        for r in 0..world {
+            loaders.push(
+                DistNodeDataLoader::builder(&graph, &spec)
+                    .machine(view.machine_of(r))
+                    .seeds(Seeds::Nodes(sets[r].clone()))
+                    .drop_last(cfg.drop_last)
+                    .seed(cfg.seed ^ (r as u64) << 17)
+                    .start_at(start as u64)
+                    .pipeline(cfg.pipeline.clone())
+                    .metrics(metrics.clone())
+                    .build()?,
+            );
+        }
+        let spe = loaders[0].len().max(1);
+        let ar =
+            AllReduceGroup::new(view.machine_vec(), cluster.cost.clone());
+        if let Some(p) = pending.as_mut() {
+            p.resplit_secs = t_resplit.elapsed().as_secs_f64();
+        }
+        if total_steps == 0 {
+            total_steps = cfg.epochs * spe;
+        }
+        if spe0 == 0 {
+            spe0 = spe;
+            anyhow::ensure!(
+                start_step < total_steps,
+                "resume step {start_step} is not before the run's last \
+                 step {total_steps} — nothing left to train"
+            );
+        }
+
+        let mut handles = Vec::with_capacity(world);
+        for (r, loader) in loaders.into_iter().enumerate() {
+            let machine = view.machine_of(r);
+            let device = devices[machine as usize].handle();
+            let ep = ar.endpoint(r)?;
+            let co = co.clone();
+            let plan = plan.clone();
+            let metrics = metrics.clone();
+            let mut params = params.clone();
+            let mut velocity = velocity.clone();
+            let lr = cfg.lr;
+            let momentum = cfg.momentum;
+            let round_start = start;
+            // rank 0 keeps the classic cadence checkpoints; elastic
+            // runs stamp the current membership into them as well
+            let write_ckpt = r == 0
+                && cfg.checkpoint_every > 0
+                && !cfg.checkpoint_dir.is_empty();
+            let ckpt_every = cfg.checkpoint_every.max(1);
+            let ckpt_dir = cfg.checkpoint_dir.clone();
+            let ckpt_keep = cfg.checkpoint_keep;
+            let ckpt_seed = cfg.seed;
+            let ck_view = view.clone();
+            let servers = cluster.kv.servers.clone();
+            handles.push(std::thread::spawn(
+                move || -> Result<RoundOut> {
+                    let mut loader = Some(loader);
+                    let mut losses = Vec::new();
+                    let mut prev: Vec<Vec<f32>> = Vec::new();
+                    let mut drain_secs = 0.0f64;
+                    let mut first_batch_secs = 0.0f64;
+                    let mut decision = Decision::Continue;
+                    let mut stopped_at = total_steps;
+                    for step in round_start..total_steps {
+                        let t_step = Instant::now();
+                        if let Some(ld) = loader.as_mut() {
+                            let fetched =
+                                metrics.time("trainer.wait_batch", || {
+                                    ld.try_next_batch()
+                                });
+                            match fetched {
+                                Ok(batch) => {
+                                    if step == round_start {
+                                        first_batch_secs =
+                                            t_step.elapsed().as_secs_f64();
+                                    }
+                                    metrics.inc(
+                                        "trainer.remote_rows",
+                                        batch.remote_rows as u64,
+                                    );
+                                    metrics.inc(
+                                        "trainer.dropped_nbrs",
+                                        batch.dropped_neighbors as u64,
+                                    );
+                                    if momentum > 0.0 {
+                                        prev.clone_from(&params);
+                                    }
+                                    let (loss, spent) =
+                                        metrics.time("trainer.device", || {
+                                            device.train_reusing(
+                                                &mut params,
+                                                batch,
+                                                lr,
+                                            )
+                                        })?;
+                                    loader.as_ref().unwrap().recycle(spent);
+                                    losses.push(loss);
+                                }
+                                Err(_) => {
+                                    // zombie mode: the pipeline is
+                                    // unrecoverable, but leaving the
+                                    // ring would deadlock everyone —
+                                    // report, drain, keep synchronizing
+                                    // with unchanged params until the
+                                    // boundary demotes this machine
+                                    co.report_failure(r);
+                                    let t_drain = Instant::now();
+                                    drop(loader.take());
+                                    drain_secs =
+                                        t_drain.elapsed().as_secs_f64();
+                                    if momentum > 0.0 {
+                                        prev.clone_from(&params);
+                                    }
+                                }
+                            }
+                        } else if momentum > 0.0 {
+                            // a zombie's "gradient" is exactly zero:
+                            // prev == params, so the momentum update
+                            // below matches every live rank's
+                            prev.clone_from(&params);
+                        }
+                        // injected asymmetric compute slowdown (the
+                        // straggler the coordinator is meant to catch)
+                        if let Some(p) = plan.as_ref() {
+                            let d = p.step_delay(machine);
+                            if !d.is_zero() {
+                                std::thread::sleep(d);
+                            }
+                        }
+                        // compute-only step time, taken BEFORE the
+                        // all-reduce (which would equalize all ranks)
+                        let compute_secs = t_step.elapsed().as_secs_f64();
+                        metrics.time("trainer.allreduce", || {
+                            ep.allreduce_params(&mut params)
+                        })?;
+                        if momentum > 0.0 {
+                            apply_momentum(
+                                &mut params,
+                                &prev,
+                                &mut velocity,
+                                momentum,
+                                lr,
+                            );
+                        }
+                        if write_ckpt && (step + 1) % ckpt_every == 0 {
+                            let at = (step + 1) as u64;
+                            let ck = Checkpoint::capture(
+                                ckpt_seed, at, &params, &servers,
+                            )
+                            .with_optimizer(momentum, velocity.clone())
+                            .with_membership(ck_view.clone());
+                            let bytes = ck.save(&Checkpoint::path_for(
+                                Path::new(&ckpt_dir),
+                                at,
+                            ))?;
+                            Checkpoint::prune(
+                                Path::new(&ckpt_dir),
+                                ckpt_keep,
+                            )?;
+                            metrics.inc("ft.checkpoints", 1);
+                            metrics.inc("ft.checkpoint_bytes", bytes);
+                        }
+                        co.heartbeat(r, compute_secs);
+                        // epoch boundary (global step axis): rendezvous
+                        // for the membership decision — no barrier
+                        // after the run's final step
+                        if (step + 1) % spe == 0 && step + 1 < total_steps
+                        {
+                            if let Decision::Reconfigure(v) = co.barrier(r)
+                            {
+                                decision = Decision::Reconfigure(v);
+                                stopped_at = step + 1;
+                                break;
+                            }
+                        }
+                    }
+                    // drain: tear down the sampling pipeline before the
+                    // re-split (a zombie already did)
+                    if loader.is_some() {
+                        let t_drain = Instant::now();
+                        drop(loader.take());
+                        drain_secs = t_drain.elapsed().as_secs_f64();
+                    }
+                    Ok(RoundOut {
+                        losses,
+                        params,
+                        velocity,
+                        decision,
+                        stopped_at,
+                        drain_secs,
+                        first_batch_secs,
+                    })
+                },
+            ));
+        }
+
+        let mut outs: Vec<RoundOut> = Vec::with_capacity(world);
+        for h in handles {
+            outs.push(h.join().expect("trainer thread panicked")?);
+        }
+
+        // the previous reconfiguration's warmup is this round's
+        // time-to-first-batch
+        if let Some(mut p) = pending.take() {
+            p.warmup_secs = outs
+                .iter()
+                .map(|o| o.first_batch_secs)
+                .fold(0.0, f64::max);
+            reconfigs.push(p);
+        }
+
+        // merge this round's per-rank curves into the global one:
+        // per-step mean over the ranks that actually trained the step
+        // (zombies stop contributing after their failure)
+        let round_steps = outs[0].stopped_at - start;
+        for s in 0..round_steps {
+            let vals: Vec<f32> = outs
+                .iter()
+                .filter_map(|o| o.losses.get(s).copied())
+                .collect();
+            merged.push(if vals.is_empty() {
+                f32::NAN
+            } else {
+                vals.iter().sum::<f32>() / vals.len() as f32
+            });
+        }
+
+        let drain_max =
+            outs.iter().map(|o| o.drain_secs).fold(0.0, f64::max);
+        let first = outs.swap_remove(0);
+        params = first.params;
+        velocity = first.velocity;
+
+        match first.decision {
+            Decision::Continue => break,
+            Decision::Reconfigure(next) => {
+                let stopped_at = first.stopped_at;
+                // reconfiguration checkpoint: synchronized params +
+                // velocity + the membership record the run moves to
+                let t_ck = Instant::now();
+                if !cfg.checkpoint_dir.is_empty() {
+                    let ck = Checkpoint::capture(
+                        cfg.seed,
+                        stopped_at as u64,
+                        &params,
+                        &cluster.kv.servers,
+                    )
+                    .with_optimizer(cfg.momentum, velocity.clone())
+                    .with_membership(next.clone());
+                    let bytes = ck.save(&Checkpoint::path_for(
+                        Path::new(&cfg.checkpoint_dir),
+                        stopped_at as u64,
+                    ))?;
+                    Checkpoint::prune(
+                        Path::new(&cfg.checkpoint_dir),
+                        cfg.checkpoint_keep,
+                    )?;
+                    metrics.inc("ft.checkpoints", 1);
+                    metrics.inc("ft.checkpoint_bytes", bytes);
+                }
+                let checkpoint_secs = t_ck.elapsed().as_secs_f64();
+                metrics.inc("ft.reconfigurations", 1);
+                let demoted: Vec<u32> = view
+                    .machines
+                    .iter()
+                    .copied()
+                    .filter(|m| !next.machines.contains(m))
+                    .collect();
+                pending = Some(ReconfigStats {
+                    boundary: co.boundaries(),
+                    at_step: stopped_at,
+                    from_world: world,
+                    to_world: next.world_size(),
+                    demoted_machines: demoted,
+                    drain_secs: drain_max,
+                    checkpoint_secs,
+                    resplit_secs: 0.0,
+                    warmup_secs: 0.0,
+                });
+                start = stopped_at;
+            }
+        }
+    }
+
+    co.shutdown();
+    metrics.inc("ft.demotions", co.demotions());
+    if let Some(plan) = cluster.fault_plan() {
+        plan.publish(&metrics);
+    }
+    let total_secs = t0.elapsed().as_secs_f64();
+    let cost1 = cluster.cost.snapshot();
+    let delta = cost0.delta(&cost1);
+    let run_steps = total_steps - start_step;
+    let loss_curve = merged;
+
+    // epoch aggregation over the global step axis (first round's epoch
+    // length — reconfigured rounds keep the original windowing so
+    // elastic and classic reports line up)
+    let mut epochs = Vec::new();
+    let mut final_val_acc = None;
+    for (e, (lo, hi)) in
+        epoch_windows(spe0, total_steps).into_iter().enumerate()
+    {
+        let lo = lo.max(start_step);
+        if lo >= hi {
+            continue; // fully replayed by the checkpoint
+        }
+        let mean_loss = loss_curve[lo - start_step..hi - start_step]
+            .iter()
+            .map(|&x| x as f64)
+            .sum::<f64>()
+            / (hi - lo) as f64;
+        epochs.push(EpochStats {
+            epoch: e,
+            mean_loss,
+            secs: total_secs * (hi - lo) as f64 / run_steps as f64,
+            val_acc: None,
+        });
+    }
+    if cfg.eval_each_epoch {
+        // evaluate on a surviving machine's executor (machine 0 may
+        // have been demoted)
+        let v = co.view();
+        final_val_acc = Some(cluster.evaluate(
+            &devices[v.machines[0] as usize].handle(),
+            &spec,
+            &params,
+            cfg.seed,
+        )?);
+    }
+
+    Ok(TrainReport::from_metrics(
+        &metrics,
+        epochs,
+        total_secs,
+        run_steps,
+        loss_curve,
+        delta.net_bytes,
+        delta.pcie_bytes,
+        final_val_acc,
+        ft_recovery_secs,
+        start_step as u64,
+        params,
+        reconfigs,
+    ))
+}

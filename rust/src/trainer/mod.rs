@@ -9,18 +9,21 @@
 
 pub mod allreduce;
 pub mod device;
+pub mod elastic;
 pub mod split;
 
-pub use allreduce::AllReduceGroup;
+pub use allreduce::{AllReduceError, AllReduceGroup};
 pub use device::{DeviceExecutor, DeviceHandle};
-pub use split::split_training_set;
+pub use elastic::ReconfigStats;
+pub use split::{split_training_set, split_training_set_for};
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::api::{DistGraph, DistNodeDataLoader, Seeds};
 use crate::cluster::Cluster;
+use crate::coordinator::ResizeEvent;
 use crate::ft::Checkpoint;
 use crate::metrics::Metrics;
 use crate::pipeline::PipelineConfig;
@@ -50,10 +53,36 @@ pub struct TrainConfig {
     /// checkpoints).
     pub checkpoint_dir: String,
     /// Path of a checkpoint to resume from ("" = fresh run). The run
-    /// restores KV shards + params and replays the exact batch stream
-    /// from the saved step (docs/DESIGN.md §8) — byte-identical to a
-    /// run that never stopped (test-enforced).
+    /// restores KV shards + params (and momentum velocity) and replays
+    /// the exact batch stream from the saved step (docs/DESIGN.md §8) —
+    /// byte-identical to a run that never stopped (test-enforced).
     pub resume_from: String,
+    /// SGD momentum coefficient in `[0, 1)`. Applied to the
+    /// *post-all-reduce mean* gradient, so the velocity is identical on
+    /// every rank and one checkpoint copy restores it; `0.0` is plain
+    /// SGD, byte-identical to the pre-momentum trainer.
+    pub momentum: f32,
+    /// Keep only the newest N checkpoints in `checkpoint_dir`, pruning
+    /// older ones (and orphaned `.tmp` files) after each write
+    /// (0 = keep everything).
+    pub checkpoint_keep: usize,
+    /// Planned elastic resize schedule: at cumulative epoch boundary
+    /// `boundary`, reshape the membership to `world` trainers
+    /// (docs/DESIGN.md §9; config key `elastic = "E:W,..."`). Non-empty
+    /// routes the run through the elastic driver.
+    pub elastic: Vec<ResizeEvent>,
+    /// Demote machines whose mean step time persistently exceeds
+    /// `straggler_factor` × the fleet median (measured from per-step
+    /// heartbeats). Enables the elastic driver.
+    pub demote_stragglers: bool,
+    /// Straggler threshold multiplier over the fleet median step time.
+    pub straggler_factor: f64,
+    /// Consecutive epoch boundaries a machine must straggle before the
+    /// coordinator demotes it.
+    pub straggler_patience: usize,
+    /// A rank silent (no heartbeat, no barrier arrival) this long at an
+    /// epoch boundary is declared dead and its machine demoted.
+    pub heartbeat_timeout: Duration,
 }
 
 impl Default for TrainConfig {
@@ -70,7 +99,23 @@ impl Default for TrainConfig {
             checkpoint_every: 0,
             checkpoint_dir: String::new(),
             resume_from: String::new(),
+            momentum: 0.0,
+            checkpoint_keep: 0,
+            elastic: Vec::new(),
+            demote_stragglers: false,
+            straggler_factor: 3.0,
+            straggler_patience: 2,
+            heartbeat_timeout: Duration::from_secs(5),
         }
+    }
+}
+
+impl TrainConfig {
+    /// Whether this run needs the elastic driver: a planned resize
+    /// schedule or straggler demotion (the classic fixed-membership
+    /// loop stays byte-identical otherwise).
+    pub fn is_elastic(&self) -> bool {
+        !self.elastic.is_empty() || self.demote_stragglers
     }
 }
 
@@ -149,6 +194,18 @@ pub struct TrainReport {
     /// Global step this run resumed from (0 = fresh run); `steps`
     /// counts only the steps executed *this* run.
     pub resumed_at: u64,
+    /// Membership reconfigurations executed by the elastic driver
+    /// (docs/DESIGN.md §9), one per published membership epoch, with
+    /// the cost decomposition (drain / checkpoint / re-split / warmup).
+    /// Empty on classic fixed-membership runs.
+    pub reconfigurations: Vec<ReconfigStats>,
+    /// `reconfigurations.len()`, also exported as the
+    /// `ft.reconfigurations` counter.
+    pub ft_reconfigurations: u64,
+    /// Machines removed from the membership by failure or straggler
+    /// demotion (planned resizes are not demotions); the
+    /// `ft.demotions` counter.
+    pub ft_demotions: u64,
     /// Final synchronized parameters.
     pub final_params: Vec<Vec<f32>>,
 }
@@ -172,6 +229,18 @@ impl TrainReport {
 /// compute (this testbed has one physical core — device *scaling* is
 /// reported via the cost model).
 pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport> {
+    anyhow::ensure!(
+        (0.0..1.0).contains(&cfg.momentum),
+        "momentum {} outside [0, 1)",
+        cfg.momentum
+    );
+    if cfg.is_elastic() {
+        // coordinator-driven membership: epoch-boundary barriers,
+        // re-splits, and reconfiguration live in their own driver; the
+        // classic loop below stays byte-identical for fixed-membership
+        // runs
+        return elastic::train_elastic(cluster, cfg);
+    }
     let n_trainers = cluster.n_trainers();
     let metrics = Arc::new(Metrics::new());
 
@@ -206,6 +275,7 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     // to the one a never-interrupted run consumes.
     let mut start_step = 0usize;
     let mut ft_recovery_secs = 0.0f64;
+    let mut init_velocity: Vec<Vec<f32>> = Vec::new();
     if !cfg.resume_from.is_empty() {
         let t_rec = Instant::now();
         let ck = Checkpoint::load(Path::new(&cfg.resume_from))?;
@@ -217,9 +287,18 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
             ck.seed,
             cfg.seed
         );
+        anyhow::ensure!(
+            ck.momentum == cfg.momentum,
+            "checkpoint {} was written with momentum {}, this run uses \
+             {} — the resumed optimizer state would be inconsistent",
+            cfg.resume_from,
+            ck.momentum,
+            cfg.momentum
+        );
         ck.restore(&cluster.kv.servers)?;
         start_step = ck.step as usize;
         init_params = ck.params;
+        init_velocity = ck.velocity;
         ft_recovery_secs = t_rec.elapsed().as_secs_f64();
     }
 
@@ -269,9 +348,11 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     for (t, mut loader) in loaders.into_iter().enumerate() {
         let machine = machine_of[t];
         let device = devices[machine as usize].handle();
-        let ep = ar.endpoint(t);
+        let ep = ar.endpoint(t)?;
         let mut params = init_params.clone();
+        let mut velocity = init_velocity.clone();
         let lr = cfg.lr;
+        let momentum = cfg.momentum;
         let metrics = metrics.clone();
         // rank 0 writes checkpoints at the barrier: params are
         // synchronized there, and the KV tables are read-only during
@@ -281,11 +362,13 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
             && !cfg.checkpoint_dir.is_empty();
         let ckpt_every = cfg.checkpoint_every.max(1);
         let ckpt_dir = cfg.checkpoint_dir.clone();
+        let ckpt_keep = cfg.checkpoint_keep;
         let ckpt_seed = cfg.seed;
         let servers = cluster.kv.servers.clone();
         handles.push(std::thread::spawn(
             move || -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
                 let mut losses = Vec::with_capacity(run_steps);
+                let mut prev: Vec<Vec<f32>> = Vec::new();
                 for step in start_step..total_steps {
                     let batch = metrics.time("trainer.wait_batch", || {
                         loader.try_next_batch()
@@ -296,6 +379,12 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
                         "trainer.dropped_nbrs",
                         batch.dropped_neighbors as u64,
                     );
+                    if momentum > 0.0 {
+                        // pre-step replica (rank-identical) — the
+                        // momentum update derives the mean gradient
+                        // from it after the all-reduce
+                        prev.clone_from(&params);
+                    }
                     let (loss, spent) =
                         metrics.time("trainer.device", || {
                             device.train_reusing(&mut params, batch, lr)
@@ -307,16 +396,30 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
                     // synchronous SGD barrier: average replicas
                     metrics.time("trainer.allreduce", || {
                         ep.allreduce_params(&mut params)
-                    });
+                    })?;
+                    if momentum > 0.0 {
+                        apply_momentum(
+                            &mut params,
+                            &prev,
+                            &mut velocity,
+                            momentum,
+                            lr,
+                        );
+                    }
                     if write_ckpt && (step + 1) % ckpt_every == 0 {
                         let at = (step + 1) as u64;
                         let ck = Checkpoint::capture(
                             ckpt_seed, at, &params, &servers,
-                        );
+                        )
+                        .with_optimizer(momentum, velocity.clone());
                         let bytes = ck.save(&Checkpoint::path_for(
                             Path::new(&ckpt_dir),
                             at,
                         ))?;
+                        Checkpoint::prune(
+                            Path::new(&ckpt_dir),
+                            ckpt_keep,
+                        )?;
                         metrics.inc("ft.checkpoints", 1);
                         metrics.inc("ft.checkpoint_bytes", bytes);
                     }
@@ -379,74 +482,150 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
         )?);
     }
 
-    // per-etype sampled-edge counters (suffix after the prefix is the
-    // etype index)
-    let etype_prefix = "sampler.etype_edges.";
-    let mut etype_sampled_edges: Vec<u64> = Vec::new();
-    for (k, c) in metrics.counters_with_prefix(etype_prefix) {
-        if let Ok(r) = k[etype_prefix.len()..].parse::<usize>() {
-            if etype_sampled_edges.len() <= r {
-                etype_sampled_edges.resize(r + 1, 0);
-            }
-            etype_sampled_edges[r] = c;
-        }
-    }
-
     // injected-fault accounting (retries, admitted failures, message
     // drops/delays) flows into the same metrics sink as everything else
     if let Some(plan) = cluster.fault_plan() {
         plan.publish(&metrics);
     }
 
-    let report = TrainReport {
+    Ok(TrainReport::from_metrics(
+        &metrics,
         epochs,
         total_secs,
-        steps: run_steps,
+        run_steps,
         loss_curve,
-        net_bytes: delta.net_bytes,
-        pcie_bytes: delta.pcie_bytes,
-        remote_feature_rows: metrics.counter("trainer.remote_rows"),
-        cache_hit_rows: metrics.counter("cache.hit_rows"),
-        cache_miss_rows: metrics.counter("cache.miss_rows"),
-        cache_remote_bytes_saved: metrics
-            .counter("cache.remote_bytes_saved"),
-        dropped_neighbors: metrics.counter("trainer.dropped_nbrs"),
-        etype_sampled_edges,
-        pool_hit: metrics.counter("pool.hit"),
-        pool_miss: metrics.counter("pool.miss"),
-        pool_dropped: metrics.counter("pool.dropped"),
+        delta.net_bytes,
+        delta.pcie_bytes,
         final_val_acc,
-        sample_secs: ["schedule", "sample", "pull", "compact"]
-            .iter()
-            .map(|s| {
-                metrics.total_time(&format!("pipeline.{s}")).as_secs_f64()
-            })
-            .sum(),
-        stage_schedule_secs: metrics
-            .total_time("pipeline.schedule")
-            .as_secs_f64(),
-        stage_sample_secs: metrics
-            .total_time("pipeline.sample")
-            .as_secs_f64(),
-        stage_pull_secs: metrics.total_time("pipeline.pull").as_secs_f64(),
-        stage_compact_secs: metrics
-            .total_time("pipeline.compact")
-            .as_secs_f64(),
-        batches_produced: metrics.counter("pipeline.batches"),
-        device_secs: metrics.total_time("trainer.device").as_secs_f64(),
-        allreduce_secs: metrics
-            .total_time("trainer.allreduce")
-            .as_secs_f64(),
-        wait_secs: metrics.total_time("trainer.wait_batch").as_secs_f64(),
-        ft_checkpoints: metrics.counter("ft.checkpoints"),
-        ft_checkpoint_bytes: metrics.counter("ft.checkpoint_bytes"),
-        ft_retries: metrics.counter("ft.retries"),
-        ft_injected_failures: metrics.counter("ft.injected_failures"),
         ft_recovery_secs,
-        resumed_at: start_step as u64,
+        start_step as u64,
         final_params,
-    };
-    Ok(report)
+        Vec::new(),
+    ))
+}
+
+impl TrainReport {
+    /// Assemble a report from the metrics sink plus the pieces only the
+    /// driver knows (curves, wall clock, final params). Shared by the
+    /// classic and elastic drivers so counter accounting stays
+    /// consistent between them.
+    #[allow(clippy::too_many_arguments)]
+    fn from_metrics(
+        metrics: &Metrics,
+        epochs: Vec<EpochStats>,
+        total_secs: f64,
+        steps: usize,
+        loss_curve: Vec<f32>,
+        net_bytes: u64,
+        pcie_bytes: u64,
+        final_val_acc: Option<f64>,
+        ft_recovery_secs: f64,
+        resumed_at: u64,
+        final_params: Vec<Vec<f32>>,
+        reconfigurations: Vec<ReconfigStats>,
+    ) -> TrainReport {
+        // per-etype sampled-edge counters (suffix after the prefix is
+        // the etype index)
+        let etype_prefix = "sampler.etype_edges.";
+        let mut etype_sampled_edges: Vec<u64> = Vec::new();
+        for (k, c) in metrics.counters_with_prefix(etype_prefix) {
+            if let Ok(r) = k[etype_prefix.len()..].parse::<usize>() {
+                if etype_sampled_edges.len() <= r {
+                    etype_sampled_edges.resize(r + 1, 0);
+                }
+                etype_sampled_edges[r] = c;
+            }
+        }
+        TrainReport {
+            epochs,
+            total_secs,
+            steps,
+            loss_curve,
+            net_bytes,
+            pcie_bytes,
+            remote_feature_rows: metrics.counter("trainer.remote_rows"),
+            cache_hit_rows: metrics.counter("cache.hit_rows"),
+            cache_miss_rows: metrics.counter("cache.miss_rows"),
+            cache_remote_bytes_saved: metrics
+                .counter("cache.remote_bytes_saved"),
+            dropped_neighbors: metrics.counter("trainer.dropped_nbrs"),
+            etype_sampled_edges,
+            pool_hit: metrics.counter("pool.hit"),
+            pool_miss: metrics.counter("pool.miss"),
+            pool_dropped: metrics.counter("pool.dropped"),
+            final_val_acc,
+            sample_secs: ["schedule", "sample", "pull", "compact"]
+                .iter()
+                .map(|s| {
+                    metrics
+                        .total_time(&format!("pipeline.{s}"))
+                        .as_secs_f64()
+                })
+                .sum(),
+            stage_schedule_secs: metrics
+                .total_time("pipeline.schedule")
+                .as_secs_f64(),
+            stage_sample_secs: metrics
+                .total_time("pipeline.sample")
+                .as_secs_f64(),
+            stage_pull_secs: metrics
+                .total_time("pipeline.pull")
+                .as_secs_f64(),
+            stage_compact_secs: metrics
+                .total_time("pipeline.compact")
+                .as_secs_f64(),
+            batches_produced: metrics.counter("pipeline.batches"),
+            device_secs: metrics.total_time("trainer.device").as_secs_f64(),
+            allreduce_secs: metrics
+                .total_time("trainer.allreduce")
+                .as_secs_f64(),
+            wait_secs: metrics
+                .total_time("trainer.wait_batch")
+                .as_secs_f64(),
+            ft_checkpoints: metrics.counter("ft.checkpoints"),
+            ft_checkpoint_bytes: metrics.counter("ft.checkpoint_bytes"),
+            ft_retries: metrics.counter("ft.retries"),
+            ft_injected_failures: metrics.counter("ft.injected_failures"),
+            ft_recovery_secs,
+            resumed_at,
+            ft_reconfigurations: metrics.counter("ft.reconfigurations"),
+            ft_demotions: metrics.counter("ft.demotions"),
+            reconfigurations,
+            final_params,
+        }
+    }
+}
+
+/// Momentum SGD over the *post-all-reduce mean* gradient: the device
+/// step applied `p = prev − lr·g_local` per rank, the all-reduce
+/// averaged the replicas to `p_avg = prev − lr·mean(g)`, so
+/// `g = (prev − p_avg)/lr` recovers the mean gradient exactly. Because
+/// `prev` and `p_avg` are rank-identical, the velocity is too — one
+/// checkpoint copy restores every rank (and zombie ranks can apply the
+/// same update without having stepped). Velocity buffers are allocated
+/// lazily on first use.
+fn apply_momentum(
+    params: &mut [Vec<f32>],
+    prev: &[Vec<f32>],
+    velocity: &mut Vec<Vec<f32>>,
+    momentum: f32,
+    lr: f32,
+) {
+    if velocity.is_empty() {
+        *velocity =
+            params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    }
+    for ((p, q), v) in
+        params.iter_mut().zip(prev).zip(velocity.iter_mut())
+    {
+        for ((pi, &qi), vi) in
+            p.iter_mut().zip(q).zip(v.iter_mut())
+        {
+            let g = (qi - *pi) / lr;
+            *vi = momentum * *vi + g;
+            *pi = qi - lr * *vi;
+        }
+    }
 }
 
 /// Deterministic mean of per-trainer RNG streams (used in tests).
@@ -503,5 +682,34 @@ mod tests {
     fn epoch_windows_survive_degenerate_epoch_len() {
         // steps_per_epoch 0 (empty split) must not divide by zero
         assert_eq!(epoch_windows(0, 3), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn momentum_recovers_the_mean_gradient_and_accumulates() {
+        let lr = 0.5f32;
+        let momentum = 0.9f32;
+        // the device step moved p from 1.0 to 0.5 at lr 0.5, i.e. the
+        // (post-all-reduce mean) gradient was (1.0 - 0.5)/0.5 = 1.0; the
+        // second coordinate saw zero gradient
+        let prev = vec![vec![1.0f32, 2.0]];
+        let mut params = vec![vec![0.5f32, 2.0]];
+        let mut velocity: Vec<Vec<f32>> = Vec::new();
+        apply_momentum(&mut params, &prev, &mut velocity, momentum, lr);
+        assert_eq!(velocity, vec![vec![1.0f32, 0.0]]);
+        // first step: velocity == gradient, so the update equals plain
+        // SGD — params must be untouched
+        assert_eq!(params, vec![vec![0.5f32, 2.0]]);
+        // second step with the same observed gradient: velocity
+        // accumulates (0.9 * 1.0 + 1.0) and the update overshoots the
+        // plain-SGD step accordingly
+        let prev2 = params.clone();
+        params[0][0] = 0.0; // (0.5 - 0.0)/0.5 = gradient 1.0 again
+        apply_momentum(&mut params, &prev2, &mut velocity, momentum, lr);
+        assert!((velocity[0][0] - 1.9).abs() < 1e-6, "{velocity:?}");
+        assert!(
+            (params[0][0] - (0.5 - 0.5 * 1.9)).abs() < 1e-6,
+            "{params:?}"
+        );
+        assert_eq!(params[0][1], 2.0);
     }
 }

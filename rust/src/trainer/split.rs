@@ -18,13 +18,36 @@ use crate::partition::NodeMap;
 /// equal-size sets. Returns `sets[t]` for trainer `t` (machine-major
 /// order: trainer t lives on machine `t / per_machine`).
 pub fn split_training_set(
-    mut train_ids: Vec<NodeId>,
+    train_ids: Vec<NodeId>,
     node_map: &NodeMap,
     n_machines: usize,
     per_machine: usize,
 ) -> Vec<Vec<NodeId>> {
-    let n_trainers = n_machines * per_machine;
-    assert!(n_trainers > 0);
+    let machines: Vec<u32> = (0..n_machines as u32).collect();
+    split_training_set_for(train_ids, node_map, &machines, per_machine)
+}
+
+/// Membership-aware split: divide `train_ids` across an arbitrary set of
+/// surviving `machines` (elastic reconfiguration, docs/DESIGN.md §9).
+/// Items owned by demoted machines count toward the last surviving
+/// member, mirroring the owner clamp of the contiguous case, and the
+/// spill pass rebalances as usual.
+///
+/// This is a *pure* function of `(train_ids, node_map, machines,
+/// per_machine)` — nothing about the previous membership, the order
+/// ranks left, or wall-clock time enters — which is what lets every
+/// survivor of a membership change recompute its share independently
+/// and agree byte-for-byte (test-enforced below). With the full machine
+/// list it reduces exactly to [`split_training_set`].
+pub fn split_training_set_for(
+    mut train_ids: Vec<NodeId>,
+    node_map: &NodeMap,
+    machines: &[u32],
+    per_machine: usize,
+) -> Vec<Vec<NodeId>> {
+    let n_members = machines.len();
+    let n_trainers = n_members * per_machine;
+    assert!(n_trainers > 0, "membership must keep at least one trainer");
     train_ids.sort_unstable(); // contiguous ranges ⇒ grouped by owner
     let total = train_ids.len();
     let base = total / n_trainers;
@@ -39,53 +62,61 @@ pub fn split_training_set(
         off += len;
     }
 
-    // majority owner of each range
-    let majority = |ids: &[NodeId]| -> u32 {
+    // membership slot of an owner machine; owners outside the current
+    // membership land on the last member (rebalanced by the spill pass)
+    let member_of = |owner: u32| -> usize {
+        machines
+            .iter()
+            .position(|&m| m == owner)
+            .unwrap_or(n_members - 1)
+    };
+
+    // majority member of each range
+    let majority = |ids: &[NodeId]| -> usize {
         if ids.is_empty() {
             return 0;
         }
-        let mut counts = vec![0usize; n_machines];
+        let mut counts = vec![0usize; n_members];
         for &id in ids {
-            let o = node_map.owner(id) as usize;
-            counts[o.min(n_machines - 1)] += 1;
+            counts[member_of(node_map.owner(id))] += 1;
         }
         counts
             .iter()
             .enumerate()
             .max_by_key(|(_, &c)| c)
-            .map(|(m, _)| m as u32)
+            .map(|(m, _)| m)
             .unwrap()
     };
 
-    // assign ranges to machines: prefer majority owner, but cap each
-    // machine at `per_machine` ranges so every trainer gets exactly one
-    let mut machine_load = vec![0usize; n_machines];
-    let mut assignment: Vec<Option<u32>> = vec![None; n_trainers];
+    // assign ranges to members: prefer majority owner, but cap each
+    // member at `per_machine` ranges so every trainer gets exactly one
+    let mut machine_load = vec![0usize; n_members];
+    let mut assignment: Vec<Option<usize>> = vec![None; n_trainers];
     // first pass: happy path
     for (i, r) in ranges.iter().enumerate() {
-        let m = majority(r) as usize;
+        let m = majority(r);
         if machine_load[m] < per_machine {
             machine_load[m] += 1;
-            assignment[i] = Some(m as u32);
+            assignment[i] = Some(m);
         }
     }
-    // second pass: spill the rest to the least-loaded machines (these are
+    // second pass: spill the rest to the least-loaded members (these are
     // the "remote training points", balanced evenly per the paper)
     for slot in assignment.iter_mut() {
         if slot.is_none() {
-            let m = (0..n_machines)
+            let m = (0..n_members)
                 .min_by_key(|&m| machine_load[m])
                 .unwrap();
             machine_load[m] += 1;
-            *slot = Some(m as u32);
+            *slot = Some(m);
         }
     }
 
-    // order sets machine-major so trainer t = machine t/per_machine
+    // order sets member-major so trainer t = member t/per_machine
     let mut out: Vec<Vec<NodeId>> = vec![Vec::new(); n_trainers];
-    let mut next_slot = vec![0usize; n_machines];
+    let mut next_slot = vec![0usize; n_members];
     for (i, r) in ranges.iter().enumerate() {
-        let m = assignment[i].unwrap() as usize;
+        let m = assignment[i].unwrap();
         let t = m * per_machine + next_slot[m];
         next_slot[m] += 1;
         out[t] = r.to_vec();
@@ -173,6 +204,77 @@ mod tests {
         let sets = split_training_set(train.clone(), &nm, 1, 1);
         assert_eq!(sets.len(), 1);
         assert_eq!(sets[0].len(), train.len());
+    }
+
+    /// Property: any membership transition `(machines, per_machine)` →
+    /// `(machines', per_machine')` re-split is total (no item lost or
+    /// invented), balanced within one item, and a pure function of the
+    /// new membership alone — recomputing it yields the identical split
+    /// and the previous membership never enters, which is what lets
+    /// every survivor of an elastic reconfiguration agree independently.
+    #[test]
+    fn prop_membership_transition_split_is_total_balanced_pure() {
+        let (train, nm) = setup(4);
+        crate::util::proptest::forall(
+            97,
+            16,
+            |r| {
+                // two memberships: non-empty machine subsets (4-bit
+                // masks) with per-machine widths — "before" and "after"
+                let before = (1 + r.usize_below(15), 1 + r.usize_below(3));
+                let after = (1 + r.usize_below(15), 1 + r.usize_below(3));
+                (before, after)
+            },
+            |&((mask0, per0), (mask1, per1))| {
+                let members = |mask: usize| -> Vec<u32> {
+                    (0..4u32).filter(|m| mask >> m & 1 == 1).collect()
+                };
+                let (m0, m1) = (members(mask0), members(mask1));
+                // the "before" split exists but must not influence the
+                // "after" split in any way
+                let _ = split_training_set_for(
+                    train.clone(),
+                    &nm,
+                    &m0,
+                    per0,
+                );
+                let a = split_training_set_for(
+                    train.clone(),
+                    &nm,
+                    &m1,
+                    per1,
+                );
+                if a.len() != m1.len() * per1 {
+                    return Err(format!(
+                        "wrong set count {} for {m1:?} x {per1}",
+                        a.len()
+                    ));
+                }
+                let total: usize = a.iter().map(|s| s.len()).sum();
+                if total != train.len() {
+                    return Err(format!(
+                        "lost items: {total} != {}",
+                        train.len()
+                    ));
+                }
+                let max = a.iter().map(|s| s.len()).max().unwrap();
+                let min = a.iter().map(|s| s.len()).min().unwrap();
+                if max - min > 1 {
+                    return Err(format!("unbalanced: {min}..{max}"));
+                }
+                // purity: the same membership recomputes identically
+                let b = split_training_set_for(
+                    train.clone(),
+                    &nm,
+                    &m1,
+                    per1,
+                );
+                if a != b {
+                    return Err("re-split is not pure".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Property: any (machines, per_machine) split is total and balanced.

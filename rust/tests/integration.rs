@@ -450,6 +450,122 @@ fn transient_faults_heal_and_training_is_unchanged() {
     assert_eq!(clean.ft_retries, 0);
 }
 
+/// The elastic-membership tentpole, end to end: a 4-trainer run with a
+/// planned shrink to world 2 at the first epoch boundary must (a) write
+/// a reconfiguration checkpoint carrying the new membership, and (b)
+/// continue with a batch stream — and parameters — byte-identical to a
+/// fresh 2-trainer deployment resumed from that same checkpoint.
+#[test]
+fn elastic_shrink_matches_fresh_resume_end_to_end() {
+    use distdglv2::coordinator::parse_elastic_schedule;
+    use distdglv2::ft::Checkpoint;
+    let d = small_dataset(11);
+    let dir = std::env::temp_dir().join("ddgl_elastic_itest");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let big =
+        Cluster::deploy(&d, ClusterSpec::new(2, 2), artifacts()).unwrap();
+    let m = Manifest::load(&artifacts()).unwrap();
+    let v = m.variant("sage_nc_dev").unwrap();
+    let spe = big.train_sets[0].len().div_ceil(v.batch);
+    let total = 3 * spe;
+
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        epochs: 3,
+        max_steps: total,
+        checkpoint_dir: dir.to_string_lossy().into_owned(),
+        elastic: parse_elastic_schedule("1:2").unwrap(),
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::AsyncNonstop;
+    cfg.pipeline.num_workers = 2;
+    let elastic = trainer::train(&big, &cfg).expect("elastic run");
+    assert_eq!(elastic.steps, total);
+    assert_eq!(elastic.ft_reconfigurations, 1);
+    assert_eq!(elastic.ft_demotions, 0, "a planned resize demotes nobody");
+    let rc = &elastic.reconfigurations[0];
+    assert_eq!((rc.boundary, rc.at_step), (1, spe));
+    assert_eq!((rc.from_world, rc.to_world), (4, 2));
+    assert!(rc.demoted_machines.is_empty());
+    // the reconfiguration checkpoint records the membership it moves to
+    let ck =
+        Checkpoint::load(&Checkpoint::path_for(&dir, spe as u64)).unwrap();
+    let view = ck.membership.expect("membership record");
+    assert_eq!(view.world_size(), 2);
+    // the report's ft line surfaces the reconfiguration
+    let line = distdglv2::benchsuite::locality_summary(&elastic);
+    assert!(line.contains("reconfigs 1"), "{line}");
+
+    // fresh smaller world resumed from the boundary checkpoint: the
+    // classic (non-elastic) driver must replay the identical tail
+    let small =
+        Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts()).unwrap();
+    let mut rcfg = cfg.clone();
+    rcfg.elastic.clear();
+    rcfg.checkpoint_dir = String::new();
+    rcfg.resume_from = Checkpoint::path_for(&dir, spe as u64)
+        .to_string_lossy()
+        .into_owned();
+    let resumed = trainer::train(&small, &rcfg).expect("fresh resume");
+    assert_eq!(resumed.resumed_at, spe as u64);
+    assert_eq!(
+        resumed.loss_curve,
+        elastic.loss_curve[spe..].to_vec(),
+        "post-shrink stream diverged from the fresh smaller-world resume"
+    );
+    assert_eq!(
+        resumed.final_params, elastic.final_params,
+        "post-shrink parameters diverged"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Straggler demotion, end to end: an injected per-step compute
+/// slowdown on machine 1 makes its heartbeats exceed the straggler
+/// threshold; with patience 1 the coordinator demotes the machine at
+/// the first epoch boundary and the survivors finish the run.
+#[test]
+fn straggler_demotion_completes_and_is_reported() {
+    use distdglv2::ft::FaultPlan;
+    let d = small_dataset(12);
+    let cluster =
+        Cluster::deploy(&d, ClusterSpec::new(2, 2), artifacts()).unwrap();
+    let mut plan = FaultPlan::new();
+    plan.step_slowdowns
+        .push((1, std::time::Duration::from_millis(100)));
+    cluster.set_fault_plan(std::sync::Arc::new(plan));
+    let m = Manifest::load(&artifacts()).unwrap();
+    let v = m.variant("sage_nc_dev").unwrap();
+    let spe = cluster.train_sets[0].len().div_ceil(v.batch);
+    let total = 2 * spe;
+
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        epochs: 2,
+        max_steps: total,
+        demote_stragglers: true,
+        straggler_factor: 2.0,
+        straggler_patience: 1,
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::AsyncNonstop;
+    let report = trainer::train(&cluster, &cfg).expect("demotion run");
+    assert_eq!(report.steps, total, "survivors must finish the run");
+    assert_eq!(report.ft_reconfigurations, 1);
+    assert_eq!(report.ft_demotions, 1);
+    let rc = &report.reconfigurations[0];
+    assert_eq!(rc.demoted_machines, vec![1]);
+    assert_eq!((rc.from_world, rc.to_world), (4, 2));
+    assert_eq!(rc.at_step, spe);
+    assert!(report.loss_curve.iter().all(|l| l.is_finite()));
+    let line = distdglv2::benchsuite::locality_summary(&report);
+    assert!(
+        line.contains("reconfigs 1") && line.contains("demotions 1"),
+        "{line}"
+    );
+}
+
 #[test]
 fn run_config_round_trips_through_cluster() {
     let cfg = RunConfig::from_args(
