@@ -439,6 +439,7 @@ fn main() -> anyhow::Result<()> {
             etype_keys: etype_metric_keys(shape.num_rels),
             pool: BatchPool::default(),
             label_scratch: Vec::new(),
+            frontier_scratch: Vec::new(),
         }
     };
     let mut rows_json: Vec<String> = Vec::new();
@@ -457,6 +458,7 @@ fn main() -> anyhow::Result<()> {
                     cpu_prefetch_depth: 4,
                     gpu_prefetch_depth: 1,
                     num_workers: workers,
+                    prefetch_depth: 0,
                 };
                 let mut pipe =
                     Pipeline::start(gen, &cfg, Arc::new(Metrics::new()));

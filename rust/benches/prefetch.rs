@@ -1,0 +1,198 @@
+//! Predictive-prefetcher bench (docs/PERF.md §prefetch): loader
+//! throughput over the lookahead grid — `prefetch_depth` {0, 2, 8} ×
+//! sampling workers {1, 4} × {cpu-only, emulated-network} — through the
+//! public `DistNodeDataLoader` API, plus a bounded-staleness ablation
+//! tracking a toy embedding-regression loss for
+//! `embedding_staleness` {0, 4, 16}. Emits `BENCH_prefetch.json`.
+//! Requires `make artifacts`.
+//!
+//! Expected shape: with network emulation on, depth 8 meets or beats
+//! depth 0 in every (workers, net) cell — the lookahead thread absorbs
+//! the modeled link sleeps the demand path would otherwise serve — and
+//! every depth > 0 cell reports `prefetch_hits > 0`. The staleness
+//! curves converge to comparable loss; K = 0 (strict) matches the
+//! uncached run bit for bit.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use distdglv2::api::{DistGraph, DistNodeDataLoader};
+use distdglv2::cluster::{Cluster, ClusterSpec};
+use distdglv2::graph::{DatasetSpec, NodeId};
+use distdglv2::kvstore::{
+    CacheAdmission, EmbeddingTable, FeatureCache, KvCluster,
+    PartitionPolicy, RangePolicy,
+};
+use distdglv2::net::CostModel;
+use distdglv2::partition::NodeMap;
+use distdglv2::pipeline::{PipelineConfig, PipelineMode};
+use distdglv2::runtime::manifest::{artifacts_dir, Manifest};
+
+/// One toy sparse-embedding training run: rows regress toward a fixed
+/// per-row target through gather → grad → `push_grad`, reading through
+/// a caching client with a bounded-staleness window of `k` updates
+/// (`cached = false` is the wire-truth baseline). Returns the per-step
+/// mean-squared loss curve.
+fn staleness_run(k: usize, cached: bool) -> Vec<f64> {
+    const ROWS: usize = 512;
+    const DIM: usize = 8;
+    const BATCH: usize = 64;
+    const STEPS: usize = 40;
+    let nm = NodeMap { part_starts: vec![0, 256, ROWS as u32] };
+    let policy: Arc<dyn PartitionPolicy> = Arc::new(RangePolicy::new(nm));
+    let cluster = KvCluster::new(2, Arc::new(CostModel::default()));
+    let emb = EmbeddingTable::create(
+        &cluster,
+        policy.as_ref(),
+        "emb",
+        ROWS,
+        DIM,
+        0.5,
+        11,
+    );
+    let mut client = cluster.client(0, policy);
+    if cached {
+        client.attach_cache_sharded(
+            FeatureCache::new("emb", 1 << 20, CacheAdmission::All, None),
+            2,
+        );
+        client.set_embedding_staleness(k);
+    }
+    let lr = 0.2f32;
+    let mut buf = vec![0f32; BATCH * DIM];
+    let mut grads = vec![0f32; BATCH * DIM];
+    let mut losses = Vec::with_capacity(STEPS);
+    for step in 0..STEPS {
+        // 64 distinct rows per step, sweeping the table (7 is odd, so
+        // i*7 mod 512 never collides within a batch)
+        let ids: Vec<NodeId> = (0..BATCH)
+            .map(|i| ((step * 17 + i * 7) % ROWS) as NodeId)
+            .collect();
+        emb.gather(&mut client, &ids, &mut buf).unwrap();
+        let mut loss = 0f64;
+        for (j, &id) in ids.iter().enumerate() {
+            let target = (id % 7) as f32 * 0.1;
+            for d in 0..DIM {
+                let v = buf[j * DIM + d];
+                loss += ((v - target) as f64).powi(2);
+                grads[j * DIM + d] = 2.0 * (v - target);
+            }
+        }
+        losses.push(loss / (BATCH * DIM) as f64);
+        emb.update(&mut client, &ids, &grads, lr).unwrap();
+    }
+    losses
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let vspec = manifest.variant("sage_nc_dev")?.clone();
+
+    let mut dspec = DatasetSpec::new("prefetch-b", 9000, 45_000);
+    dspec.train_frac = 0.2;
+    let dataset = dspec.generate();
+
+    // --- lookahead grid ---------------------------------------------------
+    let mut rows_json: Vec<String> = Vec::new();
+    let mut bps_of = std::collections::HashMap::new();
+    for emulate in [false, true] {
+        for workers in [1usize, 4] {
+            for depth in [0usize, 2, 8] {
+                let mut spec = ClusterSpec::new(3, 1);
+                spec.emulate_network_time = emulate;
+                spec.prefetch_depth = depth;
+                spec.cache_shards = 4;
+                let cluster =
+                    Cluster::deploy(&dataset, spec, artifacts_dir())?;
+                let g = DistGraph::new(&cluster);
+                let mut loader = DistNodeDataLoader::builder(&g, &vspec)
+                    .seed(11)
+                    .pipeline(PipelineConfig {
+                        mode: PipelineMode::Async, // exact production count
+                        ..Default::default()
+                    })
+                    .num_workers(workers)
+                    .build()?;
+                let total = 2 * loader.len();
+                let t = Instant::now();
+                for _ in 0..total {
+                    let b = loader.next_batch();
+                    std::hint::black_box(b.targets.len());
+                    loader.recycle(b);
+                }
+                let secs = t.elapsed().as_secs_f64();
+                let m = loader.metrics().clone();
+                drop(loader);
+                let issued = m.counter("cache.prefetch_issued");
+                let hits = m.counter("cache.prefetch_hits");
+                let wasted = m.counter("cache.prefetch_wasted_bytes");
+                let bps = total as f64 / secs;
+                let net = if emulate { "emulated" } else { "cpu" };
+                bps_of.insert((emulate, workers, depth), bps);
+                println!(
+                    "prefetch grid: {net:>8} net, {workers} worker(s), \
+                     depth {depth}: {bps:8.1} batches/s ({total} batches, \
+                     issued {issued}, hits {hits}, wasted {wasted} B)"
+                );
+                rows_json.push(format!(
+                    "    {{\"net\": \"{net}\", \"workers\": {workers}, \
+                     \"depth\": {depth}, \"secs\": {secs:.6}, \
+                     \"batches_per_s\": {bps:.3}, \
+                     \"prefetch_issued\": {issued}, \
+                     \"prefetch_hits\": {hits}, \
+                     \"prefetch_wasted_bytes\": {wasted}}}"
+                ));
+            }
+        }
+    }
+    for workers in [1usize, 4] {
+        let s = bps_of[&(true, workers, 8)]
+            / bps_of[&(true, workers, 0)].max(1e-12);
+        println!(
+            "emulated net, {workers} worker(s): depth 8 vs 0 = {s:.2}x \
+             (expect >= 1.0)"
+        );
+    }
+
+    // --- bounded-staleness ablation ---------------------------------------
+    let mut stale_json: Vec<String> = Vec::new();
+    let wire = staleness_run(0, false);
+    for k in [0usize, 4, 16] {
+        let losses = staleness_run(k, true);
+        if k == 0 {
+            assert_eq!(
+                losses, wire,
+                "strict mode must match the uncached run bit for bit"
+            );
+        }
+        let curve: Vec<String> =
+            losses.iter().map(|l| format!("{l:.6}")).collect();
+        println!(
+            "staleness K={k:>2}: first {:.4} -> final {:.4}",
+            losses[0],
+            losses.last().unwrap()
+        );
+        stale_json.push(format!(
+            "    {{\"staleness\": {k}, \"final_loss\": {:.6}, \
+             \"losses\": [{}]}}",
+            losses.last().unwrap(),
+            curve.join(", ")
+        ));
+    }
+
+    std::fs::write(
+        "BENCH_prefetch.json",
+        format!(
+            "{{\n  \"bench\": \"prefetch.lookahead\",\n  \
+             \"machines\": 3,\n  \
+             \"batch\": {},\n  \
+             \"rows\": [\n{}\n  ],\n  \
+             \"staleness_ablation\": [\n{}\n  ]\n}}\n",
+            vspec.batch,
+            rows_json.join(",\n"),
+            stale_json.join(",\n"),
+        ),
+    )?;
+    println!("wrote BENCH_prefetch.json");
+    Ok(())
+}

@@ -49,6 +49,7 @@ pub struct DistNodeDataLoaderBuilder<'a> {
     seed: u64,
     start_at: u64,
     pipeline: PipelineConfig,
+    prefetch_depth: Option<usize>,
     metrics: Option<Arc<Metrics>>,
 }
 
@@ -138,6 +139,21 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
     /// Shorthand for setting [`PipelineConfig::num_workers`].
     pub fn num_workers(mut self, num_workers: usize) -> Self {
         self.pipeline.num_workers = num_workers.max(1);
+        self
+    }
+
+    /// Lookahead window for the predictive prefetcher (docs/DESIGN.md
+    /// §10): a background thread re-derives the next `depth` batches'
+    /// remote frontiers and warms the shared feature cache ahead of
+    /// demand. `0` disables it. Unset, the deployment-wide
+    /// [`ClusterSpec::prefetch_depth`] applies; calling this (even with
+    /// `0`) overrides the deployment default for this loader. The batch
+    /// stream is byte-identical for any value — purely a throughput
+    /// knob, like [`Self::num_workers`].
+    ///
+    /// [`ClusterSpec::prefetch_depth`]: crate::cluster::ClusterSpec::prefetch_depth
+    pub fn prefetch_depth(mut self, depth: usize) -> Self {
+        self.prefetch_depth = Some(depth);
         self
     }
 
@@ -254,9 +270,16 @@ impl<'a> DistNodeDataLoaderBuilder<'a> {
         let metrics = self
             .metrics
             .unwrap_or_else(|| Arc::new(Metrics::new()));
+        // builder override > PipelineConfig > deployment-wide default
+        let mut pcfg = self.pipeline;
+        if let Some(depth) = self.prefetch_depth {
+            pcfg.prefetch_depth = depth;
+        } else if pcfg.prefetch_depth == 0 {
+            pcfg.prefetch_depth = cluster.spec.prefetch_depth;
+        }
         let pipeline = Pipeline::start_at(
             gen,
-            &self.pipeline,
+            &pcfg,
             metrics.clone(),
             self.start_at,
         );
@@ -319,6 +342,7 @@ impl DistNodeDataLoader {
             seed: 7,
             start_at: 0,
             pipeline: PipelineConfig::default(),
+            prefetch_depth: None,
             metrics: None,
         }
     }
@@ -1106,6 +1130,81 @@ mod tests {
             let ba = a.next_batch();
             assert_eq!(ba.pair_mask.iter().sum::<f32>(), 16.0);
             assert_eq!(ba, b.next_batch());
+        }
+    }
+
+    /// The prefetch tentpole's acceptance gate at the API layer: the
+    /// batch stream is byte-identical with the predictive prefetcher
+    /// off and on — lookahead depth {2, 8} × all three pipeline modes ×
+    /// sampling workers {1, 4} × cache admission {all, degree} — and in
+    /// every cell the prefetcher actually issued pulls (the gate is not
+    /// vacuous). `remote_rows` is stripped as usual: prefetch turns
+    /// demand fetches into hits, never changes payload bytes.
+    #[test]
+    fn prefetch_never_changes_the_stream_across_the_matrix() {
+        use crate::kvstore::CacheAdmission;
+        let mk = |admission: &CacheAdmission| {
+            let mut dspec = DatasetSpec::new("loader-pf", 1500, 6000);
+            dspec.train_frac = 0.2;
+            let d = dspec.generate();
+            let mut spec = ClusterSpec::new(2, 1);
+            spec.cache_budget_bytes = 32 << 20;
+            spec.cache_admission = admission.clone();
+            let c = Cluster::deploy(&d, spec, artifacts_dir()).unwrap();
+            let v = dev_vspec(ModelKind::Sage, 16, d.feat_dim, 1);
+            (c, v)
+        };
+        for admission in
+            [CacheAdmission::All, CacheAdmission::Degree(Option::None)]
+        {
+            let (c0, v) = mk(&admission);
+            let g0 = DistGraph::new(&c0);
+            let mut base = DistNodeDataLoader::builder(&g0, &v)
+                .seed(37)
+                .prefetch_depth(0)
+                .pipeline(sync_cfg())
+                .build()
+                .unwrap();
+            let expect: Vec<HostBatch> = (0..2 * base.len())
+                .map(|_| strip_locality(base.next_batch()))
+                .collect();
+            for depth in [2usize, 8] {
+                for mode in [
+                    PipelineMode::Sync,
+                    PipelineMode::Async,
+                    PipelineMode::AsyncNonstop,
+                ] {
+                    for workers in [1usize, 4] {
+                        let (c1, _) = mk(&admission);
+                        let g1 = DistGraph::new(&c1);
+                        let mut on = DistNodeDataLoader::builder(&g1, &v)
+                            .seed(37)
+                            .prefetch_depth(depth)
+                            .pipeline(PipelineConfig {
+                                mode,
+                                ..Default::default()
+                            })
+                            .num_workers(workers)
+                            .build()
+                            .unwrap();
+                        let m = on.metrics().clone();
+                        for (step, want) in expect.iter().enumerate() {
+                            assert_eq!(
+                                *want,
+                                strip_locality(on.next_batch()),
+                                "{admission:?} depth={depth} {mode:?} \
+                                 x{workers} diverged at step {step}"
+                            );
+                        }
+                        drop(on);
+                        assert!(
+                            m.counter("cache.prefetch_issued") > 0,
+                            "{admission:?} depth={depth} {mode:?} \
+                             x{workers}: prefetcher never issued a pull"
+                        );
+                    }
+                }
+            }
         }
     }
 }

@@ -259,6 +259,19 @@ pub fn locality_summary(report: &TrainReport) -> String {
         report.pool_miss,
         report.pool_dropped,
     ));
+    // predictive-prefetcher effectiveness (docs/DESIGN.md §10): only
+    // shown when a lookahead actually ran
+    if report.cache_prefetch_issued > 0 {
+        s.push_str(&format!(
+            " | prefetch issued {} hits {} wasted {} B pins {} \
+             ({:.3}s lookahead cpu)",
+            report.cache_prefetch_issued,
+            report.cache_prefetch_hits,
+            report.cache_prefetch_wasted_bytes,
+            report.cache_pinned_rows,
+            report.stage_prefetch_secs,
+        ));
+    }
     // fault-tolerance counters (docs/DESIGN.md §8-9): only shown when
     // the run checkpointed, resumed, reconfigured, or absorbed injected
     // faults

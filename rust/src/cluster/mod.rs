@@ -58,6 +58,16 @@ pub struct ClusterSpec {
     pub cache_budget_bytes: usize,
     /// Which fetched remote rows the cache keeps.
     pub cache_admission: CacheAdmission,
+    /// Lock stripes the per-trainer cache is split into (≥ 1): prefetch
+    /// inserts and worker lookups on different stripes never contend.
+    pub cache_shards: usize,
+    /// Lookahead batches the predictive prefetcher pulls ahead of
+    /// demand (`pipeline::prefetch`); 0 disables it.
+    pub prefetch_depth: usize,
+    /// Bounded-staleness window for learnable embeddings: cached rows
+    /// may lag the store by at most this many sparse updates. 0
+    /// (strict, default) is byte-identical to an uncached client.
+    pub embedding_staleness: usize,
     /// Per-etype fanout weights overriding the schema's (each layer's K
     /// is split proportionally; see [`FanoutPlan`]). Empty = use the
     /// schema weights; must have one entry per etype otherwise.
@@ -77,6 +87,9 @@ impl ClusterSpec {
             concurrent_rpc: true,
             cache_budget_bytes: 64 << 20,
             cache_admission: CacheAdmission::All,
+            cache_shards: 1,
+            prefetch_depth: 0,
+            embedding_staleness: 0,
             etype_fanouts: Vec::new(),
             seed: 13,
         }
@@ -439,8 +452,9 @@ impl Cluster {
         };
         let mut kv = self.kv.client(machine, self.policy.clone());
         if let Some(cache) = self.make_feature_cache() {
-            kv.attach_cache(cache);
+            kv.attach_cache_sharded(cache, self.spec.cache_shards.max(1));
         }
+        kv.set_embedding_staleness(self.spec.embedding_staleness);
         let plan = self.fanout_plan(&shape.fanouts);
         let etype_keys =
             crate::pipeline::gen::etype_metric_keys(self.schema.n_etypes());
@@ -459,6 +473,7 @@ impl Cluster {
             etype_keys,
             pool: BatchPool::default(),
             label_scratch: Vec::new(),
+            frontier_scratch: Vec::new(),
         }
     }
 

@@ -94,6 +94,26 @@ impl RunConfig {
                 self.cluster.cache_admission =
                     CacheAdmission::parse(value)?
             }
+            // lock stripes the cache is split into (prefetch inserts
+            // vs worker lookups); must be >= 1
+            "cache_shards" => {
+                let n = parse_usize()?;
+                if n == 0 {
+                    bail!("cache_shards must be >= 1");
+                }
+                self.cluster.cache_shards = n;
+            }
+            // lookahead batches the predictive prefetcher pulls ahead
+            // of demand (0 = off); the batch stream is byte-identical
+            // for any value
+            "prefetch_depth" => {
+                self.cluster.prefetch_depth = parse_usize()?
+            }
+            // bounded-staleness window for learnable embeddings; 0
+            // (strict) is byte-identical to an uncached client
+            "embedding_staleness" => {
+                self.cluster.embedding_staleness = parse_usize()?
+            }
             "etype_fanouts" => {
                 // per-etype fanout weights, e.g. "2,1,1,1"; each layer's
                 // K is split proportionally (schema weights when unset)
@@ -207,6 +227,7 @@ impl RunConfig {
                  num_rels dataset_seed machines trainers partitioner \
                  multi_constraint two_level emulate_network \
                  concurrent_rpc cache_budget_bytes cache_admission \
+                 cache_shards prefetch_depth embedding_staleness \
                  etype_fanouts variant lr epochs max_steps drop_last eval \
                  seed pipeline cpu_prefetch gpu_prefetch num_workers \
                  checkpoint_every checkpoint_dir resume_from momentum \
@@ -317,6 +338,40 @@ mod tests {
         let d = RunConfig::default();
         assert!(d.cluster.cache_budget_bytes > 0);
         assert_eq!(d.cluster.cache_admission, CacheAdmission::All);
+    }
+
+    #[test]
+    fn prefetch_and_staleness_knobs_parse() {
+        // defaults: prefetch off, strict embeddings, one stripe
+        let d = RunConfig::default();
+        assert_eq!(d.cluster.prefetch_depth, 0);
+        assert_eq!(d.cluster.embedding_staleness, 0);
+        assert_eq!(d.cluster.cache_shards, 1);
+        let cfg = RunConfig::from_args(
+            [
+                "prefetch_depth=8",
+                "embedding_staleness=4",
+                "cache_shards=16",
+            ]
+            .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.prefetch_depth, 8);
+        assert_eq!(cfg.cluster.embedding_staleness, 4);
+        assert_eq!(cfg.cluster.cache_shards, 16);
+        // rejection: a shardless cache is nonsensical, and non-numeric
+        // values fail with the offending pair in the message
+        for bad in [
+            "cache_shards=0",
+            "cache_shards=x",
+            "prefetch_depth=deep",
+            "embedding_staleness=-1",
+        ] {
+            assert!(
+                RunConfig::from_args([bad.to_string()]).is_err(),
+                "{bad} should be rejected"
+            );
+        }
     }
 
     #[test]

@@ -21,40 +21,51 @@
 //!   dominate repeat traffic (MassiveGNN/DistGNN's observation).
 //! - **Eviction** — CLOCK (second-chance): a hit sets the slot's
 //!   reference bit; the rotating hand evicts the first unreferenced slot.
-//!   Row storage is a single flat `Vec<f32>` (slot `i` at `i*dim`), so a
-//!   full cache never reallocates.
+//!   Rows **pinned** by the predictive prefetcher (needed by an imminent
+//!   batch, docs/DESIGN.md §10) are skipped outright; the sweep is
+//!   bounded so an all-pinned cache refuses the insert instead of
+//!   spinning. Row storage is a single flat `Vec<f32>` (slot `i` at
+//!   `i*dim`), so a full cache never reallocates.
 //! - **Budget** — a byte budget caps `capacity = budget / (row bytes +
 //!   bookkeeping)`. A budget of 0 disables the cache entirely (the pull
 //!   path degenerates to the uncached behavior, byte for byte).
 //! - **Coherence** — the cache is meant for immutable tensors (input
 //!   features). `KvClient::push_grad` on the cached tensor invalidates
 //!   the touched rows, so a pull after a sparse update through the *same*
-//!   client is never stale. Cross-client writes are not tracked.
+//!   client is never stale (in strict mode; the bounded-staleness
+//!   embedding knob relaxes exactly this — see
+//!   [`KvClient::set_embedding_staleness`](super::KvClient::set_embedding_staleness)).
+//!   Cross-client writes are not tracked.
 //!
 //! Correctness bar (tested): cached and uncached pulls return
 //! byte-identical rows, and all randomness is untouched — the cache never
-//! consumes RNG state.
+//! consumes RNG state. Prefetched rows are copies of the same immutable
+//! tensor rows a demand pull would fetch, so warming the cache ahead of
+//! demand cannot change a single served byte.
 //!
-//! **Thread-safety audit (worker pool).** The cache itself is plain
-//! single-threaded state — no interior mutability, no lock on the hit
-//! path. When a trainer runs N sampling workers, the forked
-//! [`KvClient`](super::KvClient)s share one cache behind an
-//! `Arc<Mutex<..>>` (one budget, one working set); the client locks it
-//! once for a pull's whole lookup pass and once for the insert pass, so
-//! invariants that span fields (map ↔ slots ↔ data ↔ stats) are only
-//! ever observed consistent. Under sharing, *which* worker's pull is
-//! counted as the miss for a cold row is schedule-dependent — two
-//! workers can race the same cold row and both miss — but
-//! `hit_rows + miss_rows` still equals the total remote lookups and
-//! every miss is a fetched row (test:
+//! **Thread-safety audit (worker pool + prefetcher).** A bare
+//! [`FeatureCache`] is plain single-threaded state — no interior
+//! mutability, no lock on the hit path. When a trainer runs N sampling
+//! workers and/or the predictive prefetcher, the forked
+//! [`KvClient`](super::KvClient)s share one [`SharedFeatureCache`]: the
+//! budget is striped across `cache_shards` independent
+//! `Mutex<FeatureCache>` stripes routed by row id, so prefetch inserts on
+//! one stripe never serialize against worker lookups on another.
+//! Invariants that span fields (map ↔ slots ↔ data ↔ stats) live entirely
+//! inside one stripe and are only ever observed consistent under its
+//! lock. Under sharing, *which* worker's pull is counted as the miss for
+//! a cold row is schedule-dependent — two workers can race the same cold
+//! row and both miss — but `hit_rows + miss_rows` still equals the total
+//! remote lookups and every miss is a fetched row (test:
 //! `forked_clients_share_cache_and_stats_stay_consistent`), and served
 //! bytes are identical in every interleaving because entries are
 //! immutable copies of immutable tensor rows.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 use crate::graph::NodeId;
 
@@ -98,11 +109,23 @@ pub struct CacheStats {
     pub miss_rows: u64,
     /// Rows displaced by the CLOCK hand.
     pub evicted_rows: u64,
-    /// Fetched rows the admission policy declined to keep.
+    /// Fetched rows the admission policy declined to keep (or that found
+    /// every slot pinned).
     pub rejected_rows: u64,
     /// Response payload bytes that never crossed the wire (`hit_rows *
     /// dim * 4`).
     pub remote_bytes_saved: u64,
+    /// Rows fetched ahead of demand by the predictive prefetcher.
+    pub prefetch_issued: u64,
+    /// Demand lookups served by a row the prefetcher fetched (each
+    /// prefetched row counts at most once — its first demand hit).
+    pub prefetch_hits: u64,
+    /// Payload bytes of prefetched rows evicted or invalidated before
+    /// any demand hit (prefetch that paid wire cost for nothing).
+    pub prefetch_wasted_bytes: u64,
+    /// Pin events on resident rows (imminent-batch protection from the
+    /// CLOCK hand; each demand hit releases one pin).
+    pub pinned_rows: u64,
 }
 
 impl CacheStats {
@@ -124,6 +147,27 @@ impl CacheStats {
             rejected_rows: self.rejected_rows - o.rejected_rows,
             remote_bytes_saved: self.remote_bytes_saved
                 - o.remote_bytes_saved,
+            prefetch_issued: self.prefetch_issued - o.prefetch_issued,
+            prefetch_hits: self.prefetch_hits - o.prefetch_hits,
+            prefetch_wasted_bytes: self.prefetch_wasted_bytes
+                - o.prefetch_wasted_bytes,
+            pinned_rows: self.pinned_rows - o.pinned_rows,
+        }
+    }
+
+    fn plus(&self, o: &CacheStats) -> CacheStats {
+        CacheStats {
+            hit_rows: self.hit_rows + o.hit_rows,
+            miss_rows: self.miss_rows + o.miss_rows,
+            evicted_rows: self.evicted_rows + o.evicted_rows,
+            rejected_rows: self.rejected_rows + o.rejected_rows,
+            remote_bytes_saved: self.remote_bytes_saved
+                + o.remote_bytes_saved,
+            prefetch_issued: self.prefetch_issued + o.prefetch_issued,
+            prefetch_hits: self.prefetch_hits + o.prefetch_hits,
+            prefetch_wasted_bytes: self.prefetch_wasted_bytes
+                + o.prefetch_wasted_bytes,
+            pinned_rows: self.pinned_rows + o.pinned_rows,
         }
     }
 }
@@ -138,15 +182,36 @@ fn key(ntype: u8, gid: NodeId) -> u64 {
     ((ntype as u64) << 32) | gid as u64
 }
 
+/// Does `name` belong to the tensor group rooted at `base`? True for the
+/// base name itself and for any per-ntype table `base.<ntype>` — writes
+/// to either must invalidate. Shared by [`FeatureCache::covers`] and
+/// [`SharedFeatureCache::covers`].
+#[inline]
+fn covers_name(base: &str, name: &str) -> bool {
+    name == base
+        || (name.len() > base.len() + 1
+            && name.starts_with(base)
+            && name.as_bytes()[base.len()] == b'.')
+}
+
 struct Slot {
     key: u64,
     /// CLOCK reference bit: set on hit, cleared by a passing hand.
     referenced: bool,
+    /// Entered via the prefetcher and not yet demand-hit. Cleared by the
+    /// first demand hit (counting `prefetch_hits`); still set at
+    /// eviction/invalidation, the fetch was wasted wire traffic
+    /// (`prefetch_wasted_bytes`).
+    prefetched: bool,
+    /// Outstanding pins: rows an imminent batch is known to need. The
+    /// CLOCK hand skips pinned slots; each demand hit releases one pin.
+    pins: u32,
 }
 
 /// See the module docs. Single-threaded by design: each trainer's
-/// [`KvClient`](super::KvClient) owns its own cache, so no locking sits on
-/// the hit path.
+/// [`KvClient`](super::KvClient) owns its own cache (behind a
+/// [`SharedFeatureCache`] stripe when workers/prefetcher share it), so no
+/// locking sits inside the hit path itself.
 pub struct FeatureCache {
     tensor: String,
     budget_bytes: usize,
@@ -211,10 +276,7 @@ impl FeatureCache {
     /// base name itself and for any per-ntype table `base.<ntype>` —
     /// writes to either must invalidate.
     pub fn covers(&self, name: &str) -> bool {
-        name == self.tensor
-            || (name.len() > self.tensor.len() + 1
-                && name.starts_with(&self.tensor)
-                && name.as_bytes()[self.tensor.len()] == b'.')
+        covers_name(&self.tensor, name)
     }
 
     /// False iff the byte budget is 0 (fully disabled, zero overhead).
@@ -249,8 +311,20 @@ impl FeatureCache {
     }
 
     /// Bind the per-ntype row widths on first use and derive the row
-    /// capacity from the byte budget (slots are `max(dims)` wide so any
-    /// ntype's row fits any slot).
+    /// capacity from the byte budget.
+    ///
+    /// **Arena layout invariant** (protected by the assert below): the
+    /// cache is one flat arena of equal-width slots, `slot_width =
+    /// max(dims)`, so *any* ntype's row fits *any* slot and the CLOCK
+    /// hand never needs to match widths when reusing a victim. That only
+    /// holds if `dims` is bound exactly once: re-binding while rows are
+    /// resident would silently reinterpret live slots under new widths
+    /// (slot `i`'s payload starts at `i*slot_width`, and `lookup` copies
+    /// the `dims[ntype]` prefix). A cache is therefore dedicated to one
+    /// tensor group for its whole life; callers that need a different
+    /// dim set build a new cache. The single-table case is just the
+    /// one-entry `dims = [dim]` instance of the same path — there is
+    /// deliberately no separate scalar entry point.
     pub fn ensure_dims(&mut self, dims: &[usize]) {
         if self.dims == dims {
             return;
@@ -269,13 +343,10 @@ impl FeatureCache {
             self.budget_bytes / (self.slot_width * 4 + ROW_OVERHEAD_BYTES);
     }
 
-    /// Single-table convenience form of [`Self::ensure_dims`].
-    pub fn ensure_dim(&mut self, dim: usize) {
-        self.ensure_dims(&[dim]);
-    }
-
     /// Copy the cached row for `(ntype, gid)` into `out` (len =
-    /// `dims[ntype]`) and mark it recently used. Counts a hit or a miss.
+    /// `dims[ntype]`) and mark it recently used. Counts a hit or a miss;
+    /// a hit releases one pin and counts the row's first demand hit
+    /// after a prefetch as a `prefetch_hit`.
     pub fn lookup(&mut self, ntype: u8, gid: NodeId, out: &mut [f32]) -> bool {
         match self.map.get(&key(ntype, gid)) {
             Some(&s) => {
@@ -283,7 +354,15 @@ impl FeatureCache {
                 let w = self.slot_width;
                 let s = s as usize;
                 out[..d].copy_from_slice(&self.data[s * w..s * w + d]);
-                self.slots[s].referenced = true;
+                let slot = &mut self.slots[s];
+                slot.referenced = true;
+                if slot.prefetched {
+                    slot.prefetched = false;
+                    self.stats.prefetch_hits += 1;
+                }
+                if slot.pins > 0 {
+                    slot.pins -= 1;
+                }
                 self.stats.hit_rows += 1;
                 self.stats.remote_bytes_saved += (d * 4) as u64;
                 true
@@ -295,9 +374,35 @@ impl FeatureCache {
         }
     }
 
+    /// Is `(ntype, gid)` resident? A pure peek for prefetch dedup: no
+    /// stats, no reference bit — it must not perturb hit accounting or
+    /// CLOCK state.
+    pub fn contains(&self, ntype: u8, gid: NodeId) -> bool {
+        self.map.contains_key(&key(ntype, gid))
+    }
+
     /// Offer a freshly fetched remote row of `(ntype, gid)`. Subject to
     /// admission; evicts via CLOCK when the budget is exhausted.
     pub fn insert(&mut self, ntype: u8, gid: NodeId, row: &[f32]) {
+        self.insert_impl(ntype, gid, row, false);
+    }
+
+    /// [`Self::insert`] for a row the prefetcher fetched ahead of
+    /// demand: counts `prefetch_issued` and flags the slot so its first
+    /// demand hit (or its eviction without one) is attributed to the
+    /// prefetcher.
+    pub fn insert_prefetched(&mut self, ntype: u8, gid: NodeId, row: &[f32]) {
+        self.stats.prefetch_issued += 1;
+        self.insert_impl(ntype, gid, row, true);
+    }
+
+    fn insert_impl(
+        &mut self,
+        ntype: u8,
+        gid: NodeId,
+        row: &[f32],
+        prefetched: bool,
+    ) {
         let k = key(ntype, gid);
         if self.capacity == 0 || self.map.contains_key(&k) {
             return;
@@ -311,28 +416,67 @@ impl FeatureCache {
         let slot = if let Some(s) = self.free.pop() {
             s
         } else if self.slots.len() < self.capacity {
-            self.slots.push(Slot { key: k, referenced: false });
+            self.slots.push(Slot {
+                key: k,
+                referenced: false,
+                prefetched: false,
+                pins: 0,
+            });
             self.data.resize(self.slots.len() * w, 0.0);
             (self.slots.len() - 1) as u32
         } else {
-            self.evict()
+            match self.evict() {
+                Some(s) => s,
+                None => {
+                    // every slot pinned for an imminent batch: refuse
+                    // the insert rather than displace protected rows
+                    self.stats.rejected_rows += 1;
+                    return;
+                }
+            }
         };
         let i = slot as usize;
-        self.slots[i] = Slot { key: k, referenced: false };
+        self.slots[i] =
+            Slot { key: k, referenced: false, prefetched, pins: 0 };
         self.data[i * w..i * w + d].copy_from_slice(&row[..d]);
         self.map.insert(k, slot);
+    }
+
+    /// Pin a *resident* row an imminent batch needs: the CLOCK hand will
+    /// not evict it until a demand hit releases the pin. Returns whether
+    /// the row was resident (pinning a non-resident row is a no-op — the
+    /// prefetcher pins right after inserting).
+    pub fn pin(&mut self, ntype: u8, gid: NodeId) -> bool {
+        match self.map.get(&key(ntype, gid)) {
+            Some(&s) => {
+                let slot = &mut self.slots[s as usize];
+                slot.pins += 1;
+                slot.referenced = true;
+                self.stats.pinned_rows += 1;
+                true
+            }
+            None => false,
+        }
     }
 
     /// Drop rows (sparse-update coherence: stale copies must not survive
     /// a `push_grad` on the cached tensor group). The writer does not
     /// know which ntype a row was cached under, so every bound ntype's
-    /// key is dropped.
+    /// key is dropped. Pins do not protect against invalidation —
+    /// coherence outranks the prefetch hold.
     pub fn invalidate(&mut self, ids: &[NodeId]) {
         let n_ntypes = self.dims.len().max(1) as u8;
         for &gid in ids {
             for t in 0..n_ntypes {
                 if let Some(s) = self.map.remove(&key(t, gid)) {
-                    self.slots[s as usize].referenced = false;
+                    let slot = &mut self.slots[s as usize];
+                    slot.referenced = false;
+                    slot.pins = 0;
+                    if slot.prefetched {
+                        slot.prefetched = false;
+                        self.stats.prefetch_wasted_bytes +=
+                            (self.dims[t as usize] * 4) as u64;
+                    }
                     self.free.push(s);
                 }
             }
@@ -352,22 +496,210 @@ impl FeatureCache {
         }
     }
 
-    /// CLOCK hand: clear reference bits until an unreferenced victim is
-    /// found. Only called with a full cache and an empty free list, so
-    /// every slot is live and the sweep terminates within two laps.
-    fn evict(&mut self) -> u32 {
-        loop {
+    /// CLOCK hand: clear reference bits until an unreferenced, unpinned
+    /// victim is found. Only called with a full cache and an empty free
+    /// list, so every slot is live; without pins the sweep terminates
+    /// within two laps (first lap clears bits, second finds a victim).
+    /// Pinned slots are skipped *without* clearing their bit, so the
+    /// sweep is explicitly bounded to two laps — `None` means every slot
+    /// is pinned and the caller must decline the insert.
+    fn evict(&mut self) -> Option<u32> {
+        for _ in 0..2 * self.slots.len() {
             let i = self.hand;
             self.hand = (self.hand + 1) % self.slots.len();
             let s = &mut self.slots[i];
+            if s.pins > 0 {
+                continue;
+            }
             if s.referenced {
                 s.referenced = false;
             } else {
                 self.map.remove(&s.key);
                 self.stats.evicted_rows += 1;
-                return i as u32;
+                if s.prefetched {
+                    s.prefetched = false;
+                    let t = (s.key >> 32) as usize;
+                    self.stats.prefetch_wasted_bytes +=
+                        (self.dims[t] * 4) as u64;
+                }
+                return Some(i as u32);
             }
         }
+        None
+    }
+}
+
+/// The cache handle every forked [`KvClient`](super::KvClient) (sampling
+/// workers + the predictive prefetcher) shares: one byte budget striped
+/// across `n_shards` independently locked [`FeatureCache`]s, routed by
+/// row id, so prefetch inserts on one stripe never serialize against
+/// demand lookups on another. `n_shards = 1` is semantically the old
+/// single `Arc<Mutex<FeatureCache>>` (one lock, one arena).
+///
+/// Also owns the two pieces of cross-client prefetch coordination:
+///
+/// - the **in-flight set** — keys the prefetcher is currently pulling,
+///   so overlapping lookahead windows never double-fetch a row;
+/// - the **invalidation epoch** — bumped by every [`Self::invalidate`];
+///   a prefetch captures the epoch before pulling and its insert is
+///   dropped if an invalidation landed in between, so a stale pre-update
+///   value can never overwrite coherence (strict-mode byte identity).
+///
+/// Routing by row id (not the full (ntype, id) key) keeps all of a
+/// vertex's typed rows — and therefore a whole `invalidate([gid])` — on
+/// one stripe.
+pub struct SharedFeatureCache {
+    shards: Vec<Mutex<FeatureCache>>,
+    tensor: String,
+    enabled: bool,
+    inflight: Mutex<FxHashSet<u64>>,
+    epoch: AtomicU64,
+}
+
+impl SharedFeatureCache {
+    /// Stripe `proto`'s byte budget across `n_shards` (each stripe gets
+    /// `budget / n`; a budget too small to give every stripe a slot just
+    /// leaves some stripes disabled — correctness is unaffected because
+    /// the cache is value-transparent).
+    pub fn new(proto: FeatureCache, n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        let tensor = proto.tensor.clone();
+        let enabled = proto.is_enabled();
+        let per = proto.budget_bytes / n;
+        let shards = (0..n)
+            .map(|_| {
+                Mutex::new(FeatureCache::new(
+                    &tensor,
+                    per,
+                    proto.admission.clone(),
+                    proto.degrees.clone(),
+                ))
+            })
+            .collect();
+        Self {
+            shards,
+            tensor,
+            enabled,
+            inflight: Mutex::new(FxHashSet::default()),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn tensor(&self) -> &str {
+        &self.tensor
+    }
+
+    pub fn covers(&self, name: &str) -> bool {
+        covers_name(&self.tensor, name)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    fn shard(&self, gid: NodeId) -> &Mutex<FeatureCache> {
+        &self.shards[gid as usize % self.shards.len()]
+    }
+
+    /// Bind row widths on every stripe (see
+    /// [`FeatureCache::ensure_dims`] for the arena invariant).
+    pub fn ensure_dims(&self, dims: &[usize]) {
+        for s in &self.shards {
+            s.lock().unwrap().ensure_dims(dims);
+        }
+    }
+
+    pub fn lookup(&self, ntype: u8, gid: NodeId, out: &mut [f32]) -> bool {
+        self.shard(gid).lock().unwrap().lookup(ntype, gid, out)
+    }
+
+    /// Non-counting residency peek (prefetch dedup).
+    pub fn contains(&self, ntype: u8, gid: NodeId) -> bool {
+        self.shard(gid).lock().unwrap().contains(ntype, gid)
+    }
+
+    pub fn insert(&self, ntype: u8, gid: NodeId, row: &[f32]) {
+        self.shard(gid).lock().unwrap().insert(ntype, gid, row);
+    }
+
+    /// Insert a prefetched row, unless an invalidation has landed since
+    /// the prefetcher captured `epoch` (the row's fetched value may
+    /// predate a sparse update — dropping it preserves strict-mode
+    /// coherence; the wasted fetch is still counted as issued).
+    pub fn insert_prefetched(
+        &self,
+        ntype: u8,
+        gid: NodeId,
+        row: &[f32],
+        epoch: u64,
+    ) {
+        let mut shard = self.shard(gid).lock().unwrap();
+        if self.epoch.load(Ordering::Acquire) != epoch {
+            // count the issued row (it did cross the wire) as
+            // immediately wasted
+            let d = shard.dims.get(ntype as usize).copied().unwrap_or(0);
+            shard.stats.prefetch_issued += 1;
+            shard.stats.prefetch_wasted_bytes += (d * 4) as u64;
+            return;
+        }
+        shard.insert_prefetched(ntype, gid, row);
+    }
+
+    /// Pin a resident row for an imminent batch.
+    pub fn pin(&self, ntype: u8, gid: NodeId) -> bool {
+        self.shard(gid).lock().unwrap().pin(ntype, gid)
+    }
+
+    /// Invalidate rows on their stripes and bump the invalidation epoch
+    /// so concurrent in-flight prefetches cannot resurrect stale values.
+    pub fn invalidate(&self, ids: &[NodeId]) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        for &gid in ids {
+            self.shard(gid).lock().unwrap().invalidate(&[gid]);
+        }
+    }
+
+    /// The current invalidation epoch; capture before a prefetch pull,
+    /// pass to [`Self::insert_prefetched`].
+    pub fn invalidation_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Claim `(ntype, gid)` for an in-flight prefetch pull. `false` =
+    /// another pull already has it (skip — dedup against in-flight).
+    pub fn begin_inflight(&self, ntype: u8, gid: NodeId) -> bool {
+        self.inflight.lock().unwrap().insert(key(ntype, gid))
+    }
+
+    /// Release the in-flight claim (after the insert, or on error).
+    pub fn end_inflight(&self, ntype: u8, gid: NodeId) {
+        self.inflight.lock().unwrap().remove(&key(ntype, gid));
+    }
+
+    /// Aggregate counters across stripes.
+    pub fn stats(&self) -> CacheStats {
+        self.shards.iter().fold(CacheStats::default(), |acc, s| {
+            acc.plus(&s.lock().unwrap().stats())
+        })
+    }
+
+    /// Aggregate per-stripe deltas since the last call (each stripe's
+    /// cursor advances under its own lock, so concurrent callers never
+    /// double-count).
+    pub fn take_delta(&self) -> CacheStats {
+        self.shards.iter().fold(CacheStats::default(), |acc, s| {
+            acc.plus(&s.lock().unwrap().take_delta())
+        })
+    }
+
+    /// Rows resident across all stripes.
+    pub fn rows(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().rows()).sum()
     }
 }
 
@@ -383,7 +715,7 @@ mod tests {
         let budget = n_rows * (dim * 4 + ROW_OVERHEAD_BYTES);
         let mut c =
             FeatureCache::new("feat", budget, CacheAdmission::All, None);
-        c.ensure_dim(dim);
+        c.ensure_dims(&[dim]);
         c
     }
 
@@ -436,7 +768,7 @@ mod tests {
     fn zero_budget_disables_everything() {
         let mut c =
             FeatureCache::new("feat", 0, CacheAdmission::All, None);
-        c.ensure_dim(4);
+        c.ensure_dims(&[4]);
         assert!(!c.is_enabled());
         c.insert(0, 1, &row(1, 4));
         assert_eq!(c.rows(), 0);
@@ -454,7 +786,7 @@ mod tests {
             CacheAdmission::Degree(Some(5)),
             Some(degrees),
         );
-        c.ensure_dim(dim);
+        c.ensure_dims(&[dim]);
         for gid in 0..4u32 {
             c.insert(0, gid, &row(gid, dim));
         }
@@ -539,5 +871,159 @@ mod tests {
             CacheAdmission::Degree(Some(12))
         );
         assert!(CacheAdmission::parse("lru").is_err());
+    }
+
+    #[test]
+    fn pinned_rows_survive_the_clock_hand() {
+        let dim = 2;
+        let mut c = cache_for_rows(2, dim);
+        c.insert(0, 1, &row(1, dim));
+        c.insert(0, 2, &row(2, dim));
+        assert!(c.pin(0, 1));
+        assert!(!c.pin(0, 99), "pinning a non-resident row is a no-op");
+        // row 2 is unpinned+unreferenced: it must be the victim even
+        // though the hand reaches (referenced, pinned) row 1 first
+        c.insert(0, 3, &row(3, dim));
+        let mut out = vec![0f32; dim];
+        assert!(c.lookup(0, 1, &mut out), "pinned row was evicted");
+        assert!(!c.lookup(0, 2, &mut out));
+        assert!(c.lookup(0, 3, &mut out));
+        assert_eq!(c.stats().pinned_rows, 1);
+        // the demand hit released the pin: row 1 is now evictable
+        c.insert(0, 4, &row(4, dim));
+        c.insert(0, 5, &row(5, dim));
+        assert_eq!(c.rows(), 2);
+        assert!(!c.contains(0, 1), "released pin must not protect");
+    }
+
+    #[test]
+    fn all_pinned_cache_rejects_inserts_and_terminates() {
+        let dim = 2;
+        let mut c = cache_for_rows(2, dim);
+        c.insert(0, 1, &row(1, dim));
+        c.insert(0, 2, &row(2, dim));
+        assert!(c.pin(0, 1));
+        assert!(c.pin(0, 2));
+        // bounded sweep: no victim exists, the insert must be declined
+        // (not spin) and counted
+        c.insert(0, 3, &row(3, dim));
+        assert!(!c.contains(0, 3));
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.stats().rejected_rows, 1);
+        assert_eq!(c.stats().evicted_rows, 0);
+    }
+
+    #[test]
+    fn prefetched_rows_count_hits_and_waste() {
+        let dim = 4;
+        let mut c = cache_for_rows(2, dim);
+        c.insert_prefetched(0, 1, &row(1, dim));
+        c.insert_prefetched(0, 2, &row(2, dim));
+        assert_eq!(c.stats().prefetch_issued, 2);
+        // first demand hit on row 1 is a prefetch hit; the second hit on
+        // the same row is an ordinary hit
+        let mut out = vec![0f32; dim];
+        assert!(c.lookup(0, 1, &mut out));
+        assert_eq!(out, row(1, dim));
+        assert!(c.lookup(0, 1, &mut out));
+        assert_eq!(c.stats().prefetch_hits, 1);
+        // row 2 is evicted before any demand hit: its bytes were wasted
+        c.insert(0, 3, &row(3, dim));
+        let s = c.stats();
+        assert_eq!(s.prefetch_wasted_bytes, (dim * 4) as u64);
+        assert_eq!(s.prefetch_hits, 1);
+    }
+
+    #[test]
+    fn invalidated_prefetch_counts_as_waste() {
+        let dim = 3;
+        let mut c = cache_for_rows(4, dim);
+        c.insert_prefetched(0, 7, &row(7, dim));
+        c.invalidate(&[7]);
+        let s = c.stats();
+        assert_eq!(s.prefetch_wasted_bytes, (dim * 4) as u64);
+        assert_eq!(s.prefetch_hits, 0);
+    }
+
+    #[test]
+    fn sharded_cache_serves_identical_bytes_and_aggregates_stats() {
+        let dim = 4;
+        let budget = 64 * (dim * 4 + ROW_OVERHEAD_BYTES);
+        let proto =
+            FeatureCache::new("feat", budget, CacheAdmission::All, None);
+        let c = SharedFeatureCache::new(proto, 4);
+        assert_eq!(c.n_shards(), 4);
+        assert!(c.is_enabled());
+        assert!(c.covers("feat") && c.covers("feat.1") && !c.covers("ft"));
+        c.ensure_dims(&[dim]);
+        for gid in 0..32u32 {
+            c.insert(0, gid, &row(gid, dim));
+        }
+        let mut out = vec![0f32; dim];
+        for gid in 0..32u32 {
+            assert!(c.lookup(0, gid, &mut out), "row {gid}");
+            assert_eq!(out, row(gid, dim));
+        }
+        assert!(!c.lookup(0, 500, &mut out));
+        let s = c.stats();
+        assert_eq!((s.hit_rows, s.miss_rows), (32, 1));
+        assert_eq!(c.rows(), 32);
+        // per-stripe delta cursors sum to the same aggregate exactly once
+        let d = c.take_delta();
+        assert_eq!((d.hit_rows, d.miss_rows), (32, 1));
+        assert_eq!(c.take_delta(), CacheStats::default());
+    }
+
+    #[test]
+    fn single_shard_matches_unsharded_semantics() {
+        let dim = 2;
+        let budget = 2 * (dim * 4 + ROW_OVERHEAD_BYTES);
+        let proto =
+            FeatureCache::new("feat", budget, CacheAdmission::All, None);
+        let c = SharedFeatureCache::new(proto, 1);
+        c.ensure_dims(&[dim]);
+        c.insert(0, 1, &row(1, dim));
+        c.insert(0, 2, &row(2, dim));
+        let mut out = vec![0f32; dim];
+        assert!(c.lookup(0, 1, &mut out)); // reference row 1
+        c.insert(0, 3, &row(3, dim)); // CLOCK evicts row 2, as unsharded
+        assert!(c.lookup(0, 1, &mut out));
+        assert!(!c.contains(0, 2));
+        assert!(c.lookup(0, 3, &mut out));
+    }
+
+    #[test]
+    fn inflight_set_dedupes_concurrent_prefetches() {
+        let proto =
+            FeatureCache::new("feat", 1 << 16, CacheAdmission::All, None);
+        let c = SharedFeatureCache::new(proto, 2);
+        assert!(c.begin_inflight(0, 42));
+        assert!(!c.begin_inflight(0, 42), "second claim must be refused");
+        assert!(c.begin_inflight(1, 42), "ntypes claim independently");
+        c.end_inflight(0, 42);
+        assert!(c.begin_inflight(0, 42), "released claim is reclaimable");
+    }
+
+    #[test]
+    fn invalidation_epoch_drops_stale_prefetch_inserts() {
+        let dim = 2;
+        let budget = 16 * (dim * 4 + ROW_OVERHEAD_BYTES);
+        let proto =
+            FeatureCache::new("feat", budget, CacheAdmission::All, None);
+        let c = SharedFeatureCache::new(proto, 2);
+        c.ensure_dims(&[dim]);
+        let e = c.invalidation_epoch();
+        // an invalidation lands while the prefetch pull is in flight:
+        // the insert must be dropped (its value may predate the update)
+        c.invalidate(&[1]);
+        c.insert_prefetched(0, 1, &row(1, dim), e);
+        assert!(!c.contains(0, 1), "stale prefetch insert survived");
+        let s = c.stats();
+        assert_eq!(s.prefetch_issued, 1);
+        assert_eq!(s.prefetch_wasted_bytes, (dim * 4) as u64);
+        // with a current epoch the insert lands normally
+        let e2 = c.invalidation_epoch();
+        c.insert_prefetched(0, 1, &row(1, dim), e2);
+        assert!(c.contains(0, 1));
     }
 }

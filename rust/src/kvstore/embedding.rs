@@ -6,6 +6,15 @@
 //! Updates go through `KvClient::push_grad`, i.e. they are routed to the
 //! owning machine and applied there (never broadcast — the KVStore *is*
 //! the optimizer state for sparse params).
+//!
+//! Cache coherence: when the gathering client caches this table's rows,
+//! `push_grad` is the invalidation point. In strict mode
+//! (`embedding_staleness = 0`, the default) every update invalidates the
+//! cached copies it touched before returning, so a gather after an
+//! update is byte-identical to an uncached client. With a bounded window
+//! `K > 0`, cached rows may serve values up to K sparse updates old —
+//! the DistGNN-style accuracy-vs-speed knob; see
+//! `KvClient::set_embedding_staleness`.
 
 use std::sync::Arc;
 
@@ -53,7 +62,9 @@ impl EmbeddingTable {
         client.pull(&self.name, ids, out)
     }
 
-    /// Apply row-sparse SGD for the touched rows.
+    /// Apply row-sparse SGD for the touched rows. Invalidates any cached
+    /// copies on the client per its staleness window (strict `0`:
+    /// immediately, before this returns).
     pub fn update(
         &self,
         client: &mut KvClient,
@@ -97,6 +108,96 @@ mod tests {
         emb.gather(&mut client, &ids, &mut after).unwrap();
         for (b, a) in before.iter().zip(&after) {
             assert!((b - 0.25 - a).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn strict_mode_update_invalidates_cached_rows_through_the_table() {
+        // regression: the optimizer path (EmbeddingTable::update →
+        // push_grad) must not leave stale cached copies behind — a
+        // gather through a caching client sees every update immediately
+        use crate::kvstore::{CacheAdmission, FeatureCache};
+        let nm = NodeMap { part_starts: vec![0, 8, 16] };
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(RangePolicy::new(nm));
+        let cluster = KvCluster::new(2, Arc::new(CostModel::default()));
+        let emb = EmbeddingTable::create(
+            &cluster,
+            policy.as_ref(),
+            "emb",
+            16,
+            4,
+            0.1,
+            7,
+        );
+        let mut client = cluster.client(0, policy);
+        client.attach_cache(FeatureCache::new(
+            "emb",
+            1 << 20,
+            CacheAdmission::All,
+            None,
+        ));
+        let ids = vec![12 as NodeId]; // remote for machine 0 → cached
+        let mut before = vec![0f32; 4];
+        emb.gather(&mut client, &ids, &mut before).unwrap();
+        for step in 1..=3 {
+            let grads = vec![1.0f32; 4];
+            emb.update(&mut client, &ids, &grads, 0.25).unwrap();
+            let mut after = vec![0f32; 4];
+            emb.gather(&mut client, &ids, &mut after).unwrap();
+            for (b, a) in before.iter().zip(&after) {
+                assert!(
+                    (b - 0.25 * step as f32 - a).abs() < 1e-6,
+                    "stale cached embedding row served at step {step}"
+                );
+            }
+        }
+        let s = client.cache_stats().unwrap();
+        assert_eq!(s.hit_rows, 0, "every gather after an update re-fetched");
+    }
+
+    #[test]
+    fn bounded_staleness_lags_then_converges_on_flush() {
+        // embedding_staleness = 2: a gather between the two updates of a
+        // window may serve the pre-window value; the flush exposes both
+        use crate::kvstore::{CacheAdmission, FeatureCache};
+        let nm = NodeMap { part_starts: vec![0, 8, 16] };
+        let policy: Arc<dyn PartitionPolicy> =
+            Arc::new(RangePolicy::new(nm));
+        let cluster = KvCluster::new(2, Arc::new(CostModel::default()));
+        let emb = EmbeddingTable::create(
+            &cluster,
+            policy.as_ref(),
+            "emb",
+            16,
+            4,
+            0.1,
+            7,
+        );
+        let mut client = cluster.client(0, policy);
+        client.attach_cache(FeatureCache::new(
+            "emb",
+            1 << 20,
+            CacheAdmission::All,
+            None,
+        ));
+        client.set_embedding_staleness(2);
+        let ids = vec![12 as NodeId];
+        let mut base = vec![0f32; 4];
+        emb.gather(&mut client, &ids, &mut base).unwrap();
+        let grads = vec![1.0f32; 4];
+        emb.update(&mut client, &ids, &grads, 0.25).unwrap();
+        let mut mid = vec![0f32; 4];
+        emb.gather(&mut client, &ids, &mut mid).unwrap();
+        assert_eq!(mid, base, "within the window the cached row serves");
+        emb.update(&mut client, &ids, &grads, 0.25).unwrap();
+        let mut fresh = vec![0f32; 4];
+        emb.gather(&mut client, &ids, &mut fresh).unwrap();
+        for (b, f) in base.iter().zip(&fresh) {
+            assert!(
+                (b - 0.5 - f).abs() < 1e-6,
+                "flush must expose the full window's updates"
+            );
         }
     }
 

@@ -31,7 +31,7 @@ pub mod embedding;
 pub mod policy;
 pub mod store;
 
-pub use cache::{CacheAdmission, CacheStats, FeatureCache};
+pub use cache::{CacheAdmission, CacheStats, FeatureCache, SharedFeatureCache};
 pub use embedding::EmbeddingTable;
 pub use policy::{HashPolicy, PartitionPolicy, RangePolicy};
 pub use store::{KvClient, KvCluster, KvServer, TypedFeatures};

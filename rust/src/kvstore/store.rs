@@ -19,7 +19,7 @@ use crate::ft::FaultPlan;
 use crate::graph::{GraphSchema, NodeId};
 use crate::net::{CostModel, RpcError};
 
-use super::cache::{CacheStats, FeatureCache};
+use super::cache::{CacheStats, FeatureCache, SharedFeatureCache};
 use super::policy::PartitionPolicy;
 
 /// View over the per-ntype feature tables of one deployment: tensor name
@@ -382,6 +382,9 @@ impl KvCluster {
             typed_groups: Vec::new(),
             slot_scratch: Vec::new(),
             pull_stage: Vec::new(),
+            embedding_staleness: 0,
+            stale_updates: 0,
+            stale_ids: Vec::new(),
         }
     }
 }
@@ -391,15 +394,17 @@ impl KvCluster {
 /// The per-owner grouping buffers are owned by the client and reused
 /// across calls (§Perf: the mini-batch hot path performs zero steady-state
 /// allocations here), which is why [`Self::pull`] and [`Self::push_grad`]
-/// take `&mut self`. An optional [`FeatureCache`] serves repeated remote
-/// rows from trainer memory; it sits behind an `Arc<Mutex<..>>` so that
-/// [`Self::fork`]ed worker handles share one budget and one working set
-/// (the cache itself stays single-threaded — see its module docs).
+/// take `&mut self`. An optional [`SharedFeatureCache`] serves repeated
+/// remote rows from trainer memory; it stripes the byte budget across
+/// `cache_shards` independently-locked [`FeatureCache`]s so that
+/// [`Self::fork`]ed worker handles (and the background prefetcher)
+/// share one budget and one working set without serializing on a
+/// single lock.
 pub struct KvClient {
     cluster: Arc<KvCluster>,
     pub machine: u32,
     policy: Arc<dyn PartitionPolicy>,
-    cache: Option<Arc<Mutex<FeatureCache>>>,
+    cache: Option<Arc<SharedFeatureCache>>,
     /// Reusable per-owner (locals, id-indices) grouping scratch for
     /// `pull`/`pull_typed`.
     pull_groups: Vec<(Vec<u32>, Vec<usize>)>,
@@ -414,26 +419,54 @@ pub struct KvClient {
     /// fan-out path (the wire's response framing; §Perf: capacity is
     /// retained across batches, keeping the hot path allocation-free).
     pull_stage: Vec<Vec<f32>>,
+    /// Bounded-staleness window for learnable embeddings: `0` (strict,
+    /// the default) invalidates cached rows on every `push_grad`, so
+    /// reads are byte-identical to an uncached client; `K > 0` lets
+    /// cached embedding rows lag the store by at most K sparse updates
+    /// (the DistGNN-style accuracy-vs-speed knob).
+    embedding_staleness: usize,
+    /// Updates since the last staleness flush (strict mode leaves it 0).
+    stale_updates: usize,
+    /// Ids touched by updates since the last staleness flush.
+    stale_ids: Vec<NodeId>,
 }
 
 impl KvClient {
-    /// Attach a remote-row cache. Pulls of `cache.tensor()` consult it;
-    /// all other tensors are unaffected.
+    /// Attach a remote-row cache with a single stripe. Pulls of
+    /// `cache.tensor()` consult it; all other tensors are unaffected.
     pub fn attach_cache(&mut self, cache: FeatureCache) {
-        self.cache = Some(Arc::new(Mutex::new(cache)));
+        self.attach_cache_sharded(cache, 1);
+    }
+
+    /// Attach a remote-row cache striped `n_shards` ways: the budget is
+    /// split evenly and rows route by `gid % n_shards`, so prefetch
+    /// inserts and worker lookups on different stripes never contend.
+    pub fn attach_cache_sharded(&mut self, cache: FeatureCache, n_shards: usize) {
+        self.cache = Some(Arc::new(SharedFeatureCache::new(cache, n_shards)));
     }
 
     /// The shared cache handle, if any (what [`Self::fork`] propagates).
-    pub fn shared_cache(&self) -> Option<Arc<Mutex<FeatureCache>>> {
+    pub fn shared_cache(&self) -> Option<Arc<SharedFeatureCache>> {
         self.cache.clone()
     }
 
+    /// Bound the staleness of cached learnable-embedding rows: with
+    /// `k == 0` (strict), every sparse update invalidates the cached
+    /// copies it touched immediately; with `k > 0`, invalidations are
+    /// batched and flushed every `k`-th update, so a cached row is
+    /// never more than `k` updates behind the store.
+    pub fn set_embedding_staleness(&mut self, k: usize) {
+        self.embedding_staleness = k;
+    }
+
     /// An independent handle over the same cluster for a sampling
-    /// worker: same machine / policy / shared [`FeatureCache`], private
-    /// grouping scratch. Cache *contents* under N forks depend on which
-    /// worker fetches a row first (hit/miss counters are
+    /// worker: same machine / policy / shared [`SharedFeatureCache`],
+    /// private grouping scratch. Cache *contents* under N forks depend
+    /// on which worker fetches a row first (hit/miss counters are
     /// schedule-dependent); returned bytes never do — the cache is
-    /// value-transparent.
+    /// value-transparent. The staleness window is inherited, but the
+    /// pending-invalidation accumulator is per-handle (each fork flushes
+    /// its own update stream).
     pub fn fork(&self) -> KvClient {
         KvClient {
             cluster: Arc::clone(&self.cluster),
@@ -445,19 +478,23 @@ impl KvClient {
             typed_groups: Vec::new(),
             slot_scratch: Vec::new(),
             pull_stage: Vec::new(),
+            embedding_staleness: self.embedding_staleness,
+            stale_updates: 0,
+            stale_ids: Vec::new(),
         }
     }
 
-    /// Cumulative cache counters, if a cache is attached.
+    /// Cumulative cache counters (summed over stripes), if a cache is
+    /// attached.
     pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.lock().unwrap().stats())
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     /// Cache counters accumulated since the last call *on any fork of
     /// this client* (the delta cursor is shared cache state); `None`
     /// when no cache is attached.
     pub fn take_cache_delta(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.lock().unwrap().take_delta())
+        self.cache.as_ref().map(|c| c.take_delta())
     }
 
     /// Pull rows for `ids` into `out` (len = ids.len() * dim). Local rows
@@ -491,7 +528,6 @@ impl KvClient {
     fn cache_gate(&mut self, name: &str, dims: &[usize]) -> bool {
         match &self.cache {
             Some(c) => {
-                let mut c = c.lock().unwrap();
                 let on = c.is_enabled() && c.tensor() == name;
                 if on {
                     c.ensure_dims(dims);
@@ -590,6 +626,114 @@ impl KvClient {
         }
     }
 
+    /// Warm the cache with the remote rows a *future* batch will need —
+    /// the demand-side entry point of the predictive prefetcher
+    /// (`pipeline::prefetch`). Ids that are local, already cached, or
+    /// claimed in-flight by another prefetch are skipped; the rest are
+    /// pulled per owner with the usual wire metering and offered to the
+    /// cache as prefetched rows (counted in `prefetch_issued`, and in
+    /// `prefetch_wasted_bytes` if evicted or invalidated before a hit).
+    /// With `pin` set (imminent batches), every remote row — fetched or
+    /// already resident — is pinned so the CLOCK hand cannot evict it
+    /// before its batch consumes it; `lookup` releases the pin.
+    ///
+    /// The invalidation epoch is captured before any wire traffic: if a
+    /// `push_grad` flush lands mid-pull, the cache drops our stale
+    /// inserts. Serving demand traffic stays byte-identical either way —
+    /// the cache is value-transparent and prefetch consumes no batch
+    /// randomness. Errors (injected outages) just mean rows stay cold;
+    /// the demand path will fetch and surface them deterministically.
+    pub fn prefetch_typed(
+        &mut self,
+        tf: &TypedFeatures,
+        ids: &[NodeId],
+        pin: bool,
+    ) -> Result<usize, RpcError> {
+        if !self.cache_gate(&tf.base, &tf.dims) {
+            return Ok(0);
+        }
+        let cache = Arc::clone(self.cache.as_ref().unwrap());
+        let epoch = cache.invalidation_epoch();
+        // bucket remote, uncached, unclaimed ids by (ntype, owner)
+        let nparts = self.policy.n_parts();
+        let nt = tf.n_ntypes();
+        let mut claimed: Vec<(u8, NodeId)> = Vec::new();
+        let mut groups: Vec<Vec<(u32, NodeId)>> = vec![Vec::new(); nt * nparts];
+        for &gid in ids {
+            let owner = self.policy.owner(gid);
+            if owner == self.machine {
+                continue;
+            }
+            let t = tf.ntype_of(gid);
+            if cache.contains(t, gid) {
+                if pin {
+                    cache.pin(t, gid);
+                }
+                continue;
+            }
+            if !cache.begin_inflight(t, gid) {
+                continue; // another prefetch already has this row on the wire
+            }
+            claimed.push((t, gid));
+            groups[t as usize * nparts + owner as usize]
+                .push((self.policy.local_of(gid), gid));
+        }
+        let fault = self.cluster.fault_plan();
+        let mut fetched = 0usize;
+        let mut err: Option<RpcError> = None;
+        let mut locals: Vec<u32> = Vec::new();
+        let mut buf: Vec<f32> = Vec::new();
+        'outer: for t in 0..nt {
+            let dim = tf.dims[t];
+            for owner in 0..nparts {
+                let group = &groups[t * nparts + owner];
+                if group.is_empty() {
+                    continue;
+                }
+                if let Some(f) = &fault {
+                    if let Err(e) = f.admit_kv(owner as u32) {
+                        err = Some(e);
+                        break 'outer;
+                    }
+                }
+                locals.clear();
+                locals.extend(group.iter().map(|&(l, _)| l));
+                buf.resize(locals.len() * dim, 0.0);
+                if let Err(e) = self.cluster.servers[owner]
+                    .read_rows(&tf.names[t], &locals, &mut buf)
+                {
+                    err = Some(e);
+                    break 'outer;
+                }
+                self.cluster.meter_pull(
+                    self.machine,
+                    owner as u32,
+                    locals.len(),
+                    dim,
+                );
+                for (i, &(_, gid)) in group.iter().enumerate() {
+                    cache.insert_prefetched(
+                        t as u8,
+                        gid,
+                        &buf[i * dim..(i + 1) * dim],
+                        epoch,
+                    );
+                    if pin {
+                        cache.pin(t as u8, gid);
+                    }
+                }
+                fetched += locals.len();
+            }
+        }
+        for &(t, gid) in &claimed {
+            cache.end_inflight(t, gid);
+        }
+        match err {
+            Some(e) => Err(e),
+            Option::None => Ok(fetched),
+        }
+    }
+
     /// Shared pull core: rows of `name` (width `dim`) for `ids`, written
     /// at `slot * stride` where row `j`'s slot is `slots[j]` (`None` =
     /// `j`, the classic dense layout). Cache lookups/inserts are keyed
@@ -618,7 +762,8 @@ impl KvClient {
             }
         }
         // group by owner, remembering each id's index (reused scratch);
-        // the cache is consulted under one lock for the whole pass
+        // cache lookups lock only the stripe that owns each gid, so a
+        // concurrent prefetch insert on another stripe never blocks us
         let nparts = self.policy.n_parts();
         let mut groups = std::mem::take(&mut self.pull_groups);
         let mut slot_scratch = std::mem::take(&mut self.slot_scratch);
@@ -630,8 +775,8 @@ impl KvClient {
             g.1.clear();
         }
         {
-            let mut cache_guard = if use_cache {
-                Some(self.cache.as_ref().unwrap().lock().unwrap())
+            let cache = if use_cache {
+                Some(self.cache.as_ref().unwrap().as_ref())
             } else {
                 Option::None
             };
@@ -639,7 +784,7 @@ impl KvClient {
                 let slot = slots.map_or(j, |s| s[j]);
                 let owner = self.policy.owner(gid) as usize;
                 if owner as u32 != self.machine {
-                    if let Some(c) = cache_guard.as_deref_mut() {
+                    if let Some(c) = cache {
                         if c.lookup(
                             ntype,
                             gid,
@@ -745,8 +890,7 @@ impl KvClient {
                             .copy_from_slice(&buf[i * dim..(i + 1) * dim]);
                     }
                     if use_cache {
-                        let mut c =
-                            self.cache.as_ref().unwrap().lock().unwrap();
+                        let c = self.cache.as_ref().unwrap();
                         for (&j, &slot) in idxs.iter().zip(slot_buf) {
                             c.insert(
                                 ntype,
@@ -789,8 +933,7 @@ impl KvClient {
                     break;
                 }
                 if use_cache && owner as u32 != machine {
-                    let mut c =
-                        self.cache.as_ref().unwrap().lock().unwrap();
+                    let c = self.cache.as_ref().unwrap();
                     for (&j, &slot) in idxs.iter().zip(slot_buf) {
                         c.insert(
                             ntype,
@@ -822,11 +965,25 @@ impl KvClient {
     ) -> Result<(), RpcError> {
         // coherence: a sparse update through this client (or any fork
         // sharing its cache) must not leave stale cached copies behind —
-        // covers() also matches the typed per-ntype tables (`base.<ntype>`)
+        // covers() also matches the typed per-ntype tables (`base.<ntype>`).
+        // Strict mode (staleness 0) invalidates right here; a bounded
+        // window K > 0 accumulates touched ids and flushes every K-th
+        // update, so cached rows lag the store by at most K updates.
+        // Every flush also bumps the cache's invalidation epoch, which
+        // kills any prefetch pull that was in flight across the update.
         if let Some(c) = &self.cache {
-            let mut c = c.lock().unwrap();
             if c.covers(name) {
-                c.invalidate(ids);
+                if self.embedding_staleness == 0 {
+                    c.invalidate(ids);
+                } else {
+                    self.stale_ids.extend_from_slice(ids);
+                    self.stale_updates += 1;
+                    if self.stale_updates >= self.embedding_staleness {
+                        let pending = std::mem::take(&mut self.stale_ids);
+                        c.invalidate(&pending);
+                        self.stale_updates = 0;
+                    }
+                }
             }
         }
         let dim = grads.len() / ids.len().max(1);
@@ -1117,6 +1274,149 @@ mod tests {
         client.push_grad("feat", &ids, &grads, 0.5).unwrap();
         client.pull("feat", &ids, &mut out).unwrap();
         assert_eq!(out[0], data[40] - 1.0, "stale cached row served");
+    }
+
+    #[test]
+    fn prefetch_warms_cache_and_demand_pull_hits_without_wire_traffic() {
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut client = cluster.client(1, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        let tf = TypedFeatures::homogeneous("feat", dim);
+        let ids: Vec<NodeId> = vec![0, 5, 27, 29, 12]; // 12 is local to m1
+        let fetched = client.prefetch_typed(&tf, &ids, false).unwrap();
+        assert_eq!(fetched, 4, "every remote row fetched exactly once");
+        let bytes_after_prefetch = cluster.cost.network_bytes();
+        assert!(bytes_after_prefetch > 0, "prefetch pulls are metered");
+        // demand pull: served entirely from cache + local shard
+        let mut out = vec![0f32; ids.len() * dim];
+        let remote = client.pull("feat", &ids, &mut out).unwrap();
+        assert_eq!(remote, 0);
+        assert_eq!(cluster.cost.network_bytes(), bytes_after_prefetch);
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &out[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim],
+                "row {gid}"
+            );
+        }
+        let s = client.cache_stats().unwrap();
+        assert_eq!(s.prefetch_issued, 4);
+        assert_eq!(s.prefetch_hits, 4);
+        assert_eq!(s.prefetch_wasted_bytes, 0);
+        // re-prefetching the same frontier is free: everything resident
+        let again = client.prefetch_typed(&tf, &ids, false).unwrap();
+        assert_eq!(again, 0);
+        assert_eq!(cluster.cost.network_bytes(), bytes_after_prefetch);
+    }
+
+    #[test]
+    fn prefetch_pins_survive_pressure_and_demand_lookup_releases() {
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut client = cluster.client(1, policy);
+        // room for ~2 rows: pressure enough that unpinned rows churn
+        client.attach_cache(feat_cache(2 * (dim * 4 + 24)));
+        let tf = TypedFeatures::homogeneous("feat", dim);
+        let imminent: Vec<NodeId> = vec![27, 29];
+        client.prefetch_typed(&tf, &imminent, true).unwrap();
+        // a competing prefetch cannot evict the pinned imminent rows
+        client.prefetch_typed(&tf, &[0, 5, 8], false).unwrap();
+        let bytes_before = cluster.cost.network_bytes();
+        let mut out = vec![0f32; imminent.len() * dim];
+        let remote = client.pull("feat", &imminent, &mut out).unwrap();
+        assert_eq!(remote, 0, "pinned rows were evicted pre-use");
+        assert_eq!(cluster.cost.network_bytes(), bytes_before);
+        for (i, &gid) in imminent.iter().enumerate() {
+            assert_eq!(
+                &out[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim]
+            );
+        }
+        let s = client.cache_stats().unwrap();
+        assert!(s.pinned_rows >= 2);
+    }
+
+    #[test]
+    fn sharded_cache_is_byte_identical_to_single_stripe() {
+        let dim = 4;
+        let (c1, p1, data) = range_cluster(dim);
+        let (c2, p2, _) = range_cluster(dim);
+        let mut single = c1.client(1, p1);
+        let mut striped = c2.client(1, p2);
+        single.attach_cache(feat_cache(1 << 20));
+        striped.attach_cache_sharded(feat_cache(1 << 20), 4);
+        assert_eq!(striped.shared_cache().unwrap().n_shards(), 4);
+        let ids: Vec<NodeId> = vec![0, 5, 27, 29, 12, 5, 0, 28];
+        let mut a = vec![0f32; ids.len() * dim];
+        let mut b = vec![0f32; ids.len() * dim];
+        for _ in 0..3 {
+            let ra = single.pull("feat", &ids, &mut a).unwrap();
+            let rb = striped.pull("feat", &ids, &mut b).unwrap();
+            assert_eq!(ra, rb, "stripe routing changed remote fetches");
+            assert_eq!(a, b);
+        }
+        assert_eq!(c1.cost.network_bytes(), c2.cost.network_bytes());
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &b[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim]
+            );
+        }
+        let ss = single.cache_stats().unwrap();
+        let st = striped.cache_stats().unwrap();
+        assert_eq!(ss.hit_rows, st.hit_rows);
+        assert_eq!(ss.remote_bytes_saved, st.remote_bytes_saved);
+    }
+
+    #[test]
+    fn embedding_staleness_window_bounds_cached_lag() {
+        let dim = 2;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut client = cluster.client(0, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        client.set_embedding_staleness(2);
+        let ids = vec![20 as NodeId]; // remote for machine 0
+        let base = data[40];
+        let mut out = vec![0f32; dim];
+        client.pull("feat", &ids, &mut out).unwrap(); // cache the row
+        let grads = vec![2.0f32, 2.0];
+        // update 1 of the window: the cached copy may legally lag
+        client.push_grad("feat", &ids, &grads, 0.5).unwrap();
+        client.pull("feat", &ids, &mut out).unwrap();
+        assert_eq!(out[0], base, "within the window the stale row serves");
+        // update 2 flushes the accumulated invalidations: fresh bytes
+        client.push_grad("feat", &ids, &grads, 0.5).unwrap();
+        client.pull("feat", &ids, &mut out).unwrap();
+        assert_eq!(out[0], base - 2.0, "flush must expose both updates");
+        // strict mode stays byte-exact (the PR-2 invariant, re-asserted)
+        client.set_embedding_staleness(0);
+        client.push_grad("feat", &ids, &grads, 0.5).unwrap();
+        client.pull("feat", &ids, &mut out).unwrap();
+        assert_eq!(out[0], base - 3.0);
+    }
+
+    #[test]
+    fn prefetch_in_flight_across_update_is_dropped_as_stale() {
+        // capture-epoch → update lands → insert_prefetched must not
+        // publish the pre-update bytes (the store-level view of the
+        // cache's epoch guard)
+        let dim = 2;
+        let (cluster, policy, data) = range_cluster(dim);
+        let mut client = cluster.client(0, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        let cache = client.shared_cache().unwrap();
+        let ids = vec![20 as NodeId];
+        let epoch = cache.invalidation_epoch();
+        let old_row = vec![data[40], data[41]];
+        client
+            .push_grad("feat", &ids, &[2.0, 2.0], 0.5)
+            .unwrap(); // bumps the epoch
+        cache.ensure_dims(&[dim]);
+        cache.insert_prefetched(0, 20, &old_row, epoch);
+        let mut out = vec![0f32; dim];
+        client.pull("feat", &ids, &mut out).unwrap();
+        assert_eq!(out[0], data[40] - 1.0, "stale prefetch insert served");
     }
 
     #[test]

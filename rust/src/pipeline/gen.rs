@@ -163,6 +163,8 @@ pub struct BatchGen {
     pub pool: BatchPool,
     /// Reusable staging buffer for label-row pulls.
     pub label_scratch: Vec<f32>,
+    /// Reusable node-id buffer for [`Self::prefetch_batch`] frontiers.
+    pub frontier_scratch: Vec<NodeId>,
 }
 
 impl BatchGen {
@@ -218,6 +220,51 @@ impl BatchGen {
     /// Hand a finished batch back for buffer reuse.
     pub fn recycle(&mut self, b: HostBatch) {
         self.pool.put(b);
+    }
+
+    /// Warm the feature cache with global batch `g`'s remote layer-0
+    /// frontier — the lookahead step of the predictive prefetcher
+    /// ([`crate::pipeline::prefetch`]). Re-derives the batch's pure
+    /// `(seed, epoch, idx)` schedule + sampler streams on this
+    /// generator's private clones (no live RNG or cursor is touched),
+    /// collects the sampled node set, and hands its remote part to
+    /// [`KvClient::prefetch_typed`]; `pin` protects the rows of
+    /// imminent batches from the CLOCK hand until demand consumes
+    /// them. Returns the rows actually pulled ahead of demand.
+    ///
+    /// [`KvClient::prefetch_typed`]: crate::kvstore::KvClient::prefetch_typed
+    pub fn prefetch_batch(
+        &mut self,
+        g: u64,
+        pin: bool,
+    ) -> Result<usize, RpcError> {
+        let bpe = self.batches_per_epoch().max(1) as u64;
+        let (epoch, idx) = (g / bpe, (g % bpe) as usize);
+        let target = self.scheduler.batch_at(epoch, idx);
+        let mut rng = Self::batch_rng(self.seed, epoch, idx);
+        let flat = target.flat_nodes();
+        let samples = self.sampler.sample_blocks(
+            &flat,
+            &self.plan,
+            &self.spec.layer_nodes,
+            &mut rng,
+        )?;
+        // the (undeduped) layer-0 frontier: seeds plus every sampled
+        // neighbor of every layer — exactly the node set `to_block`
+        // compacts into `input_nodes`. prefetch_typed dedupes against
+        // the cache and in-flight pulls, so duplicates here are free.
+        let mut frontier = std::mem::take(&mut self.frontier_scratch);
+        frontier.clear();
+        frontier.extend_from_slice(&flat);
+        for (_, nbrs) in &samples {
+            for s in nbrs {
+                frontier.extend_from_slice(&s.nbrs);
+            }
+        }
+        let fetched =
+            self.kv.prefetch_typed(&self.features, &frontier, pin);
+        self.frontier_scratch = frontier;
+        fetched
     }
 
     /// Stages 2–4 for an explicit target set and sampler stream (shared
@@ -344,6 +391,14 @@ impl BatchGen {
             self.metrics.inc("cache.evicted_rows", d.evicted_rows);
             self.metrics
                 .inc("cache.remote_bytes_saved", d.remote_bytes_saved);
+            // prefetch observability: the delta cursor is shared cache
+            // state, so the background prefetcher's traffic flows in
+            // through whichever demand batch meters next
+            self.metrics.inc("cache.prefetch_issued", d.prefetch_issued);
+            self.metrics.inc("cache.prefetch_hits", d.prefetch_hits);
+            self.metrics
+                .inc("cache.prefetch_wasted_bytes", d.prefetch_wasted_bytes);
+            self.metrics.inc("cache.pinned_rows", d.pinned_rows);
         }
 
         Ok(HostBatch {
@@ -393,6 +448,7 @@ impl BatchGen {
             etype_keys: self.etype_keys.clone(),
             pool: self.pool.clone(),
             label_scratch: Vec::new(),
+            frontier_scratch: Vec::new(),
         }
     }
 }
@@ -551,6 +607,7 @@ pub mod tests_support {
             etype_keys,
             pool: BatchPool::default(),
             label_scratch: Vec::new(),
+            frontier_scratch: Vec::new(),
         }
     }
 
@@ -689,6 +746,35 @@ mod tests {
             "cache did not reduce remote fetches \
              ({total_fetched_cached} vs {total_fetched_plain})"
         );
+    }
+
+    /// The tentpole invariant at the generator level: running the
+    /// lookahead (`prefetch_batch`) ahead of demand changes no batch
+    /// byte, while the demand pulls hit the prefetched rows.
+    #[test]
+    fn prefetched_gen_is_byte_identical_and_demand_hits() {
+        let mut plain = tiny_gen_parts(128, 16, 2, 0);
+        let mut pre = tiny_gen_parts(128, 16, 2, 8 << 20);
+        let mut look = pre.fork_worker(); // the prefetcher's private fork
+        let steps = plain.batches_per_epoch();
+        for g in 0..steps as u64 {
+            look.prefetch_batch(g, g == 0).unwrap();
+        }
+        for step in 0..steps {
+            let a = plain.next();
+            let b = pre.next();
+            assert_eq!(batch_fields(&a), batch_fields(&b), "step {step}");
+            assert_eq!(a.label_mask, b.label_mask, "step {step}");
+        }
+        let s = pre.kv.cache_stats().unwrap();
+        assert!(s.prefetch_issued > 0, "lookahead never pulled: {s:?}");
+        assert!(s.prefetch_hits > 0, "prefetched rows never hit: {s:?}");
+        assert!(
+            s.pinned_rows > 0,
+            "imminent-batch rows were never pinned: {s:?}"
+        );
+        // the demand epoch re-fetched nothing the lookahead staged
+        assert!(s.hit_rows >= s.prefetch_hits);
     }
 
     #[test]

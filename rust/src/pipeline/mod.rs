@@ -39,8 +39,10 @@
 //! byte-identical to an undisturbed one (test-enforced).
 
 pub mod gen;
+pub mod prefetch;
 
 pub use gen::{BatchGen, BatchPool};
+pub use prefetch::{PrefetchCtl, Prefetcher};
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{sync_channel, Receiver};
@@ -68,6 +70,12 @@ pub struct PipelineConfig {
     /// batch stream is byte-identical for any value — this is purely a
     /// throughput knob.
     pub num_workers: usize,
+    /// Lookahead batches whose remote rows the predictive prefetcher
+    /// pulls into the feature cache ahead of demand (see
+    /// [`prefetch`]); `0` (default) disables the prefetch thread. The
+    /// batch stream is byte-identical for any value — like
+    /// `num_workers`, purely a throughput knob.
+    pub prefetch_depth: usize,
 }
 
 impl Default for PipelineConfig {
@@ -77,6 +85,7 @@ impl Default for PipelineConfig {
             cpu_prefetch_depth: 4,
             gpu_prefetch_depth: 1,
             num_workers: 1,
+            prefetch_depth: 0,
         }
     }
 }
@@ -177,6 +186,9 @@ pub struct Pipeline {
     gen: Option<BatchGen>,
     metrics: Arc<Metrics>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Background lookahead thread (`prefetch_depth > 0`); stopped and
+    /// joined on drop.
+    prefetcher: Option<Prefetcher>,
 }
 
 impl Pipeline {
@@ -208,6 +220,13 @@ impl Pipeline {
         gen.pool.ensure_cap(n_workers + cfg.cpu_prefetch_depth);
         let epoch_len = gen.batches_per_epoch();
         gen.pos = start;
+        // lookahead thread: a private BatchGen fork walks the window
+        // [demand cursor, cursor + prefetch_depth), warming the shared
+        // feature cache; the demand side publishes its cursor below
+        let prefetcher = (cfg.prefetch_depth > 0).then(|| {
+            Prefetcher::spawn(gen.fork_worker(), cfg.prefetch_depth, start)
+        });
+        let pctl = prefetcher.as_ref().map(|p| p.ctl());
         // Async grants realign with epoch boundaries: finish the
         // partial epoch `start` lands in, then grant whole epochs
         let first_grant =
@@ -223,6 +242,7 @@ impl Pipeline {
                 gen: Some(gen),
                 metrics,
                 handles: Vec::new(),
+                prefetcher,
             },
             PipelineMode::Async | PipelineMode::AsyncNonstop => {
                 let nonstop = cfg.mode == PipelineMode::AsyncNonstop;
@@ -243,11 +263,15 @@ impl Pipeline {
                         );
                     let ctl = ctl.clone();
                     let metrics = metrics.clone();
+                    let pctl = pctl.clone();
                     handles.push(
                         std::thread::Builder::new()
                             .name("sampling".into())
                             .spawn(move || {
                                 while let Some(g) = ctl.claim() {
+                                    if let Some(p) = &pctl {
+                                        p.advance_to(g + 1);
+                                    }
                                     match gen.try_batch_at(g) {
                                         Ok(b) => {
                                             metrics.inc(
@@ -295,11 +319,15 @@ impl Pipeline {
                         let ctl = ctl.clone();
                         let metrics = metrics.clone();
                         let wtx = wtx.clone();
+                        let pctl = pctl.clone();
                         handles.push(
                             std::thread::Builder::new()
                                 .name(format!("sampling-{w}"))
                                 .spawn(move || {
                                     while let Some(idx) = ctl.claim() {
+                                        if let Some(p) = &pctl {
+                                            p.advance_to(idx + 1);
+                                        }
                                         match g.try_batch_at(idx) {
                                             Ok(b) => {
                                                 metrics.inc(
@@ -376,6 +404,7 @@ impl Pipeline {
                     gen: None,
                     metrics,
                     handles,
+                    prefetcher,
                 }
             }
         }
@@ -392,6 +421,11 @@ impl Pipeline {
         match self.mode {
             PipelineMode::Sync => {
                 let gen = self.gen.as_mut().unwrap();
+                if let Some(p) = &self.prefetcher {
+                    // publish demand progress: gen.pos is the index
+                    // try_next is about to materialize
+                    p.advance_to(gen.pos);
+                }
                 let b = gen.try_next()?;
                 self.metrics.inc("pipeline.batches", 1);
                 Ok(b)
@@ -425,6 +459,9 @@ impl Drop for Pipeline {
         // explicit shutdown, any mode / worker count: raise stop (wakes
         // claim-parked workers), close the hand-off queue (wakes workers
         // parked on a full queue), then join everything
+        if let Some(p) = &mut self.prefetcher {
+            p.shutdown();
+        }
         if let Some(ctl) = &self.ctl {
             ctl.stop();
         }
@@ -508,6 +545,7 @@ mod tests {
                 cpu_prefetch_depth: 4,
                 gpu_prefetch_depth: 1,
                 num_workers: workers,
+                prefetch_depth: 0,
             };
             let metrics = Arc::new(Metrics::new());
             let mut p = Pipeline::start(gen, &cfg, metrics.clone());
@@ -672,6 +710,79 @@ mod tests {
                          at step {step} past batch {k}"
                     );
                 }
+            }
+        }
+    }
+
+    /// Prefetch byte-identity at the pipeline level: a prefetching
+    /// pipeline (cache + lookahead thread) must deliver the exact
+    /// stream of an uncached, unprefetched one — every mode — while
+    /// the lookahead demonstrably issues pulls ahead of demand.
+    #[test]
+    fn prefetching_pipeline_streams_identical_batches() {
+        for mode in [
+            PipelineMode::Sync,
+            PipelineMode::Async,
+            PipelineMode::AsyncNonstop,
+        ] {
+            let base_cfg = PipelineConfig {
+                mode,
+                ..Default::default()
+            };
+            let pre_cfg = PipelineConfig {
+                mode,
+                prefetch_depth: 8,
+                ..Default::default()
+            };
+            let mut plain = Pipeline::start(
+                tiny_gen_parts(96, 16, 2, 0),
+                &base_cfg,
+                Arc::new(Metrics::new()),
+            );
+            let metrics = Arc::new(Metrics::new());
+            let mut pre = Pipeline::start(
+                tiny_gen_parts(96, 16, 2, 8 << 20),
+                &pre_cfg,
+                metrics.clone(),
+            );
+            for step in 0..2 * plain.batches_per_epoch() {
+                assert_eq!(
+                    plain.next().unwrap(),
+                    pre.next().unwrap(),
+                    "{mode:?}: prefetch changed the stream at step {step}"
+                );
+            }
+            drop(pre); // joins the lookahead thread
+            assert!(
+                metrics.counter("cache.prefetch_issued") > 0,
+                "{mode:?}: the lookahead thread never pulled"
+            );
+        }
+    }
+
+    /// Drop-mid-epoch with the lookahead thread actively prefetching:
+    /// shutdown must stop and join the prefetcher promptly for every
+    /// mode and worker count (satellite: drain test with prefetch in
+    /// flight).
+    #[test]
+    fn dropping_pipeline_with_prefetch_in_flight_joins_cleanly() {
+        for mode in [
+            PipelineMode::Sync,
+            PipelineMode::Async,
+            PipelineMode::AsyncNonstop,
+        ] {
+            for workers in [1, 4] {
+                let gen = tiny_gen_parts(256, 16, 2, 8 << 20);
+                let cfg = PipelineConfig {
+                    mode,
+                    num_workers: workers,
+                    prefetch_depth: 8,
+                    ..Default::default()
+                };
+                let metrics = Arc::new(Metrics::new());
+                let mut p = Pipeline::start(gen, &cfg, metrics);
+                let _ = p.next().unwrap(); // mid-epoch, window open
+                drop(p); // must join workers AND the prefetch thread
             }
         }
     }

@@ -1,0 +1,198 @@
+//! Predictive prefetcher: warm the [`FeatureCache`] with *future*
+//! batches' remote rows before demand (ROADMAP item 2, the MassiveGNN
+//! direction).
+//!
+//! Since PR 5 every batch is a pure function of `(seed, epoch, idx)`:
+//! the scheduler's target set and the sampler's neighbor draws for
+//! global batch `g` can be recomputed by anyone holding a fork of the
+//! deployment, without consuming any live randomness. The prefetcher
+//! exploits exactly that: a background thread owns a
+//! [`BatchGen`] fork and walks a lookahead frontier over the window
+//! `[cursor, cursor + depth)`, where `cursor` tracks the demand side's
+//! next batch index ([`PrefetchCtl::advance_to`], bumped by the
+//! sampling workers as they claim indices). For each lookahead batch it
+//! re-derives the schedule + sampler stream, materializes the remote
+//! part of the layer-0 frontier, and pulls it per owner into the shared
+//! cache ([`KvClient::prefetch_typed`]) — deduped against cache
+//! contents and in-flight prefetches, admission-scored like any insert,
+//! and metered as `cache.prefetch_*`.
+//!
+//! Rows belonging to *imminent* batches (the next two demand indices)
+//! are pinned so the CLOCK hand cannot evict them between prefetch and
+//! use; the demand-side `lookup` releases the pin. Everything else is
+//! ordinary cache traffic the CLOCK hand may reclaim.
+//!
+//! Correctness: the prefetcher never touches the batch stream — it
+//! holds its own scheduler clone and sampler fork, so the demand side's
+//! batches are byte-identical with prefetch on or off (test-enforced at
+//! the loader and e2e levels). In strict embedding mode the cache is
+//! also value-transparent, so losses and params are unchanged. RPC
+//! errors (injected outages) are swallowed here: a failed prefetch just
+//! leaves rows cold for the demand path to fetch — and to surface the
+//! error deterministically, if it persists.
+//!
+//! [`FeatureCache`]: crate::kvstore::FeatureCache
+//! [`KvClient::prefetch_typed`]: crate::kvstore::KvClient::prefetch_typed
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::BatchGen;
+
+/// How far ahead of `cursor` a row must be needed to count as
+/// *imminent* (and get pinned): the batch in flight plus the next one.
+const PIN_WINDOW: u64 = 2;
+
+/// Parking nap when the frontier has caught up with the window.
+const IDLE_NAP: Duration = Duration::from_micros(200);
+
+/// Shared demand cursor + stop flag between the pipeline and its
+/// prefetch thread. Lock-free: the demand side only ever publishes a
+/// monotonically increasing cursor.
+pub struct PrefetchCtl {
+    /// The demand side's next unclaimed global batch index.
+    cursor: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl PrefetchCtl {
+    pub fn new(start: u64) -> Arc<Self> {
+        Arc::new(Self {
+            cursor: AtomicU64::new(start),
+            stop: AtomicBool::new(false),
+        })
+    }
+
+    /// Publish demand progress: the next demand batch index is at least
+    /// `g`. Monotonic (`fetch_max`), so out-of-order worker claims are
+    /// harmless.
+    pub fn advance_to(&self, g: u64) {
+        self.cursor.fetch_max(g, Ordering::AcqRel);
+    }
+
+    pub fn cursor(&self) -> u64 {
+        self.cursor.load(Ordering::Acquire)
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+}
+
+/// Handle over the background lookahead thread. Dropping the owning
+/// [`Pipeline`] stops and joins it ([`Prefetcher::shutdown`]).
+///
+/// [`Pipeline`]: crate::pipeline::Pipeline
+pub struct Prefetcher {
+    ctl: Arc<PrefetchCtl>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Launch the lookahead thread over a private [`BatchGen`] fork.
+    /// `depth` must be ≥ 1 (the pipeline gates depth 0 off entirely).
+    pub fn spawn(mut gen: BatchGen, depth: usize, start: u64) -> Prefetcher {
+        assert!(depth >= 1);
+        let ctl = PrefetchCtl::new(start);
+        let tctl = ctl.clone();
+        let handle = std::thread::Builder::new()
+            .name("prefetch".into())
+            .spawn(move || {
+                let mut frontier = start;
+                while !tctl.stopped() {
+                    let cursor = tctl.cursor();
+                    // never prefetch behind demand — those rows are
+                    // being fetched (or already were) by the workers
+                    if frontier < cursor {
+                        frontier = cursor;
+                    }
+                    if frontier >= cursor.saturating_add(depth as u64) {
+                        std::thread::sleep(IDLE_NAP);
+                        continue;
+                    }
+                    let g = frontier;
+                    frontier += 1;
+                    let pin = g < cursor.saturating_add(PIN_WINDOW);
+                    let t = Instant::now();
+                    // errors leave rows cold; the demand path fetches
+                    // them and surfaces persistent faults itself
+                    let _ = gen.prefetch_batch(g, pin);
+                    gen.metrics.add_time("pipeline.prefetch", t.elapsed());
+                }
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher { ctl, handle: Some(handle) }
+    }
+
+    /// The shared cursor, for the demand side to publish progress.
+    pub fn ctl(&self) -> Arc<PrefetchCtl> {
+        self.ctl.clone()
+    }
+
+    /// [`PrefetchCtl::advance_to`] without cloning the handle (the
+    /// Sync-mode per-batch path).
+    pub fn advance_to(&self, g: u64) {
+        self.ctl.advance_to(g);
+    }
+
+    /// Raise stop and join the thread (idempotent).
+    pub fn shutdown(&mut self) {
+        self.ctl.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::gen::tests_support::tiny_gen_parts;
+
+    #[test]
+    fn prefetcher_warms_the_cache_ahead_of_demand() {
+        let gen = tiny_gen_parts(128, 16, 2, 8 << 20);
+        let mut demand = gen.fork_worker();
+        let mut pf = Prefetcher::spawn(gen, 4, 0);
+        // wait for the lookahead window [0, 4) to be materialized
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let s = demand.kv.cache_stats().unwrap();
+            if s.prefetch_issued > 0 || Instant::now() > deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let issued = demand.kv.cache_stats().unwrap().prefetch_issued;
+        assert!(issued > 0, "prefetcher never issued a pull");
+        // demand now consumes batch 0: its remote rows are resident
+        let b = demand.batch_at(0);
+        assert!(
+            demand.kv.cache_stats().unwrap().prefetch_hits > 0,
+            "prefetched rows never hit"
+        );
+        assert!(!b.input_nodes.is_empty());
+        pf.shutdown();
+        pf.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn cursor_advances_monotonically() {
+        let ctl = PrefetchCtl::new(3);
+        ctl.advance_to(7);
+        ctl.advance_to(5); // stale worker claim: ignored
+        assert_eq!(ctl.cursor(), 7);
+    }
+}

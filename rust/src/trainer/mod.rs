@@ -147,6 +147,17 @@ pub struct TrainReport {
     pub cache_hit_rows: u64,
     pub cache_miss_rows: u64,
     pub cache_remote_bytes_saved: u64,
+    /// Predictive-prefetcher counters (docs/DESIGN.md §10), same
+    /// production-side accounting as the other `cache.*` fields; all
+    /// zero with `prefetch_depth = 0`. `wasted` bytes are prefetched
+    /// rows evicted or invalidated before any demand hit — the
+    /// lookahead's false-positive cost.
+    pub cache_prefetch_issued: u64,
+    pub cache_prefetch_hits: u64,
+    pub cache_prefetch_wasted_bytes: u64,
+    /// Cumulative pin events on imminent-batch rows (each demand hit
+    /// releases one pin; see `CacheStats::pinned_rows`).
+    pub cache_pinned_rows: u64,
     /// Neighbors dropped by layer budget caps, across trainers
     /// (consumed batches, same accounting as `remote_feature_rows`).
     pub dropped_neighbors: u64,
@@ -174,6 +185,11 @@ pub struct TrainReport {
     pub stage_sample_secs: f64,
     pub stage_pull_secs: f64,
     pub stage_compact_secs: f64,
+    /// CPU time spent in the background prefetch thread
+    /// (`pipeline.prefetch`). Deliberately *not* part of `sample_secs`:
+    /// the lookahead overlaps the demand stages, so adding it would
+    /// double-count wall clock in the pipeline model.
+    pub stage_prefetch_secs: f64,
     /// Batches actually produced by the sampling workers (non-stop mode
     /// overproduces; unit-cost calibration must divide by this).
     pub batches_produced: u64,
@@ -548,6 +564,12 @@ impl TrainReport {
             cache_miss_rows: metrics.counter("cache.miss_rows"),
             cache_remote_bytes_saved: metrics
                 .counter("cache.remote_bytes_saved"),
+            cache_prefetch_issued: metrics
+                .counter("cache.prefetch_issued"),
+            cache_prefetch_hits: metrics.counter("cache.prefetch_hits"),
+            cache_prefetch_wasted_bytes: metrics
+                .counter("cache.prefetch_wasted_bytes"),
+            cache_pinned_rows: metrics.counter("cache.pinned_rows"),
             dropped_neighbors: metrics.counter("trainer.dropped_nbrs"),
             etype_sampled_edges,
             pool_hit: metrics.counter("pool.hit"),
@@ -573,6 +595,9 @@ impl TrainReport {
                 .as_secs_f64(),
             stage_compact_secs: metrics
                 .total_time("pipeline.compact")
+                .as_secs_f64(),
+            stage_prefetch_secs: metrics
+                .total_time("pipeline.prefetch")
                 .as_secs_f64(),
             batches_produced: metrics.counter("pipeline.batches"),
             device_secs: metrics.total_time("trainer.device").as_secs_f64(),

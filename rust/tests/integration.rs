@@ -128,6 +128,41 @@ fn worker_pool_training_is_bit_identical_to_single_worker() {
 }
 
 #[test]
+fn prefetch_training_is_bit_identical_to_prefetch_off() {
+    // the prefetch tentpole's e2e gate: a deep lookahead over a sharded
+    // cache only moves rows *earlier* — in strict embedding mode (the
+    // default) losses and final params match the prefetch-off run bit
+    // for bit, and the report proves the lookahead actually ran
+    let d = small_dataset(7);
+    let c_off = Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts())
+        .unwrap();
+    let mut pf_spec = ClusterSpec::new(2, 1);
+    pf_spec.prefetch_depth = 8;
+    pf_spec.cache_shards = 4;
+    let c_on = Cluster::deploy(&d, pf_spec, artifacts()).unwrap();
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        epochs: 1,
+        max_steps: 6,
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::AsyncNonstop;
+    cfg.pipeline.num_workers = 2;
+    let off = trainer::train(&c_off, &cfg).expect("prefetch-off train");
+    let on = trainer::train(&c_on, &cfg).expect("prefetch-on train");
+    assert_eq!(
+        off.loss_curve, on.loss_curve,
+        "prefetch changed the training stream"
+    );
+    assert_eq!(off.final_params, on.final_params);
+    assert_eq!(off.cache_prefetch_issued, 0);
+    assert!(
+        on.cache_prefetch_issued > 0,
+        "prefetcher never issued a pull"
+    );
+}
+
+#[test]
 fn metis_moves_fewer_remote_feature_rows_than_random() {
     let d = small_dataset(4);
     let mut metis = ClusterSpec::new(2, 1);
