@@ -1,0 +1,586 @@
+//! Multi-process localhost launcher (docs/DESIGN.md §11).
+//!
+//! One invocation per machine process, all reading the same config file:
+//!
+//! ```text
+//! cargo run --release --example launch -- run.cfg \
+//!     --machine 0 --port-base 29500 &
+//! cargo run --release --example launch -- run.cfg \
+//!     --machine 1 --port-base 29500 &
+//! ```
+//!
+//! or the whole cluster in one process over the in-process backend:
+//!
+//! ```text
+//! cargo run --release --example launch -- run.cfg --inproc
+//! ```
+//!
+//! Every process deploys the same deterministic cluster replica, joins
+//! the rendezvous service (hosted by machine 0), serves its KVStore
+//! shard over RPC, and runs the ordinary `DistGraph` +
+//! `DistNodeDataLoader` training loop — the loader code path is
+//! byte-identical to the single-process one; only the parameter plane
+//! (ring all-reduce) and the control plane (rendezvous barrier,
+//! heartbeats, shutdown) cross process boundaries. `scripts/launch.sh`
+//! asserts the printed `MACHINE_RESULT` lines (batch-stream hashes,
+//! final loss, parameter hash) are identical between the in-process and
+//! multi-process TCP runs.
+//!
+//! The model step is a deterministic softmax-regression surrogate over
+//! the batch's layer-0 feature rows, so the run needs no compiled
+//! device artifacts (the CI smoke job has none); swap in
+//! `DeviceExecutor` for the compiled GNN variants.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+use distdglv2::api::{DistGraph, DistNodeDataLoader, Seeds};
+use distdglv2::cluster::Cluster;
+use distdglv2::config::RunConfig;
+use distdglv2::coordinator::rendezvous::{
+    RendezvousClient, RendezvousServer,
+};
+use distdglv2::coordinator::{
+    CoordinatorConfig, Decision, MembershipView,
+};
+use distdglv2::net::rpc::{serve_kv, RpcClient};
+use distdglv2::net::tcp::{tcp_transport, TcpConfig};
+use distdglv2::net::{CostModel, Transport};
+use distdglv2::runtime::executable::HostBatch;
+use distdglv2::runtime::manifest::{artifacts_dir, VariantSpec};
+use distdglv2::sampler::compact::{ModelKind, TaskKind};
+use distdglv2::trainer::AllReduceGroup;
+
+/// Endpoint-space layout shared by every process (and both backends):
+/// ring endpoints first, then per-machine control / kv-serve /
+/// kv-client endpoints, then the rendezvous server on machine 0.
+struct Layout {
+    world: usize,
+    n_mach: usize,
+}
+
+impl Layout {
+    fn control(&self, m: usize) -> u32 {
+        (self.world + m) as u32
+    }
+    fn kv_serve(&self, m: usize) -> u32 {
+        (self.world + self.n_mach + m) as u32
+    }
+    fn kv_client(&self, m: usize) -> u32 {
+        (self.world + 2 * self.n_mach + m) as u32
+    }
+    fn server(&self) -> u32 {
+        (self.world + 3 * self.n_mach) as u32
+    }
+    fn n_endpoints(&self) -> usize {
+        self.world + 3 * self.n_mach + 1
+    }
+    /// Process (= machine) hosting endpoint `e`.
+    fn proc_of(&self, e: usize, per: usize) -> usize {
+        if e < self.world {
+            e / per
+        } else if e == self.server() as usize {
+            0
+        } else {
+            (e - self.world) % self.n_mach
+        }
+    }
+}
+
+struct Args {
+    config: Option<String>,
+    machine: Option<usize>,
+    port_base: u16,
+    inproc: bool,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        config: None,
+        machine: None,
+        port_base: 29500,
+        inproc: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--machine" => {
+                let v = it.next().context("--machine needs a value")?;
+                args.machine = Some(v.parse().context("--machine")?);
+            }
+            "--port-base" => {
+                let v = it.next().context("--port-base needs a value")?;
+                args.port_base = v.parse().context("--port-base")?;
+            }
+            "--inproc" => args.inproc = true,
+            flag if flag.starts_with("--") => {
+                bail!(
+                    "unknown flag {flag}; usage: launch [config.cfg] \
+                     [--machine M --port-base P | --inproc]"
+                );
+            }
+            path => args.config = Some(path.to_string()),
+        }
+    }
+    ensure!(
+        args.machine.is_none() || !args.inproc,
+        "--machine and --inproc are mutually exclusive"
+    );
+    Ok(args)
+}
+
+/// The surrogate's variant spec: shapes only (no HLO/artifacts), enough
+/// for the loader to build the usual padded 2-layer batches.
+fn surrogate_vspec(cfg: &RunConfig) -> VariantSpec {
+    let batch = 16usize;
+    VariantSpec {
+        name: "launch-surrogate".into(),
+        model: ModelKind::Sage,
+        task: TaskKind::NodeClassification,
+        batch,
+        fanouts: vec![3, 3],
+        layer_nodes: vec![
+            (batch * 16).next_multiple_of(128),
+            (batch * 4).next_multiple_of(128),
+            batch.next_multiple_of(128),
+        ],
+        feat_dim: cfg.dataset.feat_dim,
+        num_classes: cfg.dataset.num_classes,
+        num_heads: 1,
+        num_rels: 1,
+        param_shapes: Vec::new(),
+        train_inputs: Vec::new(),
+        eval_inputs: Vec::new(),
+        train_hlo: String::new(),
+        eval_hlo: String::new(),
+        params_bin: String::new(),
+    }
+}
+
+/// One softmax-regression SGD step over the batch's labeled seed rows
+/// (layer-0 rows `0..nL` are the seeds — `compact::to_block` places dst
+/// nodes first). Pure f32 arithmetic in a fixed order, so the loss and
+/// the updated params are bit-identical across backends and processes.
+fn surrogate_step(
+    params: &mut [Vec<f32>],
+    batch: &HostBatch,
+    fd: usize,
+    nc: usize,
+    lr: f32,
+) -> f32 {
+    let (w, b) = params.split_at_mut(1);
+    let (w, b) = (&mut w[0], &mut b[0]);
+    let mut gw = vec![0.0f32; fd * nc];
+    let mut gb = vec![0.0f32; nc];
+    let mut loss = 0.0f32;
+    let mut cnt = 0.0f32;
+    for (i, (&y, &mk)) in
+        batch.labels.iter().zip(&batch.label_mask).enumerate()
+    {
+        if mk <= 0.0 || y < 0 || y as usize >= nc {
+            continue;
+        }
+        let y = y as usize;
+        let x = &batch.feats[i * fd..(i + 1) * fd];
+        let mut logits: Vec<f32> = (0..nc)
+            .map(|c| {
+                let mut v = b[c];
+                for (k, &xk) in x.iter().enumerate() {
+                    v += xk * w[k * nc + c];
+                }
+                v
+            })
+            .collect();
+        let mx =
+            logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut z = 0.0f32;
+        for l in logits.iter_mut() {
+            *l = (*l - mx).exp();
+            z += *l;
+        }
+        loss -= (logits[y] / z).ln();
+        cnt += 1.0;
+        for (c, &e) in logits.iter().enumerate() {
+            let g = e / z - if c == y { 1.0 } else { 0.0 };
+            gb[c] += g;
+            for (k, &xk) in x.iter().enumerate() {
+                gw[k * nc + c] += g * xk;
+            }
+        }
+    }
+    if cnt == 0.0 {
+        return 0.0;
+    }
+    let s = lr / cnt;
+    for (wv, g) in w.iter_mut().zip(&gw) {
+        *wv -= s * g;
+    }
+    for (bv, g) in b.iter_mut().zip(&gb) {
+        *bv -= s * g;
+    }
+    loss / cnt
+}
+
+fn fnv1a(h: &mut u64, x: u64) {
+    for byte in x.to_le_bytes() {
+        *h ^= byte as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+fn hash_params(params: &[Vec<f32>]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for p in params {
+        for v in p {
+            fnv1a(&mut h, v.to_bits() as u64);
+        }
+    }
+    h
+}
+
+struct MachineResult {
+    machine: usize,
+    /// Per local rank: (rank, batch-stream hash).
+    streams: Vec<(usize, u64)>,
+    param_hash: u64,
+    loss_start: f32,
+    final_loss: f32,
+}
+
+impl MachineResult {
+    /// The line `scripts/launch.sh` compares verbatim between backends.
+    fn line(&self) -> String {
+        let streams: Vec<String> = self
+            .streams
+            .iter()
+            .map(|(r, h)| format!("{r}:{h:016x}"))
+            .collect();
+        format!(
+            "MACHINE_RESULT m={} streams={} param_hash={:016x} \
+             loss_start={:.6} final_loss={:.6}",
+            self.machine,
+            streams.join(","),
+            self.param_hash,
+            self.loss_start,
+            self.final_loss,
+        )
+    }
+}
+
+/// Everything one machine process does after deploy: serve its KV
+/// shard, join the rendezvous, cross-check a peer's shard over RPC,
+/// train its local ranks with per-epoch wire barriers, say goodbye.
+#[allow(clippy::too_many_arguments)]
+fn run_machine(
+    cluster: &Cluster,
+    transport: &Arc<Transport>,
+    group: &Arc<AllReduceGroup>,
+    cfg: &RunConfig,
+    vspec: &VariantSpec,
+    layout: &Layout,
+    m: usize,
+) -> Result<MachineResult> {
+    let per = cfg.cluster.trainers_per_machine;
+    let n_mach = layout.n_mach;
+
+    // data plane: serve this machine's KVStore shard over the wire
+    let running = Arc::new(AtomicBool::new(true));
+    let kv_thread = serve_kv(
+        transport.endpoint(layout.kv_serve(m)),
+        cluster.kv.servers[m].clone(),
+        running.clone(),
+    );
+
+    // control plane: join the rendezvous (machine id = our preference)
+    let mut rdv = RendezvousClient::join(
+        transport.endpoint(layout.control(m)),
+        layout.server(),
+        Some(m as u32),
+        Duration::from_secs(60),
+    )?;
+    ensure!(
+        rdv.machine() as usize == m,
+        "rendezvous assigned machine {} to process {m}",
+        rdv.machine()
+    );
+    let ranks = rdv.my_ranks();
+    ensure!(ranks == (m * per..(m + 1) * per).collect::<Vec<_>>());
+
+    // start barrier: every process deployed + serving before anyone
+    // pulls
+    match rdv.barrier_all(&ranks).map_err(anyhow::Error::from)? {
+        Decision::Continue => {}
+        Decision::Reconfigure(v) => {
+            bail!("membership changed before training started: {v:?}")
+        }
+    }
+
+    // cross-process data-plane check: pull label rows from the next
+    // machine's server over real RPC and compare against our replica
+    let peer = (m + 1) % n_mach;
+    if n_mach > 1 {
+        let mut rpc =
+            RpcClient::new(transport.endpoint(layout.kv_client(m)));
+        let locals: Vec<u32> = (0..4).collect();
+        let (dim, remote) = rpc
+            .kv_pull(layout.kv_serve(peer), "label", &locals)
+            .map_err(anyhow::Error::from)?;
+        let mut local = vec![0.0f32; locals.len() * dim];
+        cluster.kv.servers[peer]
+            .read_rows("label", &locals, &mut local)
+            .map_err(anyhow::Error::from)?;
+        ensure!(
+            remote == local,
+            "RPC pull from machine {peer} disagrees with the replica"
+        );
+        println!("KV_CROSSCHECK m={m} peer={peer} rows={} ok", dim * 4);
+    }
+
+    // the unmodified loader path: one DistNodeDataLoader per local rank
+    let graph = DistGraph::new(cluster);
+    let fd = vspec.feat_dim;
+    let nc = vspec.num_classes;
+    let mut loaders: Vec<DistNodeDataLoader> = Vec::new();
+    for &r in &ranks {
+        loaders.push(
+            DistNodeDataLoader::builder(&graph, vspec)
+                .rank(r)
+                .seeds(Seeds::Train)
+                .seed(cfg.train.seed ^ ((r as u64) << 17))
+                .build()?,
+        );
+    }
+    let mut participants = Vec::new();
+    for &r in &ranks {
+        participants.push(group.endpoint(r).map_err(|e| {
+            anyhow::anyhow!("claiming ring rank {r}: {e}")
+        })?);
+    }
+    let mut params: Vec<Vec<Vec<f32>>> = ranks
+        .iter()
+        .map(|_| vec![vec![0.0f32; fd * nc], vec![0.0f32; nc]])
+        .collect();
+    let mut losses: Vec<Vec<f32>> =
+        ranks.iter().map(|_| Vec::new()).collect();
+    let mut hashes: Vec<u64> =
+        ranks.iter().map(|_| 0xcbf2_9ce4_8422_2325u64).collect();
+
+    for epoch in 0..cfg.train.epochs {
+        let t_epoch = std::time::Instant::now();
+        // local ranks train concurrently; the ring syncs every step
+        // across ALL processes, so global steps stay aligned
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (((loader, p), prm), (curve, hash)) in loaders
+                .iter_mut()
+                .zip(participants.iter_mut())
+                .zip(params.iter_mut())
+                .zip(losses.iter_mut().zip(hashes.iter_mut()))
+            {
+                handles.push(s.spawn(move || -> Result<()> {
+                    for batch in &mut *loader {
+                        let (input_nodes, seeds, _blocks) =
+                            batch.unpack();
+                        for &n in input_nodes {
+                            fnv1a(hash, n as u64);
+                        }
+                        for &n in seeds {
+                            fnv1a(hash, n as u64);
+                        }
+                        let loss = surrogate_step(
+                            prm,
+                            &batch,
+                            fd,
+                            nc,
+                            cfg.train.lr,
+                        );
+                        p.allreduce_params(prm).map_err(|e| {
+                            anyhow::anyhow!("all-reduce: {e}")
+                        })?;
+                        curve.push(loss);
+                    }
+                    Ok(())
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("trainer thread panicked"))
+                .collect::<Result<Vec<()>>>()
+        })?;
+        // epoch boundary over the wire: heartbeats + barrier
+        let secs = t_epoch.elapsed().as_secs_f64();
+        for &r in &ranks {
+            rdv.heartbeat(r, secs).map_err(anyhow::Error::from)?;
+        }
+        match rdv.barrier_all(&ranks).map_err(anyhow::Error::from)? {
+            Decision::Continue => {}
+            Decision::Reconfigure(v) => {
+                // a peer process died mid-run; the fixed-membership
+                // launcher reports and stops (the in-process elastic
+                // driver handles live reconfiguration)
+                bail!(
+                    "membership shrank to {:?} at epoch {epoch} — a \
+                     peer process is gone",
+                    v.machines
+                )
+            }
+        }
+    }
+
+    rdv.shutdown().map_err(anyhow::Error::from)?;
+    running.store(false, Ordering::SeqCst);
+    kv_thread.join().expect("kv serve thread panicked");
+
+    // after the final all-reduce every rank's params are identical;
+    // hash the first local rank's copy
+    let curve = &losses[0];
+    ensure!(!curve.is_empty(), "loader yielded no training batches");
+    let k = curve.len().clamp(1, 5);
+    Ok(MachineResult {
+        machine: m,
+        streams: ranks.iter().copied().zip(hashes).collect(),
+        param_hash: hash_params(&params[0]),
+        loss_start: curve[..k].iter().sum::<f32>() / k as f32,
+        final_loss: curve[curve.len() - k..].iter().sum::<f32>()
+            / k as f32,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    let cfg = match &args.config {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig {
+            dataset: distdglv2::graph::DatasetSpec::new(
+                "launch-default",
+                4000,
+                16_000,
+            ),
+            ..RunConfig::default()
+        },
+    };
+    let n_mach = cfg.cluster.n_machines;
+    let per = cfg.cluster.trainers_per_machine;
+    let world = n_mach * per;
+    let layout = Layout { world, n_mach };
+    if let Some(m) = args.machine {
+        ensure!(m < n_mach, "--machine {m} >= machines {n_mach}");
+    }
+
+    println!(
+        "launch: {n_mach} machines x {per} trainers, {} epochs, \
+         backend={}",
+        cfg.train.epochs,
+        if args.inproc { "in-process" } else { "tcp" },
+    );
+
+    // deterministic replicated deployment: every process builds the
+    // same dataset and cluster from the config's seeds
+    let dataset = cfg.dataset.generate();
+    let cluster = Arc::new(Cluster::deploy(
+        &dataset,
+        cfg.cluster.clone(),
+        artifacts_dir(),
+    )?);
+    let vspec = surrogate_vspec(&cfg);
+
+    let cost = Arc::new(CostModel::default());
+    let endpoint_machine: Vec<u32> = (0..layout.n_endpoints())
+        .map(|e| layout.proc_of(e, per) as u32)
+        .collect();
+    // rendezvous liveness: reaping is for crashed processes, not slow
+    // epochs — keep the timeout far above any smoke epoch
+    let co_cfg = CoordinatorConfig {
+        heartbeat_timeout: Duration::from_secs(120),
+        ..Default::default()
+    };
+
+    let mut results: Vec<MachineResult> = Vec::new();
+    if args.inproc {
+        // whole cluster in this process over the in-process backend —
+        // the reference run the TCP launch must match byte for byte
+        let transport =
+            Transport::with_mapping(endpoint_machine, cost);
+        let group =
+            AllReduceGroup::from_transport(transport.clone(), world);
+        let server = RendezvousServer::new(
+            transport.endpoint(layout.server()),
+            MembershipView::initial(n_mach, per),
+            co_cfg,
+            n_mach,
+        );
+        let server_thread = std::thread::spawn(move || server.run());
+        let outs = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for m in 0..n_mach {
+                let (cluster, transport, group) =
+                    (&cluster, &transport, &group);
+                let (cfg, vspec, layout) = (&cfg, &vspec, &layout);
+                handles.push(s.spawn(move || {
+                    run_machine(
+                        cluster, transport, group, cfg, vspec, layout,
+                        m,
+                    )
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("machine thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+        results.extend(outs);
+        let boundaries = server_thread
+            .join()
+            .expect("rendezvous server panicked");
+        println!("rendezvous: {boundaries} epoch boundaries decided");
+    } else {
+        let m = args.machine.context(
+            "pass --machine M (one process per machine) or --inproc",
+        )?;
+        let mut tcfg = TcpConfig::localhost(m, n_mach, args.port_base);
+        tcfg.endpoint_proc = (0..layout.n_endpoints())
+            .map(|e| layout.proc_of(e, per))
+            .collect();
+        tcfg.machine_of = endpoint_machine;
+        let transport =
+            tcp_transport(tcfg, cost).map_err(anyhow::Error::from)?;
+        let group =
+            AllReduceGroup::from_transport(transport.clone(), world);
+        // machine 0 hosts the rendezvous service
+        let server_thread = (m == 0).then(|| {
+            let server = RendezvousServer::new(
+                transport.endpoint(layout.server()),
+                MembershipView::initial(n_mach, per),
+                co_cfg,
+                n_mach,
+            );
+            std::thread::spawn(move || server.run())
+        });
+        results.push(run_machine(
+            &cluster, &transport, &group, &cfg, &vspec, &layout, m,
+        )?);
+        if let Some(h) = server_thread {
+            let boundaries =
+                h.join().expect("rendezvous server panicked");
+            println!(
+                "rendezvous: {boundaries} epoch boundaries decided"
+            );
+        }
+    }
+
+    results.sort_by_key(|r| r.machine);
+    for r in &results {
+        println!("{}", r.line());
+    }
+    let r0 = &results[0];
+    ensure!(
+        r0.final_loss < r0.loss_start,
+        "loss did not decrease: {} -> {}",
+        r0.loss_start,
+        r0.final_loss
+    );
+    println!("LAUNCH OK");
+    Ok(())
+}

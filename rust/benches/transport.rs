@@ -1,0 +1,240 @@
+//! Transport bench (docs/DESIGN.md §11): the in-process mailbox fabric
+//! vs real TCP loopback sockets across a payload-size grid, plus
+//! per-RPC-payload serialize/deserialize micro timings. The round-trip
+//! rows measure the full `RpcClient::kv_pull` path — encode, frame,
+//! deliver (queue push vs socket write + reader/demux thread), decode —
+//! so the in-proc/TCP delta is the real cost of crossing a process
+//! boundary. Emits `BENCH_transport.json`. Needs no artifacts.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use distdglv2::net::payload::{
+    decode_kv_request, decode_kv_response, decode_sampler_response,
+    encode_kv_request, encode_kv_response, encode_sampler_response,
+    KvRequest, KvResponse, SamplerResponse,
+};
+use distdglv2::net::rpc::{serve_kv, RpcClient};
+use distdglv2::net::tcp::{free_loopback_ports, tcp_transport, TcpConfig};
+use distdglv2::net::{CostModel, Transport};
+use distdglv2::kvstore::KvServer;
+use distdglv2::sampler::service::SampledNbrs;
+use distdglv2::util::bench::BenchRunner;
+
+const DIM: usize = 64;
+const ROWS: [usize; 3] = [16, 256, 4096];
+const N_LOCAL: usize = 8192;
+
+fn feat_server() -> Arc<KvServer> {
+    let server = Arc::new(KvServer::new(1));
+    let data: Vec<f32> =
+        (0..N_LOCAL * DIM).map(|i| (i % 97) as f32 * 0.25).collect();
+    server.register("feat", data, DIM);
+    server
+}
+
+fn locals(n: usize) -> Vec<u32> {
+    (0..n as u32).map(|i| (i * 7) % N_LOCAL as u32).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut r = BenchRunner::new(2, 9);
+    let mut rows_json: Vec<String> = Vec::new();
+    let push = |kind: &str,
+                    backend: &str,
+                    n_rows: usize,
+                    bytes: u64,
+                    s: &distdglv2::util::bench::Sample,
+                    rows_json: &mut Vec<String>| {
+        rows_json.push(format!(
+            "    {{\"kind\": \"{kind}\", \"backend\": \"{backend}\", \
+             \"rows\": {n_rows}, \"payload_bytes\": {bytes}, \
+             \"median_us\": {:.3}, \"min_us\": {:.3}, \
+             \"max_us\": {:.3}}}",
+            s.median.as_secs_f64() * 1e6,
+            s.min.as_secs_f64() * 1e6,
+            s.max.as_secs_f64() * 1e6,
+        ));
+    };
+
+    // --- per-payload serialize / deserialize --------------------------------
+    println!("=== RPC payload codecs ===");
+    for n in ROWS {
+        let req = KvRequest::Pull {
+            name: "feat".into(),
+            locals: locals(n),
+        };
+        let req_buf = encode_kv_request(&req);
+        let s = r.bench(&format!("ser kv_pull_req {n} rows"), || {
+            std::hint::black_box(encode_kv_request(&req));
+        });
+        push(
+            "serialize:kv_pull_req",
+            "codec",
+            n,
+            req_buf.len() as u64,
+            &s,
+            &mut rows_json,
+        );
+        let s = r.bench(&format!("de  kv_pull_req {n} rows"), || {
+            std::hint::black_box(decode_kv_request(&req_buf).unwrap());
+        });
+        push(
+            "deserialize:kv_pull_req",
+            "codec",
+            n,
+            req_buf.len() as u64,
+            &s,
+            &mut rows_json,
+        );
+
+        let resp = KvResponse::Rows {
+            dim: DIM as u32,
+            data: vec![1.5f32; n * DIM],
+        };
+        let resp_buf = encode_kv_response(&resp);
+        let s = r.bench(&format!("ser kv_pull_resp {n}x{DIM}"), || {
+            std::hint::black_box(encode_kv_response(&resp));
+        });
+        push(
+            "serialize:kv_pull_resp",
+            "codec",
+            n,
+            resp_buf.len() as u64,
+            &s,
+            &mut rows_json,
+        );
+        let s = r.bench(&format!("de  kv_pull_resp {n}x{DIM}"), || {
+            std::hint::black_box(decode_kv_response(&resp_buf).unwrap());
+        });
+        push(
+            "deserialize:kv_pull_resp",
+            "codec",
+            n,
+            resp_buf.len() as u64,
+            &s,
+            &mut rows_json,
+        );
+
+        let blocks = SamplerResponse::Blocks(
+            (0..n)
+                .map(|i| SampledNbrs {
+                    nbrs: vec![i as u32; 10],
+                    rels: vec![0u8; 10],
+                })
+                .collect(),
+        );
+        let blk_buf = encode_sampler_response(&blocks);
+        let s = r.bench(&format!("ser sampler_resp {n} seeds"), || {
+            std::hint::black_box(encode_sampler_response(&blocks));
+        });
+        push(
+            "serialize:sampler_resp",
+            "codec",
+            n,
+            blk_buf.len() as u64,
+            &s,
+            &mut rows_json,
+        );
+        let s = r.bench(&format!("de  sampler_resp {n} seeds"), || {
+            std::hint::black_box(
+                decode_sampler_response(&blk_buf).unwrap(),
+            );
+        });
+        push(
+            "deserialize:sampler_resp",
+            "codec",
+            n,
+            blk_buf.len() as u64,
+            &s,
+            &mut rows_json,
+        );
+    }
+
+    // --- round trips: in-process fabric -------------------------------------
+    println!("\n=== kv_pull round trip: in-process backend ===");
+    {
+        let t = Transport::new(2, CostModel::default());
+        let server = feat_server();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t.endpoint(1), server, running.clone());
+        let mut client = RpcClient::new(t.endpoint(0));
+        for n in ROWS {
+            let ids = locals(n);
+            let bytes = (n * DIM * 4) as u64;
+            let s = r.bench(
+                &format!("inproc kv_pull {n}x{DIM} rows"),
+                || {
+                    let (_, data) =
+                        client.kv_pull(1, "feat", &ids).unwrap();
+                    std::hint::black_box(data.len());
+                },
+            );
+            push(
+                "roundtrip:kv_pull",
+                "inproc",
+                n,
+                bytes,
+                &s,
+                &mut rows_json,
+            );
+        }
+        running.store(false, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+
+    // --- round trips: real TCP loopback sockets -----------------------------
+    println!("\n=== kv_pull round trip: TCP loopback backend ===");
+    {
+        let ports = free_loopback_ports(2)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let addrs: Vec<String> =
+            ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+        let mk = |my_proc: usize| {
+            let mut cfg = TcpConfig::localhost(my_proc, 2, 0);
+            cfg.addrs = addrs.clone();
+            tcp_transport(cfg, Arc::new(CostModel::default()))
+        };
+        let t0 = mk(0).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let t1 = mk(1).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let server = feat_server();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t1.endpoint(1), server, running.clone());
+        let mut client = RpcClient::new(t0.endpoint(0));
+        for n in ROWS {
+            let ids = locals(n);
+            let bytes = (n * DIM * 4) as u64;
+            let s = r.bench(
+                &format!("tcp    kv_pull {n}x{DIM} rows"),
+                || {
+                    let (_, data) =
+                        client.kv_pull(1, "feat", &ids).unwrap();
+                    std::hint::black_box(data.len());
+                },
+            );
+            push(
+                "roundtrip:kv_pull",
+                "tcp",
+                n,
+                bytes,
+                &s,
+                &mut rows_json,
+            );
+        }
+        running.store(false, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+
+    std::fs::write(
+        "BENCH_transport.json",
+        format!(
+            "{{\n  \"bench\": \"transport\",\n  \
+             \"dim\": {DIM},\n  \
+             \"rows_grid\": [16, 256, 4096],\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            rows_json.join(",\n"),
+        ),
+    )?;
+    println!("\nwrote BENCH_transport.json");
+    Ok(())
+}

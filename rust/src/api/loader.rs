@@ -1207,4 +1207,58 @@ mod tests {
             }
         }
     }
+
+    /// Loader half of the §11 multi-process equivalence invariant: a
+    /// machine process that deploys its *own* cluster replica from the
+    /// same config (what every `examples/launch.rs` process does) sees
+    /// exactly the batch stream the shared single-process deployment
+    /// produces for its ranks, across two epochs. With the ring
+    /// all-reduce equivalence (`tcp_ring_matches_in_process_ring`),
+    /// this is why crossing OS-process boundaries cannot perturb
+    /// training.
+    #[test]
+    fn replicated_deployments_stream_identical_batches() {
+        let mut dspec = DatasetSpec::new("launch-eq", 1500, 6000);
+        dspec.train_frac = 0.2;
+        let d = dspec.generate();
+        let spec = ClusterSpec::new(2, 1);
+        let shared =
+            Cluster::deploy(&d, spec.clone(), artifacts_dir()).unwrap();
+        let v = dev_vspec(ModelKind::Sage, 16, d.feat_dim, 1);
+        for rank in 0..2usize {
+            // a separate "process": regenerate and redeploy from the
+            // same RunConfig-derived specs
+            let replica = Cluster::deploy(
+                &dspec.generate(),
+                spec.clone(),
+                artifacts_dir(),
+            )
+            .unwrap();
+            let g_shared = DistGraph::new(&shared);
+            let g_replica = DistGraph::new(&replica);
+            let seed = 7u64 ^ ((rank as u64) << 17);
+            let mut a = DistNodeDataLoader::builder(&g_shared, &v)
+                .rank(rank)
+                .seed(seed)
+                .pipeline(sync_cfg())
+                .build()
+                .unwrap();
+            let mut b = DistNodeDataLoader::builder(&g_replica, &v)
+                .rank(rank)
+                .seed(seed)
+                .pipeline(sync_cfg())
+                .build()
+                .unwrap();
+            for epoch in 0..2 {
+                let ea: Vec<HostBatch> = (&mut a).collect();
+                let eb: Vec<HostBatch> = (&mut b).collect();
+                assert!(!ea.is_empty());
+                assert_eq!(
+                    ea, eb,
+                    "rank {rank} epoch {epoch}: replica deployment \
+                     diverged from the shared one"
+                );
+            }
+        }
+    }
 }

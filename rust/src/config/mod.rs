@@ -252,6 +252,27 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Parse a config file: one `key=value` per line, `#` comments and
+    /// blank lines skipped. This is what `scripts/launch.sh` hands to
+    /// every machine process, so one file defines the whole cluster.
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let mut cfg = RunConfig::default();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').with_context(|| {
+                format!("{path}:{}: expected key=value, got {line:?}", i + 1)
+            })?;
+            cfg.set(k.trim(), v.trim())
+                .with_context(|| format!("{path}:{}", i + 1))?;
+        }
+        Ok(cfg)
+    }
+
     /// DistDGL-v1 baseline preset: synchronous pipeline, 1-level split.
     pub fn preset_distdgl_v1(mut self) -> Self {
         self.train.pipeline.mode = PipelineMode::Sync;
@@ -509,6 +530,37 @@ mod tests {
                 "{bad} should be rejected"
             );
         }
+    }
+
+    #[test]
+    fn config_file_parses_with_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("distdglv2_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(
+            &path,
+            "# cluster shape\n\
+             machines = 2\n\
+             trainers=1\n\
+             \n\
+             dataset=rmat:4000:16000  # small smoke graph\n\
+             epochs=2\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.cluster.n_machines, 2);
+        assert_eq!(cfg.cluster.trainers_per_machine, 1);
+        assert_eq!(cfg.dataset.n_nodes, 4000);
+        assert_eq!(cfg.train.epochs, 2);
+        // a bad line reports file:line
+        std::fs::write(&path, "machines=2\nnonsense\n").unwrap();
+        let err = RunConfig::from_file(path.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(":2"), "{err}");
+        assert!(
+            RunConfig::from_file("/nonexistent/run.cfg").is_err()
+        );
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! new view is a pure function of (old view, who is dead/slow, the
 //! planned schedule) — never of arrival order.
 
+pub mod rendezvous;
+
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -56,6 +58,14 @@ impl MembershipView {
     /// Per-rank machine vector, as `AllReduceGroup::new` expects.
     pub fn machine_vec(&self) -> Vec<u32> {
         (0..self.world_size()).map(|r| self.machine_of(r)).collect()
+    }
+
+    /// The ranks hosted on `machine` under this view (empty when the
+    /// machine is not a member) — what a rendezvous'd process trains.
+    pub fn ranks_on(&self, machine: u32) -> Vec<usize> {
+        (0..self.world_size())
+            .filter(|&r| self.machine_of(r) == machine)
+            .collect()
     }
 }
 
@@ -235,12 +245,70 @@ impl Coordinator {
         self.cv.notify_all();
     }
 
+    /// Barrier generation (bumped once per completed boundary). Lets a
+    /// non-blocking driver detect "someone else completed my round".
+    pub fn generation(&self) -> u64 {
+        self.state.lock().unwrap().generation
+    }
+
+    /// Non-blocking barrier arrival: record that `rank` reached the
+    /// epoch boundary and, if that completes the round (every rank of
+    /// the view arrived or is dead), decide and publish. Returns the
+    /// decision when this call completed the round, else `None` — the
+    /// message-driven rendezvous server replies to all pending arrivals
+    /// the moment one of these returns `Some`.
+    pub fn arrive(&self, rank: usize) -> Option<Decision> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Some(Decision::Continue);
+        }
+        st.arrived.insert(rank);
+        self.cv.notify_all();
+        self.complete_round(&mut st)
+    }
+
+    /// Non-blocking health sweep: reap silent ranks and complete the
+    /// in-progress round if the survivors have all arrived. `None` when
+    /// no round is in progress or arrivals are still outstanding. The
+    /// rendezvous server calls this on its receive-timeout tick so a
+    /// crashed process cannot wedge the barrier.
+    pub fn poll(&self) -> Option<Decision> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Some(Decision::Continue);
+        }
+        if st.arrived.is_empty() {
+            // decision-at-the-barrier: never reconfigure mid-epoch
+            return None;
+        }
+        self.complete_round(&mut st)
+    }
+
+    /// Shared completion step: reap, check the round, decide, advance
+    /// the generation, wake blocking waiters.
+    fn complete_round(&self, st: &mut CoState) -> Option<Decision> {
+        self.reap_stale(st);
+        if st.arrived.is_empty() || !Self::complete(st) {
+            return None;
+        }
+        let d = self.decide(st);
+        st.generation += 1;
+        st.arrived.clear();
+        self.cv.notify_all();
+        Some(d)
+    }
+
     /// Epoch-boundary barrier. Blocks until every rank of the current
     /// view has arrived (ranks silent longer than `heartbeat_timeout`
     /// are declared dead instead), then the last arriver decides
     /// Continue vs Reconfigure and all ranks return that decision.
+    /// Implemented on the same [`Self::arrive`]/[`Self::poll`]
+    /// primitives the transport-hosted rendezvous service drives.
     pub fn barrier(&self, rank: usize) -> Decision {
         let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Decision::Continue;
+        }
         let gen = st.generation;
         st.arrived.insert(rank);
         self.cv.notify_all();
@@ -252,12 +320,7 @@ impl Coordinator {
                 // someone else completed this generation
                 return st.decision.clone();
             }
-            self.reap_stale(&mut st);
-            if Self::complete(&st) {
-                let d = self.decide(&mut st);
-                st.generation = gen + 1;
-                st.arrived.clear();
-                self.cv.notify_all();
+            if let Some(d) = self.complete_round(&mut st) {
                 return d;
             }
             let (g, _) = self
@@ -640,5 +703,73 @@ mod tests {
         });
         // future barriers return immediately too
         assert_eq!(co.barrier(1), Decision::Continue);
+    }
+
+    #[test]
+    fn ranks_on_maps_the_machine_major_grid() {
+        let v = MembershipView::initial(3, 2);
+        assert_eq!(v.ranks_on(0), vec![0, 1]);
+        assert_eq!(v.ranks_on(2), vec![4, 5]);
+        assert_eq!(v.ranks_on(7), Vec::<usize>::new());
+        let shrunk = MembershipView {
+            epoch: 1,
+            machines: vec![0, 2],
+            per_machine: 2,
+        };
+        assert_eq!(shrunk.ranks_on(2), vec![2, 3]);
+        assert_eq!(shrunk.ranks_on(1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn nonblocking_arrive_completes_the_round_like_barrier() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig::default(),
+        );
+        assert_eq!(co.arrive(0), None, "round incomplete");
+        assert_eq!(co.generation(), 0);
+        assert_eq!(co.arrive(1), Some(Decision::Continue));
+        assert_eq!(co.generation(), 1);
+        assert_eq!(co.boundaries(), 1);
+        // blocking waiters of the same round are released by an arrive
+        let co2 = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig::default(),
+        );
+        std::thread::scope(|s| {
+            let waiter = {
+                let co2 = co2.clone();
+                s.spawn(move || co2.barrier(0))
+            };
+            std::thread::sleep(Duration::from_millis(10));
+            assert_eq!(co2.arrive(1), Some(Decision::Continue));
+            assert_eq!(waiter.join().unwrap(), Decision::Continue);
+        });
+    }
+
+    #[test]
+    fn poll_reaps_a_silent_rank_and_completes_the_round() {
+        let co = Coordinator::new(
+            MembershipView::initial(2, 1),
+            CoordinatorConfig {
+                heartbeat_timeout: Duration::from_millis(20),
+                ..Default::default()
+            },
+        );
+        // no round in progress: poll never invents a boundary
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(co.poll(), None);
+        assert_eq!(co.boundaries(), 0);
+        // rank 0 arrives; rank 1 goes silent past the timeout
+        assert_eq!(co.arrive(0), None);
+        std::thread::sleep(Duration::from_millis(30));
+        let d = co.poll().expect("reap completes the round");
+        let want = MembershipView {
+            epoch: 1,
+            machines: vec![0],
+            per_machine: 1,
+        };
+        assert_eq!(d, Decision::Reconfigure(want));
+        assert_eq!(co.demotions(), 1);
     }
 }

@@ -1,0 +1,523 @@
+//! Transport-hosted rendezvous: the [`Coordinator`] re-hosted behind
+//! [`Port::Control`] messages so membership spans OS processes
+//! (docs/DESIGN.md §11).
+//!
+//! One process (elected by config: the one hosting the server endpoint)
+//! runs a [`RendezvousServer`] wrapping the same in-process
+//! [`Coordinator`] the single-process elastic trainer uses — rank
+//! assignment, epoch-boundary barrier, heartbeat reaping, straggler
+//! strikes, and planned resizes are byte-for-byte the same decision
+//! logic; only the signal delivery changes from shared memory to
+//! [`CoordMsg`] frames. Every machine process holds a
+//! [`RendezvousClient`] mirroring the `Coordinator` API (`barrier`,
+//! `heartbeat`, `report_failure`, `shutdown`) over the wire.
+//!
+//! Protocol (client → server unless noted):
+//!   `Hello{preferred}` → `Welcome{machine, view}` — join + id assignment
+//!   `BarrierArrive{rank}` → `DecisionMsg(..)` — held until the round
+//!       completes (all ranks arrived or were reaped), then answered
+//!       all-at-once with the same decision
+//!   `Heartbeat{rank, secs}`, `FailureReport{rank}` — fire-and-forget
+//!   `Shutdown{machine}` → `ShutdownAck` — the server exits after every
+//!       expected client said goodbye
+//!
+//! Works identically over the in-process and TCP backends — the tests
+//! below run the same protocol over both.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{Coordinator, CoordinatorConfig, Decision, MembershipView};
+use crate::net::payload::{decode_coord_msg, encode_coord_msg, CoordMsg};
+use crate::net::{Endpoint, Port, PortKind, RpcError};
+
+/// Serve-loop tick: how often the server reaps silent ranks when no
+/// messages arrive. Derived from the heartbeat timeout so a crashed
+/// process is declared dead on the same schedule as in-process runs.
+fn tick_of(cfg: &CoordinatorConfig) -> Duration {
+    (cfg.heartbeat_timeout / 4)
+        .clamp(Duration::from_millis(10), Duration::from_millis(250))
+}
+
+/// The rendezvous service. Owns the server [`Endpoint`] and the wrapped
+/// [`Coordinator`]; `run()` is the message loop (spawn it on a thread —
+/// it exits after all `expect_clients` processes said `Shutdown`).
+pub struct RendezvousServer {
+    ep: Endpoint,
+    co: Arc<Coordinator>,
+    expect_clients: usize,
+    tick: Duration,
+}
+
+impl RendezvousServer {
+    pub fn new(
+        ep: Endpoint,
+        view: MembershipView,
+        cfg: CoordinatorConfig,
+        expect_clients: usize,
+    ) -> Self {
+        let tick = tick_of(&cfg);
+        Self {
+            ep,
+            co: Coordinator::new(view, cfg),
+            expect_clients,
+            tick,
+        }
+    }
+
+    /// The wrapped coordinator (observability: boundaries, demotions).
+    pub fn coordinator(&self) -> Arc<Coordinator> {
+        Arc::clone(&self.co)
+    }
+
+    fn reply(&self, to: u32, tag: u64, msg: &CoordMsg) {
+        // a vanished peer is handled by reaping, not by the reply path
+        let _ = self.ep.send(to, Port::Control, tag, encode_coord_msg(msg));
+    }
+
+    fn flush_pending(&self, pending: &mut Vec<(u32, u64)>, d: &Decision) {
+        let msg = CoordMsg::DecisionMsg(d.clone());
+        for (to, tag) in pending.drain(..) {
+            self.reply(to, tag, &msg);
+        }
+    }
+
+    /// Message loop. Returns the number of epoch boundaries decided.
+    pub fn run(self) -> u64 {
+        // barrier arrivals awaiting the round's decision: (endpoint, tag)
+        let mut pending: Vec<(u32, u64)> = Vec::new();
+        let mut used_ids: BTreeSet<u32> = BTreeSet::new();
+        let mut byes: BTreeSet<u32> = BTreeSet::new();
+        loop {
+            let msg = self.ep.recv_kind(PortKind::Control, Some(self.tick));
+            let Some(msg) = msg else {
+                if self.ep.is_closed() {
+                    // transport torn down under us: release any waiters
+                    self.co.shutdown();
+                    self.flush_pending(&mut pending, &Decision::Continue);
+                    return self.co.boundaries();
+                }
+                // idle tick: reap silent ranks, maybe complete the round
+                if let Some(d) = self.co.poll() {
+                    self.flush_pending(&mut pending, &d);
+                }
+                continue;
+            };
+            let Ok(decoded) = decode_coord_msg(&msg.payload) else {
+                continue; // garbled frame: drop it, the wire stays up
+            };
+            match decoded {
+                CoordMsg::Hello { preferred } => {
+                    let machine = if preferred != u32::MAX
+                        && !used_ids.contains(&preferred)
+                    {
+                        preferred
+                    } else {
+                        // join order: smallest id not yet handed out
+                        (0..).find(|m| !used_ids.contains(m)).unwrap()
+                    };
+                    used_ids.insert(machine);
+                    self.reply(
+                        msg.from,
+                        msg.tag,
+                        &CoordMsg::Welcome { machine, view: self.co.view() },
+                    );
+                }
+                CoordMsg::BarrierArrive { rank } => {
+                    pending.push((msg.from, msg.tag));
+                    if let Some(d) = self.co.arrive(rank as usize) {
+                        self.flush_pending(&mut pending, &d);
+                    }
+                }
+                CoordMsg::Heartbeat { rank, secs } => {
+                    self.co.heartbeat(rank as usize, secs);
+                }
+                CoordMsg::FailureReport { rank } => {
+                    self.co.report_failure(rank as usize);
+                    if let Some(d) = self.co.poll() {
+                        self.flush_pending(&mut pending, &d);
+                    }
+                }
+                CoordMsg::Shutdown { machine: _ } => {
+                    self.reply(msg.from, msg.tag, &CoordMsg::ShutdownAck);
+                    byes.insert(msg.from);
+                    if byes.len() >= self.expect_clients {
+                        self.co.shutdown();
+                        self.flush_pending(
+                            &mut pending,
+                            &Decision::Continue,
+                        );
+                        return self.co.boundaries();
+                    }
+                }
+                // server-to-client messages arriving here are protocol
+                // misuse by a peer; ignore them
+                CoordMsg::Welcome { .. }
+                | CoordMsg::DecisionMsg(_)
+                | CoordMsg::ShutdownAck => {}
+            }
+        }
+    }
+}
+
+/// Per-process handle onto the rendezvous service, mirroring the
+/// [`Coordinator`] API over the wire. Methods take `&mut self`: one
+/// process drives its rendezvous from one thread (trainer ranks within
+/// the process arrive together via [`Self::barrier_all`]).
+pub struct RendezvousClient {
+    ep: Endpoint,
+    server: u32,
+    machine: u32,
+    view: MembershipView,
+    next_tag: u64,
+    /// How long to wait for the barrier decision before declaring the
+    /// coordinator lost. Must exceed the slowest epoch (the decision
+    /// only lands when every rank arrives).
+    pub decision_timeout: Duration,
+}
+
+impl RendezvousClient {
+    /// Join the rendezvous: send `Hello`, await `Welcome`, learn our
+    /// machine id and the initial membership view. `preferred = None`
+    /// lets the server assign ids in join order.
+    pub fn join(
+        ep: Endpoint,
+        server: u32,
+        preferred: Option<u32>,
+        timeout: Duration,
+    ) -> Result<Self, RpcError> {
+        let mut c = Self {
+            ep,
+            server,
+            machine: u32::MAX,
+            view: MembershipView::initial(0, 1),
+            next_tag: 1,
+            decision_timeout: Duration::from_secs(600),
+        };
+        let hello = CoordMsg::Hello {
+            preferred: preferred.unwrap_or(u32::MAX),
+        };
+        let tag = c.send(&hello)?;
+        match c.await_reply(&[tag], timeout)? {
+            CoordMsg::Welcome { machine, view } => {
+                c.machine = machine;
+                c.view = view;
+                Ok(c)
+            }
+            other => Err(RpcError::ConnectionLost {
+                peer: server,
+                detail: format!("expected Welcome, got {other:?}"),
+            }),
+        }
+    }
+
+    pub fn machine(&self) -> u32 {
+        self.machine
+    }
+
+    /// Current membership view (updated by `Reconfigure` decisions).
+    pub fn view(&self) -> &MembershipView {
+        &self.view
+    }
+
+    /// The ranks this process trains under the current view.
+    pub fn my_ranks(&self) -> Vec<usize> {
+        self.view.ranks_on(self.machine)
+    }
+
+    fn send(&mut self, msg: &CoordMsg) -> Result<u64, RpcError> {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.ep.send(
+            self.server,
+            Port::Control,
+            tag,
+            encode_coord_msg(msg),
+        )?;
+        Ok(tag)
+    }
+
+    /// Wait until every tag in `tags` has been answered; returns the
+    /// last reply (barrier rounds answer all arrivals identically).
+    /// Stale frames (earlier rounds) are discarded by tag.
+    fn await_reply(
+        &self,
+        tags: &[u64],
+        timeout: Duration,
+    ) -> Result<CoordMsg, RpcError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut waiting: BTreeSet<u64> = tags.iter().copied().collect();
+        let mut last = None;
+        while !waiting.is_empty() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(RpcError::ConnectionLost {
+                    peer: self.server,
+                    detail: format!(
+                        "no rendezvous reply within {timeout:?}"
+                    ),
+                });
+            }
+            let msg = self
+                .ep
+                .recv_kind(PortKind::Control, Some(deadline - now));
+            let Some(msg) = msg else {
+                if self.ep.is_closed() {
+                    return Err(RpcError::ConnectionLost {
+                        peer: self.server,
+                        detail: "transport shut down".into(),
+                    });
+                }
+                continue;
+            };
+            if !waiting.remove(&msg.tag) {
+                continue; // stale reply from an earlier round
+            }
+            match decode_coord_msg(&msg.payload) {
+                Ok(m) => last = Some(m),
+                Err(e) => {
+                    return Err(RpcError::ConnectionLost {
+                        peer: self.server,
+                        detail: format!("undecodable reply: {e}"),
+                    })
+                }
+            }
+        }
+        last.ok_or_else(|| RpcError::ConnectionLost {
+            peer: self.server,
+            detail: "no tags awaited".into(),
+        })
+    }
+
+    /// Epoch-boundary barrier for every locally hosted rank at once.
+    /// Sends all arrivals before blocking — two local ranks must never
+    /// deadlock waiting on each other's un-sent arrival — then waits for
+    /// the round's decision. A `Reconfigure` updates the local view.
+    pub fn barrier_all(
+        &mut self,
+        ranks: &[usize],
+    ) -> Result<Decision, RpcError> {
+        let mut tags = Vec::with_capacity(ranks.len());
+        for &r in ranks {
+            tags.push(
+                self.send(&CoordMsg::BarrierArrive { rank: r as u32 })?,
+            );
+        }
+        let reply = self.await_reply(&tags, self.decision_timeout)?;
+        match reply {
+            CoordMsg::DecisionMsg(d) => {
+                if let Decision::Reconfigure(v) = &d {
+                    self.view = v.clone();
+                }
+                Ok(d)
+            }
+            other => Err(RpcError::ConnectionLost {
+                peer: self.server,
+                detail: format!("expected DecisionMsg, got {other:?}"),
+            }),
+        }
+    }
+
+    /// Single-rank barrier (the `Coordinator::barrier` shape).
+    pub fn barrier(&mut self, rank: usize) -> Result<Decision, RpcError> {
+        self.barrier_all(&[rank])
+    }
+
+    /// Record one finished step for `rank` (liveness + step timing).
+    /// Fire-and-forget: a lost heartbeat only risks a reap, which the
+    /// next heartbeat heals.
+    pub fn heartbeat(
+        &mut self,
+        rank: usize,
+        step_secs: f64,
+    ) -> Result<(), RpcError> {
+        self.send(&CoordMsg::Heartbeat {
+            rank: rank as u32,
+            secs: step_secs,
+        })?;
+        Ok(())
+    }
+
+    /// Report `rank` unrecoverably failed (fire-and-forget).
+    pub fn report_failure(&mut self, rank: usize) -> Result<(), RpcError> {
+        self.send(&CoordMsg::FailureReport { rank: rank as u32 })?;
+        Ok(())
+    }
+
+    /// Clean goodbye: the server exits once every process said this.
+    pub fn shutdown(&mut self) -> Result<(), RpcError> {
+        let machine = self.machine;
+        let tag = self.send(&CoordMsg::Shutdown { machine })?;
+        match self.await_reply(&[tag], Duration::from_secs(30))? {
+            CoordMsg::ShutdownAck => Ok(()),
+            other => Err(RpcError::ConnectionLost {
+                peer: self.server,
+                detail: format!("expected ShutdownAck, got {other:?}"),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ResizeEvent;
+    use crate::net::tcp::{free_loopback_ports, tcp_transport, TcpConfig};
+    use crate::net::{CostModel, Transport};
+
+    const JOIN_T: Duration = Duration::from_secs(20);
+
+    /// Two machines × 1 rank through join → barrier → planned resize →
+    /// shutdown, over any pair of client endpoints + a server endpoint.
+    fn run_protocol(
+        eps: Vec<Endpoint>,
+        server_ep: Endpoint,
+        server_id: u32,
+    ) -> (u64, Vec<u32>) {
+        let cfg = CoordinatorConfig {
+            planned: vec![ResizeEvent { boundary: 2, world: 1 }],
+            ..Default::default()
+        };
+        let server = RendezvousServer::new(
+            server_ep,
+            MembershipView::initial(2, 1),
+            cfg,
+            2,
+        );
+        let co = server.coordinator();
+        let sh = std::thread::spawn(move || server.run());
+        let hs: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let mut c = RendezvousClient::join(
+                        ep, server_id, None, JOIN_T,
+                    )
+                    .expect("join");
+                    let m = c.machine();
+                    let ranks = c.my_ranks();
+                    assert_eq!(ranks.len(), 1);
+                    c.heartbeat(ranks[0], 0.001).unwrap();
+                    // round 1: everyone healthy
+                    let d1 = c.barrier_all(&ranks).unwrap();
+                    assert_eq!(d1, Decision::Continue);
+                    // round 2: planned shrink to world 1
+                    let d2 = c.barrier_all(&ranks).unwrap();
+                    match d2 {
+                        Decision::Reconfigure(v) => {
+                            assert_eq!(v.machines, vec![0]);
+                            assert_eq!(v.world_size(), 1);
+                            assert_eq!(c.view(), &v);
+                        }
+                        d => panic!("expected resize, got {d:?}"),
+                    }
+                    c.shutdown().unwrap();
+                    m
+                })
+            })
+            .collect();
+        let machines: Vec<u32> =
+            hs.into_iter().map(|h| h.join().unwrap()).collect();
+        let boundaries = sh.join().unwrap();
+        assert_eq!(boundaries, co.boundaries());
+        (boundaries, machines)
+    }
+
+    #[test]
+    fn rendezvous_over_in_process_transport() {
+        // endpoints 0,1 = clients; 2 = server
+        let t = Transport::new(3, CostModel::default());
+        let eps = vec![t.endpoint(0), t.endpoint(1)];
+        let (boundaries, mut machines) = run_protocol(eps, t.endpoint(2), 2);
+        assert_eq!(boundaries, 2);
+        machines.sort_unstable();
+        assert_eq!(machines, vec![0, 1], "join-order id assignment");
+    }
+
+    #[test]
+    fn rendezvous_over_tcp_loopback() {
+        // two real processes' worth of sockets in one test: proc 0 hosts
+        // client 0 + the server (endpoint 2), proc 1 hosts client 1
+        let ports = free_loopback_ports(2).unwrap();
+        let addrs: Vec<String> = ports
+            .iter()
+            .map(|p| format!("127.0.0.1:{p}"))
+            .collect();
+        let mk = |my_proc: usize| {
+            let mut cfg = TcpConfig::localhost(my_proc, 2, 0);
+            cfg.addrs = addrs.clone();
+            cfg.endpoint_proc = vec![0, 1, 0];
+            cfg.machine_of = vec![0, 1, 0];
+            tcp_transport(cfg, Arc::new(CostModel::default())).unwrap()
+        };
+        let t0 = mk(0);
+        let t1 = mk(1);
+        let eps = vec![t0.endpoint(0), t1.endpoint(1)];
+        let (boundaries, mut machines) = run_protocol(eps, t0.endpoint(2), 2);
+        assert_eq!(boundaries, 2);
+        machines.sort_unstable();
+        assert_eq!(machines, vec![0, 1]);
+    }
+
+    #[test]
+    fn preferred_ids_are_honored_and_collisions_fall_back() {
+        let t = Transport::new(3, CostModel::default());
+        let server = RendezvousServer::new(
+            t.endpoint(2),
+            MembershipView::initial(2, 1),
+            CoordinatorConfig::default(),
+            2,
+        );
+        let sh = std::thread::spawn(move || server.run());
+        let mut c1 = RendezvousClient::join(
+            t.endpoint(0),
+            2,
+            Some(1),
+            JOIN_T,
+        )
+        .unwrap();
+        assert_eq!(c1.machine(), 1, "preferred id granted");
+        // second client asks for the taken id: falls back to join order
+        let mut c0 = RendezvousClient::join(
+            t.endpoint(1),
+            2,
+            Some(1),
+            JOIN_T,
+        )
+        .unwrap();
+        assert_eq!(c0.machine(), 0, "collision falls back to next free");
+        c0.shutdown().unwrap();
+        c1.shutdown().unwrap();
+        sh.join().unwrap();
+    }
+
+    #[test]
+    fn server_reaps_a_vanished_process_and_releases_the_barrier() {
+        let t = Transport::new(3, CostModel::default());
+        let server = RendezvousServer::new(
+            t.endpoint(2),
+            MembershipView::initial(2, 1),
+            CoordinatorConfig {
+                heartbeat_timeout: Duration::from_millis(60),
+                ..Default::default()
+            },
+            1, // only client 0 is expected to say goodbye
+        );
+        let sh = std::thread::spawn(move || server.run());
+        let mut c0 =
+            RendezvousClient::join(t.endpoint(0), 2, Some(0), JOIN_T)
+                .unwrap();
+        // machine 1 joined the view but its process never arrives: the
+        // poll tick reaps rank 1 and answers the barrier with a shrink
+        let d = c0.barrier(0).unwrap();
+        match d {
+            Decision::Reconfigure(v) => {
+                assert_eq!(v.machines, vec![0]);
+            }
+            d => panic!("expected reap-shrink, got {d:?}"),
+        }
+        c0.shutdown().unwrap();
+        sh.join().unwrap();
+    }
+}

@@ -280,8 +280,11 @@ impl KvCluster {
     /// Meter (and, under emulation, sleep for) one remote owner's pull
     /// round-trip of `n_rows` rows of width `dim`.
     fn meter_pull(&self, src: u32, owner: u32, n_rows: usize, dim: usize) {
-        let req_bytes = 16 + n_rows as u64 * 4;
-        let resp_bytes = 16 + (n_rows * dim) as u64 * 4;
+        // sizes derive from the real framed encoding (net::payload,
+        // regression-tested against the codec); name_len = 0 models an
+        // interned tensor id, constant per request
+        let req_bytes = crate::net::payload::kv_pull_req_bytes(0, n_rows);
+        let resp_bytes = crate::net::payload::kv_pull_resp_bytes(n_rows, dim);
         self.cost.on_network(src, owner, req_bytes);
         self.cost.on_network(owner, src, resp_bytes);
         if self.emulate_network_time {
@@ -1016,7 +1019,11 @@ impl KvClient {
                         break;
                     }
                 }
-                let bytes = 16 + (locals.len() * (1 + dim)) as u64 * 4;
+                let bytes = crate::net::payload::kv_push_bytes(
+                    0, // interned tensor id, as in meter_pull
+                    locals.len(),
+                    dim,
+                );
                 self.cluster.cost.on_network(
                     self.machine,
                     owner as u32,

@@ -1,24 +1,34 @@
-//! Simulated cluster interconnect.
+//! Cluster interconnect: pluggable transports under one RPC surface.
 //!
 //! All cross-machine traffic in the system flows through a [`Transport`]:
-//! ordered per-destination channels plus a [`CostModel`] that meters every
-//! byte. The protocol logic above (KVStore pulls, sampler RPCs, gradient
-//! all-reduce) is identical to a real deployment; only the wire is an
-//! in-process channel. Benches report both wall-clock and modeled network
-//! time (paper testbed: 100 Gbps + PCIe 3.0 — DESIGN.md §2).
+//! ordered per-destination queues plus a [`CostModel`] that meters every
+//! byte. Two backends implement the wire (docs/DESIGN.md §11):
+//!
+//! * **in-process** ([`Transport::new`]) — the simulated fabric used by
+//!   tests and single-process runs; only the wire is an in-memory queue,
+//!   the protocol logic above is identical to a real deployment, and
+//!   benches report modeled network time (paper testbed: 100 Gbps +
+//!   PCIe 3.0 — DESIGN.md §2).
+//! * **TCP** ([`tcp`]) — real sockets between OS processes, length-framed
+//!   and versioned ([`wire`]), with every RPC payload explicitly
+//!   serialized ([`payload`]) and request/response loops in [`rpc`].
 
 pub mod model;
+pub mod payload;
+pub mod rpc;
+pub mod tcp;
 pub mod transport;
+pub mod wire;
 
 pub use model::CostModel;
-pub use transport::{Endpoint, Message, Transport};
+pub use transport::{Endpoint, Message, Port, PortKind, Transport};
 
 /// Typed error for every RPC boundary in the system (KVStore pulls,
-/// sampler requests, pipeline fan-out). Injected faults
-/// ([`crate::ft::FaultPlan`]) and lost worker threads surface as values
-/// of this type through `Result` instead of poisoning threads with
-/// panics, so the pipeline can drain cleanly and the trainer can decide
-/// to resume from a checkpoint (docs/DESIGN.md §8).
+/// sampler requests, pipeline fan-out, socket transport). Injected faults
+/// ([`crate::ft::FaultPlan`]), lost worker threads, and real connection
+/// failures surface as values of this type through `Result` instead of
+/// poisoning threads with panics, so the pipeline can drain cleanly and
+/// the trainer can decide to resume from a checkpoint (docs/DESIGN.md §8).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RpcError {
     /// A request named a tensor the addressed server never registered.
@@ -27,6 +37,11 @@ pub enum RpcError {
     ServerDown { machine: u32, role: &'static str },
     /// A fan-out / pipeline worker thread died before replying.
     WorkerLost(&'static str),
+    /// A transport-level failure: TCP connect/read/write error, a recv
+    /// timeout waiting for a response, or a frame the peer's wire
+    /// version makes undecodable. `peer` is the endpoint id the failure
+    /// was observed against.
+    ConnectionLost { peer: u32, detail: String },
 }
 
 impl std::fmt::Display for RpcError {
@@ -43,6 +58,9 @@ impl std::fmt::Display for RpcError {
             ),
             RpcError::WorkerLost(what) => {
                 write!(f, "{what} worker thread lost")
+            }
+            RpcError::ConnectionLost { peer, detail } => {
+                write!(f, "connection to endpoint {peer} lost: {detail}")
             }
         }
     }

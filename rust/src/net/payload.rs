@@ -1,0 +1,627 @@
+//! Explicit serialization for every RPC payload that crosses the wire.
+//!
+//! The in-process backend moves these values as in-memory structs and
+//! only *meters* their size; the TCP backend actually encodes them. Both
+//! views are kept consistent by construction: the `*_bytes` size helpers
+//! used by the emulated [`CostModel`](crate::net::CostModel) metering are
+//! defined next to each codec and regression-tested against the real
+//! encoded length (frame header included), so a modeled byte count and a
+//! socket byte count for the same RPC agree.
+//!
+//! Encoding is the little-endian, length-prefixed scheme of
+//! [`wire::ByteWriter`]/[`wire::ByteReader`] — no serde in the
+//! dependency set, and the format is pinned by [`wire::WIRE_VERSION`].
+
+use super::wire::{self, ByteReader, ByteWriter, WireError};
+use super::RpcError;
+use crate::coordinator::{Decision, MembershipView};
+use crate::sampler::service::SampledNbrs;
+
+// ---------------------------------------------------------------------
+// RpcError (carried inside error responses)
+// ---------------------------------------------------------------------
+
+/// Map a decoded role string back onto the `&'static str` vocabulary the
+/// typed error carries in-process. Unknown roles (a newer peer) collapse
+/// to `"remote"` rather than failing the decode.
+fn intern_role(s: &str) -> &'static str {
+    match s {
+        "kv" => "kv",
+        "sampler" => "sampler",
+        "sampling pipeline" => "sampling pipeline",
+        "sampler fan-out" => "sampler fan-out",
+        "kv fan-out" => "kv fan-out",
+        _ => "remote",
+    }
+}
+
+pub fn encode_rpc_error(w: &mut ByteWriter, e: &RpcError) {
+    match e {
+        RpcError::UnknownTensor { name, machine } => {
+            w.u8(0);
+            w.str(name);
+            w.u32(*machine);
+        }
+        RpcError::ServerDown { machine, role } => {
+            w.u8(1);
+            w.u32(*machine);
+            w.str(role);
+        }
+        RpcError::WorkerLost(what) => {
+            w.u8(2);
+            w.str(what);
+        }
+        RpcError::ConnectionLost { peer, detail } => {
+            w.u8(3);
+            w.u32(*peer);
+            w.str(detail);
+        }
+    }
+}
+
+pub fn decode_rpc_error(r: &mut ByteReader) -> Result<RpcError, WireError> {
+    Ok(match r.u8()? {
+        0 => RpcError::UnknownTensor { name: r.str()?, machine: r.u32()? },
+        1 => RpcError::ServerDown {
+            machine: r.u32()?,
+            role: intern_role(&r.str()?),
+        },
+        2 => RpcError::WorkerLost(intern_role(&r.str()?)),
+        3 => RpcError::ConnectionLost { peer: r.u32()?, detail: r.str()? },
+        k => return Err(WireError::BadPortKind(k)),
+    })
+}
+
+// ---------------------------------------------------------------------
+// KV store protocol
+// ---------------------------------------------------------------------
+
+/// Requests served by [`crate::net::rpc::serve_kv`]. `locals` are
+/// owner-local row indices (the caller already ran the partition policy,
+/// same as the in-process pull path).
+#[derive(Clone, Debug, PartialEq)]
+pub enum KvRequest {
+    /// Batched feature pull from one tensor.
+    Pull { name: String, locals: Vec<u32> },
+    /// Typed pull: one node type's table of a typed tensor family
+    /// (`name` is the per-ntype table, `ntype` rides along so the
+    /// response can be scattered without re-deriving types).
+    PullTyped { name: String, ntype: u8, locals: Vec<u32> },
+    /// Row-sparse gradient push (`grads.len() == locals.len() * dim`).
+    Push { name: String, locals: Vec<u32>, grads: Vec<f32>, lr: f32 },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum KvResponse {
+    /// Pull result: `data.len() == n_rows * dim`.
+    Rows { dim: u32, data: Vec<f32> },
+    /// Typed pull result.
+    TypedRows { ntype: u8, dim: u32, data: Vec<f32> },
+    /// Push acknowledged.
+    Ok,
+    /// Typed failure (unknown tensor, injected outage) — errors stay
+    /// values across the wire exactly as they do in-process (§8).
+    Err(RpcError),
+}
+
+pub fn encode_kv_request(q: &KvRequest) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match q {
+        KvRequest::Pull { name, locals } => {
+            w.u8(0);
+            w.str(name);
+            w.u32s(locals);
+        }
+        KvRequest::PullTyped { name, ntype, locals } => {
+            w.u8(1);
+            w.str(name);
+            w.u8(*ntype);
+            w.u32s(locals);
+        }
+        KvRequest::Push { name, locals, grads, lr } => {
+            w.u8(2);
+            w.str(name);
+            w.u32s(locals);
+            w.f32s(grads);
+            w.f32(*lr);
+        }
+    }
+    w.finish()
+}
+
+pub fn decode_kv_request(buf: &[u8]) -> Result<KvRequest, WireError> {
+    let mut r = ByteReader::new(buf);
+    let q = match r.u8()? {
+        0 => KvRequest::Pull { name: r.str()?, locals: r.u32s()? },
+        1 => KvRequest::PullTyped {
+            name: r.str()?,
+            ntype: r.u8()?,
+            locals: r.u32s()?,
+        },
+        2 => KvRequest::Push {
+            name: r.str()?,
+            locals: r.u32s()?,
+            grads: r.f32s()?,
+            lr: r.f32()?,
+        },
+        k => return Err(WireError::BadPortKind(k)),
+    };
+    r.expect_end()?;
+    Ok(q)
+}
+
+pub fn encode_kv_response(p: &KvResponse) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match p {
+        KvResponse::Rows { dim, data } => {
+            w.u8(0);
+            w.u32(*dim);
+            w.f32s(data);
+        }
+        KvResponse::TypedRows { ntype, dim, data } => {
+            w.u8(1);
+            w.u8(*ntype);
+            w.u32(*dim);
+            w.f32s(data);
+        }
+        KvResponse::Ok => w.u8(2),
+        KvResponse::Err(e) => {
+            w.u8(3);
+            encode_rpc_error(&mut w, e);
+        }
+    }
+    w.finish()
+}
+
+pub fn decode_kv_response(buf: &[u8]) -> Result<KvResponse, WireError> {
+    let mut r = ByteReader::new(buf);
+    let p = match r.u8()? {
+        0 => KvResponse::Rows { dim: r.u32()?, data: r.f32s()? },
+        1 => KvResponse::TypedRows {
+            ntype: r.u8()?,
+            dim: r.u32()?,
+            data: r.f32s()?,
+        },
+        2 => KvResponse::Ok,
+        3 => KvResponse::Err(decode_rpc_error(&mut r)?),
+        k => return Err(WireError::BadPortKind(k)),
+    };
+    r.expect_end()?;
+    Ok(p)
+}
+
+/// Framed size of a `Pull` request. The emulated metering passes
+/// `name_len = 0` (modeling a name-interned protocol where the tensor id
+/// is amortized); the codec tests pass the real name length and assert
+/// exact agreement with `encode_kv_request`.
+pub fn kv_pull_req_bytes(name_len: usize, n_rows: usize) -> u64 {
+    (wire::FRAME_HEADER_BYTES + 1 + 2 + name_len + 4 + 4 * n_rows) as u64
+}
+
+/// Framed size of a `Rows` response.
+pub fn kv_pull_resp_bytes(n_rows: usize, dim: usize) -> u64 {
+    (wire::FRAME_HEADER_BYTES + 1 + 4 + 4 + 4 * n_rows * dim) as u64
+}
+
+/// Framed size of a `Push` request.
+pub fn kv_push_bytes(name_len: usize, n_rows: usize, dim: usize) -> u64 {
+    (wire::FRAME_HEADER_BYTES
+        + 1
+        + 2
+        + name_len
+        + 4
+        + 4 * n_rows
+        + 4
+        + 4 * n_rows * dim
+        + 4) as u64
+}
+
+// ---------------------------------------------------------------------
+// Sampler protocol
+// ---------------------------------------------------------------------
+
+/// One frontier's sampling request against the owner of its seeds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SamplerRequest {
+    pub seeds: Vec<u32>,
+    pub fanouts: Vec<u32>,
+    /// Seed for the server-side `Rng` — sampling stays a pure function
+    /// of `(seed, epoch, batch)` across process boundaries.
+    pub rng_seed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SamplerResponse {
+    /// Per-seed sampled neighborhoods (the "blocks" the pipeline builds
+    /// CSR segments from).
+    Blocks(Vec<SampledNbrs>),
+    Err(RpcError),
+}
+
+pub fn encode_sampler_request(q: &SamplerRequest) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(20 + 4 * q.seeds.len());
+    w.u32s(&q.seeds);
+    w.u32s(&q.fanouts);
+    w.u64(q.rng_seed);
+    w.finish()
+}
+
+pub fn decode_sampler_request(
+    buf: &[u8],
+) -> Result<SamplerRequest, WireError> {
+    let mut r = ByteReader::new(buf);
+    let q = SamplerRequest {
+        seeds: r.u32s()?,
+        fanouts: r.u32s()?,
+        rng_seed: r.u64()?,
+    };
+    r.expect_end()?;
+    Ok(q)
+}
+
+pub fn encode_sampler_response(p: &SamplerResponse) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match p {
+        SamplerResponse::Blocks(blocks) => {
+            w.u8(0);
+            // columnar: offsets + flat neighbor/rel arrays (4B+1B per
+            // edge, matching the modeled 5B/edge wire cost)
+            w.u32(blocks.len() as u32);
+            let mut off = 0u32;
+            w.u32(off);
+            for b in blocks {
+                off += b.nbrs.len() as u32;
+                w.u32(off);
+            }
+            for b in blocks {
+                for &n in &b.nbrs {
+                    w.u32(n);
+                }
+            }
+            for b in blocks {
+                debug_assert_eq!(b.rels.len(), b.nbrs.len());
+                for &rel in &b.rels {
+                    w.u8(rel);
+                }
+            }
+        }
+        SamplerResponse::Err(e) => {
+            w.u8(1);
+            encode_rpc_error(&mut w, e);
+        }
+    }
+    w.finish()
+}
+
+pub fn decode_sampler_response(
+    buf: &[u8],
+) -> Result<SamplerResponse, WireError> {
+    let mut r = ByteReader::new(buf);
+    match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            let mut offsets = Vec::with_capacity(n + 1);
+            for _ in 0..=n {
+                offsets.push(r.u32()? as usize);
+            }
+            let total = *offsets.last().unwrap_or(&0);
+            let mut nbrs = Vec::with_capacity(total);
+            for _ in 0..total {
+                nbrs.push(r.u32()?);
+            }
+            let mut rels = Vec::with_capacity(total);
+            for _ in 0..total {
+                rels.push(r.u8()?);
+            }
+            r.expect_end()?;
+            let blocks = (0..n)
+                .map(|i| SampledNbrs {
+                    nbrs: nbrs[offsets[i]..offsets[i + 1]].to_vec(),
+                    rels: rels[offsets[i]..offsets[i + 1]].to_vec(),
+                })
+                .collect();
+            Ok(SamplerResponse::Blocks(blocks))
+        }
+        1 => {
+            let e = decode_rpc_error(&mut r)?;
+            r.expect_end()?;
+            Ok(SamplerResponse::Err(e))
+        }
+        k => Err(WireError::BadPortKind(k)),
+    }
+}
+
+/// Framed size of a sampling request (`seeds` + `fanouts` + rng seed).
+pub fn sampler_req_bytes(n_seeds: usize, n_fanouts: usize) -> u64 {
+    (wire::FRAME_HEADER_BYTES + 4 + 4 * n_seeds + 4 + 4 * n_fanouts + 8)
+        as u64
+}
+
+/// Framed size of a blocks response: offsets column + 4B neighbor + 1B
+/// relation per sampled edge.
+pub fn sampler_resp_bytes(n_seeds: usize, n_edges: usize) -> u64 {
+    (wire::FRAME_HEADER_BYTES + 1 + 4 + 4 * (n_seeds + 1) + 5 * n_edges)
+        as u64
+}
+
+// ---------------------------------------------------------------------
+// Coordinator / rendezvous protocol
+// ---------------------------------------------------------------------
+
+/// Everything the rendezvous service speaks over `Port::Control`
+/// (docs/DESIGN.md §11). Requests flow client → server; `Welcome`,
+/// `DecisionMsg` and `ShutdownAck` flow back.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CoordMsg {
+    /// Join: ask for a machine id (`preferred == u32::MAX` lets the
+    /// server assign the next free id in join order).
+    Hello { preferred: u32 },
+    /// Join reply: the assigned machine id + the initial view.
+    Welcome { machine: u32, view: MembershipView },
+    /// Rank arrived at the epoch-boundary barrier.
+    BarrierArrive { rank: u32 },
+    /// Barrier release: Continue, or Reconfigure carrying the resized
+    /// membership view.
+    DecisionMsg(Decision),
+    /// Liveness + step-timing signal (fire-and-forget).
+    Heartbeat { rank: u32, secs: f64 },
+    /// Rank is unrecoverably broken; demote its machine at the boundary.
+    FailureReport { rank: u32 },
+    /// Clean goodbye from one machine process.
+    Shutdown { machine: u32 },
+    ShutdownAck,
+}
+
+pub fn encode_view(w: &mut ByteWriter, v: &MembershipView) {
+    w.u64(v.epoch);
+    w.u32s(&v.machines);
+    w.u32(v.per_machine as u32);
+}
+
+pub fn decode_view(r: &mut ByteReader) -> Result<MembershipView, WireError> {
+    Ok(MembershipView {
+        epoch: r.u64()?,
+        machines: r.u32s()?,
+        per_machine: r.u32()? as usize,
+    })
+}
+
+pub fn encode_coord_msg(m: &CoordMsg) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match m {
+        CoordMsg::Hello { preferred } => {
+            w.u8(0);
+            w.u32(*preferred);
+        }
+        CoordMsg::Welcome { machine, view } => {
+            w.u8(1);
+            w.u32(*machine);
+            encode_view(&mut w, view);
+        }
+        CoordMsg::BarrierArrive { rank } => {
+            w.u8(2);
+            w.u32(*rank);
+        }
+        CoordMsg::DecisionMsg(Decision::Continue) => w.u8(3),
+        CoordMsg::DecisionMsg(Decision::Reconfigure(view)) => {
+            w.u8(4);
+            encode_view(&mut w, view);
+        }
+        CoordMsg::Heartbeat { rank, secs } => {
+            w.u8(5);
+            w.u32(*rank);
+            w.f64(*secs);
+        }
+        CoordMsg::FailureReport { rank } => {
+            w.u8(6);
+            w.u32(*rank);
+        }
+        CoordMsg::Shutdown { machine } => {
+            w.u8(7);
+            w.u32(*machine);
+        }
+        CoordMsg::ShutdownAck => w.u8(8),
+    }
+    w.finish()
+}
+
+pub fn decode_coord_msg(buf: &[u8]) -> Result<CoordMsg, WireError> {
+    let mut r = ByteReader::new(buf);
+    let m = match r.u8()? {
+        0 => CoordMsg::Hello { preferred: r.u32()? },
+        1 => CoordMsg::Welcome {
+            machine: r.u32()?,
+            view: decode_view(&mut r)?,
+        },
+        2 => CoordMsg::BarrierArrive { rank: r.u32()? },
+        3 => CoordMsg::DecisionMsg(Decision::Continue),
+        4 => CoordMsg::DecisionMsg(Decision::Reconfigure(decode_view(
+            &mut r,
+        )?)),
+        5 => CoordMsg::Heartbeat { rank: r.u32()?, secs: r.f64()? },
+        6 => CoordMsg::FailureReport { rank: r.u32()? },
+        7 => CoordMsg::Shutdown { machine: r.u32()? },
+        8 => CoordMsg::ShutdownAck,
+        k => return Err(WireError::BadPortKind(k)),
+    };
+    r.expect_end()?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::FRAME_HEADER_BYTES;
+
+    fn frame_len(payload: &[u8]) -> u64 {
+        (FRAME_HEADER_BYTES + payload.len()) as u64
+    }
+
+    #[test]
+    fn kv_pull_request_and_response_round_trip() {
+        let q = KvRequest::Pull {
+            name: "feat".into(),
+            locals: vec![0, 7, 31, 2],
+        };
+        let buf = encode_kv_request(&q);
+        assert_eq!(decode_kv_request(&buf).unwrap(), q);
+        assert_eq!(kv_pull_req_bytes("feat".len(), 4), frame_len(&buf));
+        let p = KvResponse::Rows {
+            dim: 3,
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let buf = encode_kv_response(&p);
+        assert_eq!(decode_kv_response(&buf).unwrap(), p);
+        assert_eq!(kv_pull_resp_bytes(2, 3), frame_len(&buf));
+    }
+
+    #[test]
+    fn kv_pull_typed_round_trips() {
+        let q = KvRequest::PullTyped {
+            name: "feat/paper".into(),
+            ntype: 1,
+            locals: vec![5, 6],
+        };
+        let buf = encode_kv_request(&q);
+        assert_eq!(decode_kv_request(&buf).unwrap(), q);
+        let p = KvResponse::TypedRows {
+            ntype: 1,
+            dim: 2,
+            data: vec![0.5, -0.5, 1.5, -1.5],
+        };
+        let buf = encode_kv_response(&p);
+        assert_eq!(decode_kv_response(&buf).unwrap(), p);
+    }
+
+    #[test]
+    fn kv_push_round_trips_and_sizes_agree() {
+        let q = KvRequest::Push {
+            name: "emb".into(),
+            locals: vec![1, 2, 3],
+            grads: vec![0.1; 6],
+            lr: 0.05,
+        };
+        let buf = encode_kv_request(&q);
+        assert_eq!(decode_kv_request(&buf).unwrap(), q);
+        assert_eq!(kv_push_bytes("emb".len(), 3, 2), frame_len(&buf));
+        let ok = encode_kv_response(&KvResponse::Ok);
+        assert_eq!(decode_kv_response(&ok).unwrap(), KvResponse::Ok);
+    }
+
+    #[test]
+    fn kv_error_responses_round_trip_typed() {
+        for e in [
+            RpcError::UnknownTensor { name: "nope".into(), machine: 2 },
+            RpcError::ServerDown { machine: 1, role: "kv" },
+            RpcError::ServerDown { machine: 0, role: "sampler" },
+            RpcError::WorkerLost("sampling pipeline"),
+            RpcError::ConnectionLost {
+                peer: 3,
+                detail: "read failed: eof".into(),
+            },
+        ] {
+            let buf = encode_kv_response(&KvResponse::Err(e.clone()));
+            assert_eq!(
+                decode_kv_response(&buf).unwrap(),
+                KvResponse::Err(e)
+            );
+        }
+    }
+
+    #[test]
+    fn sampler_frontier_request_round_trips() {
+        let q = SamplerRequest {
+            seeds: vec![10, 20, 30],
+            fanouts: vec![5, 2],
+            rng_seed: 0xfeed_f00d,
+        };
+        let buf = encode_sampler_request(&q);
+        assert_eq!(decode_sampler_request(&buf).unwrap(), q);
+        assert_eq!(sampler_req_bytes(3, 2), frame_len(&buf));
+    }
+
+    #[test]
+    fn sampler_blocks_response_round_trips() {
+        let blocks = vec![
+            SampledNbrs { nbrs: vec![1, 2, 3], rels: vec![0, 1, 0] },
+            SampledNbrs { nbrs: vec![], rels: vec![] },
+            SampledNbrs { nbrs: vec![9], rels: vec![2] },
+        ];
+        let p = SamplerResponse::Blocks(blocks.clone());
+        let buf = encode_sampler_response(&p);
+        match decode_sampler_response(&buf).unwrap() {
+            SamplerResponse::Blocks(got) => {
+                assert_eq!(got.len(), blocks.len());
+                for (g, want) in got.iter().zip(&blocks) {
+                    assert_eq!(g.nbrs, want.nbrs);
+                    assert_eq!(g.rels, want.rels);
+                }
+            }
+            other => panic!("expected blocks, got {other:?}"),
+        }
+        assert_eq!(sampler_resp_bytes(3, 4), frame_len(&buf));
+        let err = SamplerResponse::Err(RpcError::ServerDown {
+            machine: 1,
+            role: "sampler",
+        });
+        let buf = encode_sampler_response(&err);
+        assert_eq!(decode_sampler_response(&buf).unwrap(), err);
+    }
+
+    #[test]
+    fn coordinator_messages_round_trip() {
+        let view = MembershipView {
+            epoch: 3,
+            machines: vec![0, 2, 5],
+            per_machine: 2,
+        };
+        let msgs = [
+            CoordMsg::Hello { preferred: u32::MAX },
+            CoordMsg::Hello { preferred: 1 },
+            CoordMsg::Welcome { machine: 2, view: view.clone() },
+            CoordMsg::BarrierArrive { rank: 4 },
+            CoordMsg::DecisionMsg(Decision::Continue),
+            CoordMsg::Heartbeat { rank: 3, secs: 0.0125 },
+            CoordMsg::FailureReport { rank: 1 },
+            CoordMsg::Shutdown { machine: 2 },
+            CoordMsg::ShutdownAck,
+        ];
+        for m in msgs {
+            let buf = encode_coord_msg(&m);
+            assert_eq!(decode_coord_msg(&buf).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn resize_decision_round_trips_the_new_view() {
+        // a Reconfigure decision *is* the resize message: it carries the
+        // full post-resize membership view
+        let view = MembershipView {
+            epoch: 7,
+            machines: vec![0, 1, 2, 3],
+            per_machine: 4,
+        };
+        let m = CoordMsg::DecisionMsg(Decision::Reconfigure(view.clone()));
+        let buf = encode_coord_msg(&m);
+        match decode_coord_msg(&buf).unwrap() {
+            CoordMsg::DecisionMsg(Decision::Reconfigure(got)) => {
+                assert_eq!(got, view);
+                assert_eq!(got.world_size(), 16);
+            }
+            other => panic!("expected reconfigure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_garbage_payloads_fail_typed() {
+        let q = KvRequest::Pull { name: "feat".into(), locals: vec![1] };
+        let buf = encode_kv_request(&q);
+        assert!(decode_kv_request(&buf[..buf.len() - 2]).is_err());
+        assert!(decode_kv_request(&[9, 0, 0]).is_err());
+        assert!(decode_coord_msg(&[42]).is_err());
+        // trailing garbage is rejected, not silently ignored
+        let mut extra = encode_coord_msg(&CoordMsg::ShutdownAck);
+        extra.push(0);
+        assert!(decode_coord_msg(&extra).is_err());
+    }
+}

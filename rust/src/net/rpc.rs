@@ -1,0 +1,514 @@
+//! Request/response RPC over any [`Transport`] backend: a tag-matched
+//! client plus serve loops wrapping the existing [`KvServer`] and
+//! [`SamplerServer`] (docs/DESIGN.md §11).
+//!
+//! The in-process hot path keeps calling servers through shared memory
+//! with modeled wire costs — that is the simulated fabric's whole point.
+//! This module is the *real-wire* path: every request and response is
+//! explicitly serialized ([`payload`]) and the equivalence tests below
+//! prove a pull or a sampling round over RPC returns exactly what the
+//! direct call returns, over both the in-process and TCP backends.
+//!
+//! Failure policy mirrors `ft` (§8): server-side errors travel as typed
+//! [`RpcError`] values inside responses; transport failures and recv
+//! timeouts become [`RpcError::ConnectionLost`] after a bounded
+//! retry/backoff loop — never a panic, never an `unwrap` on a socket.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::payload::{
+    decode_kv_request, decode_kv_response, decode_sampler_request,
+    decode_sampler_response, encode_kv_request, encode_kv_response,
+    encode_sampler_request, encode_sampler_response, KvRequest,
+    KvResponse, SamplerRequest, SamplerResponse,
+};
+use super::{Endpoint, Port, RpcError};
+use crate::kvstore::KvServer;
+use crate::sampler::service::SampledNbrs;
+use crate::sampler::SamplerServer;
+use crate::util::Rng;
+
+/// How often serve loops wake to check their shutdown flag.
+const SERVE_TICK: Duration = Duration::from_millis(100);
+
+/// Tag-matched request/response client over one [`Endpoint`]. Requests
+/// carry a fresh tag; responses echo it, so stale frames from timed-out
+/// attempts are discarded instead of mis-delivered.
+pub struct RpcClient {
+    ep: Endpoint,
+    next_tag: u64,
+    /// Per-attempt response wait before the attempt is abandoned.
+    pub timeout: Duration,
+    /// Resend attempts after the first (bounded retry, as in `ft`).
+    pub retries: u32,
+    /// Sleep between attempts.
+    pub backoff: Duration,
+}
+
+impl RpcClient {
+    pub fn new(ep: Endpoint) -> Self {
+        Self {
+            ep,
+            next_tag: 1,
+            timeout: Duration::from_secs(10),
+            retries: 3,
+            backoff: Duration::from_millis(50),
+        }
+    }
+
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.ep
+    }
+
+    /// One round-trip to `dst` with bounded retry/backoff. Transport
+    /// errors and response timeouts surface as
+    /// [`RpcError::ConnectionLost`] once the attempts are exhausted.
+    pub fn call(
+        &mut self,
+        dst: u32,
+        port: Port,
+        payload: Vec<u8>,
+    ) -> Result<Vec<u8>, RpcError> {
+        let mut last = RpcError::ConnectionLost {
+            peer: dst,
+            detail: "no attempt made".into(),
+        };
+        for attempt in 0..=self.retries {
+            if attempt > 0 {
+                std::thread::sleep(self.backoff);
+            }
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            if let Err(e) = self.ep.send(dst, port, tag, payload.clone()) {
+                last = e;
+                continue;
+            }
+            let deadline = Instant::now() + self.timeout;
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    last = RpcError::ConnectionLost {
+                        peer: dst,
+                        detail: format!(
+                            "no response within {:?} (attempt {})",
+                            self.timeout,
+                            attempt + 1
+                        ),
+                    };
+                    break;
+                }
+                match self.ep.recv_kind(port.kind(), Some(deadline - now))
+                {
+                    Some(m) if m.tag == tag => return Ok(m.payload),
+                    Some(_) => continue, // stale reply from a retry
+                    None if self.ep.is_closed() => {
+                        return Err(RpcError::ConnectionLost {
+                            peer: dst,
+                            detail: "transport shut down".into(),
+                        });
+                    }
+                    None => continue, // spurious timeout; loop re-checks
+                }
+            }
+        }
+        Err(last)
+    }
+
+    fn lost(&self, dst: u32, what: impl std::fmt::Display) -> RpcError {
+        RpcError::ConnectionLost { peer: dst, detail: what.to_string() }
+    }
+
+    /// Batched feature pull over the wire; returns `(dim, rows)`.
+    /// Equivalent to `KvServer::read_rows` on the owner (test-enforced).
+    pub fn kv_pull(
+        &mut self,
+        dst: u32,
+        name: &str,
+        locals: &[u32],
+    ) -> Result<(usize, Vec<f32>), RpcError> {
+        let req = KvRequest::Pull {
+            name: name.to_string(),
+            locals: locals.to_vec(),
+        };
+        let raw =
+            self.call(dst, Port::KvStore, encode_kv_request(&req))?;
+        match decode_kv_response(&raw)
+            .map_err(|e| self.lost(dst, format!("bad kv response: {e}")))?
+        {
+            KvResponse::Rows { dim, data } => Ok((dim as usize, data)),
+            KvResponse::Err(e) => Err(e),
+            other => {
+                Err(self.lost(dst, format!("unexpected reply {other:?}")))
+            }
+        }
+    }
+
+    /// Typed pull of one ntype table; returns `(ntype, dim, rows)`.
+    pub fn kv_pull_typed(
+        &mut self,
+        dst: u32,
+        name: &str,
+        ntype: u8,
+        locals: &[u32],
+    ) -> Result<(u8, usize, Vec<f32>), RpcError> {
+        let req = KvRequest::PullTyped {
+            name: name.to_string(),
+            ntype,
+            locals: locals.to_vec(),
+        };
+        let raw =
+            self.call(dst, Port::KvStore, encode_kv_request(&req))?;
+        match decode_kv_response(&raw)
+            .map_err(|e| self.lost(dst, format!("bad kv response: {e}")))?
+        {
+            KvResponse::TypedRows { ntype, dim, data } => {
+                Ok((ntype, dim as usize, data))
+            }
+            KvResponse::Err(e) => Err(e),
+            other => {
+                Err(self.lost(dst, format!("unexpected reply {other:?}")))
+            }
+        }
+    }
+
+    /// Row-sparse gradient push over the wire.
+    pub fn kv_push(
+        &mut self,
+        dst: u32,
+        name: &str,
+        locals: &[u32],
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<(), RpcError> {
+        let req = KvRequest::Push {
+            name: name.to_string(),
+            locals: locals.to_vec(),
+            grads: grads.to_vec(),
+            lr,
+        };
+        let raw =
+            self.call(dst, Port::KvStore, encode_kv_request(&req))?;
+        match decode_kv_response(&raw)
+            .map_err(|e| self.lost(dst, format!("bad kv response: {e}")))?
+        {
+            KvResponse::Ok => Ok(()),
+            KvResponse::Err(e) => Err(e),
+            other => {
+                Err(self.lost(dst, format!("unexpected reply {other:?}")))
+            }
+        }
+    }
+
+    /// Remote neighbor sampling; deterministic in `rng_seed`, so the
+    /// result matches a local `sample_neighbors` with the same seed —
+    /// batch composition stays a pure function of `(seed, epoch, batch)`
+    /// across process boundaries.
+    pub fn sample(
+        &mut self,
+        dst: u32,
+        seeds: &[u32],
+        fanouts: &[usize],
+        rng_seed: u64,
+    ) -> Result<Vec<SampledNbrs>, RpcError> {
+        let req = SamplerRequest {
+            seeds: seeds.to_vec(),
+            fanouts: fanouts.iter().map(|&f| f as u32).collect(),
+            rng_seed,
+        };
+        let raw =
+            self.call(dst, Port::Sampler, encode_sampler_request(&req))?;
+        match decode_sampler_response(&raw).map_err(|e| {
+            self.lost(dst, format!("bad sampler response: {e}"))
+        })? {
+            SamplerResponse::Blocks(blocks) => Ok(blocks),
+            SamplerResponse::Err(e) => Err(e),
+        }
+    }
+}
+
+fn handle_kv(server: &KvServer, req: KvRequest) -> KvResponse {
+    match req {
+        KvRequest::Pull { name, locals } => {
+            match server.dim_of(&name) {
+                Ok(dim) => {
+                    let mut data = vec![0.0f32; locals.len() * dim];
+                    match server.read_rows(&name, &locals, &mut data) {
+                        Ok(()) => {
+                            KvResponse::Rows { dim: dim as u32, data }
+                        }
+                        Err(e) => KvResponse::Err(e),
+                    }
+                }
+                Err(e) => KvResponse::Err(e),
+            }
+        }
+        KvRequest::PullTyped { name, ntype, locals } => {
+            match server.dim_of(&name) {
+                Ok(dim) => {
+                    let mut data = vec![0.0f32; locals.len() * dim];
+                    match server.read_rows(&name, &locals, &mut data) {
+                        Ok(()) => KvResponse::TypedRows {
+                            ntype,
+                            dim: dim as u32,
+                            data,
+                        },
+                        Err(e) => KvResponse::Err(e),
+                    }
+                }
+                Err(e) => KvResponse::Err(e),
+            }
+        }
+        KvRequest::Push { name, locals, grads, lr } => {
+            match server.apply_grads(&name, &locals, &grads, lr) {
+                Ok(()) => KvResponse::Ok,
+                Err(e) => KvResponse::Err(e),
+            }
+        }
+    }
+}
+
+/// Serve `server`'s shards on `ep` until `running` clears or the
+/// transport shuts down. One reply per request, same tag, back to the
+/// sender's endpoint.
+pub fn serve_kv(
+    ep: Endpoint,
+    server: Arc<KvServer>,
+    running: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        while running.load(Ordering::SeqCst) {
+            let Some(msg) =
+                ep.recv_kind(Port::KvStore.kind(), Some(SERVE_TICK))
+            else {
+                if ep.is_closed() {
+                    return;
+                }
+                continue;
+            };
+            let resp = match decode_kv_request(&msg.payload) {
+                Ok(req) => handle_kv(&server, req),
+                Err(e) => KvResponse::Err(RpcError::ConnectionLost {
+                    peer: msg.from,
+                    detail: format!("undecodable kv request: {e}"),
+                }),
+            };
+            let _ = ep.send(
+                msg.from,
+                Port::KvStore,
+                msg.tag,
+                encode_kv_response(&resp),
+            );
+        }
+    })
+}
+
+/// Serve neighbor sampling on `ep` until `running` clears. The request
+/// carries the RNG seed, so sampling is a pure function of the request —
+/// byte-identical to a local call with the same seed.
+pub fn serve_sampler(
+    ep: Endpoint,
+    server: Arc<SamplerServer>,
+    running: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        while running.load(Ordering::SeqCst) {
+            let Some(msg) =
+                ep.recv_kind(Port::Sampler.kind(), Some(SERVE_TICK))
+            else {
+                if ep.is_closed() {
+                    return;
+                }
+                continue;
+            };
+            let resp = match decode_sampler_request(&msg.payload) {
+                Ok(req) => {
+                    let fanouts: Vec<usize> =
+                        req.fanouts.iter().map(|&f| f as usize).collect();
+                    let mut rng = Rng::new(req.rng_seed);
+                    SamplerResponse::Blocks(server.sample_neighbors(
+                        &req.seeds,
+                        &fanouts,
+                        &mut rng,
+                    ))
+                }
+                Err(e) => {
+                    SamplerResponse::Err(RpcError::ConnectionLost {
+                        peer: msg.from,
+                        detail: format!("undecodable sampler request: {e}"),
+                    })
+                }
+            };
+            let _ = ep.send(
+                msg.from,
+                Port::Sampler,
+                msg.tag,
+                encode_sampler_response(&resp),
+            );
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::tcp::{free_loopback_ports, tcp_transport, TcpConfig};
+    use crate::net::{CostModel, Transport};
+
+    fn kv_with_feat() -> Arc<KvServer> {
+        let server = Arc::new(KvServer::new(1));
+        let data: Vec<f32> = (0..40).map(|i| i as f32 * 0.5).collect();
+        server.register("feat", data, 4);
+        server
+    }
+
+    fn stop(flag: &Arc<AtomicBool>, h: JoinHandle<()>) {
+        flag.store(false, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn kv_pull_over_rpc_equals_direct_read() {
+        let t = Transport::new(2, CostModel::default());
+        let server = kv_with_feat();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t.endpoint(1), server.clone(), running.clone());
+        let mut client = RpcClient::new(t.endpoint(0));
+        let locals = vec![0u32, 3, 7, 2];
+        let (dim, rows) = client.kv_pull(1, "feat", &locals).unwrap();
+        assert_eq!(dim, 4);
+        let mut direct = vec![0.0f32; locals.len() * 4];
+        server.read_rows("feat", &locals, &mut direct).unwrap();
+        assert_eq!(rows, direct, "RPC pull ≡ direct read");
+        stop(&running, h);
+    }
+
+    #[test]
+    fn kv_typed_pull_and_push_round_trip_over_rpc() {
+        let t = Transport::new(2, CostModel::default());
+        let server = kv_with_feat();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t.endpoint(1), server.clone(), running.clone());
+        let mut client = RpcClient::new(t.endpoint(0));
+        let (nt, dim, rows) =
+            client.kv_pull_typed(1, "feat", 2, &[1, 5]).unwrap();
+        assert_eq!((nt, dim), (2, 4));
+        let mut direct = vec![0.0f32; 8];
+        server.read_rows("feat", &[1, 5], &mut direct).unwrap();
+        assert_eq!(rows, direct);
+        // push a gradient, observe it through a fresh pull
+        client
+            .kv_push(1, "feat", &[1], &[1.0, 1.0, 1.0, 1.0], 0.5)
+            .unwrap();
+        let (_, after) = client.kv_pull(1, "feat", &[1]).unwrap();
+        for (a, b) in after.iter().zip(&direct[..4]) {
+            assert!((a - (b - 0.5)).abs() < 1e-6, "push applied: {a} {b}");
+        }
+        stop(&running, h);
+    }
+
+    #[test]
+    fn kv_errors_travel_typed_over_the_wire() {
+        let t = Transport::new(2, CostModel::default());
+        let server = kv_with_feat();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t.endpoint(1), server, running.clone());
+        let mut client = RpcClient::new(t.endpoint(0));
+        let err = client.kv_pull(1, "nope", &[0]).unwrap_err();
+        assert_eq!(
+            err,
+            RpcError::UnknownTensor { name: "nope".into(), machine: 1 }
+        );
+        stop(&running, h);
+    }
+
+    #[test]
+    fn unserved_port_times_out_into_connection_lost_after_retries() {
+        let t = Transport::new(2, CostModel::default());
+        let _sink = t.endpoint(1); // claimed but never served
+        let mut client = RpcClient::new(t.endpoint(0));
+        client.timeout = Duration::from_millis(30);
+        client.retries = 2;
+        client.backoff = Duration::from_millis(5);
+        let start = Instant::now();
+        let err = client.kv_pull(1, "feat", &[0]).unwrap_err();
+        match err {
+            RpcError::ConnectionLost { peer, detail } => {
+                assert_eq!(peer, 1);
+                assert!(detail.contains("no response"), "{detail}");
+            }
+            other => panic!("expected ConnectionLost, got {other:?}"),
+        }
+        // 3 attempts × 30ms timeout (+ backoffs) — bounded, not hung
+        assert!(start.elapsed() >= Duration::from_millis(90));
+    }
+
+    #[test]
+    fn sampler_rpc_is_deterministic_and_equals_local_call() {
+        use crate::graph::DatasetSpec;
+        use crate::partition::{
+            build_partitions, metis_partition, relabel, PartitionConfig,
+            VertexWeights,
+        };
+        let spec = DatasetSpec::new("rpc", 400, 1600);
+        let d = spec.generate();
+        let vw = VertexWeights::uniform(d.n_nodes());
+        let p = metis_partition(&d.graph, &vw, &PartitionConfig::new(2));
+        let r = relabel::relabel(&p);
+        let g = relabel::relabel_graph(&d.graph, &r);
+        let parts: Vec<_> = build_partitions(&g, &r.node_map)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+        let server = Arc::new(SamplerServer::new(0, parts[0].clone()));
+        let seeds: Vec<u32> = (0..parts[0].n_core.min(20) as u32)
+            .map(|l| parts[0].global_of(l))
+            .collect();
+        let t = Transport::new(2, CostModel::default());
+        let running = Arc::new(AtomicBool::new(true));
+        let h =
+            serve_sampler(t.endpoint(1), server.clone(), running.clone());
+        let mut client = RpcClient::new(t.endpoint(0));
+        let over_wire = client.sample(1, &seeds, &[5], 1234).unwrap();
+        let again = client.sample(1, &seeds, &[5], 1234).unwrap();
+        assert_eq!(over_wire, again, "same seed → same sample");
+        let mut rng = Rng::new(1234);
+        let local = server.sample_neighbors(&seeds, &[5], &mut rng);
+        assert_eq!(over_wire, local, "RPC sampling ≡ local sampling");
+        stop(&running, h);
+    }
+
+    #[test]
+    fn kv_pull_over_tcp_loopback_equals_direct_read() {
+        let ports = free_loopback_ports(2).unwrap();
+        let addrs: Vec<String> = ports
+            .iter()
+            .map(|p| format!("127.0.0.1:{p}"))
+            .collect();
+        let mk = |my_proc: usize| {
+            let mut cfg = TcpConfig::localhost(my_proc, 2, 0);
+            cfg.addrs = addrs.clone();
+            tcp_transport(cfg, Arc::new(CostModel::default())).unwrap()
+        };
+        let t0 = mk(0);
+        let t1 = mk(1);
+        let server = kv_with_feat();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t1.endpoint(1), server.clone(), running.clone());
+        let mut client = RpcClient::new(t0.endpoint(0));
+        let locals = vec![2u32, 9, 4];
+        let (dim, rows) = client.kv_pull(1, "feat", &locals).unwrap();
+        let mut direct = vec![0.0f32; locals.len() * dim];
+        server.read_rows("feat", &locals, &mut direct).unwrap();
+        assert_eq!(rows, direct, "TCP pull ≡ direct read");
+        // typed errors cross the real wire too
+        let err = client.kv_pull(1, "nope", &[0]).unwrap_err();
+        assert_eq!(
+            err,
+            RpcError::UnknownTensor { name: "nope".into(), machine: 1 }
+        );
+        stop(&running, h);
+    }
+}

@@ -1,0 +1,516 @@
+//! Wire format for framed transport messages (docs/DESIGN.md §11).
+//!
+//! Every message that crosses a process boundary is one length-framed,
+//! versioned frame:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        "DG2\n" (0x0a324744 LE) — catches port clashes
+//!      4     2  version      WIRE_VERSION; mismatches are rejected loudly
+//!      6     1  port_kind    0=KvStore 1=Sampler 2=Trainer 3=Control
+//!      7     1  pad          always 0
+//!      8     4  src          sender endpoint id
+//!     12     4  dst          destination endpoint id
+//!     16     4  port_arg     Trainer rank for Port::Trainer, else 0
+//!     20     8  tag          request/response correlation tag
+//!     28     4  payload_len  bytes of payload that follow the header
+//!     32     …  payload
+//! ```
+//!
+//! The in-process backend never serializes, but its [`CostModel`] metering
+//! charges exactly what this encoding would put on the wire:
+//! [`Message::wire_bytes`] is defined as `FRAME_HEADER_BYTES + payload`,
+//! so emulated and real byte counts agree by construction (one constant,
+//! regression-tested against the actual encoder below).
+//!
+//! [`CostModel`]: crate::net::CostModel
+//! [`Message::wire_bytes`]: crate::net::Message::wire_bytes
+
+use std::io::{Read, Write};
+
+use super::transport::{Message, Port, PortKind};
+
+/// Frame magic: ASCII "DG2" + newline so a text protocol accidentally
+/// pointed at our port fails the magic check immediately.
+pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"DG2\n");
+
+/// Bump on any incompatible frame or payload layout change. Peers with a
+/// different version are rejected with [`WireError::VersionMismatch`]
+/// rather than silently mis-decoded.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Size of the frame header preceding every payload. This is the single
+/// source of truth for header overhead: the TCP encoder writes exactly
+/// this many bytes and the emulated cost model charges exactly this many
+/// bytes per message (`Message::wire_bytes`).
+pub const FRAME_HEADER_BYTES: usize = 32;
+
+/// Decode/IO failures on the framed wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// First four bytes were not [`WIRE_MAGIC`] — not our protocol.
+    BadMagic(u32),
+    /// Peer speaks a different wire version; refuse rather than guess.
+    VersionMismatch { got: u16, want: u16 },
+    /// `port_kind` byte outside the known range.
+    BadPortKind(u8),
+    /// Buffer ended before the header or declared payload completed.
+    Truncated { need: usize, have: usize },
+    /// Underlying socket error (message text of the `io::Error`).
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#010x} (expected {WIRE_MAGIC:#010x})")
+            }
+            WireError::VersionMismatch { got, want } => write!(
+                f,
+                "wire version mismatch: peer sent v{got}, this build \
+                 speaks v{want} — refusing to decode"
+            ),
+            WireError::BadPortKind(k) => write!(f, "unknown port kind {k}"),
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e.to_string())
+    }
+}
+
+fn port_to_parts(p: Port) -> (u8, u32) {
+    match p {
+        Port::Trainer(rank) => (PortKind::Trainer as u8, rank),
+        other => (other.kind() as u8, 0),
+    }
+}
+
+fn port_from_parts(kind: u8, arg: u32) -> Result<Port, WireError> {
+    match kind {
+        0 => Ok(Port::KvStore),
+        1 => Ok(Port::Sampler),
+        2 => Ok(Port::Trainer(arg)),
+        3 => Ok(Port::Control),
+        k => Err(WireError::BadPortKind(k)),
+    }
+}
+
+/// Serialize the frame header for `msg` addressed to endpoint `dst`.
+pub fn encode_header(dst: u32, msg: &Message) -> [u8; FRAME_HEADER_BYTES] {
+    let (kind, arg) = port_to_parts(msg.port);
+    let mut h = [0u8; FRAME_HEADER_BYTES];
+    h[0..4].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    h[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    h[6] = kind;
+    h[7] = 0;
+    h[8..12].copy_from_slice(&msg.from.to_le_bytes());
+    h[12..16].copy_from_slice(&dst.to_le_bytes());
+    h[16..20].copy_from_slice(&arg.to_le_bytes());
+    h[20..28].copy_from_slice(&msg.tag.to_le_bytes());
+    h[28..32].copy_from_slice(&(msg.payload.len() as u32).to_le_bytes());
+    h
+}
+
+/// Serialize a complete frame (header + payload) into one buffer.
+pub fn encode_frame(dst: u32, msg: &Message) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + msg.payload.len());
+    out.extend_from_slice(&encode_header(dst, msg));
+    out.extend_from_slice(&msg.payload);
+    out
+}
+
+fn le_u16(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Parse a header; returns `(dst, from, port, tag, payload_len)`.
+pub fn decode_header(
+    h: &[u8],
+) -> Result<(u32, u32, Port, u64, usize), WireError> {
+    if h.len() < FRAME_HEADER_BYTES {
+        return Err(WireError::Truncated {
+            need: FRAME_HEADER_BYTES,
+            have: h.len(),
+        });
+    }
+    let magic = le_u32(&h[0..4]);
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = le_u16(&h[4..6]);
+    if version != WIRE_VERSION {
+        return Err(WireError::VersionMismatch {
+            got: version,
+            want: WIRE_VERSION,
+        });
+    }
+    let port = port_from_parts(h[6], le_u32(&h[16..20]))?;
+    let from = le_u32(&h[8..12]);
+    let dst = le_u32(&h[12..16]);
+    let tag = le_u64(&h[20..28]);
+    let payload_len = le_u32(&h[28..32]) as usize;
+    Ok((dst, from, port, tag, payload_len))
+}
+
+/// Decode a complete frame from `buf`; returns `(dst, message)`.
+pub fn decode_frame(buf: &[u8]) -> Result<(u32, Message), WireError> {
+    let (dst, from, port, tag, payload_len) = decode_header(buf)?;
+    let need = FRAME_HEADER_BYTES + payload_len;
+    if buf.len() < need {
+        return Err(WireError::Truncated { need, have: buf.len() });
+    }
+    let payload =
+        buf[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + payload_len].to_vec();
+    Ok((dst, Message { from, port, tag, payload }))
+}
+
+/// Write one frame to a stream (header then payload, no extra copies of
+/// the payload).
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    dst: u32,
+    msg: &Message,
+) -> Result<(), WireError> {
+    w.write_all(&encode_header(dst, msg))?;
+    w.write_all(&msg.payload)?;
+    Ok(())
+}
+
+/// Read one frame from a stream. Blocks until a full frame arrives or
+/// the stream errors/closes (EOF inside a frame is [`WireError::Io`]).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u32, Message), WireError> {
+    let mut h = [0u8; FRAME_HEADER_BYTES];
+    r.read_exact(&mut h)?;
+    let (dst, from, port, tag, payload_len) = decode_header(&h)?;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)?;
+    Ok((dst, Message { from, port, tag, payload }))
+}
+
+/// Little-endian payload writer used by every RPC codec in
+/// [`crate::net::payload`]. Hand-rolled (no serde in the dependency set)
+/// and symmetric with [`ByteReader`].
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed (u16) UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        debug_assert!(s.len() <= u16::MAX as usize);
+        self.u16(s.len() as u16);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed (u32) slice of u32s.
+    pub fn u32s(&mut self, vs: &[u32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+
+    /// Length-prefixed (u32) slice of u64s.
+    pub fn u64s(&mut self, vs: &[u64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    /// Length-prefixed (u32) slice of f32s.
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    /// Length-prefixed (u32) raw byte slice.
+    pub fn bytes(&mut self, vs: &[u8]) {
+        self.u32(vs.len() as u32);
+        self.buf.extend_from_slice(vs);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor-based reader mirroring [`ByteWriter`]. Every accessor returns
+/// `Result` — a short or corrupt payload becomes a [`WireError::Truncated`],
+/// never a panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated {
+                need: self.pos + n,
+                have: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(le_u16(self.take(2)?))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(le_u32(self.take(4)?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(le_u64(self.take(8)?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|e| WireError::Io(format!("invalid utf-8 string: {e}")))
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 4));
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 8));
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 4));
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the payload was consumed exactly — catches codec drift.
+    pub fn expect_end(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Truncated {
+                need: self.pos,
+                have: self.buf.len(),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(port: Port, tag: u64, payload: Vec<u8>) -> Message {
+        Message { from: 3, port, tag, payload }
+    }
+
+    #[test]
+    fn frame_round_trips_every_port() {
+        for port in [
+            Port::KvStore,
+            Port::Sampler,
+            Port::Trainer(0),
+            Port::Trainer(41),
+            Port::Control,
+        ] {
+            let m = msg(port, 0xdead_beef_cafe, vec![1, 2, 3, 4, 5]);
+            let buf = encode_frame(7, &m);
+            let (dst, back) = decode_frame(&buf).unwrap();
+            assert_eq!(dst, 7);
+            assert_eq!(back.from, 3);
+            assert_eq!(back.port, port);
+            assert_eq!(back.tag, 0xdead_beef_cafe);
+            assert_eq!(back.payload, vec![1, 2, 3, 4, 5]);
+        }
+    }
+
+    #[test]
+    fn header_constant_matches_actual_encoding() {
+        // Satellite: `Message::wire_bytes()` must charge exactly what the
+        // framed encoding puts on the wire — derive, don't hardcode.
+        for n in [0usize, 1, 100, 4096] {
+            let m = msg(Port::KvStore, 9, vec![0xab; n]);
+            let framed = encode_frame(0, &m);
+            assert_eq!(framed.len(), FRAME_HEADER_BYTES + n);
+            assert_eq!(m.wire_bytes(), framed.len() as u64);
+        }
+    }
+
+    #[test]
+    fn bumped_wire_version_is_rejected() {
+        let m = msg(Port::Control, 1, vec![9]);
+        let mut buf = encode_frame(0, &m);
+        let bumped = WIRE_VERSION + 1;
+        buf[4..6].copy_from_slice(&bumped.to_le_bytes());
+        let err = decode_frame(&buf).unwrap_err();
+        assert_eq!(
+            err,
+            WireError::VersionMismatch { got: bumped, want: WIRE_VERSION }
+        );
+        let text = err.to_string();
+        assert!(text.contains("version mismatch"), "clear error: {text}");
+        assert!(text.contains("v2") && text.contains("v1"), "{text}");
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_are_rejected() {
+        let m = msg(Port::Sampler, 1, vec![1, 2, 3]);
+        let buf = encode_frame(0, &m);
+        let mut garbled = buf.clone();
+        garbled[0] = b'X';
+        assert!(matches!(
+            decode_frame(&garbled),
+            Err(WireError::BadMagic(_))
+        ));
+        assert!(matches!(
+            decode_frame(&buf[..FRAME_HEADER_BYTES + 1]),
+            Err(WireError::Truncated { .. })
+        ));
+        assert!(matches!(
+            decode_frame(&buf[..10]),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn stream_read_write_round_trip() {
+        let m = msg(Port::Trainer(2), 77, vec![5; 300]);
+        let mut stream = Vec::new();
+        write_frame(&mut stream, 4, &m).unwrap();
+        write_frame(&mut stream, 5, &msg(Port::Control, 78, vec![])).unwrap();
+        let mut cur = std::io::Cursor::new(stream);
+        let (d0, m0) = read_frame(&mut cur).unwrap();
+        let (d1, m1) = read_frame(&mut cur).unwrap();
+        assert_eq!((d0, m0.tag, m0.payload.len()), (4, 77, 300));
+        assert_eq!((d1, m1.tag, m1.port), (5, 78, Port::Control));
+        // a third read hits clean EOF → Io error, not a panic
+        assert!(matches!(read_frame(&mut cur), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn byte_writer_reader_round_trip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u16(65535);
+        w.u32(123_456);
+        w.u64(1 << 40);
+        w.f32(0.25);
+        w.f64(-1.5);
+        w.str("feat/paper");
+        w.u32s(&[1, 2, 3]);
+        w.u64s(&[9, 8]);
+        w.f32s(&[1.0, 2.0]);
+        w.bytes(&[0xaa, 0xbb]);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 65535);
+        assert_eq!(r.u32().unwrap(), 123_456);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), 0.25);
+        assert_eq!(r.f64().unwrap(), -1.5);
+        assert_eq!(r.str().unwrap(), "feat/paper");
+        assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.u64s().unwrap(), vec![9, 8]);
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(r.bytes().unwrap(), vec![0xaa, 0xbb]);
+        r.expect_end().unwrap();
+        // over-read is an error, not a panic
+        let mut r2 = ByteReader::new(&buf[..3]);
+        assert!(r2.u32().is_err());
+    }
+}

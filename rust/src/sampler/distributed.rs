@@ -99,9 +99,16 @@ impl DistNeighborSampler {
 
     /// Meter (and, under emulation, sleep for) one remote owner's
     /// request/response round-trip.
-    fn meter_remote(&self, owner: u32, n_seeds: usize, res: &[SampledNbrs]) {
+    fn meter_remote(
+        &self,
+        owner: u32,
+        n_seeds: usize,
+        n_fanouts: usize,
+        res: &[SampledNbrs],
+    ) {
         let edges: usize = res.iter().map(|r| r.nbrs.len()).sum();
-        let (req, resp) = SamplerServer::wire_cost(n_seeds, edges);
+        let (req, resp) =
+            SamplerServer::wire_cost(n_seeds, n_fanouts, edges);
         self.cost.on_network(self.machine, owner, req);
         self.cost.on_network(owner, self.machine, resp);
         if self.emulate_network_time {
@@ -209,6 +216,7 @@ impl DistNeighborSampler {
                                 self.meter_remote(
                                     owner as u32,
                                     group.len(),
+                                    fanouts.len(),
                                     &res,
                                 );
                                 Ok(res)
@@ -255,7 +263,12 @@ impl DistNeighborSampler {
                     &mut sub,
                 );
                 if owner as u32 != self.machine {
-                    self.meter_remote(owner as u32, groups[owner].0.len(), &res);
+                    self.meter_remote(
+                        owner as u32,
+                        groups[owner].0.len(),
+                        fanouts.len(),
+                        &res,
+                    );
                 }
                 results[owner] = Some(res);
             }

@@ -12,7 +12,7 @@ use crate::util::Rng;
 use super::neighbor::sample_k_per_rel;
 
 /// One sampled edge set for a seed: neighbor globals + relation types.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SampledNbrs {
     pub nbrs: Vec<NodeId>,
     pub rels: Vec<u8>,
@@ -87,10 +87,21 @@ impl SamplerServer {
         out
     }
 
-    /// Estimated request/response wire size for cost metering.
-    pub fn wire_cost(seeds: usize, sampled_edges: usize) -> (u64, u64) {
-        let req = 16 + seeds as u64 * 4;
-        let resp = 16 + sampled_edges as u64 * 5; // 4B nbr + 1B rel
+    /// Request/response wire size for cost metering, derived from the
+    /// real framed encoding (`net::payload::sampler_*_bytes`, which are
+    /// regression-tested against the actual codec) — the emulated meter
+    /// and a TCP socket charge the same bytes for the same RPC.
+    /// `fanouts` is the per-relation fanout count riding in the request.
+    pub fn wire_cost(
+        seeds: usize,
+        fanouts: usize,
+        sampled_edges: usize,
+    ) -> (u64, u64) {
+        let req = crate::net::payload::sampler_req_bytes(seeds, fanouts);
+        let resp = crate::net::payload::sampler_resp_bytes(
+            seeds,
+            sampled_edges,
+        );
         (req, resp)
     }
 }

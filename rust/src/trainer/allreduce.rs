@@ -11,8 +11,9 @@
 
 use std::fmt;
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::net::transport::{Endpoint, Port, Transport};
+use crate::net::transport::{Endpoint, Port, PortKind, Transport};
 use crate::net::CostModel;
 
 /// Typed collective failures. A duplicate-rank bug or a dropped ring
@@ -24,11 +25,15 @@ pub enum AllReduceError {
     AlreadyClaimed { rank: usize },
     /// `endpoint(rank)` with `rank >= world`.
     RankOutOfRange { rank: usize, world: usize },
-    /// A ring neighbour's mailbox closed mid-collective (the rank
-    /// died): the reduction cannot complete. With the in-process
-    /// transport the fabric outlives every participant, so this arm
-    /// is the contract for a future socket transport; live-rank loss
-    /// is instead handled above the ring (the coordinator keeps dead
+    /// `endpoint(rank)` for a rank this process does not host (TCP
+    /// backend: each process claims only its own ring participants).
+    RankNotLocal { rank: usize },
+    /// A ring neighbour dropped mid-collective: its mailbox closed, a
+    /// send failed at the transport, or no step frame arrived within
+    /// `recv_timeout` — the reduction cannot complete. With the
+    /// in-process transport the fabric outlives every participant;
+    /// over TCP this is how a peer-process crash surfaces. Live-rank
+    /// loss is handled above the ring (the coordinator keeps dead
     /// ranks participating as zombies until the epoch boundary).
     PeerDropped { rank: usize, phase: &'static str, step: usize },
 }
@@ -45,6 +50,10 @@ impl fmt::Display for AllReduceError {
                 f,
                 "all-reduce rank {rank} out of range for world {world}"
             ),
+            Self::RankNotLocal { rank } => write!(
+                f,
+                "all-reduce rank {rank} is hosted by another process"
+            ),
             Self::PeerDropped { rank, phase, step } => write!(
                 f,
                 "ring peer of rank {rank} dropped during {phase} \
@@ -60,6 +69,9 @@ pub struct AllReduceGroup {
     /// Keeps the fabric (and its cost meter) alive for the group's life.
     pub transport: Arc<Transport>,
     n: usize,
+    /// `local[t]` — this process hosts rank t's endpoint (always true
+    /// with the in-process backend).
+    local: Vec<bool>,
     endpoints: std::sync::Mutex<Vec<Option<Endpoint>>>,
 }
 
@@ -68,19 +80,43 @@ impl AllReduceGroup {
     pub fn new(machine_of: Vec<u32>, cost: Arc<CostModel>) -> Arc<Self> {
         let n = machine_of.len();
         let transport = Transport::with_mapping(machine_of, cost);
-        let endpoints = (0..n as u32)
-            .map(|t| Some(transport.endpoint(t)))
+        Self::from_transport(transport, n)
+    }
+
+    /// Build the ring over an existing transport whose endpoints
+    /// `0..world` are the trainer ranks (any endpoints past `world`
+    /// belong to other services and are left alone). Only ranks hosted
+    /// by *this* process are claimed — over TCP, each process builds
+    /// its own group from its own transport and the ring spans the
+    /// processes through the shared endpoint space.
+    pub fn from_transport(
+        transport: Arc<Transport>,
+        world: usize,
+    ) -> Arc<Self> {
+        assert!(
+            world <= transport.n_endpoints(),
+            "ring world {world} exceeds {} transport endpoints",
+            transport.n_endpoints()
+        );
+        let local: Vec<bool> = (0..world as u32)
+            .map(|t| transport.hosts_endpoint(t))
+            .collect();
+        let endpoints = (0..world as u32)
+            .map(|t| {
+                local[t as usize].then(|| transport.endpoint(t))
+            })
             .collect();
         Arc::new(Self {
             transport,
-            n,
+            n: world,
+            local,
             endpoints: std::sync::Mutex::new(endpoints),
         })
     }
 
-    /// Claim trainer `t`'s participant handle (once). A second claim
-    /// or an out-of-range rank is a typed error, and the group stays
-    /// usable for the other ranks.
+    /// Claim trainer `t`'s participant handle (once). A second claim,
+    /// an out-of-range rank, or a rank another process hosts is a
+    /// typed error, and the group stays usable for the other ranks.
     pub fn endpoint(
         self: &Arc<Self>,
         t: usize,
@@ -92,6 +128,9 @@ impl AllReduceGroup {
                 world: self.n,
             });
         }
+        if !self.local[t] {
+            return Err(AllReduceError::RankNotLocal { rank: t });
+        }
         let ep = slots[t]
             .take()
             .ok_or(AllReduceError::AlreadyClaimed { rank: t })?;
@@ -100,6 +139,7 @@ impl AllReduceGroup {
             rank: t,
             n: self.n,
             seq: std::cell::Cell::new(0),
+            recv_timeout: Duration::from_secs(30),
         })
     }
 }
@@ -109,9 +149,33 @@ pub struct Participant {
     pub rank: usize,
     pub n: usize,
     seq: std::cell::Cell<u64>,
+    /// How long one ring step may wait for the left neighbour's frame
+    /// before the peer is declared dropped.
+    pub recv_timeout: Duration,
+}
+
+impl fmt::Debug for Participant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Participant(rank {}/{})", self.rank, self.n)
+    }
 }
 
 impl Participant {
+    /// One ring-step receive: only Trainer-port frames, bounded wait.
+    fn recv_step(
+        &self,
+        phase: &'static str,
+        step: usize,
+    ) -> Result<crate::net::Message, AllReduceError> {
+        self.ep
+            .recv_kind(PortKind::Trainer, Some(self.recv_timeout))
+            .ok_or(AllReduceError::PeerDropped {
+                rank: self.rank,
+                phase,
+                step,
+            })
+    }
+
     /// In-place mean all-reduce across the group. All participants must
     /// call with identically-shaped data each round.
     pub fn allreduce_mean(
@@ -141,19 +205,19 @@ impl Participant {
         for s in 0..n - 1 {
             let send_idx = (rank + n - s) % n;
             let r = chunk(send_idx);
-            self.ep.send(
-                next,
-                Port::Trainer(self.rank as u32),
-                tag(seq, 0, s),
-                f32s_to_bytes(&data[r]),
-            );
-            let msg = self.ep.recv().ok_or(
-                AllReduceError::PeerDropped {
+            self.ep
+                .send(
+                    next,
+                    Port::Trainer(self.rank as u32),
+                    tag(seq, 0, s),
+                    f32s_to_bytes(&data[r]),
+                )
+                .map_err(|_| AllReduceError::PeerDropped {
                     rank,
                     phase: "reduce-scatter",
                     step: s,
-                },
-            )?;
+                })?;
+            let msg = self.recv_step("reduce-scatter", s)?;
             debug_assert_eq!(msg.tag, tag(seq, 0, s));
             let recv_idx = (rank + n - s - 1) % n;
             let r = chunk(recv_idx);
@@ -169,19 +233,19 @@ impl Participant {
         for s in 0..n - 1 {
             let send_idx = (rank + 1 + n - s) % n;
             let r = chunk(send_idx);
-            self.ep.send(
-                next,
-                Port::Trainer(self.rank as u32),
-                tag(seq, 1, s),
-                f32s_to_bytes(&data[r]),
-            );
-            let msg = self.ep.recv().ok_or(
-                AllReduceError::PeerDropped {
+            self.ep
+                .send(
+                    next,
+                    Port::Trainer(self.rank as u32),
+                    tag(seq, 1, s),
+                    f32s_to_bytes(&data[r]),
+                )
+                .map_err(|_| AllReduceError::PeerDropped {
                     rank,
                     phase: "all-gather",
                     step: s,
-                },
-            )?;
+                })?;
+            let msg = self.recv_step("all-gather", s)?;
             debug_assert_eq!(msg.tag, tag(seq, 1, s));
             let recv_idx = (rank + n - s) % n;
             let r = chunk(recv_idx);
@@ -339,8 +403,10 @@ mod tests {
         }
         let bytes = cost.network_bytes();
         assert!(bytes > 0);
-        // only 2 of 4 hops cross machines: strictly less than total volume
-        let total_payload = 4 * 2 * 3 * (10 * 4 + 24); // n * phases * steps * (chunk+hdr)
+        // only 2 of 4 hops cross machines: strictly less than total
+        // volume — n * phases * steps * (chunk + frame header)
+        let total_payload =
+            4 * 2 * 3 * (10 * 4 + crate::net::wire::FRAME_HEADER_BYTES);
         assert!(bytes < total_payload as u64, "{bytes}");
     }
 
@@ -370,4 +436,74 @@ mod tests {
         );
     }
 
+    #[test]
+    fn tcp_ring_matches_in_process_ring() {
+        use crate::net::tcp::{
+            free_loopback_ports, tcp_transport, TcpConfig,
+        };
+        // reference: the in-process ring
+        let mut expect = run_group(2, 12, 77);
+        let expect = expect.pop().unwrap();
+
+        let ports = free_loopback_ports(2).unwrap();
+        let addrs: Vec<String> =
+            ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+        let mk = |my_proc: usize| {
+            let mut cfg = TcpConfig::localhost(my_proc, 2, 0);
+            cfg.addrs = addrs.clone();
+            tcp_transport(cfg, Arc::new(CostModel::default())).unwrap()
+        };
+        let inputs: Vec<Vec<f32>> = {
+            let mut rng = Rng::new(77);
+            (0..2)
+                .map(|_| {
+                    (0..12).map(|_| rng.normal() as f32).collect()
+                })
+                .collect()
+        };
+        let mut handles = Vec::new();
+        for (t, mut data) in inputs.into_iter().enumerate() {
+            let transport = mk(t);
+            handles.push(std::thread::spawn(move || {
+                // each "process" claims exactly its own rank
+                let group =
+                    AllReduceGroup::from_transport(transport, 2);
+                assert_eq!(
+                    group.endpoint(1 - t).unwrap_err(),
+                    AllReduceError::RankNotLocal { rank: 1 - t }
+                );
+                let p = group.endpoint(t).unwrap();
+                p.allreduce_mean(&mut data).unwrap();
+                data
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            for (a, b) in out.iter().zip(&expect) {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "TCP ring ≡ in-process ring: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dead_ring_peer_is_peer_dropped_not_a_hang() {
+        let cost = Arc::new(CostModel::default());
+        let group = AllReduceGroup::new(vec![0, 1], cost);
+        let mut p = group.endpoint(0).unwrap();
+        // rank 1 never participates: the step times out into a typed
+        // error instead of blocking forever
+        p.recv_timeout = Duration::from_millis(40);
+        let mut d = vec![1.0f32; 8];
+        assert_eq!(
+            p.allreduce_mean(&mut d).unwrap_err(),
+            AllReduceError::PeerDropped {
+                rank: 0,
+                phase: "reduce-scatter",
+                step: 0
+            }
+        );
+    }
 }

@@ -1,0 +1,122 @@
+#!/usr/bin/env sh
+# Multi-process equivalence smoke (docs/DESIGN.md §11): run the same
+# config once over the in-process backend and once as N real OS
+# processes talking TCP on localhost, then require byte-identical
+# MACHINE_RESULT lines (batch-stream hashes, parameter hash, losses)
+# from both runs, and a decreasing loss.
+#
+# Usage: scripts/launch.sh [machines] [trainers_per_machine]
+set -eu
+
+MACHINES="${1:-2}"
+TRAINERS="${2:-1}"
+PORT_BASE="${PORT_BASE:-$((20000 + $$ % 20000))}"
+
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "SKIP: no cargo toolchain on PATH — multi-process smoke" \
+         "not run here (CI's 'multi-process' job runs it)." >&2
+    exit 0
+fi
+
+# bare checkout: generate the same minimal manifest as verify.sh
+if [ ! -f Cargo.toml ]; then
+    cat > Cargo.toml <<'EOF'
+[package]
+name = "distdglv2"
+version = "0.1.0"
+edition = "2021"
+
+[dependencies]
+anyhow = "1"
+rustc-hash = "2"
+xla = "0.1"
+
+[lib]
+path = "src/lib.rs"
+EOF
+    for b in benches/*.rs; do
+        name=$(basename "$b" .rs)
+        cat >> Cargo.toml <<EOF
+
+[[bench]]
+name = "$name"
+harness = false
+EOF
+    done
+    echo "generated rust/Cargo.toml (bare checkout)"
+fi
+# the launcher lives outside rust/, so cargo needs an explicit entry
+if ! grep -q 'name = "launch"' Cargo.toml; then
+    cat >> Cargo.toml <<'EOF'
+
+[[example]]
+name = "launch"
+path = "../examples/launch.rs"
+EOF
+fi
+
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"; kill 0 2>/dev/null || true' EXIT INT TERM
+
+cat > "$WORK/run.cfg" <<EOF
+# launch.sh smoke config — small deterministic RMAT graph
+dataset=rmat:4000:16000
+machines=$MACHINES
+trainers=$TRAINERS
+epochs=2
+lr=0.3
+seed=7
+EOF
+
+cargo build --release --example launch
+
+BIN=target/release/examples/launch
+
+echo "== reference: in-process backend =="
+"$BIN" "$WORK/run.cfg" --inproc | tee "$WORK/inproc.log"
+
+echo "== $MACHINES OS processes over TCP (port base $PORT_BASE) =="
+m=0
+while [ "$m" -lt "$MACHINES" ]; do
+    "$BIN" "$WORK/run.cfg" --machine "$m" --port-base "$PORT_BASE" \
+        > "$WORK/proc$m.log" 2>&1 &
+    eval "PID$m=$!"
+    m=$((m + 1))
+done
+m=0
+while [ "$m" -lt "$MACHINES" ]; do
+    eval "pid=\$PID$m"
+    if ! wait "$pid"; then
+        echo "FAIL: machine process $m exited nonzero" >&2
+        cat "$WORK/proc$m.log" >&2
+        exit 1
+    fi
+    m=$((m + 1))
+done
+cat "$WORK"/proc*.log
+
+# every machine's result line must match the in-process reference
+# verbatim: same batch streams, same all-reduced params, same losses
+grep '^MACHINE_RESULT' "$WORK/inproc.log" | sort > "$WORK/inproc.res"
+grep -h '^MACHINE_RESULT' "$WORK"/proc*.log | sort > "$WORK/tcp.res"
+if ! diff -u "$WORK/inproc.res" "$WORK/tcp.res"; then
+    echo "FAIL: TCP run diverged from the in-process reference" >&2
+    exit 1
+fi
+
+# all processes converged on one parameter vector
+NHASH=$(sed 's/.*param_hash=\([0-9a-f]*\).*/\1/' "$WORK/tcp.res" \
+    | sort -u | wc -l)
+if [ "$NHASH" -ne 1 ]; then
+    echo "FAIL: processes ended with different params" >&2
+    exit 1
+fi
+
+# the smoke actually learned something (launch also asserts this)
+grep -q '^LAUNCH OK$' "$WORK/inproc.log"
+grep -q 'LAUNCH OK' "$WORK"/proc*.log
+
+echo "multi-process smoke passed:" \
+     "$MACHINES procs x $TRAINERS trainers == in-process run"

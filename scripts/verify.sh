@@ -45,6 +45,15 @@ name = "$name"
 harness = false
 EOF
     done
+    # the multi-process launcher lives at the repo root, outside
+    # rust/src — register it explicitly so `cargo build --example
+    # launch` (and scripts/launch.sh) work from this manifest too
+    cat >> Cargo.toml <<'EOF'
+
+[[example]]
+name = "launch"
+path = "../examples/launch.rs"
+EOF
     echo "generated rust/Cargo.toml (bare checkout)"
 fi
 
