@@ -30,6 +30,29 @@
 //! the batch's layer-0 feature rows, so the run needs no compiled
 //! device artifacts (the CI smoke job has none); swap in
 //! `DeviceExecutor` for the compiled GNN variants.
+//!
+//! **Chaos mode** (docs/DESIGN.md §12): `scripts/launch.sh N P --chaos`
+//! kills one machine process mid-run and restarts it, asserting the
+//! final `MACHINE_RESULT` lines still match the fault-free in-process
+//! reference byte for byte. Three flags cooperate:
+//!
+//! - `--chaos-exit` — the victim (never machine 0, which hosts the
+//!   rendezvous) trains epoch 0 then `std::process::exit`s abruptly
+//!   *before* the epoch-0 barrier: no shutdown goodbye, no KV drain,
+//!   listener and ring endpoints vanish mid-cluster while the
+//!   survivors park inside the barrier (every epoch-0 ring frame is
+//!   already consumed — the all-reduce is synchronous — so nothing
+//!   can be lost into the dead socket);
+//! - `--chaos-resume` — the restarted victim redeploys
+//!   deterministically, reclaims its machine id with
+//!   `RendezvousClient::rejoin`, re-imports its KV shard from the
+//!   standby's `replica<m>::*` tables over real RPC (requires
+//!   `replicate_kv=1`), recovers its epoch-0 trainer state by replaying
+//!   the whole world over a local in-process ring (byte-identical to
+//!   what the wire produced, per the backend-identity invariant), then
+//!   trains epoch 1+ over the real TCP transport;
+//! - `--chaos` — survivors only stretch their ring receive timeout so
+//!   the victim's restart window reads as latency, not failure.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -45,12 +68,14 @@ use distdglv2::coordinator::rendezvous::{
 use distdglv2::coordinator::{
     CoordinatorConfig, Decision, MembershipView,
 };
+use distdglv2::ft::{parse_replica_table, replica_table};
 use distdglv2::net::rpc::{serve_kv, RpcClient};
 use distdglv2::net::tcp::{tcp_transport, TcpConfig};
 use distdglv2::net::{CostModel, Transport};
 use distdglv2::runtime::executable::HostBatch;
 use distdglv2::runtime::manifest::{artifacts_dir, VariantSpec};
 use distdglv2::sampler::compact::{ModelKind, TaskKind};
+use distdglv2::trainer::allreduce::Participant;
 use distdglv2::trainer::AllReduceGroup;
 
 /// Endpoint-space layout shared by every process (and both backends):
@@ -89,11 +114,28 @@ impl Layout {
     }
 }
 
+/// Role this process plays in a `--chaos` run (docs/DESIGN.md §12).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ChaosMode {
+    /// Ordinary run — fail fast on any peer loss.
+    Off,
+    /// Survivor in a chaos run: stretch the ring receive timeout so
+    /// the victim's kill-to-restart window reads as latency.
+    Tolerate,
+    /// Victim, first life: exit abruptly right before the epoch-0
+    /// barrier (the survivors park inside it until the restart).
+    Exit,
+    /// Victim, second life: rejoin, re-import the shard, replay
+    /// epoch 0 locally, continue epoch 1+ over the wire.
+    Resume,
+}
+
 struct Args {
     config: Option<String>,
     machine: Option<usize>,
     port_base: u16,
     inproc: bool,
+    chaos: ChaosMode,
 }
 
 fn parse_args() -> Result<Args> {
@@ -102,6 +144,7 @@ fn parse_args() -> Result<Args> {
         machine: None,
         port_base: 29500,
         inproc: false,
+        chaos: ChaosMode::Off,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -115,10 +158,14 @@ fn parse_args() -> Result<Args> {
                 args.port_base = v.parse().context("--port-base")?;
             }
             "--inproc" => args.inproc = true,
+            "--chaos" => args.chaos = ChaosMode::Tolerate,
+            "--chaos-exit" => args.chaos = ChaosMode::Exit,
+            "--chaos-resume" => args.chaos = ChaosMode::Resume,
             flag if flag.starts_with("--") => {
                 bail!(
                     "unknown flag {flag}; usage: launch [config.cfg] \
-                     [--machine M --port-base P | --inproc]"
+                     [--machine M --port-base P \
+                     [--chaos|--chaos-exit|--chaos-resume] | --inproc]"
                 );
             }
             path => args.config = Some(path.to_string()),
@@ -127,6 +174,10 @@ fn parse_args() -> Result<Args> {
     ensure!(
         args.machine.is_none() || !args.inproc,
         "--machine and --inproc are mutually exclusive"
+    );
+    ensure!(
+        args.chaos == ChaosMode::Off || !args.inproc,
+        "chaos flags are for the multi-process TCP backend"
     );
     Ok(args)
 }
@@ -240,6 +291,127 @@ fn hash_params(params: &[Vec<f32>]) -> u64 {
     h
 }
 
+/// One rank's epoch: drain the loader once, hashing the batch stream
+/// and stepping + all-reducing every batch. Shared by the live epoch
+/// loop and the `--chaos-resume` epoch-0 replay so the two produce
+/// bit-identical state.
+#[allow(clippy::too_many_arguments)]
+fn rank_epoch(
+    loader: &mut DistNodeDataLoader,
+    p: &mut Participant,
+    prm: &mut [Vec<f32>],
+    curve: &mut Vec<f32>,
+    hash: &mut u64,
+    fd: usize,
+    nc: usize,
+    lr: f32,
+) -> Result<()> {
+    for batch in &mut *loader {
+        let (input_nodes, seeds, _blocks) = batch.unpack();
+        for &n in input_nodes {
+            fnv1a(hash, n as u64);
+        }
+        for &n in seeds {
+            fnv1a(hash, n as u64);
+        }
+        let loss = surrogate_step(prm, &batch, fd, nc, lr);
+        p.allreduce_params(prm)
+            .map_err(|e| anyhow::anyhow!("all-reduce: {e}"))?;
+        curve.push(loss);
+    }
+    Ok(())
+}
+
+/// `--chaos-resume` state recovery: replay epoch 0 for the WHOLE world
+/// over a fresh in-process ring. Batch composition is pure in
+/// (seed, epoch, batch index) and the in-process and TCP backends are
+/// byte-identical, so this reproduces exactly the params, loss curve,
+/// and stream hashes the victim held when it died — without touching
+/// the wire the survivors are currently training epoch 1 on. Returns
+/// (loaders, params, losses, hashes) for `ranks` only, with the
+/// loaders re-armed for epoch 1.
+type RankState =
+    (Vec<DistNodeDataLoader>, Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>, Vec<u64>);
+
+fn replay_epoch0(
+    cluster: &Cluster,
+    cfg: &RunConfig,
+    vspec: &VariantSpec,
+    layout: &Layout,
+    ranks: &[usize],
+) -> Result<RankState> {
+    let per = cfg.cluster.trainers_per_machine;
+    let world = layout.world;
+    let endpoint_machine: Vec<u32> = (0..layout.n_endpoints())
+        .map(|e| layout.proc_of(e, per) as u32)
+        .collect();
+    let transport = Transport::with_mapping(
+        endpoint_machine,
+        Arc::new(CostModel::default()),
+    );
+    let group = AllReduceGroup::from_transport(transport, world);
+    let graph = DistGraph::new(cluster);
+    let (fd, nc) = (vspec.feat_dim, vspec.num_classes);
+    let mut loaders = Vec::with_capacity(world);
+    let mut participants = Vec::with_capacity(world);
+    for r in 0..world {
+        loaders.push(
+            DistNodeDataLoader::builder(&graph, vspec)
+                .rank(r)
+                .seeds(Seeds::Train)
+                .seed(cfg.train.seed ^ ((r as u64) << 17))
+                .build()?,
+        );
+        participants.push(group.endpoint(r).map_err(|e| {
+            anyhow::anyhow!("claiming replay ring rank {r}: {e}")
+        })?);
+    }
+    let mut params: Vec<Vec<Vec<f32>>> = (0..world)
+        .map(|_| vec![vec![0.0f32; fd * nc], vec![0.0f32; nc]])
+        .collect();
+    let mut losses: Vec<Vec<f32>> = vec![Vec::new(); world];
+    let mut hashes: Vec<u64> = vec![0xcbf2_9ce4_8422_2325u64; world];
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (((loader, p), prm), (curve, hash)) in loaders
+            .iter_mut()
+            .zip(participants.iter_mut())
+            .zip(params.iter_mut())
+            .zip(losses.iter_mut().zip(hashes.iter_mut()))
+        {
+            handles.push(s.spawn(move || {
+                rank_epoch(
+                    loader,
+                    p,
+                    prm,
+                    curve,
+                    hash,
+                    fd,
+                    nc,
+                    cfg.train.lr,
+                )
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replay thread panicked"))
+            .collect::<Result<Vec<()>>>()
+    })?;
+    // keep only this machine's ranks
+    let (lo, n) = (ranks[0], ranks.len());
+    fn window<T>(mut v: Vec<T>, lo: usize, n: usize) -> Vec<T> {
+        v.drain(..lo);
+        v.truncate(n);
+        v
+    }
+    Ok((
+        window(loaders, lo, n),
+        window(params, lo, n),
+        window(losses, lo, n),
+        window(hashes, lo, n),
+    ))
+}
+
 struct MachineResult {
     machine: usize,
     /// Per local rank: (rank, batch-stream hash).
@@ -281,9 +453,11 @@ fn run_machine(
     vspec: &VariantSpec,
     layout: &Layout,
     m: usize,
+    chaos: ChaosMode,
 ) -> Result<MachineResult> {
     let per = cfg.cluster.trainers_per_machine;
     let n_mach = layout.n_mach;
+    let resume = chaos == ChaosMode::Resume;
 
     // data plane: serve this machine's KVStore shard over the wire
     let running = Arc::new(AtomicBool::new(true));
@@ -293,13 +467,24 @@ fn run_machine(
         running.clone(),
     );
 
-    // control plane: join the rendezvous (machine id = our preference)
-    let mut rdv = RendezvousClient::join(
-        transport.endpoint(layout.control(m)),
-        layout.server(),
-        Some(m as u32),
-        Duration::from_secs(60),
-    )?;
+    // control plane: join the rendezvous (machine id = our
+    // preference); a restarted victim reclaims its previous id
+    // instead — a plain Hello would collide with the reserved one
+    let mut rdv = if resume {
+        RendezvousClient::rejoin(
+            transport.endpoint(layout.control(m)),
+            layout.server(),
+            m as u32,
+            Duration::from_secs(60),
+        )?
+    } else {
+        RendezvousClient::join(
+            transport.endpoint(layout.control(m)),
+            layout.server(),
+            Some(m as u32),
+            Duration::from_secs(60),
+        )?
+    };
     ensure!(
         rdv.machine() as usize == m,
         "rendezvous assigned machine {} to process {m}",
@@ -309,18 +494,62 @@ fn run_machine(
     ensure!(ranks == (m * per..(m + 1) * per).collect::<Vec<_>>());
 
     // start barrier: every process deployed + serving before anyone
-    // pulls
-    match rdv.barrier_all(&ranks).map_err(anyhow::Error::from)? {
-        Decision::Continue => {}
-        Decision::Reconfigure(v) => {
-            bail!("membership changed before training started: {v:?}")
+    // pulls. A resumed victim already crossed it in its first life —
+    // arriving again would desync the per-epoch barrier rounds.
+    if !resume {
+        match rdv.barrier_all(&ranks).map_err(anyhow::Error::from)? {
+            Decision::Continue => {}
+            Decision::Reconfigure(v) => {
+                bail!(
+                    "membership changed before training started: {v:?}"
+                )
+            }
         }
     }
 
-    // cross-process data-plane check: pull label rows from the next
-    // machine's server over real RPC and compare against our replica
     let peer = (m + 1) % n_mach;
-    if n_mach > 1 {
+    if resume {
+        // restart re-import (docs/DESIGN.md §12): pull this machine's
+        // primary shards back from the standby's replica tables over
+        // real RPC. The launcher's KV data is static, so the
+        // deterministic redeploy must agree byte for byte — the
+        // re-import doubles as a cross-check of the replica plane.
+        let mut rpc =
+            RpcClient::new(transport.endpoint(layout.kv_client(m)));
+        let (mut tables, mut bytes) = (0usize, 0usize);
+        for (name, dim, local) in cluster.kv.servers[m].export_shards()
+        {
+            if parse_replica_table(&name).is_some() {
+                continue; // our copy of the previous machine's backup
+            }
+            let n_local = local.len() / dim.max(1);
+            let locals: Vec<u32> = (0..n_local as u32).collect();
+            let backup = replica_table(m as u32, &name);
+            let mut rows = Vec::with_capacity(local.len());
+            for chunk in locals.chunks(1024) {
+                let (rdim, part) = rpc
+                    .kv_pull(layout.kv_serve(peer), &backup, chunk)
+                    .map_err(anyhow::Error::from)?;
+                ensure!(rdim == dim, "replica {backup} dim mismatch");
+                rows.extend_from_slice(&part);
+            }
+            ensure!(
+                rows == local,
+                "replica re-import of {name} from machine {peer} \
+                 disagrees with the deterministic redeploy"
+            );
+            bytes += rows.len() * 4;
+            tables += 1;
+            cluster.kv.servers[m].import_shard(&name, dim, rows);
+        }
+        println!(
+            "CHAOS_REIMPORT m={m} standby={peer} tables={tables} \
+             bytes={bytes}"
+        );
+    } else if n_mach > 1 {
+        // cross-process data-plane check: pull label rows from the
+        // next machine's server over real RPC and compare against our
+        // replica
         let mut rpc =
             RpcClient::new(transport.endpoint(layout.kv_client(m)));
         let locals: Vec<u32> = (0..4).collect();
@@ -338,36 +567,77 @@ fn run_machine(
         println!("KV_CROSSCHECK m={m} peer={peer} rows={} ok", dim * 4);
     }
 
-    // the unmodified loader path: one DistNodeDataLoader per local rank
+    // the unmodified loader path: one DistNodeDataLoader per local
+    // rank. A resumed victim recovers its epoch-0 state by replaying
+    // the whole world locally; its loaders come back re-armed for
+    // epoch 1.
     let graph = DistGraph::new(cluster);
     let fd = vspec.feat_dim;
     let nc = vspec.num_classes;
-    let mut loaders: Vec<DistNodeDataLoader> = Vec::new();
-    for &r in &ranks {
-        loaders.push(
-            DistNodeDataLoader::builder(&graph, vspec)
-                .rank(r)
-                .seeds(Seeds::Train)
-                .seed(cfg.train.seed ^ ((r as u64) << 17))
-                .build()?,
+    let (mut loaders, mut params, mut losses, mut hashes) = if resume {
+        let state = replay_epoch0(cluster, cfg, vspec, layout, &ranks)?;
+        println!(
+            "CHAOS_REPLAY m={m} epoch=0 steps={}",
+            state.2[0].len()
         );
-    }
+        state
+    } else {
+        let mut loaders: Vec<DistNodeDataLoader> = Vec::new();
+        for &r in &ranks {
+            loaders.push(
+                DistNodeDataLoader::builder(&graph, vspec)
+                    .rank(r)
+                    .seeds(Seeds::Train)
+                    .seed(cfg.train.seed ^ ((r as u64) << 17))
+                    .build()?,
+            );
+        }
+        (
+            loaders,
+            ranks
+                .iter()
+                .map(|_| vec![vec![0.0f32; fd * nc], vec![0.0f32; nc]])
+                .collect(),
+            ranks.iter().map(|_| Vec::new()).collect(),
+            ranks.iter().map(|_| 0xcbf2_9ce4_8422_2325u64).collect(),
+        )
+    };
     let mut participants = Vec::new();
     for &r in &ranks {
         participants.push(group.endpoint(r).map_err(|e| {
             anyhow::anyhow!("claiming ring rank {r}: {e}")
         })?);
     }
-    let mut params: Vec<Vec<Vec<f32>>> = ranks
-        .iter()
-        .map(|_| vec![vec![0.0f32; fd * nc], vec![0.0f32; nc]])
-        .collect();
-    let mut losses: Vec<Vec<f32>> =
-        ranks.iter().map(|_| Vec::new()).collect();
-    let mut hashes: Vec<u64> =
-        ranks.iter().map(|_| 0xcbf2_9ce4_8422_2325u64).collect();
+    for (p, curve) in participants.iter_mut().zip(&losses) {
+        if chaos != ChaosMode::Off {
+            // a kill + restart must read as latency, not peer death
+            p.recv_timeout = Duration::from_secs(180);
+        }
+        if resume {
+            // line the ring-frame tags back up with the rounds the
+            // survivors are on (one all-reduce per replayed step)
+            p.set_seq(curve.len() as u64);
+        }
+    }
 
-    for epoch in 0..cfg.train.epochs {
+    if resume {
+        // the victim died between epoch-0 training and the epoch-0
+        // barrier, so the survivors are parked inside that barrier
+        // right now (no ring frames in flight — the synchronization
+        // that makes the kill window safe). Arrive and release them.
+        for &r in &ranks {
+            rdv.heartbeat(r, 0.0).map_err(anyhow::Error::from)?;
+        }
+        match rdv.barrier_all(&ranks).map_err(anyhow::Error::from)? {
+            Decision::Continue => {}
+            Decision::Reconfigure(v) => {
+                bail!("membership shrank during the restart: {v:?}")
+            }
+        }
+    }
+
+    let start_epoch = usize::from(resume);
+    for epoch in start_epoch..cfg.train.epochs {
         let t_epoch = std::time::Instant::now();
         // local ranks train concurrently; the ring syncs every step
         // across ALL processes, so global steps stay aligned
@@ -379,29 +649,17 @@ fn run_machine(
                 .zip(params.iter_mut())
                 .zip(losses.iter_mut().zip(hashes.iter_mut()))
             {
-                handles.push(s.spawn(move || -> Result<()> {
-                    for batch in &mut *loader {
-                        let (input_nodes, seeds, _blocks) =
-                            batch.unpack();
-                        for &n in input_nodes {
-                            fnv1a(hash, n as u64);
-                        }
-                        for &n in seeds {
-                            fnv1a(hash, n as u64);
-                        }
-                        let loss = surrogate_step(
-                            prm,
-                            &batch,
-                            fd,
-                            nc,
-                            cfg.train.lr,
-                        );
-                        p.allreduce_params(prm).map_err(|e| {
-                            anyhow::anyhow!("all-reduce: {e}")
-                        })?;
-                        curve.push(loss);
-                    }
-                    Ok(())
+                handles.push(s.spawn(move || {
+                    rank_epoch(
+                        loader,
+                        p,
+                        prm,
+                        curve,
+                        hash,
+                        fd,
+                        nc,
+                        cfg.train.lr,
+                    )
                 }));
             }
             handles
@@ -409,6 +667,19 @@ fn run_machine(
                 .map(|h| h.join().expect("trainer thread panicked"))
                 .collect::<Result<Vec<()>>>()
         })?;
+        if chaos == ChaosMode::Exit && epoch == 0 {
+            // die abruptly BEFORE the epoch-0 barrier: epoch 0's ring
+            // all-reduces are synchronous, so every trainer frame has
+            // been consumed, and the survivors will park inside the
+            // barrier until the restarted process (--chaos-resume)
+            // arrives in our place — no frame can be lost into a dead
+            // socket. No shutdown goodbye, no KV drain: the listener,
+            // shard, and ring endpoints vanish mid-cluster.
+            println!("CHAOS_EXIT m={m} epoch={epoch}");
+            use std::io::Write as _;
+            std::io::stdout().flush().ok();
+            std::process::exit(0);
+        }
         // epoch boundary over the wire: heartbeats + barrier
         let secs = t_epoch.elapsed().as_secs_f64();
         for &r in &ranks {
@@ -469,11 +740,38 @@ fn main() -> Result<()> {
         ensure!(m < n_mach, "--machine {m} >= machines {n_mach}");
     }
 
+    if args.chaos != ChaosMode::Off {
+        ensure!(n_mach >= 2, "chaos needs at least 2 machines");
+    }
+    if matches!(args.chaos, ChaosMode::Exit | ChaosMode::Resume) {
+        let m = args.machine.context("chaos victim needs --machine")?;
+        ensure!(
+            m != 0,
+            "machine 0 hosts the rendezvous server and cannot be the \
+             chaos victim"
+        );
+        ensure!(
+            cfg.train.epochs >= 2,
+            "a kill-and-restart run needs at least 2 epochs"
+        );
+        ensure!(
+            cfg.cluster.replicate_kv,
+            "chaos restart needs replicate_kv=1 (the shard is \
+             re-imported from its standby's replica tables)"
+        );
+    }
+
     println!(
         "launch: {n_mach} machines x {per} trainers, {} epochs, \
-         backend={}",
+         backend={}{}",
         cfg.train.epochs,
         if args.inproc { "in-process" } else { "tcp" },
+        match args.chaos {
+            ChaosMode::Off => "",
+            ChaosMode::Tolerate => ", chaos=tolerate",
+            ChaosMode::Exit => ", chaos=exit",
+            ChaosMode::Resume => ", chaos=resume",
+        },
     );
 
     // deterministic replicated deployment: every process builds the
@@ -520,8 +818,14 @@ fn main() -> Result<()> {
                 let (cfg, vspec, layout) = (&cfg, &vspec, &layout);
                 handles.push(s.spawn(move || {
                     run_machine(
-                        cluster, transport, group, cfg, vspec, layout,
+                        cluster,
+                        transport,
+                        group,
+                        cfg,
+                        vspec,
+                        layout,
                         m,
+                        ChaosMode::Off,
                     )
                 }));
             }
@@ -559,7 +863,14 @@ fn main() -> Result<()> {
             std::thread::spawn(move || server.run())
         });
         results.push(run_machine(
-            &cluster, &transport, &group, &cfg, &vspec, &layout, m,
+            &cluster,
+            &transport,
+            &group,
+            &cfg,
+            &vspec,
+            &layout,
+            m,
+            args.chaos,
         )?);
         if let Some(h) = server_thread {
             let boundaries =

@@ -1,0 +1,249 @@
+//! Failover bench (docs/PERF.md §Failover): fault scenario ×
+//! replication grid. Each scenario injects a KV-server fault through
+//! the cluster's `FaultPlan` and measures what replication buys:
+//! with `replicate_kv` on, a permanently dead server fails over to its
+//! standby replica and the run completes with a loss curve and final
+//! params byte-identical to the fault-free baseline; with replication
+//! off the same injection surfaces as the typed `ServerDown` drain.
+//! The kill+rejoin scenario additionally restarts the dead server,
+//! re-imports its shards from the standby, and re-runs to show the
+//! primary serves again. t_failover is decomposed into detect (retry
+//! budget burned on the dead primary), reroute (standby admission),
+//! and re-import (shard copy-back on rejoin) from the `ReplicaSet`
+//! timers. Emits `BENCH_failover.json`. Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use distdglv2::cluster::{Cluster, ClusterSpec};
+use distdglv2::ft::{FailWindow, FaultPlan};
+use distdglv2::graph::{Dataset, DatasetSpec};
+use distdglv2::pipeline::PipelineMode;
+use distdglv2::runtime::manifest::artifacts_dir;
+use distdglv2::trainer::{self, TrainConfig};
+
+const STEPS: usize = 12;
+const MACHINES: usize = 2;
+/// Call-counter slot the injected outage opens at: a few healthy
+/// remote pulls first, so detection happens mid-run, not at deploy.
+const FAIL_AT: u64 = 4;
+
+fn deploy(dataset: &Dataset, replicate: bool) -> anyhow::Result<Cluster> {
+    let mut spec = ClusterSpec::new(MACHINES, 1);
+    spec.replicate_kv = replicate;
+    Cluster::deploy(dataset, spec, artifacts_dir())
+}
+
+fn cfg() -> TrainConfig {
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        lr: 0.3,
+        epochs: 1,
+        max_steps: STEPS,
+        seed: 41,
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::Sync;
+    cfg
+}
+
+/// The injected fault, or None for the fault-free scenario.
+fn plan_for(scenario: &str) -> Option<FaultPlan> {
+    let mut plan = FaultPlan::new();
+    plan.backoff = std::time::Duration::ZERO;
+    match scenario {
+        "no_fault" => return None,
+        // two refusals then recovery: the retry budget absorbs it on
+        // its own, so replication must NOT fail over
+        "transient_outage" => {
+            plan.kv_outages.push(FailWindow::transient(0, FAIL_AT, 2))
+        }
+        // the server never comes back: failover or typed drain
+        "permanent_loss" | "kill_and_rejoin" => {
+            plan.kv_outages.push(FailWindow::permanent(0, FAIL_AT))
+        }
+        other => unreachable!("scenario {other}"),
+    }
+    Some(plan)
+}
+
+struct Row {
+    scenario: &'static str,
+    replicate: bool,
+    completed: bool,
+    identical: bool,
+    error: String,
+    wall_secs: f64,
+    failovers: u64,
+    rejoins: u64,
+    replica_bytes: u64,
+    detect_secs: f64,
+    reroute_secs: f64,
+    reimport_secs: f64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "    {{\"scenario\": \"{}\", \"replicate\": {}, \
+             \"completed\": {}, \"identical\": {}, \
+             \"error\": \"{}\", \"wall_secs\": {:.6}, \
+             \"failovers\": {}, \"rejoins\": {}, \
+             \"replica_bytes\": {}, \"detect_secs\": {:.6}, \
+             \"reroute_secs\": {:.6}, \"reimport_secs\": {:.6}}}",
+            self.scenario,
+            self.replicate,
+            self.completed,
+            self.identical,
+            self.error.replace('"', "'"),
+            self.wall_secs,
+            self.failovers,
+            self.rejoins,
+            self.replica_bytes,
+            self.detect_secs,
+            self.reroute_secs,
+            self.reimport_secs,
+        )
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut dspec = DatasetSpec::new("failover-bench", 6000, 30_000);
+    dspec.seed = 43;
+    let dataset = dspec.generate();
+    let cfg = cfg();
+
+    // the stream every completed cell must reproduce exactly
+    let t = Instant::now();
+    let baseline = trainer::train(&deploy(&dataset, false)?, &cfg)?;
+    let base_secs = t.elapsed().as_secs_f64();
+    println!("baseline: {STEPS} steps in {base_secs:.3}s (no faults)");
+
+    println!("\n=== failover grid (scenario x replication) ===");
+    println!(
+        "{:<17} {:>5} {:>5} {:>5} {:>9} {:>9} {:>9}",
+        "scenario", "repl", "done", "ident", "detect", "reroute",
+        "reimport"
+    );
+    let scenarios =
+        ["no_fault", "transient_outage", "permanent_loss",
+         "kill_and_rejoin"];
+    let mut rows: Vec<Row> = Vec::new();
+    for scenario in scenarios {
+        for replicate in [false, true] {
+            if scenario == "kill_and_rejoin" && !replicate {
+                // rejoin needs a replica to re-import from; the
+                // unreplicated half of this scenario is
+                // permanent_loss, already covered
+                continue;
+            }
+            let cluster = deploy(&dataset, replicate)?;
+            if let Some(plan) = plan_for(scenario) {
+                cluster.set_fault_plan(Arc::new(plan));
+            }
+            let t = Instant::now();
+            let outcome = trainer::train(&cluster, &cfg);
+            let wall_secs = t.elapsed().as_secs_f64();
+            let (completed, identical, error) = match &outcome {
+                Ok(rep) => {
+                    let same = rep.loss_curve == baseline.loss_curve
+                        && rep.final_params == baseline.final_params;
+                    assert!(
+                        same,
+                        "{scenario} (replicate={replicate}) completed \
+                         but diverged from the fault-free baseline"
+                    );
+                    (true, same, String::new())
+                }
+                Err(e) => (false, false, format!("{e:#}")),
+            };
+            // a permanent loss must complete iff replicated
+            if scenario == "permanent_loss"
+                || scenario == "kill_and_rejoin"
+            {
+                assert_eq!(
+                    completed, replicate,
+                    "{scenario}: completed={completed} with \
+                     replicate={replicate}"
+                );
+            } else {
+                assert!(completed, "{scenario} failed: {error}");
+            }
+
+            let rs = cluster.kv.replica_set();
+            let mut rejoins = 0u64;
+            let mut reimport_secs = 0.0f64;
+            if scenario == "kill_and_rejoin" && replicate {
+                // restart: heal the plan, re-import the dead server's
+                // shards from its standby, and prove the primary
+                // serves again by re-running the whole stream
+                cluster.set_fault_plan(Arc::new(FaultPlan::new()));
+                let bytes = cluster.kv.rejoin_server(0);
+                assert!(bytes > 0, "rejoin re-imported nothing");
+                let again = trainer::train(&cluster, &cfg)?;
+                assert_eq!(
+                    again.loss_curve, baseline.loss_curve,
+                    "post-rejoin run diverged"
+                );
+                let rs = rs.as_ref().unwrap();
+                rejoins = rs.rejoins();
+                reimport_secs = rs.reimport_time().as_secs_f64();
+            }
+            let (failovers, replica_bytes, detect_secs, reroute_secs) =
+                match &rs {
+                    Some(rs) => (
+                        rs.failovers(),
+                        rs.replica_bytes(),
+                        rs.detect_time().as_secs_f64(),
+                        rs.reroute_time().as_secs_f64(),
+                    ),
+                    None => (0, 0, 0.0, 0.0),
+                };
+            if replicate {
+                let expect = matches!(
+                    scenario,
+                    "permanent_loss" | "kill_and_rejoin"
+                ) as u64;
+                assert_eq!(
+                    failovers, expect,
+                    "{scenario}: failovers={failovers}"
+                );
+            }
+            println!(
+                "{:<17} {:>5} {:>5} {:>5} {:>9.6} {:>9.6} {:>9.6}",
+                scenario, replicate, completed, identical, detect_secs,
+                reroute_secs, reimport_secs,
+            );
+            rows.push(Row {
+                scenario,
+                replicate,
+                completed,
+                identical,
+                error,
+                wall_secs,
+                failovers,
+                rejoins,
+                replica_bytes,
+                detect_secs,
+                reroute_secs,
+                reimport_secs,
+            });
+        }
+    }
+
+    let json_rows: Vec<String> = rows.iter().map(Row::json).collect();
+    std::fs::write(
+        "BENCH_failover.json",
+        format!(
+            "{{\n  \"bench\": \"failover\",\n  \
+             \"steps\": {STEPS},\n  \
+             \"machines\": {MACHINES},\n  \
+             \"fail_at\": {FAIL_AT},\n  \
+             \"baseline_secs\": {base_secs:.6},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n"),
+        ),
+    )?;
+    println!("\nwrote BENCH_failover.json");
+    Ok(())
+}

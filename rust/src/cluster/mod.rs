@@ -72,6 +72,12 @@ pub struct ClusterSpec {
     /// is split proportionally; see [`FanoutPlan`]). Empty = use the
     /// schema weights; must have one entry per etype otherwise.
     pub etype_fanouts: Vec<usize>,
+    /// Primary/backup KV shard replication (docs/DESIGN.md §12): deploy
+    /// materializes each machine's shards on its ring neighbor, embedding
+    /// updates write through to both copies, and pulls fail over
+    /// transparently when a server dies. Off by default — a dead server
+    /// then surfaces as the §8 typed error instead (`replicate_kv` key).
+    pub replicate_kv: bool,
     pub seed: u64,
 }
 
@@ -91,6 +97,7 @@ impl ClusterSpec {
             prefetch_depth: 0,
             embedding_staleness: 0,
             etype_fanouts: Vec::new(),
+            replicate_kv: false,
             seed: 13,
         }
     }
@@ -243,6 +250,10 @@ impl Cluster {
         let labels_f32: Vec<f32> =
             d2.labels.iter().map(|&l| l as f32).collect();
         kv.register_partitioned("label", &labels_f32, 1, policy.as_ref());
+        if spec.replicate_kv {
+            // after registration, so every table gets a backup copy
+            kv.enable_replication();
+        }
         let load_secs = t_load.elapsed().as_secs_f64();
 
         // training-set split (§5.6.1): derived from the full membership

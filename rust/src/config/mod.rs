@@ -114,6 +114,12 @@ impl RunConfig {
             "embedding_staleness" => {
                 self.cluster.embedding_staleness = parse_usize()?
             }
+            // primary/backup KV shard replication with transparent
+            // failover (docs/DESIGN.md §12); off = a dead server is the
+            // §8 typed error
+            "replicate_kv" => {
+                self.cluster.replicate_kv = parse_bool(value)?
+            }
             "etype_fanouts" => {
                 // per-etype fanout weights, e.g. "2,1,1,1"; each layer's
                 // K is split proportionally (schema weights when unset)
@@ -228,7 +234,8 @@ impl RunConfig {
                  multi_constraint two_level emulate_network \
                  concurrent_rpc cache_budget_bytes cache_admission \
                  cache_shards prefetch_depth embedding_staleness \
-                 etype_fanouts variant lr epochs max_steps drop_last eval \
+                 replicate_kv etype_fanouts variant lr epochs max_steps \
+                 drop_last eval \
                  seed pipeline cpu_prefetch gpu_prefetch num_workers \
                  checkpoint_every checkpoint_dir resume_from momentum \
                  checkpoint_keep elastic demote_stragglers \
@@ -418,6 +425,19 @@ mod tests {
         .is_err());
         // default: no override (schema weights apply)
         assert!(RunConfig::default().cluster.etype_fanouts.is_empty());
+    }
+
+    #[test]
+    fn replicate_kv_parses_and_defaults_off() {
+        assert!(!RunConfig::default().cluster.replicate_kv);
+        let cfg =
+            RunConfig::from_args(["replicate_kv=true".to_string()])
+                .unwrap();
+        assert!(cfg.cluster.replicate_kv);
+        assert!(
+            RunConfig::from_args(["replicate_kv=maybe".to_string()])
+                .is_err()
+        );
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //!
 //! Protocol (client → server unless noted):
 //!   `Hello{preferred}` → `Welcome{machine, view}` — join + id assignment
+//!   `Rejoin{machine}` → `Welcome{machine, view}` — a restarted process
+//!       reclaims its previous id (docs/DESIGN.md §12); plain `Hello`
+//!       would collide with the used-id set and get a fresh id
 //!   `BarrierArrive{rank}` → `DecisionMsg(..)` — held until the round
 //!       completes (all ranks arrived or were reaped), then answered
 //!       all-at-once with the same decision
@@ -124,6 +127,18 @@ impl RendezvousServer {
                         &CoordMsg::Welcome { machine, view: self.co.view() },
                     );
                 }
+                CoordMsg::Rejoin { machine } => {
+                    // restart/rejoin: the id stays reserved for its
+                    // owner, so reclaiming is just re-welcoming; the
+                    // restarted process owes a fresh Shutdown goodbye
+                    used_ids.insert(machine);
+                    byes.remove(&msg.from);
+                    self.reply(
+                        msg.from,
+                        msg.tag,
+                        &CoordMsg::Welcome { machine, view: self.co.view() },
+                    );
+                }
                 CoordMsg::BarrierArrive { rank } => {
                     pending.push((msg.from, msg.tag));
                     if let Some(d) = self.co.arrive(rank as usize) {
@@ -202,6 +217,38 @@ impl RendezvousClient {
         match c.await_reply(&[tag], timeout)? {
             CoordMsg::Welcome { machine, view } => {
                 c.machine = machine;
+                c.view = view;
+                Ok(c)
+            }
+            other => Err(RpcError::ConnectionLost {
+                peer: server,
+                detail: format!("expected Welcome, got {other:?}"),
+            }),
+        }
+    }
+
+    /// Restart path (docs/DESIGN.md §12): reclaim `machine` after a
+    /// process restart. A plain [`Self::join`] cannot — the id sits in
+    /// the server's used set, so the fallback would hand out a fresh
+    /// one and the world would believe a new machine appeared.
+    pub fn rejoin(
+        ep: Endpoint,
+        server: u32,
+        machine: u32,
+        timeout: Duration,
+    ) -> Result<Self, RpcError> {
+        let mut c = Self {
+            ep,
+            server,
+            machine,
+            view: MembershipView::initial(0, 1),
+            next_tag: 1,
+            decision_timeout: Duration::from_secs(600),
+        };
+        let tag = c.send(&CoordMsg::Rejoin { machine })?;
+        match c.await_reply(&[tag], timeout)? {
+            CoordMsg::Welcome { machine: m, view } => {
+                c.machine = m;
                 c.view = view;
                 Ok(c)
             }
@@ -488,6 +535,31 @@ mod tests {
         .unwrap();
         assert_eq!(c0.machine(), 0, "collision falls back to next free");
         c0.shutdown().unwrap();
+        c1.shutdown().unwrap();
+        sh.join().unwrap();
+    }
+
+    #[test]
+    fn rejoin_reclaims_the_previous_machine_id() {
+        let t = Transport::new(3, CostModel::default());
+        let server = RendezvousServer::new(
+            t.endpoint(2),
+            MembershipView::initial(2, 1),
+            CoordinatorConfig::default(),
+            2,
+        );
+        let sh = std::thread::spawn(move || server.run());
+        let mut c1 =
+            RendezvousClient::join(t.endpoint(0), 2, Some(1), JOIN_T)
+                .unwrap();
+        assert_eq!(c1.machine(), 1);
+        // the "restarted" process: a plain Hello for the taken id would
+        // fall back to a fresh id, Rejoin asserts the identity instead
+        let mut again =
+            RendezvousClient::rejoin(t.endpoint(1), 2, 1, JOIN_T).unwrap();
+        assert_eq!(again.machine(), 1, "rejoin reclaims the taken id");
+        assert_eq!(again.view().machines, vec![0, 1]);
+        again.shutdown().unwrap();
         c1.shutdown().unwrap();
         sh.join().unwrap();
     }

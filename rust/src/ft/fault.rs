@@ -2,18 +2,29 @@
 //!
 //! A [`FaultPlan`] is an immutable description of the faults a run must
 //! survive: KV/sampler server outages (by request index), transport
-//! message drops and delays, and bounded retry/backoff policy. The plan
-//! is shared (`Arc`) by every client it is installed on and keeps its
-//! own atomic call counters, so an outage window like "requests 10..13
-//! to machine 1 fail" is *transient*: each retry advances the counter
-//! and eventually escapes the window, while `count = u64::MAX` models a
-//! machine that never comes back and exhausts the retry budget into
+//! message drops, delays, asymmetric partitions and connection kills,
+//! and bounded retry/backoff policy. The plan is shared (`Arc`) by
+//! every client it is installed on and keeps its own atomic call
+//! counters, so an outage window like "requests 10..13 to machine 1
+//! fail" is *transient*: each retry advances the counter and eventually
+//! escapes the window, while `count = u64::MAX` models a machine that
+//! never comes back and exhausts the retry budget into
 //! [`RpcError::ServerDown`].
+//!
+//! The window check itself ([`FaultPlan::inject`]) is shared by both
+//! wire backends: the in-process admission loop (`admit_kv`) and the
+//! real-socket `RpcClient` gate every attempt through the same counters,
+//! so one plan reproduces identical injected-failure totals whichever
+//! transport carries the run (regression-tested in `net::rpc`). The
+//! message-level verdicts ([`FaultPlan::message_verdict`]) likewise
+//! drive both the in-process fabric and the TCP chaos hook in
+//! `net::tcp`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::metrics::Metrics;
+use crate::net::retry::{with_retry, RetryPolicy};
 use crate::net::RpcError;
 
 /// One injected outage: `machine` fails every request whose per-plan
@@ -44,6 +55,21 @@ impl FailWindow {
     }
 }
 
+/// What the transport must do with one cross-machine message (the
+/// chaos verdict both backends obey).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MessageVerdict {
+    /// Deliver normally.
+    Deliver,
+    /// Lost on the wire: never delivered, never metered.
+    Drop,
+    /// Deliver, then kill the underlying connection to the destination
+    /// (a reset the next send must transparently re-dial through). The
+    /// in-process fabric has no connections, so it delivers and only
+    /// counts the kill — the counter totals stay backend-identical.
+    DeliverThenKillConn,
+}
+
 /// Injected-fault schedule + retry policy, shared by every RPC client
 /// it is installed on (`Cluster::set_fault_plan`).
 #[derive(Debug)]
@@ -56,6 +82,14 @@ pub struct FaultPlan {
     pub drop_every: u64,
     /// Added latency per transport message (straggler link).
     pub delay: Duration,
+    /// Kill the sender's connection after every Nth cross-machine
+    /// message (0 = never). Only a real wire has connections to kill;
+    /// see [`MessageVerdict::DeliverThenKillConn`].
+    pub kill_conn_every: u64,
+    /// Asymmetric partitions: every message from machine `.0` to
+    /// machine `.1` is dropped (the reverse direction still flows
+    /// unless listed separately).
+    pub partitions: Vec<(u32, u32)>,
     /// Per-machine *compute* slowdown: every train step taken by a
     /// trainer on `machine` sleeps this long (an oversubscribed or
     /// thermally-throttled host). Unlike `delay`/CostModel link
@@ -76,6 +110,7 @@ pub struct FaultPlan {
     sampler_failures: AtomicU64,
     dropped_msgs: AtomicU64,
     delayed_msgs: AtomicU64,
+    killed_conns: AtomicU64,
     straggler_steps: AtomicU64,
 }
 
@@ -95,9 +130,11 @@ impl FaultPlan {
             sampler_outages: Vec::new(),
             drop_every: 0,
             delay: Duration::ZERO,
+            kill_conn_every: 0,
+            partitions: Vec::new(),
             step_slowdowns: Vec::new(),
-            max_retries: 3,
-            backoff: Duration::from_millis(1),
+            max_retries: RetryPolicy::in_process().max_retries,
+            backoff: RetryPolicy::in_process().backoff,
             kv_calls: AtomicU64::new(0),
             sampler_calls: AtomicU64::new(0),
             msg_calls: AtomicU64::new(0),
@@ -106,8 +143,21 @@ impl FaultPlan {
             sampler_failures: AtomicU64::new(0),
             dropped_msgs: AtomicU64::new(0),
             delayed_msgs: AtomicU64::new(0),
+            killed_conns: AtomicU64::new(0),
             straggler_steps: AtomicU64::new(0),
         }
+    }
+
+    /// The plan's retry/backoff knobs as the shared [`RetryPolicy`].
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy::new(self.max_retries, self.backoff)
+    }
+
+    /// The shared retries counter every retry loop (in-process admission
+    /// and the wire `RpcClient`) feeds, so `ft.retries` totals are
+    /// backend-independent.
+    pub(crate) fn retries_counter(&self) -> &AtomicU64 {
+        &self.retries
     }
 
     fn fails(
@@ -125,67 +175,86 @@ impl FaultPlan {
         }
     }
 
+    /// One-shot injected-failure check for a single request attempt to
+    /// `machine` in `role` (`"kv"` or `"sampler"`): advances the same
+    /// call counter the in-process admission loop uses and returns
+    /// `ServerDown` when an outage window covers the attempt. Both wire
+    /// backends gate every attempt through this, which is what makes
+    /// injected-failure totals identical across backends.
+    pub fn inject(
+        &self,
+        role: &'static str,
+        machine: u32,
+    ) -> Result<(), RpcError> {
+        let (windows, calls, failures) = match role {
+            "kv" => (&self.kv_outages, &self.kv_calls, &self.kv_failures),
+            _ => (
+                &self.sampler_outages,
+                &self.sampler_calls,
+                &self.sampler_failures,
+            ),
+        };
+        if Self::fails(windows, calls, failures, machine) {
+            Err(RpcError::ServerDown { machine, role })
+        } else {
+            Ok(())
+        }
+    }
+
     fn admit(
         &self,
-        windows: &[FailWindow],
-        calls: &AtomicU64,
-        failures: &AtomicU64,
-        machine: u32,
         role: &'static str,
+        machine: u32,
     ) -> Result<(), RpcError> {
-        if !Self::fails(windows, calls, failures, machine) {
-            return Ok(());
-        }
-        for _ in 0..self.max_retries {
-            self.retries.fetch_add(1, Ordering::Relaxed);
-            if !self.backoff.is_zero() {
-                std::thread::sleep(self.backoff);
-            }
-            if !Self::fails(windows, calls, failures, machine) {
-                return Ok(());
-            }
-        }
-        Err(RpcError::ServerDown { machine, role })
+        with_retry(&self.retry_policy(), &self.retries, |_| {
+            self.inject(role, machine)
+        })
     }
 
     /// Gate one KVStore request to `machine`: advances the KV call
     /// counter (retries included, so transient windows heal) and
     /// returns `ServerDown` once the retry budget is spent.
     pub fn admit_kv(&self, machine: u32) -> Result<(), RpcError> {
-        self.admit(
-            &self.kv_outages,
-            &self.kv_calls,
-            &self.kv_failures,
-            machine,
-            "kv",
-        )
+        self.admit("kv", machine)
     }
 
     /// Gate one sampler request to `machine` (same contract as
     /// [`Self::admit_kv`] over the sampler call counter).
     pub fn admit_sampler(&self, machine: u32) -> Result<(), RpcError> {
-        self.admit(
-            &self.sampler_outages,
-            &self.sampler_calls,
-            &self.sampler_failures,
-            machine,
-            "sampler",
-        )
+        self.admit("sampler", machine)
     }
 
-    /// Gate one transport message: returns `false` when the message
-    /// must be dropped, sleeping the injected per-message delay first.
-    pub fn admit_message(&self) -> bool {
+    /// Chaos verdict for one cross-machine message from machine `from`
+    /// to machine `to`: sleeps the injected per-message delay, then
+    /// applies (in order) asymmetric partitions, periodic drops, and
+    /// periodic connection kills. Both wire backends route every
+    /// cross-machine send through this.
+    pub fn message_verdict(&self, from: u32, to: u32) -> MessageVerdict {
         let c = self.msg_calls.fetch_add(1, Ordering::Relaxed) + 1;
         if !self.delay.is_zero() {
             self.delayed_msgs.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(self.delay);
         }
+        if self.partitions.iter().any(|&(a, b)| a == from && b == to) {
+            self.dropped_msgs.fetch_add(1, Ordering::Relaxed);
+            return MessageVerdict::Drop;
+        }
         if self.drop_every > 0 && c % self.drop_every == 0 {
             self.dropped_msgs.fetch_add(1, Ordering::Relaxed);
-            return false;
+            return MessageVerdict::Drop;
         }
-        true
+        if self.kill_conn_every > 0 && c % self.kill_conn_every == 0 {
+            self.killed_conns.fetch_add(1, Ordering::Relaxed);
+            return MessageVerdict::DeliverThenKillConn;
+        }
+        MessageVerdict::Deliver
+    }
+
+    /// Gate one transport message without machine context (partitions
+    /// never match): returns `false` when the message must be dropped,
+    /// sleeping the injected per-message delay first.
+    pub fn admit_message(&self) -> bool {
+        self.message_verdict(u32::MAX, u32::MAX) != MessageVerdict::Drop
     }
 
     /// Injected compute slowdown for one train step on `machine`
@@ -229,6 +298,10 @@ impl FaultPlan {
         self.delayed_msgs.load(Ordering::Relaxed)
     }
 
+    pub fn killed_conns(&self) -> u64 {
+        self.killed_conns.load(Ordering::Relaxed)
+    }
+
     /// Export the injection counters as `ft.*` metrics.
     pub fn publish(&self, m: &Metrics) {
         m.inc("ft.retries", self.retries());
@@ -238,6 +311,7 @@ impl FaultPlan {
         );
         m.inc("ft.dropped_msgs", self.dropped_msgs());
         m.inc("ft.delayed_msgs", self.delayed_msgs());
+        m.inc("ft.killed_conns", self.killed_conns());
         m.inc("ft.straggler_steps", self.straggler_steps());
     }
 }
@@ -297,6 +371,52 @@ mod tests {
             (0..9).filter(|_| p.admit_message()).count();
         assert_eq!(delivered, 6);
         assert_eq!(p.dropped_msgs(), 3);
+    }
+
+    #[test]
+    fn asymmetric_partition_drops_one_direction_only() {
+        let mut p = fast(FaultPlan::new());
+        p.partitions = vec![(0, 1)];
+        for _ in 0..4 {
+            assert_eq!(p.message_verdict(0, 1), MessageVerdict::Drop);
+        }
+        assert_eq!(p.message_verdict(1, 0), MessageVerdict::Deliver);
+        assert_eq!(p.message_verdict(0, 2), MessageVerdict::Deliver);
+        assert_eq!(p.dropped_msgs(), 4);
+    }
+
+    #[test]
+    fn kill_conn_every_delivers_then_kills() {
+        let mut p = fast(FaultPlan::new());
+        p.kill_conn_every = 3;
+        let verdicts: Vec<MessageVerdict> =
+            (0..6).map(|_| p.message_verdict(0, 1)).collect();
+        assert_eq!(
+            verdicts,
+            vec![
+                MessageVerdict::Deliver,
+                MessageVerdict::Deliver,
+                MessageVerdict::DeliverThenKillConn,
+                MessageVerdict::Deliver,
+                MessageVerdict::Deliver,
+                MessageVerdict::DeliverThenKillConn,
+            ]
+        );
+        assert_eq!(p.killed_conns(), 2);
+        assert_eq!(p.dropped_msgs(), 0, "killed messages still deliver");
+    }
+
+    #[test]
+    fn inject_is_the_shared_one_shot_window_check() {
+        let mut p = fast(FaultPlan::new());
+        p.kv_outages = vec![FailWindow::transient(1, 0, 2)];
+        // no internal retry loop: each call is exactly one attempt on
+        // the same counter admit_kv advances
+        assert!(p.inject("kv", 1).is_err());
+        assert!(p.inject("kv", 1).is_err());
+        assert_eq!(p.inject("kv", 1), Ok(()));
+        assert_eq!(p.kv_failures(), 2);
+        assert_eq!(p.retries(), 0, "inject never retries by itself");
     }
 
     #[test]

@@ -12,14 +12,20 @@
 //!   replays a byte-identical stream (test-enforced across modes,
 //!   worker counts, cache on/off, hetero + homogeneous).
 //! - [`FaultPlan`] — injected KV/sampler outages, transport message
-//!   drop/delay, and per-machine slowdown factors
+//!   drop/delay/partition and connection kills, and per-machine
+//!   slowdown factors
 //!   ([`CostModel::set_slowdown`](crate::net::CostModel::set_slowdown)),
 //!   with bounded retry/backoff on the RPC paths surfacing
 //!   [`RpcError`](crate::net::RpcError) instead of panics so the
 //!   pipeline drains cleanly on unrecoverable failure.
+//! - [`ReplicaSet`] — primary/backup KV shard replication with
+//!   transparent failover and server rejoin (docs/DESIGN.md §12),
+//!   turning an unrecoverable `ServerDown` into an invisible reroute.
 
 pub mod checkpoint;
 pub mod fault;
+pub mod replica;
 
 pub use checkpoint::Checkpoint;
-pub use fault::{FailWindow, FaultPlan};
+pub use fault::{FailWindow, FaultPlan, MessageVerdict};
+pub use replica::{parse_replica_table, replica_table, ReplicaSet};

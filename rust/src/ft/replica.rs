@@ -1,0 +1,260 @@
+//! Primary/backup KV shard replication state (docs/DESIGN.md §12).
+//!
+//! Placement follows the parameter-server lineage (Li et al.): the
+//! shards owned by machine `m` are also materialized on machine
+//! `(m + 1) % M` under the [`replica_table`] namespace, so any single
+//! KV-server loss leaves every row reachable. A [`ReplicaSet`] is the
+//! cluster-wide failover state machine the clients consult:
+//!
+//! * **up** (default) — reads go to the primary; embedding updates
+//!   write through to primary *and* replica, keeping them
+//!   byte-identical at every all-reduce barrier (test-enforced).
+//! * **failed** — a client exhausted the bounded retry budget against
+//!   the primary ([`RpcError::ServerDown`](crate::net::RpcError) /
+//!   `ConnectionLost`) and flipped the machine via [`mark_failed`];
+//!   all subsequent reads reroute to the replica owner. Because the
+//!   replica holds identical bytes, the batch stream — and therefore
+//!   losses and final params — is unchanged (the centerpiece
+//!   invariant of this layer).
+//! * back to **up** — a restarted server re-imports its shards from
+//!   the peer replica ([`KvCluster::rejoin_server`]) and
+//!   [`mark_rejoined`] flips routing back to the primary.
+//!
+//! The set keeps the `ft.failovers` / `ft.rejoins` / `ft.replica_bytes`
+//! counters and decomposed failover timings (detect / reroute /
+//! re-import, summed into the `pipeline.failover` timer) that
+//! `TrainReport` and `benches/failover.rs` report.
+//!
+//! [`mark_failed`]: ReplicaSet::mark_failed
+//! [`mark_rejoined`]: ReplicaSet::mark_rejoined
+//! [`KvCluster::rejoin_server`]: crate::kvstore::KvCluster::rejoin_server
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::metrics::Metrics;
+
+/// Name of the backup copy of primary `owner`'s tensor `name`, as
+/// registered on the replica owner. The prefix keeps backups disjoint
+/// from the peer's own same-named shards (every machine registers a
+/// "feat"/"label" shard of its own).
+pub fn replica_table(owner: u32, name: &str) -> String {
+    format!("replica{owner}::{name}")
+}
+
+/// The primary name a [`replica_table`] entry backs up, with its
+/// primary owner — `None` for ordinary (non-replica) tables.
+pub fn parse_replica_table(name: &str) -> Option<(u32, &str)> {
+    let rest = name.strip_prefix("replica")?;
+    let (owner, base) = rest.split_once("::")?;
+    Some((owner.parse().ok()?, base))
+}
+
+/// Cluster-wide replication + failover state, shared (`Arc`) by every
+/// KV client once [`KvCluster::enable_replication`] has materialized
+/// the backups.
+///
+/// [`KvCluster::enable_replication`]: crate::kvstore::KvCluster::enable_replication
+#[derive(Debug)]
+pub struct ReplicaSet {
+    /// `failed[m]` — primary `m` is considered down; reads reroute.
+    failed: Vec<AtomicBool>,
+    failovers: AtomicU64,
+    rejoins: AtomicU64,
+    replica_bytes: AtomicU64,
+    detect_nanos: AtomicU64,
+    reroute_nanos: AtomicU64,
+    reimport_nanos: AtomicU64,
+}
+
+impl ReplicaSet {
+    pub fn new(n_machines: usize) -> Self {
+        assert!(
+            n_machines >= 2,
+            "replication needs a distinct peer per machine"
+        );
+        Self {
+            failed: (0..n_machines).map(|_| AtomicBool::new(false)).collect(),
+            failovers: AtomicU64::new(0),
+            rejoins: AtomicU64::new(0),
+            replica_bytes: AtomicU64::new(0),
+            detect_nanos: AtomicU64::new(0),
+            reroute_nanos: AtomicU64::new(0),
+            reimport_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.failed.len()
+    }
+
+    /// The machine holding the backup of `m`'s shards: `(m + 1) % M`.
+    pub fn replica_owner(&self, m: u32) -> u32 {
+        ((m as usize + 1) % self.failed.len()) as u32
+    }
+
+    /// Whether reads of `m`'s shards currently reroute to the replica.
+    pub fn is_failed(&self, m: u32) -> bool {
+        self.failed[m as usize].load(Ordering::Acquire)
+    }
+
+    /// Flip primary `m` to failed. Returns `true` for the caller that
+    /// actually performed the transition (counted once as a failover,
+    /// however many clients observe the dead server concurrently).
+    pub fn mark_failed(&self, m: u32) -> bool {
+        let first = !self.failed[m as usize].swap(true, Ordering::AcqRel);
+        if first {
+            self.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+        first
+    }
+
+    /// Flip primary `m` back to up (after its shards were re-imported).
+    pub fn mark_rejoined(&self, m: u32) {
+        if self.failed[m as usize].swap(false, Ordering::AcqRel) {
+            self.rejoins.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Account bytes materialized into replica tables (deploy copy and
+    /// rejoin re-import both count — it is the replication traffic).
+    pub fn add_replica_bytes(&self, bytes: u64) {
+        self.replica_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Time spent discovering a primary was down (the exhausted retry
+    /// loop against it).
+    pub fn note_detect(&self, d: Duration) {
+        self.detect_nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Time spent re-issuing rerouted reads against the replica owner.
+    pub fn note_reroute(&self, d: Duration) {
+        self.reroute_nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Time spent re-importing shards from the peer replica on rejoin.
+    pub fn note_reimport(&self, d: Duration) {
+        self.reimport_nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins.load(Ordering::Relaxed)
+    }
+
+    pub fn replica_bytes(&self) -> u64 {
+        self.replica_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn detect_time(&self) -> Duration {
+        Duration::from_nanos(self.detect_nanos.load(Ordering::Relaxed))
+    }
+
+    pub fn reroute_time(&self) -> Duration {
+        Duration::from_nanos(self.reroute_nanos.load(Ordering::Relaxed))
+    }
+
+    pub fn reimport_time(&self) -> Duration {
+        Duration::from_nanos(self.reimport_nanos.load(Ordering::Relaxed))
+    }
+
+    /// Export the replication counters as `ft.*` metrics plus the
+    /// aggregate `pipeline.failover` timer (detect + reroute +
+    /// re-import; `benches/failover.rs` reports the decomposition).
+    pub fn publish(&self, m: &Metrics) {
+        m.inc("ft.failovers", self.failovers());
+        m.inc("ft.rejoins", self.rejoins());
+        m.inc("ft.replica_bytes", self.replica_bytes());
+        m.add_time(
+            "pipeline.failover",
+            self.detect_time() + self.reroute_time() + self.reimport_time(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_tables_round_trip_and_stay_disjoint() {
+        let name = replica_table(2, "feat.paper");
+        assert_eq!(name, "replica2::feat.paper");
+        assert_eq!(parse_replica_table(&name), Some((2, "feat.paper")));
+        // ordinary tables are not replicas
+        assert_eq!(parse_replica_table("feat"), None);
+        assert_eq!(parse_replica_table("replicaX::feat"), None);
+        // a replica of a replica-looking base name still round-trips
+        // on the FIRST separator (owner is the outer prefix)
+        assert_eq!(
+            parse_replica_table("replica0::replica1::feat"),
+            Some((0, "replica1::feat"))
+        );
+    }
+
+    #[test]
+    fn placement_is_the_next_ring_neighbor() {
+        let r = ReplicaSet::new(3);
+        assert_eq!(r.replica_owner(0), 1);
+        assert_eq!(r.replica_owner(1), 2);
+        assert_eq!(r.replica_owner(2), 0);
+    }
+
+    #[test]
+    fn failover_counts_once_across_concurrent_observers() {
+        let r = ReplicaSet::new(2);
+        assert!(!r.is_failed(0));
+        assert!(r.mark_failed(0), "first observer performs the flip");
+        assert!(!r.mark_failed(0), "later observers see it done");
+        assert!(r.is_failed(0));
+        assert_eq!(r.failovers(), 1);
+        // the other machine is independent
+        assert!(!r.is_failed(1));
+    }
+
+    #[test]
+    fn rejoin_flips_back_and_counts() {
+        let r = ReplicaSet::new(2);
+        r.mark_rejoined(0); // rejoining an up machine is a no-op
+        assert_eq!(r.rejoins(), 0);
+        r.mark_failed(0);
+        r.mark_rejoined(0);
+        assert!(!r.is_failed(0));
+        assert_eq!(r.rejoins(), 1);
+        // a second failure of the same machine is a new failover
+        assert!(r.mark_failed(0));
+        assert_eq!(r.failovers(), 2);
+    }
+
+    #[test]
+    fn publish_exports_counters_and_the_failover_timer() {
+        let r = ReplicaSet::new(2);
+        r.mark_failed(1);
+        r.add_replica_bytes(4096);
+        r.note_detect(Duration::from_millis(2));
+        r.note_reroute(Duration::from_millis(1));
+        r.note_reimport(Duration::from_millis(4));
+        let m = Metrics::new();
+        r.publish(&m);
+        assert_eq!(m.counter("ft.failovers"), 1);
+        assert_eq!(m.counter("ft.rejoins"), 0);
+        assert_eq!(m.counter("ft.replica_bytes"), 4096);
+        assert_eq!(
+            m.total_time("pipeline.failover"),
+            Duration::from_millis(7)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct peer")]
+    fn single_machine_replication_is_rejected() {
+        let _ = ReplicaSet::new(1);
+    }
+}

@@ -15,7 +15,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use rustc_hash::FxHashMap;
 
-use crate::ft::FaultPlan;
+use crate::ft::{parse_replica_table, replica_table, FaultPlan, ReplicaSet};
 use crate::graph::{GraphSchema, NodeId};
 use crate::net::{CostModel, RpcError};
 
@@ -234,6 +234,10 @@ pub struct KvCluster {
     /// created before the plan was installed — they read this slot per
     /// request). `None` = fault-free.
     fault: Mutex<Option<Arc<FaultPlan>>>,
+    /// Primary/backup replication state ([`ReplicaSet`]), installed by
+    /// [`Self::enable_replication`]. `None` = unreplicated: a dead
+    /// server surfaces as the PR-6 typed error instead of failing over.
+    replicas: Mutex<Option<Arc<ReplicaSet>>>,
 }
 
 impl KvCluster {
@@ -263,6 +267,7 @@ impl KvCluster {
             emulate_network_time,
             concurrent_fanout,
             fault: Mutex::new(None),
+            replicas: Mutex::new(None),
         })
     }
 
@@ -275,6 +280,65 @@ impl KvCluster {
     /// The installed fault plan, if any.
     pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
         self.fault.lock().unwrap().clone()
+    }
+
+    /// Materialize each machine's shards on its ring neighbor
+    /// `(m + 1) % M` under [`replica_table`] names and install the
+    /// [`ReplicaSet`] every client consults (docs/DESIGN.md §12).
+    /// Covers the tensors registered *so far* — deploy calls this after
+    /// registration. From here on, [`KvClient::push_grad`] writes
+    /// through to primary and backup, and pulls fail over transparently
+    /// once a primary exhausts its retry budget. Idempotent: a second
+    /// call returns the installed set without copying again.
+    pub fn enable_replication(&self) -> Arc<ReplicaSet> {
+        if let Some(rs) = self.replica_set() {
+            return rs;
+        }
+        let rs = Arc::new(ReplicaSet::new(self.servers.len()));
+        for (m, server) in self.servers.iter().enumerate() {
+            let standby = rs.replica_owner(m as u32) as usize;
+            for (name, dim, data) in server.export_shards() {
+                rs.add_replica_bytes((data.len() * 4) as u64);
+                self.servers[standby].import_shard(
+                    &replica_table(m as u32, &name),
+                    dim,
+                    data,
+                );
+            }
+        }
+        *self.replicas.lock().unwrap() = Some(Arc::clone(&rs));
+        rs
+    }
+
+    /// The installed replication state, if any.
+    pub fn replica_set(&self) -> Option<Arc<ReplicaSet>> {
+        self.replicas.lock().unwrap().clone()
+    }
+
+    /// Restart path: rebuild machine `m`'s primary shards from its
+    /// standby's replica tables — the authoritative copy while `m` was
+    /// down (write-through kept updating it) — then flip routing back
+    /// to the primary. Returns the bytes re-imported; the transfer is
+    /// timed into the `pipeline.failover` decomposition as re-import.
+    pub fn rejoin_server(&self, m: u32) -> u64 {
+        let rs = self
+            .replica_set()
+            .expect("rejoin_server needs enable_replication first");
+        let standby = rs.replica_owner(m) as usize;
+        let t0 = std::time::Instant::now();
+        let mut bytes = 0u64;
+        for (name, dim, data) in self.servers[standby].export_shards() {
+            if let Some((owner, base)) = parse_replica_table(&name) {
+                if owner == m {
+                    bytes += (data.len() * 4) as u64;
+                    self.servers[m as usize].import_shard(base, dim, data);
+                }
+            }
+        }
+        rs.note_reimport(t0.elapsed());
+        rs.add_replica_bytes(bytes);
+        rs.mark_rejoined(m);
+        bytes
     }
 
     /// Meter (and, under emulation, sleep for) one remote owner's pull
@@ -682,6 +746,7 @@ impl KvClient {
                 .push((self.policy.local_of(gid), gid));
         }
         let fault = self.cluster.fault_plan();
+        let replicas = self.cluster.replica_set();
         let mut fetched = 0usize;
         let mut err: Option<RpcError> = None;
         let mut locals: Vec<u32> = Vec::new();
@@ -693,27 +758,39 @@ impl KvClient {
                 if group.is_empty() {
                     continue;
                 }
-                if let Some(f) = &fault {
-                    if let Err(e) = f.admit_kv(owner as u32) {
+                let (srv, alias) = match route_kv_read(
+                    fault.as_ref(),
+                    replicas.as_ref(),
+                    owner as u32,
+                    &tf.names[t],
+                ) {
+                    Ok(r) => r,
+                    Err(e) => {
                         err = Some(e);
                         break 'outer;
                     }
-                }
+                };
                 locals.clear();
                 locals.extend(group.iter().map(|&(l, _)| l));
                 buf.resize(locals.len() * dim, 0.0);
-                if let Err(e) = self.cluster.servers[owner]
-                    .read_rows(&tf.names[t], &locals, &mut buf)
+                if let Err(e) = self.cluster.servers[srv as usize]
+                    .read_rows(
+                        alias.as_deref().unwrap_or(&tf.names[t]),
+                        &locals,
+                        &mut buf,
+                    )
                 {
                     err = Some(e);
                     break 'outer;
                 }
-                self.cluster.meter_pull(
-                    self.machine,
-                    owner as u32,
-                    locals.len(),
-                    dim,
-                );
+                if srv != self.machine {
+                    self.cluster.meter_pull(
+                        self.machine,
+                        srv,
+                        locals.len(),
+                        dim,
+                    );
+                }
                 for (i, &(_, gid)) in group.iter().enumerate() {
                     cache.insert_prefetched(
                         t as u8,
@@ -808,6 +885,7 @@ impl KvClient {
             .filter(|(o, g)| *o as u32 != machine && !g.0.is_empty())
             .count();
         let fault = self.cluster.fault_plan();
+        let replicas = self.cluster.replica_set();
         let mut remote_rows = 0usize;
         let mut err: Option<RpcError> = None;
         if self.cluster.concurrent_fanout && n_remote >= 2 {
@@ -823,6 +901,7 @@ impl KvClient {
             }
             std::thread::scope(|sc| {
                 let fault_ref = &fault;
+                let replicas_ref = &replicas;
                 let mut handles = Vec::with_capacity(n_remote);
                 for (owner, (buf, (locals, _))) in
                     stage.iter_mut().zip(groups.iter()).enumerate()
@@ -832,20 +911,31 @@ impl KvClient {
                     }
                     handles.push(sc.spawn(
                         move || -> Result<(), RpcError> {
-                            if let Some(f) = fault_ref {
-                                f.admit_kv(owner as u32)?;
-                            }
+                            let (srv, alias) = route_kv_read(
+                                fault_ref.as_ref(),
+                                replicas_ref.as_ref(),
+                                owner as u32,
+                                name,
+                            )?;
                             // rows are fully overwritten; stale contents
                             // of a longer previous response are never read
                             buf.resize(locals.len() * dim, 0.0);
-                            cluster.servers[owner]
-                                .read_rows(name, locals, buf)?;
-                            cluster.meter_pull(
-                                machine,
-                                owner as u32,
-                                locals.len(),
-                                dim,
-                            );
+                            cluster.servers[srv as usize].read_rows(
+                                alias.as_deref().unwrap_or(name),
+                                locals,
+                                buf,
+                            )?;
+                            // a standby that happens to be the caller's
+                            // own machine serves from local memory: no
+                            // wire traffic to meter
+                            if srv != machine {
+                                cluster.meter_pull(
+                                    machine,
+                                    srv,
+                                    locals.len(),
+                                    dim,
+                                );
+                            }
                             Ok(())
                         },
                     ));
@@ -910,27 +1000,42 @@ impl KvClient {
                 if locals.is_empty() {
                     continue;
                 }
-                let server = &self.cluster.servers[owner];
+                let mut server = &self.cluster.servers[owner];
+                let mut alias: Option<String> = None;
                 if owner as u32 != machine {
-                    if let Some(f) = &fault {
-                        if let Err(e) = f.admit_kv(owner as u32) {
+                    let (srv, a) = match route_kv_read(
+                        fault.as_ref(),
+                        replicas.as_ref(),
+                        owner as u32,
+                        name,
+                    ) {
+                        Ok(r) => r,
+                        Err(e) => {
                             err = Some(e);
                             break;
                         }
-                    }
+                    };
+                    server = &self.cluster.servers[srv as usize];
+                    alias = a;
                     remote_rows += locals.len();
-                    self.cluster.meter_pull(
-                        machine,
-                        owner as u32,
-                        locals.len(),
-                        dim,
-                    );
+                    if srv != machine {
+                        self.cluster.meter_pull(
+                            machine,
+                            srv,
+                            locals.len(),
+                            dim,
+                        );
+                    }
                 }
                 // copy straight into the output slots (local and remote
                 // alike)
                 let slot_buf = resolve_slots(idxs, slots, &mut slot_scratch);
                 if let Err(e) = server.read_rows_scattered(
-                    name, locals, slot_buf, out, stride,
+                    alias.as_deref().unwrap_or(name),
+                    locals,
+                    slot_buf,
+                    out,
+                    stride,
                 ) {
                     err = Some(e);
                     break;
@@ -1007,34 +1112,86 @@ impl KvClient {
                 .extend_from_slice(&grads[i * dim..(i + 1) * dim]);
         }
         let fault = self.cluster.fault_plan();
+        let replicas = self.cluster.replica_set();
         let mut err: Option<RpcError> = None;
         for (owner, (locals, g)) in groups.iter().enumerate() {
             if locals.is_empty() {
                 continue;
             }
+            // write-through protocol (docs/DESIGN.md §12): the update
+            // lands on the primary AND its standby's replica table, so
+            // the two copies stay byte-identical at every barrier. A
+            // primary already failed over (or detected dead right here)
+            // is skipped — its standby carries the authoritative rows
+            // until rejoin re-imports them.
+            let mut primary_up = true;
             if owner as u32 != self.machine {
-                if let Some(f) = &fault {
+                if replicas
+                    .as_ref()
+                    .is_some_and(|rs| rs.is_failed(owner as u32))
+                {
+                    primary_up = false;
+                } else if let Some(f) = &fault {
                     if let Err(e) = f.admit_kv(owner as u32) {
-                        err = Some(e);
-                        break;
+                        match &replicas {
+                            Some(rs) => {
+                                rs.mark_failed(owner as u32);
+                                primary_up = false;
+                            }
+                            Option::None => {
+                                err = Some(e);
+                                break;
+                            }
+                        }
                     }
                 }
-                let bytes = crate::net::payload::kv_push_bytes(
-                    0, // interned tensor id, as in meter_pull
-                    locals.len(),
-                    dim,
-                );
-                self.cluster.cost.on_network(
-                    self.machine,
-                    owner as u32,
-                    bytes,
-                );
             }
-            if let Err(e) = self.cluster.servers[owner]
-                .apply_grads(name, locals, g, lr)
-            {
-                err = Some(e);
-                break;
+            let bytes = crate::net::payload::kv_push_bytes(
+                0, // interned tensor id, as in meter_pull
+                locals.len(),
+                dim,
+            );
+            if primary_up {
+                if owner as u32 != self.machine {
+                    self.cluster.cost.on_network(
+                        self.machine,
+                        owner as u32,
+                        bytes,
+                    );
+                }
+                if let Err(e) = self.cluster.servers[owner]
+                    .apply_grads(name, locals, g, lr)
+                {
+                    err = Some(e);
+                    break;
+                }
+            }
+            if let Some(rs) = &replicas {
+                let standby = rs.replica_owner(owner as u32);
+                if standby != self.machine {
+                    if let Some(f) = &fault {
+                        if let Err(e) = f.admit_kv(standby) {
+                            err = Some(e);
+                            break;
+                        }
+                    }
+                    self.cluster.cost.on_network(
+                        self.machine,
+                        standby,
+                        bytes,
+                    );
+                }
+                if let Err(e) = self.cluster.servers[standby as usize]
+                    .apply_grads(
+                        &replica_table(owner as u32, name),
+                        locals,
+                        g,
+                        lr,
+                    )
+                {
+                    err = Some(e);
+                    break;
+                }
             }
         }
         self.push_groups = groups;
@@ -1060,6 +1217,52 @@ impl KvClient {
 impl KvServer {
     fn dim_of_or(&self, name: &str) -> Option<usize> {
         self.shards.read().unwrap().get(name).map(|s| s.dim)
+    }
+}
+
+/// Gate one remote read against `owner` and resolve who serves it: the
+/// primary when healthy, else the standby's [`replica_table`] copy once
+/// `owner` is marked failed — or fails right here by exhausting its
+/// retry budget. Returns `(server, alias)` where `alias = None` means
+/// the primary serves the caller's own tensor name. Without a
+/// [`ReplicaSet`] the admission error propagates unchanged (the PR-6
+/// typed-error drain). A free function so the concurrent fan-out
+/// threads can call it without borrowing the client.
+///
+/// Failover state is sticky routing memory: after the first detection,
+/// requests stop paying the primary's retry budget and go straight to
+/// the standby; only [`KvCluster::rejoin_server`] flips back. Detection
+/// (the exhausted retry loop) and reroute (the standby's admission) are
+/// timed separately into the `pipeline.failover` decomposition.
+fn route_kv_read(
+    fault: Option<&Arc<FaultPlan>>,
+    replicas: Option<&Arc<ReplicaSet>>,
+    owner: u32,
+    name: &str,
+) -> Result<(u32, Option<String>), RpcError> {
+    if let Some(rs) = replicas {
+        if rs.is_failed(owner) {
+            let standby = rs.replica_owner(owner);
+            if let Some(f) = fault {
+                f.admit_kv(standby)?;
+            }
+            return Ok((standby, Some(replica_table(owner, name))));
+        }
+    }
+    let Some(f) = fault else { return Ok((owner, None)) };
+    let t0 = std::time::Instant::now();
+    match f.admit_kv(owner) {
+        Ok(()) => Ok((owner, None)),
+        Err(e) => {
+            let Some(rs) = replicas else { return Err(e) };
+            rs.note_detect(t0.elapsed());
+            rs.mark_failed(owner);
+            let t1 = std::time::Instant::now();
+            let standby = rs.replica_owner(owner);
+            f.admit_kv(standby)?;
+            rs.note_reroute(t1.elapsed());
+            Ok((standby, Some(replica_table(owner, name))))
+        }
     }
 }
 
@@ -1739,6 +1942,211 @@ mod tests {
             let n = client.pull("feat", &[27, 14], &mut out).unwrap();
             assert_eq!(n, 1, "concurrent={concurrent}");
         }
+    }
+
+    #[test]
+    fn failover_serves_replica_rows_byte_identically() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let dim = 4;
+        for concurrent in [false, true] {
+            let nm = NodeMap { part_starts: vec![0, 10, 25, 30] };
+            let policy: Arc<dyn PartitionPolicy> =
+                Arc::new(RangePolicy::new(nm));
+            let data = rows(30, dim);
+            let cluster = KvCluster::with_options(
+                3,
+                Arc::new(CostModel::default()),
+                false,
+                concurrent,
+            );
+            cluster.register_partitioned(
+                "feat",
+                &data,
+                dim,
+                policy.as_ref(),
+            );
+            let rs = cluster.enable_replication();
+            assert!(rs.replica_bytes() > 0, "deploy copy is accounted");
+            let mut plan = FaultPlan::new();
+            plan.kv_outages = vec![FailWindow::permanent(0, 0)];
+            plan.backoff = std::time::Duration::ZERO;
+            cluster.set_fault_plan(Arc::new(plan));
+            let mut client = cluster.client(1, policy);
+            // both remote owners engaged; machine 0 is permanently dead,
+            // its replica lives on machine 1 — the client's own machine
+            let ids: Vec<NodeId> = vec![0, 27, 5, 12];
+            let mut out = vec![0f32; ids.len() * dim];
+            let remote = client.pull("feat", &ids, &mut out).unwrap();
+            assert_eq!(remote, 3, "concurrent={concurrent}");
+            for (i, &gid) in ids.iter().enumerate() {
+                assert_eq!(
+                    &out[i * dim..(i + 1) * dim],
+                    &data[gid as usize * dim..(gid as usize + 1) * dim],
+                    "row {gid} concurrent={concurrent}"
+                );
+            }
+            assert!(rs.is_failed(0));
+            assert_eq!(rs.failovers(), 1, "detection counts once");
+            // routing memory: a second pull goes straight to the standby
+            client.pull("feat", &ids, &mut out).unwrap();
+            assert_eq!(rs.failovers(), 1, "concurrent={concurrent}");
+        }
+    }
+
+    #[test]
+    fn rejoin_reimports_updates_applied_during_the_outage() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let dim = 2;
+        let (cluster, policy, data) = range_cluster(dim);
+        cluster.enable_replication();
+        let rs = cluster.replica_set().unwrap();
+        let mut client = cluster.client(1, policy);
+        // healthy write-through: primary and replica both advance
+        client
+            .push_grad("feat", &[0, 20], &[1.0, 1.0, 1.0, 1.0], 0.5)
+            .unwrap();
+        // kill machine 0 and keep updating: only its replica advances
+        let mut plan = FaultPlan::new();
+        plan.kv_outages = vec![FailWindow::permanent(0, 0)];
+        plan.backoff = std::time::Duration::ZERO;
+        cluster.set_fault_plan(Arc::new(plan));
+        client.push_grad("feat", &[0], &[1.0, 1.0], 0.5).unwrap();
+        assert!(rs.is_failed(0), "dead primary detected on the push path");
+        // reads during the outage serve the replica's fresh bytes
+        let mut out = vec![0f32; dim];
+        client.pull("feat", &[0], &mut out).unwrap();
+        assert_eq!(out[0], data[0] - 1.0);
+        // restart: re-import from the replica, flip back to the primary
+        let bytes = cluster.rejoin_server(0);
+        assert!(bytes > 0, "re-import transfers the shard");
+        assert!(!rs.is_failed(0));
+        assert_eq!(rs.rejoins(), 1);
+        assert!(rs.reimport_time() > std::time::Duration::ZERO);
+        // heal the wire; the primary serves the rows updated while dead
+        cluster.set_fault_plan(Arc::new(FaultPlan::new()));
+        client.pull("feat", &[0], &mut out).unwrap();
+        assert_eq!(out[0], data[0] - 1.0, "primary missed outage updates");
+    }
+
+    #[test]
+    fn prefetch_fails_over_and_demand_pull_stays_byte_identical() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let dim = 4;
+        let (cluster, policy, data) = range_cluster(dim);
+        cluster.enable_replication();
+        let mut plan = FaultPlan::new();
+        plan.kv_outages = vec![FailWindow::permanent(0, 0)];
+        plan.backoff = std::time::Duration::ZERO;
+        cluster.set_fault_plan(Arc::new(plan));
+        let mut client = cluster.client(2, policy);
+        client.attach_cache(feat_cache(1 << 20));
+        let tf = TypedFeatures::homogeneous("feat", dim);
+        // rows 0 and 5 belong to the dead machine 0 (replica on 1),
+        // row 12 to the healthy machine 1
+        let ids: Vec<NodeId> = vec![0, 5, 12];
+        let fetched = client.prefetch_typed(&tf, &ids, false).unwrap();
+        assert_eq!(fetched, 3, "prefetch failed over instead of erroring");
+        let bytes = cluster.cost.network_bytes();
+        let mut out = vec![0f32; ids.len() * dim];
+        let remote = client.pull("feat", &ids, &mut out).unwrap();
+        assert_eq!(remote, 0, "demand pull must hit the warmed cache");
+        assert_eq!(cluster.cost.network_bytes(), bytes);
+        for (i, &gid) in ids.iter().enumerate() {
+            assert_eq!(
+                &out[i * dim..(i + 1) * dim],
+                &data[gid as usize * dim..(gid as usize + 1) * dim],
+                "row {gid}"
+            );
+        }
+    }
+
+    /// Property (docs/DESIGN.md §12): after any interleaving of sparse
+    /// updates, failovers, and rejoins, the replicated cluster holds
+    /// exactly the bytes of a fault-free twin driven by the same update
+    /// stream — and every primary shard is byte-identical to its
+    /// standby's replica table (the all-reduce-barrier consistency
+    /// invariant; every dead primary rejoins before the check, as the
+    /// barrier protocol requires).
+    #[test]
+    fn prop_replicas_match_a_fault_free_twin_after_any_interleaving() {
+        crate::util::proptest::forall(
+            97,
+            12,
+            |r| {
+                let k = 1 + r.usize_below(12);
+                (0..k)
+                    .map(|_| {
+                        (r.usize_below(4) as u8, r.below(30) as u32)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let dim = 2;
+                let (faulted, p1, _) = range_cluster(dim);
+                let (twin, p2, _) = range_cluster(dim);
+                faulted.enable_replication();
+                let rs = faulted.replica_set().unwrap();
+                let mut cf = faulted.client(1, p1);
+                let mut ct = twin.client(1, p2);
+                for &(kind, x) in ops {
+                    match kind {
+                        0 | 1 => {
+                            let ids = vec![x as NodeId];
+                            let g = vec![1.0f32; dim];
+                            cf.push_grad("feat", &ids, &g, 0.1)
+                                .map_err(|e| e.to_string())?;
+                            ct.push_grad("feat", &ids, &g, 0.1)
+                                .map_err(|e| e.to_string())?;
+                        }
+                        2 => {
+                            rs.mark_failed(x % 3);
+                        }
+                        _ => {
+                            if rs.is_failed(x % 3) {
+                                faulted.rejoin_server(x % 3);
+                            }
+                        }
+                    }
+                }
+                for m in 0..3 {
+                    if rs.is_failed(m) {
+                        faulted.rejoin_server(m);
+                    }
+                }
+                for m in 0..3u32 {
+                    let standby = rs.replica_owner(m) as usize;
+                    for (name, d, want) in
+                        twin.servers[m as usize].export_shards()
+                    {
+                        let locals: Vec<u32> =
+                            (0..(want.len() / d) as u32).collect();
+                        let mut got = vec![0f32; want.len()];
+                        faulted.servers[m as usize]
+                            .read_rows(&name, &locals, &mut got)
+                            .map_err(|e| e.to_string())?;
+                        if got != want {
+                            return Err(format!(
+                                "m{m} {name} diverged from the twin"
+                            ));
+                        }
+                        let mut rep = vec![0f32; want.len()];
+                        faulted.servers[standby]
+                            .read_rows(
+                                &replica_table(m, &name),
+                                &locals,
+                                &mut rep,
+                            )
+                            .map_err(|e| e.to_string())?;
+                        if rep != want {
+                            return Err(format!(
+                                "m{m} {name} replica diverged"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -15,12 +15,14 @@
 
 pub mod model;
 pub mod payload;
+pub mod retry;
 pub mod rpc;
 pub mod tcp;
 pub mod transport;
 pub mod wire;
 
 pub use model::CostModel;
+pub use retry::{with_retry, RetryPolicy};
 pub use transport::{Endpoint, Message, Port, PortKind, Transport};
 
 /// Typed error for every RPC boundary in the system (KVStore pulls,

@@ -370,6 +370,11 @@ pub enum CoordMsg {
     /// Clean goodbye from one machine process.
     Shutdown { machine: u32 },
     ShutdownAck,
+    /// A restarted machine process reclaims its *previous* id
+    /// (docs/DESIGN.md §12). Plain `Hello` cannot: the id is already in
+    /// the server's used set and the fallback would hand out a fresh
+    /// one. Replied to with `Welcome` carrying the reclaimed id.
+    Rejoin { machine: u32 },
 }
 
 pub fn encode_view(w: &mut ByteWriter, v: &MembershipView) {
@@ -421,6 +426,10 @@ pub fn encode_coord_msg(m: &CoordMsg) -> Vec<u8> {
             w.u32(*machine);
         }
         CoordMsg::ShutdownAck => w.u8(8),
+        CoordMsg::Rejoin { machine } => {
+            w.u8(9);
+            w.u32(*machine);
+        }
     }
     w.finish()
 }
@@ -442,6 +451,7 @@ pub fn decode_coord_msg(buf: &[u8]) -> Result<CoordMsg, WireError> {
         6 => CoordMsg::FailureReport { rank: r.u32()? },
         7 => CoordMsg::Shutdown { machine: r.u32()? },
         8 => CoordMsg::ShutdownAck,
+        9 => CoordMsg::Rejoin { machine: r.u32()? },
         k => return Err(WireError::BadPortKind(k)),
     };
     r.expect_end()?;
@@ -585,6 +595,7 @@ mod tests {
             CoordMsg::FailureReport { rank: 1 },
             CoordMsg::Shutdown { machine: 2 },
             CoordMsg::ShutdownAck,
+            CoordMsg::Rejoin { machine: 1 },
         ];
         for m in msgs {
             let buf = encode_coord_msg(&m);

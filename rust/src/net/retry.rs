@@ -1,0 +1,135 @@
+//! The single bounded retry/backoff policy every RPC path shares.
+//!
+//! PR 6 gave the in-process fault-injection layer a retry loop
+//! (`FaultPlan::admit_kv`) and PR 9 gave the wire client another one
+//! (`RpcClient::call`); the two had drifted into separate
+//! counter/backoff implementations, so TrainReport retry totals meant
+//! different things depending on the backend. Both now funnel through
+//! [`with_retry`]: one loop, one policy shape, and one shared retries
+//! counter (the installed `FaultPlan`'s, when there is one), so
+//! `ft.retries` is comparable across the in-process fabric and TCP.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Bounded retry policy: `max_retries` re-attempts after the first, with
+/// a fixed sleep between attempts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first try (so `max_retries + 1` attempts
+    /// total).
+    pub max_retries: u32,
+    /// Sleep between attempts.
+    pub backoff: Duration,
+}
+
+impl RetryPolicy {
+    pub const fn new(max_retries: u32, backoff: Duration) -> Self {
+        Self { max_retries, backoff }
+    }
+
+    /// The in-process default (what `FaultPlan::new` installs): retries
+    /// are cheap shared-memory re-admissions, so back off only 1 ms.
+    pub const fn in_process() -> Self {
+        Self::new(3, Duration::from_millis(1))
+    }
+
+    /// The real-wire default (what `RpcClient::new` installs): a resend
+    /// costs a round-trip, so back off longer between attempts.
+    pub const fn wire() -> Self {
+        Self::new(3, Duration::from_millis(50))
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::in_process()
+    }
+}
+
+/// Run `attempt` (called with the attempt index, 0-based) until it
+/// succeeds or the policy's budget is spent, sleeping the backoff and
+/// bumping `retries` before every re-attempt. Returns the first success
+/// or the *last* error — intermediate failures are policy-internal.
+pub fn with_retry<T, E>(
+    policy: &RetryPolicy,
+    retries: &AtomicU64,
+    mut attempt: impl FnMut(u32) -> Result<T, E>,
+) -> Result<T, E> {
+    let mut last = attempt(0);
+    let mut n = 0u32;
+    while last.is_err() && n < policy.max_retries {
+        n += 1;
+        retries.fetch_add(1, Ordering::Relaxed);
+        if !policy.backoff.is_zero() {
+            std::thread::sleep(policy.backoff);
+        }
+        last = attempt(n);
+    }
+    last
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_success_makes_no_retries() {
+        let c = AtomicU64::new(0);
+        let r: Result<u32, ()> =
+            with_retry(&RetryPolicy::new(3, Duration::ZERO), &c, |_| Ok(7));
+        assert_eq!(r, Ok(7));
+        assert_eq!(c.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn transient_failure_heals_and_counts_each_retry() {
+        let c = AtomicU64::new(0);
+        let r: Result<u32, &str> = with_retry(
+            &RetryPolicy::new(3, Duration::ZERO),
+            &c,
+            |attempt| if attempt < 2 { Err("down") } else { Ok(attempt) },
+        );
+        assert_eq!(r, Ok(2));
+        assert_eq!(c.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn exhausted_budget_returns_the_last_error() {
+        let c = AtomicU64::new(0);
+        let r: Result<(), u32> = with_retry(
+            &RetryPolicy::new(2, Duration::ZERO),
+            &c,
+            |attempt| Err(attempt),
+        );
+        assert_eq!(r, Err(2), "last attempt's error surfaces");
+        assert_eq!(c.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn zero_retries_means_exactly_one_attempt() {
+        let c = AtomicU64::new(0);
+        let mut calls = 0;
+        let r: Result<(), ()> =
+            with_retry(&RetryPolicy::new(0, Duration::ZERO), &c, |_| {
+                calls += 1;
+                Err(())
+            });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+        assert_eq!(c.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn defaults_match_the_two_historical_call_sites() {
+        assert_eq!(
+            RetryPolicy::in_process(),
+            RetryPolicy::new(3, Duration::from_millis(1))
+        );
+        assert_eq!(
+            RetryPolicy::wire(),
+            RetryPolicy::new(3, Duration::from_millis(50))
+        );
+        assert_eq!(RetryPolicy::default(), RetryPolicy::in_process());
+    }
+}

@@ -11,10 +11,14 @@
 //!
 //! Failure policy mirrors `ft` (§8): server-side errors travel as typed
 //! [`RpcError`] values inside responses; transport failures and recv
-//! timeouts become [`RpcError::ConnectionLost`] after a bounded
-//! retry/backoff loop — never a panic, never an `unwrap` on a socket.
+//! timeouts become [`RpcError::ConnectionLost`] after the shared
+//! bounded retry/backoff loop ([`crate::net::retry`]) — never a panic,
+//! never an `unwrap` on a socket. An installed [`FaultPlan`] gates
+//! every attempt through the same outage windows the in-process
+//! admission uses, so one plan injects identical failure totals over
+//! either backend (regression-tested below).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -25,7 +29,9 @@ use super::payload::{
     encode_sampler_request, encode_sampler_response, KvRequest,
     KvResponse, SamplerRequest, SamplerResponse,
 };
-use super::{Endpoint, Port, RpcError};
+use super::retry::{with_retry, RetryPolicy};
+use super::{Endpoint, Port, PortKind, RpcError};
+use crate::ft::FaultPlan;
 use crate::kvstore::KvServer;
 use crate::sampler::service::SampledNbrs;
 use crate::sampler::SamplerServer;
@@ -46,16 +52,25 @@ pub struct RpcClient {
     pub retries: u32,
     /// Sleep between attempts.
     pub backoff: Duration,
+    /// Injected-outage plan: when set, every attempt is gated through
+    /// the plan's outage windows (same counters as in-process
+    /// admission) and retries feed the plan's shared `ft.retries`.
+    fault: Option<Arc<FaultPlan>>,
+    /// Retries taken when no plan is installed.
+    own_retries: AtomicU64,
 }
 
 impl RpcClient {
     pub fn new(ep: Endpoint) -> Self {
+        let policy = RetryPolicy::wire();
         Self {
             ep,
             next_tag: 1,
             timeout: Duration::from_secs(10),
-            retries: 3,
-            backoff: Duration::from_millis(50),
+            retries: policy.max_retries,
+            backoff: policy.backoff,
+            fault: None,
+            own_retries: AtomicU64::new(0),
         }
     }
 
@@ -63,48 +78,70 @@ impl RpcClient {
         &self.ep
     }
 
-    /// One round-trip to `dst` with bounded retry/backoff. Transport
-    /// errors and response timeouts surface as
-    /// [`RpcError::ConnectionLost`] once the attempts are exhausted.
+    /// Gate every subsequent call through `plan`'s outage windows and
+    /// feed its shared retries counter (the chaos/injection hook for
+    /// real-wire clients — same `FaultPlan`, same totals as in-process).
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
+    }
+
+    /// Retries this client has taken (the plan's counter when one is
+    /// installed, the client-local one otherwise).
+    pub fn retries_taken(&self) -> u64 {
+        match &self.fault {
+            Some(f) => f.retries(),
+            None => self.own_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One round-trip to `dst` with the shared bounded retry/backoff
+    /// loop. Transport errors and response timeouts surface as
+    /// [`RpcError::ConnectionLost`] once the attempts are exhausted;
+    /// injected outages surface as [`RpcError::ServerDown`], exactly as
+    /// on the in-process path.
     pub fn call(
         &mut self,
         dst: u32,
         port: Port,
         payload: Vec<u8>,
     ) -> Result<Vec<u8>, RpcError> {
-        let mut last = RpcError::ConnectionLost {
-            peer: dst,
-            detail: "no attempt made".into(),
+        let machine = self.ep.transport.machine_of(dst);
+        let role: Option<&'static str> = match port.kind() {
+            PortKind::KvStore => Some("kv"),
+            PortKind::Sampler => Some("sampler"),
+            _ => None,
         };
-        for attempt in 0..=self.retries {
-            if attempt > 0 {
-                std::thread::sleep(self.backoff);
+        let policy = RetryPolicy::new(self.retries, self.backoff);
+        let plan = self.fault.clone();
+        let timeout = self.timeout;
+        let Self { ep, next_tag, own_retries, .. } = self;
+        let counter: &AtomicU64 = match &plan {
+            Some(f) => f.retries_counter(),
+            None => own_retries,
+        };
+        with_retry(&policy, counter, |attempt| {
+            if let (Some(f), Some(role)) = (plan.as_ref(), role) {
+                f.inject(role, machine)?;
             }
-            let tag = self.next_tag;
-            self.next_tag += 1;
-            if let Err(e) = self.ep.send(dst, port, tag, payload.clone()) {
-                last = e;
-                continue;
-            }
-            let deadline = Instant::now() + self.timeout;
+            let tag = *next_tag;
+            *next_tag += 1;
+            ep.send(dst, port, tag, payload.clone())?;
+            let deadline = Instant::now() + timeout;
             loop {
                 let now = Instant::now();
                 if now >= deadline {
-                    last = RpcError::ConnectionLost {
+                    return Err(RpcError::ConnectionLost {
                         peer: dst,
                         detail: format!(
-                            "no response within {:?} (attempt {})",
-                            self.timeout,
+                            "no response within {timeout:?} (attempt {})",
                             attempt + 1
                         ),
-                    };
-                    break;
+                    });
                 }
-                match self.ep.recv_kind(port.kind(), Some(deadline - now))
-                {
+                match ep.recv_kind(port.kind(), Some(deadline - now)) {
                     Some(m) if m.tag == tag => return Ok(m.payload),
                     Some(_) => continue, // stale reply from a retry
-                    None if self.ep.is_closed() => {
+                    None if ep.is_closed() => {
                         return Err(RpcError::ConnectionLost {
                             peer: dst,
                             detail: "transport shut down".into(),
@@ -113,8 +150,7 @@ impl RpcClient {
                     None => continue, // spurious timeout; loop re-checks
                 }
             }
-        }
-        Err(last)
+        })
     }
 
     fn lost(&self, dst: u32, what: impl std::fmt::Display) -> RpcError {
@@ -477,6 +513,74 @@ mod tests {
         let mut rng = Rng::new(1234);
         let local = server.sample_neighbors(&seeds, &[5], &mut rng);
         assert_eq!(over_wire, local, "RPC sampling ≡ local sampling");
+        stop(&running, h);
+    }
+
+    #[test]
+    fn fault_plan_injects_identical_totals_over_both_backends() {
+        use crate::ft::{FailWindow, FaultPlan};
+        use crate::metrics::Metrics;
+        let mk = || {
+            let mut p = FaultPlan::new();
+            p.backoff = Duration::ZERO;
+            p.kv_outages = vec![
+                FailWindow::transient(1, 2, 3),
+                FailWindow::transient(1, 7, 1),
+            ];
+            Arc::new(p)
+        };
+        // reference: the PR 6 in-process admission loop
+        let inproc = mk();
+        let inproc_results: Vec<bool> =
+            (0..6).map(|_| inproc.admit_kv(1).is_ok()).collect();
+        // same schedule gating a wire client attempt-by-attempt
+        let wire = mk();
+        let t = Transport::new(2, CostModel::default());
+        let server = kv_with_feat();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t.endpoint(1), server, running.clone());
+        let mut client = RpcClient::new(t.endpoint(0));
+        client.backoff = Duration::ZERO;
+        client.set_fault_plan(wire.clone());
+        let wire_results: Vec<bool> = (0..6)
+            .map(|_| client.kv_pull(1, "feat", &[0]).is_ok())
+            .collect();
+        // identical request outcomes AND identical injected totals:
+        // the outage-window scope gap is closed
+        assert_eq!(inproc_results, wire_results);
+        assert_eq!(inproc.kv_failures(), wire.kv_failures());
+        assert_eq!(inproc.retries(), wire.retries());
+        assert_eq!(client.retries_taken(), wire.retries());
+        let (m1, m2) = (Metrics::new(), Metrics::new());
+        inproc.publish(&m1);
+        wire.publish(&m2);
+        assert_eq!(
+            m1.counter("ft.injected_failures"),
+            m2.counter("ft.injected_failures")
+        );
+        assert_eq!(m1.counter("ft.retries"), m2.counter("ft.retries"));
+        stop(&running, h);
+    }
+
+    #[test]
+    fn permanent_outage_over_the_wire_is_server_down() {
+        use crate::ft::{FailWindow, FaultPlan};
+        let mut p = FaultPlan::new();
+        p.backoff = Duration::ZERO;
+        p.kv_outages = vec![FailWindow::permanent(1, 0)];
+        let plan = Arc::new(p);
+        let t = Transport::new(2, CostModel::default());
+        let server = kv_with_feat();
+        let running = Arc::new(AtomicBool::new(true));
+        let h = serve_kv(t.endpoint(1), server, running.clone());
+        let mut client = RpcClient::new(t.endpoint(0));
+        client.backoff = Duration::ZERO;
+        client.set_fault_plan(plan.clone());
+        assert_eq!(
+            client.kv_pull(1, "feat", &[0]).unwrap_err(),
+            RpcError::ServerDown { machine: 1, role: "kv" }
+        );
+        assert_eq!(plan.retries(), 3, "bounded budget, then typed error");
         stop(&running, h);
     }
 

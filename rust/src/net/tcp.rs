@@ -13,6 +13,15 @@
 //! undecodable frames map to [`RpcError::ConnectionLost`]; a decode
 //! error (bad magic, bumped wire version) kills that connection so a
 //! confused peer cannot corrupt the stream, and the next send re-dials.
+//!
+//! Chaos hook (docs/DESIGN.md §12): an installed
+//! [`FaultPlan`](crate::ft::FaultPlan) gates every cross-machine send
+//! through the same [`message_verdict`](crate::ft::FaultPlan::message_verdict)
+//! the emulated fabric consults — frame drops, delays, and asymmetric
+//! partitions behave identically over real sockets, and the
+//! connection-kill verdict additionally closes the live socket so the
+//! reconnect path is exercised under injected resets. Test-only: real
+//! deployments leave the plan unset.
 
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -26,6 +35,7 @@ use super::transport::{
 };
 use super::wire;
 use super::RpcError;
+use crate::ft::{FaultPlan, MessageVerdict};
 
 /// Static wiring for one process's view of the TCP fabric.
 #[derive(Clone, Debug)]
@@ -81,6 +91,8 @@ struct TcpInner {
     reader_socks: Mutex<Vec<TcpStream>>,
     running: AtomicBool,
     cost: Arc<CostModel>,
+    /// Chaos schedule shared with the in-process backend (test-only).
+    fault: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl TcpInner {
@@ -153,6 +165,15 @@ impl TcpInner {
         unreachable!("reconnect loop returns on second pass")
     }
 
+    /// Close the cached connection to `proc` (chaos conn-kill): the
+    /// peer's reader sees the reset and exits; the next send to `proc`
+    /// re-dials — exactly the path a real connection reset exercises.
+    fn kill_conn(&self, proc: usize) {
+        if let Some(s) = self.conns[proc].lock().unwrap().take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
     /// Frame pump for one accepted connection. Exits on EOF, socket
     /// error, shutdown, or the first undecodable frame (kill the
     /// connection rather than guess at stream alignment).
@@ -219,7 +240,21 @@ impl TransportBackend for TcpBackend {
         };
         let (sm, dm) =
             (cfg.machine_of[src as usize], cfg.machine_of[dst as usize]);
+        let mut kill_after = false;
         if sm != dm {
+            // the same chaos verdict the emulated backend consults: a
+            // dropped frame vanishes before the meter, like a frame
+            // lost on the wire
+            let plan = inner.fault.lock().unwrap().clone();
+            if let Some(f) = plan {
+                match f.message_verdict(sm, dm) {
+                    MessageVerdict::Drop => return Ok(()),
+                    MessageVerdict::DeliverThenKillConn => {
+                        kill_after = true;
+                    }
+                    MessageVerdict::Deliver => {}
+                }
+            }
             // observability parity with the emulated backend: the meter
             // counts the same framed bytes the socket carries.
             inner.cost.on_network(sm, dm, msg.wire_bytes());
@@ -237,7 +272,11 @@ impl TransportBackend for TcpBackend {
                 sp, cfg.my_proc,
                 "sends originate from locally hosted endpoints"
             );
-            inner.write_to_peer(dp, dst, &msg)
+            let r = inner.write_to_peer(dp, dst, &msg);
+            if kill_after && r.is_ok() {
+                inner.kill_conn(dp);
+            }
+            r
         }
     }
 
@@ -251,6 +290,10 @@ impl TransportBackend for TcpBackend {
 
     fn machine_of(&self, ep: u32) -> u32 {
         self.inner.cfg.machine_of[ep as usize]
+    }
+
+    fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *self.inner.fault.lock().unwrap() = Some(plan);
     }
 
     fn shutdown(&self) {
@@ -333,6 +376,7 @@ pub fn tcp_transport(
         reader_socks: Mutex::new(Vec::new()),
         running: AtomicBool::new(true),
         cost: Arc::clone(&cost),
+        fault: Mutex::new(None),
     });
     let acceptor = Arc::clone(&inner);
     std::thread::spawn(move || acceptor.run_acceptor(listener));
@@ -532,6 +576,59 @@ mod tests {
         raw2.flush().unwrap();
         let got = e.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(got.tag, 1);
+    }
+
+    #[test]
+    fn chaos_conn_kills_are_survived_transparently() {
+        use crate::ft::FaultPlan;
+        let ts = pair(2);
+        let mut plan = FaultPlan::new();
+        plan.kill_conn_every = 3; // reset the socket after every 3rd send
+        let plan = Arc::new(plan);
+        ts[0].set_fault_plan(plan.clone());
+        let e0 = ts[0].endpoint(0);
+        let e1 = ts[1].endpoint(1);
+        for i in 0..10u64 {
+            e0.send(1, Port::KvStore, i, vec![i as u8]).unwrap();
+        }
+        // every message arrives despite the injected resets: the killed
+        // connection is re-dialed on the next send
+        for i in 0..10u64 {
+            let m = e1
+                .recv_timeout(Duration::from_secs(10))
+                .expect("delivered through resets");
+            assert_eq!(m.tag, i, "per-sender order survives reconnects");
+        }
+        assert_eq!(plan.killed_conns(), 3);
+        assert_eq!(plan.dropped_msgs(), 0);
+    }
+
+    #[test]
+    fn chaos_drops_and_partitions_apply_over_real_sockets() {
+        use crate::ft::FaultPlan;
+        let ts = pair(2);
+        let mut plan = FaultPlan::new();
+        plan.partitions = vec![(0, 1)]; // 0→1 blocked; 1→0 flows
+        let plan = Arc::new(plan);
+        ts[0].set_fault_plan(plan.clone());
+        ts[1].set_fault_plan(plan.clone());
+        let e0 = ts[0].endpoint(0);
+        let e1 = ts[1].endpoint(1);
+        e0.send(1, Port::Control, 1, vec![]).unwrap();
+        assert!(
+            e1.recv_timeout(Duration::from_millis(200)).is_none(),
+            "partitioned direction delivers nothing"
+        );
+        e1.send(0, Port::Control, 2, vec![]).unwrap();
+        assert_eq!(
+            e0.recv_timeout(Duration::from_secs(5)).map(|m| m.tag),
+            Some(2),
+            "reverse direction unaffected (asymmetric partition)"
+        );
+        assert_eq!(plan.dropped_msgs(), 1);
+        // dropped frames are never metered — parity with the in-process
+        // backend's loss model
+        assert_eq!(ts[0].cost.network_bytes(), 0);
     }
 
     #[test]

@@ -214,9 +214,10 @@ pub trait TransportBackend: Send + Sync {
     /// the trainer ring has one endpoint per trainer).
     fn machine_of(&self, ep: u32) -> u32;
 
-    /// Install a message drop/delay schedule. Only meaningful for the
-    /// emulated backend; a real wire ignores it (use OS-level tooling to
-    /// perturb real sockets).
+    /// Install a message drop/delay/partition/conn-kill schedule. Both
+    /// shipped backends honor it: the emulated fabric drops/delays
+    /// enqueues, the TCP backend additionally kills real sockets
+    /// (test-only chaos hook, docs/DESIGN.md §12).
     fn set_fault_plan(&self, _plan: Arc<FaultPlan>) {}
 
     /// Release wire resources and wake all blocked receivers. Idempotent.
@@ -240,7 +241,13 @@ impl TransportBackend for InProcBackend {
         if sm != dm {
             let plan = self.fault.lock().unwrap().clone();
             if let Some(f) = plan {
-                if !f.admit_message() {
+                // shared chaos verdict (drops, delays, partitions); a
+                // connection-kill verdict still delivers — there is no
+                // socket here, only the counter advances (see
+                // `MessageVerdict::DeliverThenKillConn`)
+                if f.message_verdict(sm, dm)
+                    == crate::ft::MessageVerdict::Drop
+                {
                     return Ok(()); // lost on the wire: never metered
                 }
             }
@@ -319,8 +326,9 @@ impl Transport {
     }
 
     /// Gate every subsequent cross-machine send through `plan`'s
-    /// drop/delay schedule (local sends stay untouched — shared memory
-    /// does not lose messages). No-op on a real wire.
+    /// drop/delay/partition/conn-kill schedule (local sends stay
+    /// untouched — shared memory does not lose messages). On the TCP
+    /// backend this is the chaos hook: kills close real sockets.
     pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
         self.backend.set_fault_plan(plan);
     }

@@ -262,6 +262,14 @@ impl Participant {
         Ok(())
     }
 
+    /// Restart support (docs/DESIGN.md §12): resume the ring-frame tag
+    /// sequence at `seq` — the number of all-reduce rounds this rank
+    /// completed before its process died — so a rejoined participant's
+    /// tags line up with the rounds its peers are already on.
+    pub fn set_seq(&self, seq: u64) {
+        self.seq.set(seq);
+    }
+
     /// Mean all-reduce over a parameter list (flattens per tensor).
     pub fn allreduce_params(
         &self,

@@ -491,6 +491,9 @@ pub fn train_elastic(
     if let Some(plan) = cluster.fault_plan() {
         plan.publish(&metrics);
     }
+    if let Some(rs) = cluster.kv.replica_set() {
+        rs.publish(&metrics);
+    }
     let total_secs = t0.elapsed().as_secs_f64();
     let cost1 = cluster.cost.snapshot();
     let delta = cost0.delta(&cost1);

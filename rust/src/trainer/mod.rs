@@ -222,6 +222,15 @@ pub struct TrainReport {
     /// demotion (planned resizes are not demotions); the
     /// `ft.demotions` counter.
     pub ft_demotions: u64,
+    /// Primaries failed over to their standby replica (docs/DESIGN.md
+    /// §12); the `ft.failovers` counter. 0 without `replicate_kv`.
+    pub ft_failovers: u64,
+    /// Restarted servers that re-imported their shards and flipped
+    /// back to primary; the `ft.rejoins` counter.
+    pub ft_rejoins: u64,
+    /// Bytes copied into replica tables (deploy materialization plus
+    /// rejoin re-imports); the `ft.replica_bytes` counter.
+    pub ft_replica_bytes: u64,
     /// Final synchronized parameters.
     pub final_params: Vec<Vec<f32>>,
 }
@@ -503,6 +512,11 @@ pub fn train(cluster: &Cluster, cfg: &TrainConfig) -> anyhow::Result<TrainReport
     if let Some(plan) = cluster.fault_plan() {
         plan.publish(&metrics);
     }
+    // replication accounting (failovers, rejoins, replica bytes and the
+    // pipeline.failover timer) rides along when replicate_kv is on
+    if let Some(rs) = cluster.kv.replica_set() {
+        rs.publish(&metrics);
+    }
 
     Ok(TrainReport::from_metrics(
         &metrics,
@@ -615,6 +629,9 @@ impl TrainReport {
             resumed_at,
             ft_reconfigurations: metrics.counter("ft.reconfigurations"),
             ft_demotions: metrics.counter("ft.demotions"),
+            ft_failovers: metrics.counter("ft.failovers"),
+            ft_rejoins: metrics.counter("ft.rejoins"),
+            ft_replica_bytes: metrics.counter("ft.replica_bytes"),
             reconfigurations,
             final_params,
         }

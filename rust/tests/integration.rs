@@ -485,6 +485,89 @@ fn transient_faults_heal_and_training_is_unchanged() {
     assert_eq!(clean.ft_retries, 0);
 }
 
+/// The replication tentpole end to end (docs/DESIGN.md §12): a KV
+/// server that dies permanently mid-run fails over to its standby
+/// replica and the whole run — losses, final params — matches a
+/// fault-free deployment byte for byte, across pipeline modes, worker
+/// pools, and the prefetching cache.
+#[test]
+fn kv_server_death_mid_run_is_byte_identical_with_replication() {
+    use distdglv2::ft::{FailWindow, FaultPlan};
+    let d = small_dataset(12);
+    for (mode, workers, prefetch) in [
+        (PipelineMode::Sync, 1usize, false),
+        (PipelineMode::Async, 2, false),
+        (PipelineMode::AsyncNonstop, 2, true),
+    ] {
+        let clean =
+            Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts())
+                .unwrap();
+        let mut spec = ClusterSpec::new(2, 1);
+        spec.replicate_kv = true;
+        if prefetch {
+            spec.prefetch_depth = 8;
+            spec.cache_shards = 4;
+        }
+        let faulty = Cluster::deploy(&d, spec, artifacts()).unwrap();
+        let mut plan = FaultPlan::new();
+        plan.backoff = std::time::Duration::ZERO;
+        // machine 0's server drops dead a few remote pulls in
+        plan.kv_outages.push(FailWindow::permanent(0, 3));
+        faulty.set_fault_plan(std::sync::Arc::new(plan));
+        let mut cfg = TrainConfig {
+            variant: "sage_nc_dev".into(),
+            epochs: 1,
+            max_steps: 8,
+            ..Default::default()
+        };
+        cfg.pipeline.mode = mode;
+        cfg.pipeline.num_workers = workers;
+        let want = trainer::train(&clean, &cfg).expect("clean run");
+        let got = trainer::train(&faulty, &cfg)
+            .expect("replicated run should survive the dead server");
+        assert_eq!(
+            want.loss_curve, got.loss_curve,
+            "failover changed the training stream ({mode:?})"
+        );
+        assert_eq!(
+            want.final_params, got.final_params,
+            "failover changed the final params ({mode:?})"
+        );
+        assert_eq!(got.ft_failovers, 1, "expected exactly one failover");
+        assert!(got.ft_replica_bytes > 0);
+        assert_eq!(want.ft_failovers, 0);
+    }
+}
+
+/// Without `replicate_kv` the very same injection keeps its §8
+/// contract: the run drains to the typed `ServerDown` error instead of
+/// hanging or fabricating data.
+#[test]
+fn kv_server_death_without_replication_drains_typed() {
+    use distdglv2::ft::{FailWindow, FaultPlan};
+    let d = small_dataset(12);
+    let c = Cluster::deploy(&d, ClusterSpec::new(2, 1), artifacts())
+        .unwrap();
+    let mut plan = FaultPlan::new();
+    plan.backoff = std::time::Duration::ZERO;
+    plan.kv_outages.push(FailWindow::permanent(0, 3));
+    c.set_fault_plan(std::sync::Arc::new(plan));
+    let mut cfg = TrainConfig {
+        variant: "sage_nc_dev".into(),
+        epochs: 1,
+        max_steps: 8,
+        ..Default::default()
+    };
+    cfg.pipeline.mode = PipelineMode::Sync;
+    let err = trainer::train(&c, &cfg)
+        .expect_err("unreplicated dead server must fail the run");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("kv") && msg.contains("machine 0"),
+        "expected the typed kv ServerDown error, got: {msg}"
+    );
+}
+
 /// The elastic-membership tentpole, end to end: a 4-trainer run with a
 /// planned shrink to world 2 at the first epoch boundary must (a) write
 /// a reconfiguration checkpoint carrying the new membership, and (b)

@@ -5,12 +5,38 @@
 # MACHINE_RESULT lines (batch-stream hashes, parameter hash, losses)
 # from both runs, and a decreasing loss.
 #
-# Usage: scripts/launch.sh [machines] [trainers_per_machine]
+# With --chaos (docs/DESIGN.md §12) the run also kills machine 1
+# abruptly just before the epoch-0 barrier and restarts it with
+# --chaos-resume: the restarted process reclaims its machine id at the
+# rendezvous, re-imports its KV shard from the standby's replica
+# tables over RPC, replays epoch 0 locally, and finishes the run over
+# TCP — and its MACHINE_RESULT lines must STILL match the fault-free
+# in-process reference byte for byte.
+#
+# Usage: scripts/launch.sh [machines] [trainers_per_machine] [--chaos]
 set -eu
 
-MACHINES="${1:-2}"
-TRAINERS="${2:-1}"
+CHAOS=0
+POS1=""
+POS2=""
+for a in "$@"; do
+    if [ "$a" = "--chaos" ]; then
+        CHAOS=1
+    elif [ -z "$POS1" ]; then
+        POS1="$a"
+    elif [ -z "$POS2" ]; then
+        POS2="$a"
+    fi
+done
+MACHINES="${POS1:-2}"
+TRAINERS="${POS2:-1}"
 PORT_BASE="${PORT_BASE:-$((20000 + $$ % 20000))}"
+VICTIM=1
+
+if [ "$CHAOS" -eq 1 ] && [ "$MACHINES" -lt 2 ]; then
+    echo "FAIL: --chaos needs at least 2 machines" >&2
+    exit 1
+fi
 
 cd "$(dirname "$0")/../rust"
 
@@ -60,14 +86,25 @@ fi
 WORK=$(mktemp -d)
 trap 'rm -rf "$WORK"; kill 0 2>/dev/null || true' EXIT INT TERM
 
+# chaos runs replicate the KV shards (the restart re-imports from the
+# replica) and train one extra epoch so the restarted process has two
+# over-the-wire epochs after its local epoch-0 replay
+EPOCHS=2
+REPLICATE=0
+if [ "$CHAOS" -eq 1 ]; then
+    EPOCHS=3
+    REPLICATE=1
+fi
+
 cat > "$WORK/run.cfg" <<EOF
 # launch.sh smoke config — small deterministic RMAT graph
 dataset=rmat:4000:16000
 machines=$MACHINES
 trainers=$TRAINERS
-epochs=2
+epochs=$EPOCHS
 lr=0.3
 seed=7
+replicate_kv=$REPLICATE
 EOF
 
 cargo build --release --example launch
@@ -77,14 +114,50 @@ BIN=target/release/examples/launch
 echo "== reference: in-process backend =="
 "$BIN" "$WORK/run.cfg" --inproc | tee "$WORK/inproc.log"
 
-echo "== $MACHINES OS processes over TCP (port base $PORT_BASE) =="
+if [ "$CHAOS" -eq 1 ]; then
+    echo "== $MACHINES OS processes over TCP + kill/restart of" \
+         "machine $VICTIM (port base $PORT_BASE) =="
+else
+    echo "== $MACHINES OS processes over TCP (port base $PORT_BASE) =="
+fi
 m=0
 while [ "$m" -lt "$MACHINES" ]; do
+    FLAG=""
+    if [ "$CHAOS" -eq 1 ]; then
+        if [ "$m" -eq "$VICTIM" ]; then
+            FLAG="--chaos-exit"
+        else
+            FLAG="--chaos"
+        fi
+    fi
+    # shellcheck disable=SC2086
     "$BIN" "$WORK/run.cfg" --machine "$m" --port-base "$PORT_BASE" \
-        > "$WORK/proc$m.log" 2>&1 &
+        $FLAG > "$WORK/proc$m.log" 2>&1 &
     eval "PID$m=$!"
     m=$((m + 1))
 done
+
+if [ "$CHAOS" -eq 1 ]; then
+    # first life: the victim exits 0 just before the epoch-0 barrier
+    eval "vpid=\$PID$VICTIM"
+    if ! wait "$vpid"; then
+        echo "FAIL: chaos victim's first life exited nonzero" >&2
+        cat "$WORK/proc$VICTIM.log" >&2
+        exit 1
+    fi
+    if ! grep -q "^CHAOS_EXIT m=$VICTIM" "$WORK/proc$VICTIM.log"; then
+        echo "FAIL: victim did not reach its chaos exit point" >&2
+        cat "$WORK/proc$VICTIM.log" >&2
+        exit 1
+    fi
+    mv "$WORK/proc$VICTIM.log" "$WORK/chaos-exit.log"
+    # second life: reclaim the machine id, re-import the shard from
+    # the standby's replica, replay epoch 0 locally, finish over TCP
+    "$BIN" "$WORK/run.cfg" --machine "$VICTIM" \
+        --port-base "$PORT_BASE" --chaos-resume \
+        > "$WORK/proc$VICTIM.log" 2>&1 &
+    eval "PID$VICTIM=$!"
+fi
 m=0
 while [ "$m" -lt "$MACHINES" ]; do
     eval "pid=\$PID$m"
@@ -118,5 +191,15 @@ fi
 grep -q '^LAUNCH OK$' "$WORK/inproc.log"
 grep -q 'LAUNCH OK' "$WORK"/proc*.log
 
-echo "multi-process smoke passed:" \
-     "$MACHINES procs x $TRAINERS trainers == in-process run"
+if [ "$CHAOS" -eq 1 ]; then
+    # the restarted victim really took the recovery path: shard
+    # re-imported from the standby's replica tables, epoch 0 replayed
+    grep -q "^CHAOS_REIMPORT m=$VICTIM" "$WORK/proc$VICTIM.log"
+    grep -q "^CHAOS_REPLAY m=$VICTIM" "$WORK/proc$VICTIM.log"
+    echo "chaos smoke passed: machine $VICTIM killed after epoch 0," \
+         "restarted, and the run still matched the fault-free" \
+         "reference byte for byte"
+else
+    echo "multi-process smoke passed:" \
+         "$MACHINES procs x $TRAINERS trainers == in-process run"
+fi
